@@ -1,0 +1,49 @@
+//! Domain example: federated network-intrusion detection (the paper's
+//! Task 3) — a linear SVM over 35 TCP-connection features, 200 edge
+//! clients, high unreliability (cr = 0.5). The scenario the paper's
+//! introduction motivates: many flaky devices, expensive uplinks.
+//!
+//! ```bash
+//! cargo run --release --offline --example intrusion_detection
+//! ```
+
+use safa::config::{presets, ProtocolKind};
+use safa::coordinator::run_with_data;
+use safa::experiments::shared_data;
+
+fn main() -> anyhow::Result<()> {
+    safa::util::logging::init();
+    let mut cfg = presets::preset("task3-scaled")?;
+    cfg.env.m = 200;
+    cfg.task.n = 12_000;
+    cfg.task.n_test = 3_000;
+    cfg.train.rounds = 25;
+    cfg.env.crash_prob = 0.5;
+    cfg.protocol.c_fraction = 0.1;
+
+    let data = shared_data(&cfg);
+    println!(
+        "federating intrusion detection over {} clients (cr={}, C={})\n",
+        cfg.env.m, cfg.env.crash_prob, cfg.protocol.c_fraction
+    );
+    println!("{:<12} {:>10} {:>12} {:>10} {:>9}", "protocol", "best acc", "avg round(s)", "SR", "futility");
+    for kind in ProtocolKind::ALL {
+        let mut c = cfg.clone();
+        c.protocol.kind = kind;
+        let r = run_with_data(&c, data.clone())?;
+        println!(
+            "{:<12} {:>10.4} {:>12.1} {:>10.3} {:>9.3}",
+            r.protocol,
+            r.best_accuracy().unwrap_or(f64::NAN),
+            r.avg_round_len(),
+            r.sync_ratio(),
+            r.futility()
+        );
+    }
+    println!(
+        "\nExpected shape (paper Tables VIII/XIV): SAFA reaches the same\n\
+         >99% accuracy ceiling while its rounds are several times shorter\n\
+         than FedAvg's and its futility stays near zero."
+    );
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Quickstart: a tiny SAFA federation on the synthetic regression task.
+//!
+//! ```bash
+//! cargo run --release --offline --example quickstart
+//! ```
+//!
+//! Builds a 4-client federation, runs 10 SAFA rounds with 10% crashes,
+//! and prints the per-round loss plus the paper's summary metrics.
+
+use safa::config::presets;
+use safa::coordinator::run_experiment;
+
+fn main() -> anyhow::Result<()> {
+    safa::util::logging::init();
+
+    // Start from the `tiny` preset and tweak it like a user would.
+    let mut cfg = presets::preset("tiny")?;
+    cfg.train.rounds = 10;
+    cfg.env.crash_prob = 0.1;
+    cfg.protocol.c_fraction = 0.5; // server closes a round at 50% picks
+    cfg.protocol.tau = 3; // lag tolerance (the one SAFA knob)
+
+    let result = run_experiment(&cfg)?;
+
+    println!("round  length(s)  picked  committed  loss");
+    for r in &result.rounds {
+        println!(
+            "{:>5}  {:>9.1}  {:>6}  {:>9}  {:.4}",
+            r.round,
+            r.round_len,
+            r.n_picked,
+            r.n_committed,
+            r.eval.map(|e| e.loss).unwrap_or(f64::NAN)
+        );
+    }
+    println!();
+    println!("avg round length : {:>8.1} s", result.avg_round_len());
+    println!("sync ratio (SR)  : {:>8.3}", result.sync_ratio());
+    println!("EUR              : {:>8.3}", result.eur());
+    println!("version variance : {:>8.3}", result.version_variance());
+    println!("futility         : {:>8.3}", result.futility());
+    println!(
+        "best accuracy    : {:>8.4}",
+        result.best_accuracy().unwrap_or(f64::NAN)
+    );
+    Ok(())
+}

@@ -1,0 +1,98 @@
+"""AOT pipeline: lower the L2 JAX models (with their L1 Pallas kernels)
+to HLO **text** and emit the manifest the Rust runtime consumes.
+
+Run once at build time (`make artifacts`); Python never executes on the
+experiment path. HLO text — not serialized protos — is the interchange
+format: the Rust side's xla_extension 0.5.1 rejects jax>=0.5's 64-bit
+instruction ids, while the text parser reassigns ids cleanly (see
+/opt/xla-example/README.md).
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--paper]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import TaskSpec, build, default_specs
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side unwraps one tuple regardless of arity)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_task(spec: TaskSpec, out_dir: str) -> dict:
+    """Lower train + eval graphs for one task; return its manifest entry."""
+    train_epoch, evaluate = build(spec)
+    f32 = jnp.float32
+    p = jax.ShapeDtypeStruct((spec.param_dim,), f32)
+    x = jax.ShapeDtypeStruct((spec.max_batches, spec.batch_size, spec.d), f32)
+    y = jax.ShapeDtypeStruct((spec.max_batches, spec.batch_size), f32)
+    mask = jax.ShapeDtypeStruct((spec.max_batches, spec.batch_size), f32)
+    train_hlo = f"{spec.name}_train.hlo.txt"
+    with open(os.path.join(out_dir, train_hlo), "w") as f:
+        f.write(to_hlo_text(jax.jit(train_epoch).lower(p, x, y, mask)))
+
+    ex = jax.ShapeDtypeStruct((spec.n_test, spec.d), f32)
+    ey = jax.ShapeDtypeStruct((spec.n_test,), f32)
+    eval_hlo = f"{spec.name}_eval.hlo.txt"
+    with open(os.path.join(out_dir, eval_hlo), "w") as f:
+        f.write(to_hlo_text(jax.jit(evaluate).lower(p, ex, ey)))
+
+    return {
+        "train_hlo": train_hlo,
+        "eval_hlo": eval_hlo,
+        "param_dim": spec.param_dim,
+        "d": spec.d,
+        "batch_size": spec.batch_size,
+        "max_batches": spec.max_batches,
+        "n_test": spec.n_test,
+        "lr": spec.lr,
+        "init": [{"len": n, "std": std} for n, std in spec.init_blocks],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--paper",
+        action="store_true",
+        help="paper-sized shapes (Table II) instead of the scaled presets",
+    )
+    ap.add_argument(
+        "--tasks",
+        default="regression,cnn,svm",
+        help="comma-separated subset to lower",
+    )
+    # Back-compat with the original Makefile target.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    wanted = {t.strip() for t in args.tasks.split(",")}
+    manifest = {"tasks": {}}
+    for spec in default_specs(paper=args.paper):
+        if spec.name not in wanted:
+            continue
+        print(f"lowering {spec.name} (param_dim={spec.param_dim}) ...")
+        manifest["tasks"][spec.name] = lower_task(spec, out_dir)
+    path = os.path.join(out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {path} with {len(manifest['tasks'])} task(s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""L1 Pallas kernel: tiled fused linear layer ``act(x @ w + b)``.
+
+This is the compute hot-spot of every SAFA local update: the dense matmul
+inside the SGD step (the CNN's convolutions are im2col'd into it by the
+L2 model, the TPU-standard adaptation — see DESIGN.md §Hardware-Adaptation).
+
+TPU-shaped design:
+  * BlockSpec tiles of (128, 128) on the M/N axes — MXU-aligned, and the
+    per-step working set (x-tile + w-tile + out-tile) stays ~O(100 kB),
+    far under the ~16 MB VMEM budget.
+  * K is kept whole per tile (these models' K ≤ 800), so each grid step
+    is a single MXU matmul with the bias add + activation fused into the
+    epilogue — the output tile is written to HBM exactly once.
+  * `interpret=True` everywhere: the CPU PJRT plugin cannot execute
+    Mosaic custom-calls; interpret mode lowers to plain HLO, which is
+    what the Rust runtime loads. Real-TPU efficiency is *estimated* in
+    DESIGN.md §9 from the footprint above.
+
+Autodiff: `pallas_call` has no VJP rule, so `fused_linear` is a
+`jax.custom_vjp` whose backward pass reuses the same Pallas matmul kernel
+for dx = g·wᵀ and dw = xᵀ·g.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned tile sizes. On a real TPU (128, 128) output tiles are the
+# natural MXU shape; under interpret-mode-on-CPU each grid step lowers to
+# a full-output dynamic-update-slice, so small tiles make the loop
+# copy-bound (measured 37 s for a 460k-row eval at BM=128 — see
+# EXPERIMENTS.md §Perf). We therefore stretch the M tile up to 4096 rows
+# (VMEM estimate stays ≤ 4096·K·4B ≈ 3.3 MB at K=200, far under 16 MB)
+# and keep N at the MXU lane width.
+BLOCK_M = 4096
+BLOCK_N = 128
+
+
+def _matmul_bias_act_kernel(x_ref, w_ref, b_ref, o_ref, *, act):
+    """One (BM, BN) output tile: act(x_tile @ w_tile + b_tile)."""
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    if act == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def matmul_pallas(x, w, b=None, act="none"):
+    """``act(x @ w + b)`` via the tiled Pallas kernel.
+
+    x: [M, K], w: [K, N], b: [N] or None. Shapes are padded up to the
+    block size and the result sliced back, so any M/N/K works.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims disagree: {k} vs {k2}"
+    if b is None:
+        b = jnp.zeros((n,), dtype=x.dtype)
+    bm = min(BLOCK_M, max(m, 1))
+    bn = min(BLOCK_N, max(n, 1))
+    xp = _pad_to(x, bm, 0)
+    wp = _pad_to(w, bn, 1)
+    bp = _pad_to(b, bn, 0)
+    mp, np_ = xp.shape[0], wp.shape[1]
+    grid = (mp // bm, np_ // bn)
+    out = pl.pallas_call(
+        functools.partial(_matmul_bias_act_kernel, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_linear(x, w, b, act="none"):
+    """Differentiable fused linear layer backed by the Pallas kernel."""
+    return matmul_pallas(x, w, b, act)
+
+
+def _fused_linear_fwd(x, w, b, act):
+    out = matmul_pallas(x, w, b, act)
+    return out, (x, w, out)
+
+
+def _fused_linear_bwd(act, res, g):
+    x, w, out = res
+    if act == "relu":
+        g = g * (out > 0).astype(g.dtype)
+    # All three cotangents flow through the same Pallas matmul kernel.
+    dx = matmul_pallas(g, w.T)
+    dw = matmul_pallas(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fused_linear_fwd, _fused_linear_bwd)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness reference.
+
+Every kernel in this package must agree with its oracle here; pytest +
+hypothesis sweep shapes/dtypes in python/tests/test_kernel.py. Keeping
+the oracles dependency-free (no pallas import) means a kernel bug cannot
+hide in shared code.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_linear(x, w, b=None, act="none"):
+    """act(x @ w + b) in plain jnp."""
+    out = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if b is not None:
+        out = out + b[None, :]
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif act != "none":
+        raise ValueError(f"unknown act {act!r}")
+    return out
+
+
+def ref_sgd(params, grads, lr):
+    """params - lr * grads in plain jnp."""
+    return params - lr * grads

@@ -1,0 +1,336 @@
+"""L2: the paper's three task models in JAX, built on the L1 Pallas
+kernels, with the exact math of the Rust native backend (losses, masking,
+update rule and flat parameter layout) so the two backends agree
+numerically on identical batches.
+
+Each task exposes two jittable functions with static shapes:
+
+* ``train_epoch(params, x, y, mask) -> (new_params, mean_loss)`` — one
+  epoch of masked minibatch SGD. ``x`` is [max_batches, B, d]; padding
+  rows carry mask 0 and contribute nothing; the Rust side loops E epochs
+  and reshuffles between calls.
+* ``evaluate(params, x, y) -> (loss, accuracy)`` — the paper's Table III
+  accuracy for the task; padded rows are marked with y = MASK_SENTINEL.
+
+Parameters are a single flat f32 vector; the layout (and its init
+recipe) is published to the Rust runtime through the AOT manifest.
+"""
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.fused_linear import fused_linear, matmul_pallas
+from compile.kernels.sgd import sgd_update
+
+# Must match rust/src/runtime/mod.rs::MASK_SENTINEL.
+MASK_SENTINEL = -1.0e9
+
+SVM_L2 = 1e-4  # must match rust/src/model/native/linear.rs
+
+
+@dataclass
+class TaskSpec:
+    """Static shapes + hyper-parameters one artifact is compiled for."""
+
+    name: str
+    d: int
+    batch_size: int
+    max_batches: int
+    n_test: int
+    lr: float
+    # (len, std) parameter blocks — the manifest's init recipe.
+    init_blocks: List[Tuple[int, float]] = field(default_factory=list)
+    # CNN widths (ignored by the linear tasks).
+    c1: int = 8
+    c2: int = 16
+    hidden: int = 64
+
+    @property
+    def param_dim(self) -> int:
+        return sum(n for n, _ in self.init_blocks)
+
+
+# ---------------------------------------------------------------------------
+# Linear models (Task 1 regression / Task 3 SVM). Params: [w(d), b].
+# ---------------------------------------------------------------------------
+
+
+def _linear_scores(params, x, d):
+    """x @ w + b for a batch via the Pallas kernel. x: [B, d]."""
+    w = params[:d].reshape(d, 1)
+    b = params[d : d + 1]
+    return fused_linear(x, w, b, "none")[:, 0]
+
+
+def make_regression(spec: TaskSpec):
+    d = spec.d
+
+    def batch_step(params, batch):
+        x, y, mask = batch  # [B, d], [B], [B]
+        valid = jnp.maximum(jnp.sum(mask), 1.0)
+
+        def loss_fn(p):
+            pred = _linear_scores(p, x, d)
+            err = pred - y
+            # 0.5 * mean(err^2) over valid rows (rust: loss/bsz).
+            return 0.5 * jnp.sum(err * err * mask) / valid
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        has_valid = (jnp.sum(mask) > 0).astype(jnp.float32)
+        new_params = sgd_update(params, grads * has_valid, spec.lr)
+        return new_params, (loss, has_valid)
+
+    def train_epoch(params, x, y, mask):
+        params, (losses, valids) = jax.lax.scan(
+            batch_step, params, (x, y, mask)
+        )
+        denom = jnp.maximum(jnp.sum(valids), 1.0)
+        return params, jnp.sum(losses * valids) / denom
+
+    def evaluate(params, x, y):
+        valid = (y > MASK_SENTINEL / 2).astype(jnp.float32)
+        n = jnp.maximum(jnp.sum(valid), 1.0)
+        pred = _linear_scores(params, x, d)
+        err = pred - y
+        loss = 0.5 * jnp.sum(err * err * valid) / n
+        # Table III row 1: acc = 1 - mean(|y - yhat| / max(y, yhat)).
+        denom = jnp.maximum(jnp.maximum(y, pred), 1e-6)
+        rel = jnp.minimum(jnp.abs(y - pred) / denom, 1.0)
+        acc = jnp.sum((1.0 - rel) * valid) / n
+        return loss, acc
+
+    return train_epoch, evaluate
+
+
+def make_svm(spec: TaskSpec):
+    d = spec.d
+
+    def batch_step(params, batch):
+        x, y, mask = batch
+        valid = jnp.maximum(jnp.sum(mask), 1.0)
+
+        def loss_fn(p):
+            s = _linear_scores(p, x, d)
+            hinge = jnp.maximum(0.0, 1.0 - y * s) * mask
+            w = p[:d]
+            # rust: (sum hinge + 0.5*l2*|w|^2) / bsz for the reported
+            # loss; the l2 *gradient* is applied un-normalized
+            # (w -= lr*l2*w), so split the two like the rust code does.
+            return jnp.sum(hinge) / valid
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        w = params[:d]
+        reg_loss = 0.5 * SVM_L2 * jnp.sum(w * w) / valid
+        # L2 gradient applied per batch exactly like rust:
+        # w -= lr*(hinge_grad) + lr*SVM_L2*w.
+        reg_grad = jnp.concatenate([SVM_L2 * w, jnp.zeros((1,))])
+        has_valid = (jnp.sum(mask) > 0).astype(jnp.float32)
+        total_grad = (grads + reg_grad) * has_valid
+        new_params = sgd_update(params, total_grad, spec.lr)
+        return new_params, (loss + reg_loss, has_valid)
+
+    def train_epoch(params, x, y, mask):
+        params, (losses, valids) = jax.lax.scan(
+            batch_step, params, (x, y, mask)
+        )
+        denom = jnp.maximum(jnp.sum(valids), 1.0)
+        return params, jnp.sum(losses * valids) / denom
+
+    def evaluate(params, x, y):
+        valid = (y > MASK_SENTINEL / 2).astype(jnp.float32)
+        n = jnp.maximum(jnp.sum(valid), 1.0)
+        s = _linear_scores(params, x, d)
+        loss = jnp.sum(jnp.maximum(0.0, 1.0 - y * s) * valid) / n
+        acc = jnp.sum((y * s > 0).astype(jnp.float32) * valid) / n
+        return loss, acc
+
+    return train_epoch, evaluate
+
+
+# ---------------------------------------------------------------------------
+# CNN (Task 2). Layout matches rust/src/model/native/cnn.rs:
+# [W1(c1,25), b1, W2(c2,25*c1), b2, Wh(flat,hidden), bh, Wo(hidden,10), bo]
+# channels-last activations, im2col patches ordered (ky, kx, c).
+# ---------------------------------------------------------------------------
+
+SIDE = 28
+K = 5
+H1 = SIDE - K + 1  # 24
+P1 = H1 // 2  # 12
+H2 = P1 - K + 1  # 8
+P2 = H2 // 2  # 4
+CLASSES = 10
+
+
+def _im2col(x, oh, ow):
+    """[B, H, W, C] -> [B, OH, OW, K*K*C] with (ky, kx, c) patch order —
+    identical to the Rust im2col_nhwc layout."""
+    patches = [
+        x[:, ky : ky + oh, kx : kx + ow, :] for ky in range(K) for kx in range(K)
+    ]
+    return jnp.concatenate(patches, axis=-1)
+
+
+def _maxpool2(x):
+    """2x2/2 max pool, channels-last."""
+    b, h, w, c = x.shape
+    x = x.reshape(b, h // 2, 2, w // 2, 2, c)
+    return jnp.max(x, axis=(2, 4))
+
+
+def _cnn_unpack(params, spec):
+    c1, c2, hidden = spec.c1, spec.c2, spec.hidden
+    flat = P2 * P2 * c2
+    sizes = [c1 * K * K, c1, c2 * K * K * c1, c2, flat * hidden, hidden,
+             hidden * CLASSES, CLASSES]
+    offs = [0]
+    for s in sizes:
+        offs.append(offs[-1] + s)
+    w1 = params[offs[0] : offs[1]].reshape(c1, K * K)
+    b1 = params[offs[1] : offs[2]]
+    w2 = params[offs[2] : offs[3]].reshape(c2, K * K * c1)
+    b2 = params[offs[3] : offs[4]]
+    wh = params[offs[4] : offs[5]].reshape(flat, hidden)
+    bh = params[offs[5] : offs[6]]
+    wo = params[offs[6] : offs[7]].reshape(hidden, CLASSES)
+    bo = params[offs[7] : offs[8]]
+    return w1, b1, w2, b2, wh, bh, wo, bo
+
+
+def _cnn_logits(params, x, spec):
+    """Forward pass; x: [B, 784] -> logits [B, 10]. Every matmul runs
+    through the Pallas fused_linear kernel."""
+    b = x.shape[0]
+    w1, b1, w2, b2, wh, bh, wo, bo = _cnn_unpack(params, spec)
+    img = x.reshape(b, SIDE, SIDE, 1)
+    cols1 = _im2col(img, H1, H1).reshape(b * H1 * H1, K * K)
+    a1 = fused_linear(cols1, w1.T, b1, "relu").reshape(b, H1, H1, spec.c1)
+    p1 = _maxpool2(a1)
+    cols2 = _im2col(p1, H2, H2).reshape(b * H2 * H2, K * K * spec.c1)
+    a2 = fused_linear(cols2, w2.T, b2, "relu").reshape(b, H2, H2, spec.c2)
+    p2 = _maxpool2(a2).reshape(b, P2 * P2 * spec.c2)
+    ah = fused_linear(p2, wh, bh, "relu")
+    return fused_linear(ah, wo, bo, "none")
+
+
+def make_cnn(spec: TaskSpec):
+    def batch_step(params, batch):
+        x, y, mask = batch
+        valid = jnp.maximum(jnp.sum(mask), 1.0)
+
+        def loss_fn(p):
+            logits = _cnn_logits(p, x, spec)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            labels = jnp.clip(y.astype(jnp.int32), 0, CLASSES - 1)
+            nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+            return jnp.sum(nll * mask) / valid
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        has_valid = (jnp.sum(mask) > 0).astype(jnp.float32)
+        new_params = sgd_update(params, grads * has_valid, spec.lr)
+        return new_params, (loss, has_valid)
+
+    def train_epoch(params, x, y, mask):
+        params, (losses, valids) = jax.lax.scan(
+            batch_step, params, (x, y, mask)
+        )
+        denom = jnp.maximum(jnp.sum(valids), 1.0)
+        return params, jnp.sum(losses * valids) / denom
+
+    def evaluate(params, x, y):
+        valid = (y > MASK_SENTINEL / 2).astype(jnp.float32)
+        n = jnp.maximum(jnp.sum(valid), 1.0)
+        logits = _cnn_logits(params, x, spec)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        labels = jnp.clip(y.astype(jnp.int32), 0, CLASSES - 1)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+        loss = jnp.sum(nll * valid) / n
+        correct = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+        acc = jnp.sum(correct * valid) / n
+        return loss, acc
+
+    return train_epoch, evaluate
+
+
+# ---------------------------------------------------------------------------
+# Task registry: shapes sized for the scaled presets the Rust side runs on
+# this box (paper-sized shapes are a flag away; see aot.py --paper).
+# ---------------------------------------------------------------------------
+
+
+def he(n: int, fan_in: int) -> Tuple[int, float]:
+    return (n, (2.0 / fan_in) ** 0.5)
+
+
+def cnn_blocks(c1, c2, hidden):
+    flat = P2 * P2 * c2
+    return [
+        he(c1 * K * K, K * K),
+        (c1, 0.0),
+        he(c2 * K * K * c1, K * K * c1),
+        (c2, 0.0),
+        he(flat * hidden, flat),
+        (hidden, 0.0),
+        he(hidden * CLASSES, hidden),
+        (CLASSES, 0.0),
+    ]
+
+
+def default_specs(paper: bool = False) -> List[TaskSpec]:
+    """Artifact shape table. Must stay in sync with the Rust presets
+    (config/presets.rs): batch size, lr and d are validated at load time
+    by the Rust runtime."""
+    if paper:
+        cnn = dict(c1=20, c2=50, hidden=500)
+        cnn_mb, cnn_ntest = 32, 10_000
+        svm_mb, svm_ntest = 8, 20_000
+        reg_mb = 64
+    else:
+        cnn = dict(c1=8, c2=16, hidden=64)
+        cnn_mb, cnn_ntest = 4, 800
+        svm_mb, svm_ntest = 4, 4_000
+        reg_mb = 64
+    return [
+        TaskSpec(
+            name="regression",
+            d=13,
+            batch_size=5,
+            max_batches=reg_mb,
+            n_test=100,
+            lr=2e-3,
+            init_blocks=[(13, 0.01), (1, 0.0)],
+        ),
+        TaskSpec(
+            name="cnn",
+            d=SIDE * SIDE,
+            batch_size=40,
+            max_batches=cnn_mb,
+            n_test=cnn_ntest,
+            lr=1e-3,
+            init_blocks=cnn_blocks(cnn["c1"], cnn["c2"], cnn["hidden"]),
+            **cnn,
+        ),
+        TaskSpec(
+            name="svm",
+            d=35,
+            batch_size=100,
+            max_batches=svm_mb,
+            n_test=svm_ntest,
+            lr=1e-2,
+            init_blocks=[(35, 0.01), (1, 0.0)],
+        ),
+    ]
+
+
+def build(spec: TaskSpec) -> Tuple[Callable, Callable]:
+    """(train_epoch, evaluate) for a task spec."""
+    if spec.name == "regression":
+        return make_regression(spec)
+    if spec.name == "svm":
+        return make_svm(spec)
+    if spec.name == "cnn":
+        return make_cnn(spec)
+    raise ValueError(f"unknown task {spec.name!r}")

@@ -1,0 +1,109 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in ref.py.
+
+Hypothesis sweeps shapes; tolerances are f32-tight because both paths
+compute in f32.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fused_linear import fused_linear, matmul_pallas
+from compile.kernels.ref import ref_linear, ref_sgd
+from compile.kernels.sgd import sgd_update
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 40),
+    n=st.integers(1, 70),
+    act=st.sampled_from(["none", "relu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_pallas_matches_ref(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+    got = matmul_pallas(x, w, b, act)
+    want = ref_linear(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_pallas_blocks_larger_than_tile():
+    # Exercise multiple grid steps on both axes (tile = 128).
+    rng = np.random.default_rng(0)
+    x, w, b = rand(rng, 300, 17), rand(rng, 17, 260), rand(rng, 260)
+    np.testing.assert_allclose(
+        matmul_pallas(x, w, b, "relu"),
+        ref_linear(x, w, b, "relu"),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_matmul_pallas_no_bias():
+    rng = np.random.default_rng(1)
+    x, w = rand(rng, 9, 5), rand(rng, 5, 3)
+    np.testing.assert_allclose(
+        matmul_pallas(x, w), ref_linear(x, w), rtol=1e-5, atol=1e-6
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 20),
+    k=st.integers(1, 16),
+    n=st.integers(1, 20),
+    act=st.sampled_from(["none", "relu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_linear_gradients_match_ref(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+
+    def f_pallas(x, w, b):
+        return jnp.sum(fused_linear(x, w, b, act) ** 2)
+
+    def f_ref(x, w, b):
+        return jnp.sum(ref_linear(x, w, b, act) ** 2)
+
+    gp = jax.grad(f_pallas, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, c in zip(gp, gr):
+        np.testing.assert_allclose(a, c, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 5000),
+    lr=st.floats(1e-5, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sgd_update_matches_ref(n, lr, seed):
+    rng = np.random.default_rng(seed)
+    p = rand(rng, n)
+    g = rand(rng, n)
+    np.testing.assert_allclose(
+        sgd_update(p, g, lr), ref_sgd(p, g, lr), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_fused_linear_relu_zeroes_negative_grads():
+    # Direct check of the fused activation's vjp masking.
+    x = jnp.asarray([[1.0, -1.0]])
+    w = jnp.asarray([[1.0], [0.0]])
+    b = jnp.asarray([-2.0])  # pre-act = -1 -> relu clamps to 0
+
+    def f(x):
+        return jnp.sum(fused_linear(x, w, b, "relu"))
+
+    g = jax.grad(f)(x)
+    np.testing.assert_allclose(g, jnp.zeros_like(x))

@@ -1,0 +1,80 @@
+//! Ablation study (DESIGN.md §6 extension): what each SAFA mechanism
+//! contributes. Compares full SAFA against (a) no bypass — undrafted
+//! updates discarded, and (b) no compensatory priority — pure
+//! first-come-first-merge — on Task 1 at C = 0.3 across crash rates.
+
+use safa::bench_harness::Table;
+use safa::config::presets;
+use safa::experiments::{shared_data, CRS};
+use safa::metrics::{RoundRecord, RunResult};
+use safa::protocol::{FedEnv, Protocol, Safa, SafaOptions};
+
+fn run(opts: SafaOptions, cr: f64) -> RunResult {
+    let mut cfg = presets::task1();
+    cfg.protocol.c_fraction = 0.3;
+    cfg.env.crash_prob = cr;
+    let data = shared_data(&cfg);
+    let mut env = FedEnv::with_data(&cfg, data).unwrap();
+    let mut proto = Safa::with_options(&env, env.init_global(), opts);
+    let rounds: Vec<RoundRecord> = (1..=cfg.train.rounds)
+        .map(|t| proto.run_round(t, &mut env))
+        .collect();
+    RunResult {
+        protocol: "SAFA".into(),
+        task: "regression".into(),
+        c_fraction: 0.3,
+        crash_prob: cr,
+        tau: cfg.protocol.tau,
+        seed: cfg.seed,
+        m: cfg.env.m,
+        rounds,
+        final_eval: Some(env.trainer.evaluate(proto.global())),
+    }
+}
+
+fn main() {
+    safa::util::logging::init();
+    let variants: [(&str, SafaOptions); 3] = [
+        ("SAFA (full)", SafaOptions::default()),
+        (
+            "no bypass",
+            SafaOptions {
+                bypass: false,
+                ..SafaOptions::default()
+            },
+        ),
+        (
+            "no compensation",
+            SafaOptions {
+                compensatory: false,
+                ..SafaOptions::default()
+            },
+        ),
+    ];
+    // One column per metric; rows = crash rates.
+    let cols = [0.0f64]; // placeholder to reuse Table; we build manually
+    let _ = cols;
+    let mut acc_table = Table::new("SAFA ablation — best accuracy (Task 1, C=0.3)", &CRS, &[0.3]);
+    let mut len_table = Table::new("SAFA ablation — avg round length (s)", &CRS, &[0.3]);
+    acc_table.precision = 4;
+    for (name, opts) in variants {
+        let mut acc_rows = Vec::new();
+        let mut len_rows = Vec::new();
+        for &cr in &CRS {
+            let r = run(opts, cr);
+            acc_rows.push(vec![r.best_accuracy().unwrap_or(f64::NAN)]);
+            len_rows.push(vec![r.avg_round_len()]);
+        }
+        acc_table.add_block(name, acc_rows);
+        len_table.add_block(name, len_rows);
+    }
+    acc_table.emit("ablation_safa_accuracy");
+    len_table.emit("ablation_safa_round_length");
+    println!(
+        "\nReading: disabling the bypass discards undrafted work (lower\n\
+         effective updates -> slower convergence under crashes); disabling\n\
+         compensation removes CFCFM's fairness bias correction (fast\n\
+         clients monopolize picks; round close times shrink slightly at\n\
+         the cost of bias — cf. Fig. 5 case 3)."
+    );
+}

@@ -1,0 +1,29 @@
+//! Figs. 3 & 4: the lag-tolerance analysis (§III-D).
+//!
+//! Sweeps tau from 1 to 10 on Task 1 with C in {0.1, 0.5, 1.0} and cr in
+//! {0.3, 0.7}, reporting best loss (Fig. 3a), synchronization ratio
+//! (Fig. 3b), EUR (Fig. 4a) and version variance (Fig. 4b).
+
+use safa::bench_harness::Series;
+use safa::experiments::tau_sweep;
+
+fn main() {
+    safa::util::logging::init();
+    let sweep = tau_sweep();
+    let x: Vec<f64> = sweep.taus.iter().map(|&t| t as f64).collect();
+
+    let mut fig3a = Series::new("Fig. 3(a) — best loss vs lag tolerance", "tau", x.clone());
+    let mut fig3b = Series::new("Fig. 3(b) — SR vs lag tolerance", "tau", x.clone());
+    let mut fig4a = Series::new("Fig. 4(a) — EUR vs lag tolerance", "tau", x.clone());
+    let mut fig4b = Series::new("Fig. 4(b) — VV vs lag tolerance", "tau", x);
+    for (label, loss, sr, eur, vv) in &sweep.lines {
+        fig3a.add_line(label, loss.clone());
+        fig3b.add_line(label, sr.clone());
+        fig4a.add_line(label, eur.clone());
+        fig4b.add_line(label, vv.clone());
+    }
+    fig3a.emit("fig3a_loss_vs_tau");
+    fig3b.emit("fig3b_sr_vs_tau");
+    fig4a.emit("fig4a_eur_vs_tau");
+    fig4b.emit("fig4b_vv_vs_tau");
+}

@@ -1,0 +1,34 @@
+//! Fig. 5: client-selection bias vs federated round (§III-E).
+//!
+//! Emits the paper-verbatim series (Eqs. 13–16, which reproduce the
+//! published figure) and the corrected recurrence-based series — see the
+//! erratum note in `analysis/mod.rs`.
+
+use safa::analysis::{fig5_series, fig5_series_corrected};
+use safa::bench_harness::Series;
+
+fn main() {
+    safa::util::logging::init();
+    let rounds = 20u32;
+    let x: Vec<f64> = (1..=rounds).map(|r| r as f64).collect();
+    for (name, stem, f) in [
+        (
+            "Fig. 5 — bias vs round (paper-verbatim, cr=0.3)",
+            "fig5_bias_paper",
+            fig5_series as fn(f64, u32) -> (Vec<f64>, [Vec<f64>; 3]),
+        ),
+        (
+            "Fig. 5 — bias vs round (corrected recurrence, cr=0.3)",
+            "fig5_bias_corrected",
+            fig5_series_corrected as fn(f64, u32) -> (Vec<f64>, [Vec<f64>; 3]),
+        ),
+    ] {
+        let (fedavg, [c1, c2, c3]) = f(0.3, rounds);
+        let mut s = Series::new(name, "round", x.clone());
+        s.add_line("FedAvg", fedavg);
+        s.add_line("SAFA case 1", c1);
+        s.add_line("SAFA case 2", c2);
+        s.add_line("SAFA case 3", c3);
+        s.emit(stem);
+    }
+}

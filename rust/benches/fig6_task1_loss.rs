@@ -1,0 +1,13 @@
+//! Fig. 6: loss traces of the global model on Task 1.
+//!
+//! Loss of the global model vs round at C = 0.3 for cr in
+//! {0.1, 0.3, 0.5, 0.7}, all four protocols. Real training on the
+//! paper Task-1 configuration.
+use safa::experiments::loss_trace_figure;
+
+fn main() {
+    safa::util::logging::init();
+    for (i, series) in loss_trace_figure(1, "Fig. 6 Task 1 loss").into_iter().enumerate() {
+        series.emit(&format!("fig6_task1_loss_{}", ["a", "b", "c", "d"][i]));
+    }
+}

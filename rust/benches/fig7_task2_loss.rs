@@ -1,0 +1,13 @@
+//! Fig. 7: loss traces of the global model on Task 2.
+//!
+//! Loss of the global model vs round at C = 0.3 for cr in
+//! {0.1, 0.3, 0.5, 0.7}, all four protocols. Real training on the
+//! scaled configuration.
+use safa::experiments::loss_trace_figure;
+
+fn main() {
+    safa::util::logging::init();
+    for (i, series) in loss_trace_figure(2, "Fig. 7 Task 2 loss").into_iter().enumerate() {
+        series.emit(&format!("fig7_task2_loss_{}", ["a", "b", "c", "d"][i]));
+    }
+}

@@ -1,0 +1,13 @@
+//! Fig. 8: loss traces of the global model on Task 3.
+//!
+//! Loss of the global model vs round at C = 0.3 for cr in
+//! {0.1, 0.3, 0.5, 0.7}, all four protocols. Real training on the
+//! scaled configuration.
+use safa::experiments::loss_trace_figure;
+
+fn main() {
+    safa::util::logging::init();
+    for (i, series) in loss_trace_figure(3, "Fig. 8 Task 3 loss").into_iter().enumerate() {
+        series.emit(&format!("fig8_task3_loss_{}", ["a", "b", "c", "d"][i]));
+    }
+}

@@ -1,0 +1,75 @@
+//! L3 hot-path micro-benchmarks (the §Perf instrumented loop):
+//! aggregation (Eq. 7), cache updates, round simulation at m=500, run
+//! setup and the native matmul kernel.
+
+use safa::bench_harness::Bencher;
+use safa::config::presets;
+use safa::coordinator::Coordinator;
+use safa::model::tensor::matmul;
+use safa::model::ParamVec;
+use safa::protocol::FedEnv;
+use safa::util::rng::Pcg64;
+
+fn main() {
+    safa::util::logging::init();
+    let mut b = Bencher::new();
+
+    // Eq. 7 aggregation at Task-2 paper scale: 100 clients x 431k params.
+    let dim = 431_080;
+    let m = 100;
+    let cache: Vec<ParamVec> = (0..m)
+        .map(|i| ParamVec(vec![i as f32 * 0.01; dim]))
+        .collect();
+    let weights: Vec<f32> = vec![1.0 / m as f32; m];
+    let mut out = ParamVec::zeros(dim);
+    b.bench("aggregate_eq7_m100_d431k", || {
+        out.clear();
+        for (w, entry) in weights.iter().zip(&cache) {
+            out.axpy(*w, entry);
+        }
+        out.0[0]
+    });
+
+    // Cache entry refresh (Eq. 6 / Eq. 8 path).
+    let update = ParamVec(vec![1.5; dim]);
+    let mut entry = ParamVec::zeros(dim);
+    b.bench("cache_copy_d431k", || {
+        entry.copy_from(&update);
+        entry.0[0]
+    });
+
+    // Full Null-backend SAFA round at Task-3 scale (m = 500).
+    let mut cfg = presets::task3();
+    cfg.backend = safa::config::Backend::Null;
+    cfg.eval_every = 1_000_000;
+    cfg.train.rounds = 1;
+    let mut coord = Coordinator::new(&cfg).expect("coordinator");
+    let mut t = 1usize;
+    b.bench("safa_null_round_m500", || {
+        let rec = coord.protocol.run_round(t, &mut coord.env);
+        t += 1;
+        rec.round_len
+    });
+
+    // FedEnv construction (data synthesis + partition + fleet) at Task-1
+    // scale — the per-run setup cost in grid sweeps.
+    let cfg1 = presets::task1();
+    b.bench("fedenv_setup_task1", || {
+        let env = FedEnv::new(&cfg1).expect("env");
+        env.m()
+    });
+
+    // Native matmul kernel (the CNN hot loop): 480x200 @ 200x64.
+    let (mm, kk, nn) = (480usize, 200usize, 64usize);
+    let mut rng = Pcg64::new(1);
+    let a: Vec<f32> = (0..mm * kk).map(|_| rng.next_f32() - 0.5).collect();
+    let w: Vec<f32> = (0..kk * nn).map(|_| rng.next_f32() - 0.5).collect();
+    let mut c = vec![0.0f32; mm * nn];
+    b.bench("native_matmul_480x200x64", || {
+        matmul(&mut c, &a, &w, mm, kk, nn, false);
+        c[0]
+    });
+
+    b.write_json("results/microbench_hotpath.json")
+        .expect("write results");
+}

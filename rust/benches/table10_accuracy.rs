@@ -1,0 +1,19 @@
+//! Table X: best accuracy of the global model on Task 1 (4 protocols).
+//!
+//! Real training on the paper Task-1 configuration (see DESIGN.md §6 /
+//! EXPERIMENTS.md for the scaling argument); `SAFA_PRESET=paper` runs
+//! Table II shapes.
+use safa::config::ProtocolKind;
+use safa::experiments::{accuracy_cfg, grid_table, Metric};
+
+fn main() {
+    safa::util::logging::init();
+    let base = accuracy_cfg(1);
+    let table = grid_table(
+        "Table X — Task 1 best accuracy",
+        &base,
+        &ProtocolKind::ALL,
+        Metric::BestAccuracy,
+    );
+    table.emit("table10_task1_accuracy");
+}

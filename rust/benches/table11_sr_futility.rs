@@ -1,0 +1,16 @@
+//! Table XI: synchronization ratio and futility percentage on Task 1.
+//!
+//! Paper-exact profile, Null trainer (SR and futility are timing-side
+//! metrics). Emits two tables: SR and futility percentage.
+use safa::config::ProtocolKind;
+use safa::experiments::{grid_table, timing_cfg, Metric};
+
+fn main() {
+    safa::util::logging::init();
+    let base = timing_cfg(1);
+    let protos = [ProtocolKind::FedAvg, ProtocolKind::FedCs, ProtocolKind::Safa];
+    grid_table("Table XI — Task 1 — synchronization ratio", &base, &protos, Metric::SyncRatio)
+        .emit("table11_task1_sr");
+    grid_table("Table XI — Task 1 — futility percentage", &base, &protos, Metric::Futility)
+        .emit("table11_task1_futility");
+}

@@ -1,0 +1,16 @@
+//! Table XIII: synchronization ratio and futility percentage on Task 2.
+//!
+//! Paper-exact profile, Null trainer (SR and futility are timing-side
+//! metrics). Emits two tables: SR and futility percentage.
+use safa::config::ProtocolKind;
+use safa::experiments::{grid_table, timing_cfg, Metric};
+
+fn main() {
+    safa::util::logging::init();
+    let base = timing_cfg(2);
+    let protos = [ProtocolKind::FedAvg, ProtocolKind::FedCs, ProtocolKind::Safa];
+    grid_table("Table XIII — Task 2 — synchronization ratio", &base, &protos, Metric::SyncRatio)
+        .emit("table13_task2_sr");
+    grid_table("Table XIII — Task 2 — futility percentage", &base, &protos, Metric::Futility)
+        .emit("table13_task2_futility");
+}

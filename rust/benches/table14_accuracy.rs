@@ -1,0 +1,19 @@
+//! Table XIV: best accuracy of the global model on Task 3 (4 protocols).
+//!
+//! Real training on the scaled configuration (see DESIGN.md §6 /
+//! EXPERIMENTS.md for the scaling argument); `SAFA_PRESET=paper` runs
+//! Table II shapes.
+use safa::config::ProtocolKind;
+use safa::experiments::{accuracy_cfg, grid_table, Metric};
+
+fn main() {
+    safa::util::logging::init();
+    let base = accuracy_cfg(3);
+    let table = grid_table(
+        "Table XIV — Task 3 best accuracy",
+        &base,
+        &ProtocolKind::ALL,
+        Metric::BestAccuracy,
+    );
+    table.emit("table14_task3_accuracy");
+}

@@ -1,0 +1,16 @@
+//! Table XV: synchronization ratio and futility percentage on Task 3.
+//!
+//! Paper-exact profile, Null trainer (SR and futility are timing-side
+//! metrics). Emits two tables: SR and futility percentage.
+use safa::config::ProtocolKind;
+use safa::experiments::{grid_table, timing_cfg, Metric};
+
+fn main() {
+    safa::util::logging::init();
+    let base = timing_cfg(3);
+    let protos = [ProtocolKind::FedAvg, ProtocolKind::FedCs, ProtocolKind::Safa];
+    grid_table("Table XV — Task 3 — synchronization ratio", &base, &protos, Metric::SyncRatio)
+        .emit("table15_task3_sr");
+    grid_table("Table XV — Task 3 — futility percentage", &base, &protos, Metric::Futility)
+        .emit("table15_task3_futility");
+}

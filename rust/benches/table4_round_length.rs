@@ -1,0 +1,20 @@
+//! Table IV: average federated round length (s) on Task 1, T_lim = 830 s.
+//!
+//! Paper-exact environment profile (Table II), Null trainer — timing
+//! metrics are invariant to gradient numerics. `SAFA_BENCH_FAST=1` trims
+//! rounds; `SAFA_PRESET=paper` is implied (timing grids always run the
+//! paper profile).
+use safa::config::ProtocolKind;
+use safa::experiments::{grid_table, timing_cfg, Metric};
+
+fn main() {
+    safa::util::logging::init();
+    let base = timing_cfg(1);
+    let table = grid_table(
+        "Table IV — Task 1 avg round length (s)",
+        &base,
+        &[ProtocolKind::FedAvg, ProtocolKind::FedCs, ProtocolKind::Safa],
+        Metric::RoundLen,
+    );
+    table.emit("table4_task1_round_length");
+}

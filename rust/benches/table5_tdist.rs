@@ -1,0 +1,20 @@
+//! Table V: average model distribution overhead T_dist (s) on Task 1.
+//!
+//! Paper-exact environment profile (Table II), Null trainer — timing
+//! metrics are invariant to gradient numerics. `SAFA_BENCH_FAST=1` trims
+//! rounds; `SAFA_PRESET=paper` is implied (timing grids always run the
+//! paper profile).
+use safa::config::ProtocolKind;
+use safa::experiments::{grid_table, timing_cfg, Metric};
+
+fn main() {
+    safa::util::logging::init();
+    let base = timing_cfg(1);
+    let table = grid_table(
+        "Table V — Task 1 avg T_dist (s)",
+        &base,
+        &[ProtocolKind::FedAvg, ProtocolKind::FedCs, ProtocolKind::Safa],
+        Metric::TDist,
+    );
+    table.emit("table5_task1_tdist");
+}

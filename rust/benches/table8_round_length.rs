@@ -1,0 +1,20 @@
+//! Table VIII: average federated round length (s) on Task 3, T_lim = 1620 s.
+//!
+//! Paper-exact environment profile (Table II), Null trainer — timing
+//! metrics are invariant to gradient numerics. `SAFA_BENCH_FAST=1` trims
+//! rounds; `SAFA_PRESET=paper` is implied (timing grids always run the
+//! paper profile).
+use safa::config::ProtocolKind;
+use safa::experiments::{grid_table, timing_cfg, Metric};
+
+fn main() {
+    safa::util::logging::init();
+    let base = timing_cfg(3);
+    let table = grid_table(
+        "Table VIII — Task 3 avg round length (s)",
+        &base,
+        &[ProtocolKind::FedAvg, ProtocolKind::FedCs, ProtocolKind::Safa],
+        Metric::RoundLen,
+    );
+    table.emit("table8_task3_round_length");
+}

@@ -1,0 +1,277 @@
+//! Closed-form analyses from the paper: the selection-bias model
+//! (§III-E / Appendix A, Fig. 5) and the theoretical EUR (Eq. 5).
+//!
+//! **Erratum note.** The paper's printed closed form for σ^(k) (Eq. 15)
+//! is inconsistent with its own recurrence (Eqs. 22/24): e.g. at k=1 it
+//! yields σ = 2−cr > 1, which cannot be a probability complement. We
+//! therefore evaluate the bias model from the *recurrences* (Eqs. 22–25 /
+//! 28–31), which are well-defined, converge, and produce Fig. 5's
+//! qualitative shape. [`sigma_paper`] keeps the printed formula for
+//! reference, and a regression test documents the discrepancy.
+
+/// The three client-selection regimes of §III-E.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BiasCase {
+    /// C ≥ 1−R: selection deficit — every committed update is picked.
+    Case1,
+    /// (1−C)(1−R) ≤ C < 1−R.
+    Case2,
+    /// C < (1−C)(1−R): quota met entirely by prioritized clients.
+    Case3,
+}
+
+/// Classify (C, R) per §III-E.
+pub fn classify_case(c: f64, r: f64) -> BiasCase {
+    if c >= 1.0 - r {
+        BiasCase::Case1
+    } else if c >= (1.0 - c) * (1.0 - r) {
+        BiasCase::Case2
+    } else {
+        BiasCase::Case3
+    }
+}
+
+/// The paper's printed closed form (Eq. 15) — kept verbatim for
+/// reference; see the module-level erratum note. Do not use for
+/// probabilities.
+pub fn sigma_paper(cr: f64, k: u32) -> f64 {
+    (2.0 * cr - (cr - 1.0).powi(k as i32 + 1) - 3.0) / (cr - 2.0)
+}
+
+/// Direct-to-cache and via-bypass probabilities for client A at round r
+/// (Eqs. 22/23 evaluated by recurrence; 1-based r).
+pub fn p_a_parts(case: BiasCase, cr_a: f64, r: u32) -> (f64, f64) {
+    match case {
+        BiasCase::Case1 | BiasCase::Case2 => (1.0 - cr_a, 0.0),
+        BiasCase::Case3 => {
+            // P_D^(1) = 1 - cr; P_D^(r) = (1-cr)(1 - P_D^(r-1));
+            // P_S^(r) = cr·(1 - P_D^(r-1) - cr).
+            let mut p_d = 1.0 - cr_a;
+            if r <= 1 {
+                return (p_d, 0.0);
+            }
+            let mut p_d_prev = p_d;
+            for _ in 2..=r {
+                p_d_prev = p_d;
+                p_d = (1.0 - cr_a) * (1.0 - p_d_prev);
+            }
+            let p_s = (cr_a * (1.0 - p_d_prev - cr_a)).max(0.0);
+            (p_d, p_s)
+        }
+    }
+}
+
+/// Direct and bypass probabilities for client B (Eqs. 24/25).
+pub fn p_b_parts(case: BiasCase, cr_b: f64, r: u32) -> (f64, f64) {
+    match case {
+        BiasCase::Case1 => (1.0 - cr_b, 0.0),
+        BiasCase::Case2 => {
+            let mut p_d = 1.0 - cr_b;
+            if r <= 1 {
+                return (p_d, 0.0);
+            }
+            let mut p_d_prev = p_d;
+            for _ in 2..=r {
+                p_d_prev = p_d;
+                p_d = (1.0 - cr_b) * (1.0 - p_d_prev);
+            }
+            let p_s = (cr_b * (1.0 - p_d_prev - cr_b)).max(0.0);
+            (p_d, p_s)
+        }
+        // Case 3: B is never picked directly; its work reaches the cache
+        // only through the bypass.
+        BiasCase::Case3 => (0.0, 1.0 - cr_b),
+    }
+}
+
+/// P^(r)(A) = P_D + P_S (Eq. 20).
+pub fn p_a(case: BiasCase, cr_a: f64, r: u32) -> f64 {
+    let (d, s) = p_a_parts(case, cr_a, r);
+    d + s
+}
+
+/// P^(r)(B) = P_D + P_S (Eq. 21).
+pub fn p_b(case: BiasCase, cr_b: f64, r: u32) -> f64 {
+    let (d, s) = p_b_parts(case, cr_b, r);
+    d + s
+}
+
+/// FedAvg bias between clients A and B (Eq. 12) — constant in r.
+pub fn bias_fedavg(cr_a: f64, cr_b: f64) -> f64 {
+    (1.0 - cr_a) / (1.0 - cr_b)
+}
+
+/// SAFA bias at round r, **corrected** (Eq. 11 with recurrence-evaluated
+/// Eqs. 20/21; all quantities are valid probabilities).
+pub fn bias_safa(case: BiasCase, cr_a: f64, cr_b: f64, r: u32) -> f64 {
+    p_a(case, cr_a, r) / p_b(case, cr_b, r)
+}
+
+/// SAFA bias at round r, **paper-verbatim** (Eqs. 13/14/16 with the
+/// printed σ of Eq. 15). Reproduces Fig. 5 exactly as published — note
+/// P^(r) exceeds 1 in the σ branches, which is the erratum documented in
+/// the module header; the figure's *shape* (case 2 below FedAvg, case 3
+/// above, convergence in a few rounds) comes from these formulas.
+pub fn bias_safa_paper(case: BiasCase, cr_a: f64, cr_b: f64, r: u32) -> f64 {
+    let k = r.saturating_sub(1);
+    let pa = match case {
+        BiasCase::Case1 | BiasCase::Case2 => 1.0 - cr_a,
+        BiasCase::Case3 => sigma_paper(cr_a, k) - cr_a * cr_a,
+    };
+    let pb = match case {
+        BiasCase::Case1 | BiasCase::Case3 => 1.0 - cr_b,
+        BiasCase::Case2 => sigma_paper(cr_b, k) - cr_b * cr_b,
+    };
+    pa / pb
+}
+
+/// Theoretical SAFA Effective Update Ratio (Eq. 5):
+/// EUR = 1−R if C ≥ 1−R else C.
+pub fn eur_safa_theory(c: f64, r: f64) -> f64 {
+    if c >= 1.0 - r {
+        1.0 - r
+    } else {
+        c
+    }
+}
+
+/// Theoretical FedAvg EUR: C·(1−R) (§III-B).
+pub fn eur_fedavg_theory(c: f64, r: f64) -> f64 {
+    c * (1.0 - r)
+}
+
+/// The Fig. 5 series (paper-verbatim formulas): bias as a function of
+/// round for FedAvg and the three SAFA cases, with cr_A = cr_B = cr.
+pub fn fig5_series(cr: f64, rounds: u32) -> (Vec<f64>, [Vec<f64>; 3]) {
+    let fedavg: Vec<f64> = (1..=rounds).map(|_| bias_fedavg(cr, cr)).collect();
+    let mk = |case: BiasCase| -> Vec<f64> {
+        (1..=rounds)
+            .map(|r| bias_safa_paper(case, cr, cr, r))
+            .collect()
+    };
+    (
+        fedavg,
+        [mk(BiasCase::Case1), mk(BiasCase::Case2), mk(BiasCase::Case3)],
+    )
+}
+
+/// The corrected Fig. 5 series (recurrence-evaluated probabilities).
+pub fn fig5_series_corrected(cr: f64, rounds: u32) -> (Vec<f64>, [Vec<f64>; 3]) {
+    let fedavg: Vec<f64> = (1..=rounds).map(|_| bias_fedavg(cr, cr)).collect();
+    let mk = |case: BiasCase| -> Vec<f64> {
+        (1..=rounds).map(|r| bias_safa(case, cr, cr, r)).collect()
+    };
+    (
+        fedavg,
+        [mk(BiasCase::Case1), mk(BiasCase::Case2), mk(BiasCase::Case3)],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+
+    #[test]
+    fn case_classification() {
+        // C large vs survivors -> case 1.
+        assert_eq!(classify_case(0.9, 0.3), BiasCase::Case1);
+        // Mid region -> case 2: C=0.5, R=0.3: 1-R=0.7, (1-C)(1-R)=0.35.
+        assert_eq!(classify_case(0.5, 0.3), BiasCase::Case2);
+        // Small C -> case 3: C=0.1 < 0.9*0.7=0.63.
+        assert_eq!(classify_case(0.1, 0.3), BiasCase::Case3);
+    }
+
+    #[test]
+    fn paper_closed_form_is_inconsistent_with_recurrence() {
+        // Documents the erratum: Eq. 15's printed σ^(1) = 2 − cr exceeds
+        // 1 for every cr < 1, so it cannot equal 1 − P_D^(1).
+        let cr = 0.3;
+        let sigma1 = sigma_paper(cr, 1);
+        assert!(
+            sigma1 > 1.0,
+            "if this fails the printed formula was fixed; update the module docs"
+        );
+        // The recurrence value is a valid probability complement.
+        let (p_d, _) = p_a_parts(BiasCase::Case3, cr, 1);
+        let sigma_rec = 1.0 - p_d;
+        assert!((0.0..=1.0).contains(&sigma_rec));
+        assert!((sigma1 - sigma_rec).abs() > 0.5);
+    }
+
+    #[test]
+    fn probabilities_stay_in_unit_interval() {
+        property("bias model probabilities valid", 100, |g| {
+            let cr = g.f64_range(0.01, 0.95);
+            let case = *g.choose(&[BiasCase::Case1, BiasCase::Case2, BiasCase::Case3]);
+            for r in 1..12u32 {
+                for p in [p_a(case, cr, r), p_b(case, cr, r)] {
+                    assert!(
+                        (0.0..=1.0 + 1e-9).contains(&p),
+                        "case {case:?} cr={cr} r={r}: p={p}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn equal_crash_rates_give_unit_fedavg_bias() {
+        assert!((bias_fedavg(0.3, 0.3) - 1.0).abs() < 1e-12);
+        // Case 1 SAFA matches FedAvg exactly (paper Fig. 5).
+        assert!((bias_safa(BiasCase::Case1, 0.3, 0.3, 5) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_fig5_shape_case2_below_case3_above() {
+        // Fig. 5's published shape with cr_A = cr_B = 0.3: case 1 equals
+        // FedAvg (=1), case 2 sits below it, case 3 above it.
+        let (fedavg, [c1, c2, c3]) = fig5_series(0.3, 20);
+        assert!(fedavg.iter().all(|&b| (b - 1.0).abs() < 1e-12));
+        assert!(c1.iter().all(|&b| (b - 1.0).abs() < 1e-12));
+        for r in 5..20 {
+            assert!(c2[r] < 1.0, "paper case2 bias {} !< 1 at r={r}", c2[r]);
+            assert!(c3[r] > 1.0, "paper case3 bias {} !> 1 at r={r}", c3[r]);
+        }
+    }
+
+    #[test]
+    fn corrected_case3_flips_against_the_paper_figure() {
+        // Part of the erratum: evaluating the paper's own recurrences
+        // with valid probabilities, case 3's steady state gives
+        // P(A) = σ* − cr² + ... < 1 − cr = P(B), i.e. bias < 1 — the
+        // OPPOSITE side of Fig. 5, which was produced with P(B) > 1
+        // pseudo-probabilities. We pin both behaviours.
+        let corrected = bias_safa(BiasCase::Case3, 0.3, 0.3, 40);
+        assert!(corrected < 1.0, "corrected case-3 bias {corrected}");
+        let paper = bias_safa_paper(BiasCase::Case3, 0.3, 0.3, 40);
+        assert!(paper > 1.0, "paper case-3 bias {paper}");
+    }
+
+    #[test]
+    fn bias_converges_within_few_rounds() {
+        // Fig. 5: all series converge (damped oscillation, rate |cr−1|).
+        for series_fn in [fig5_series, fig5_series_corrected] {
+            let (_, [c1, c2, c3]) = series_fn(0.3, 60);
+            for series in [c1, c2, c3] {
+                let tail: Vec<f64> = series[40..].to_vec();
+                let spread = tail.iter().cloned().fold(f64::MIN, f64::max)
+                    - tail.iter().cloned().fold(f64::MAX, f64::min);
+                assert!(spread < 1e-3, "series did not converge: spread {spread}");
+            }
+        }
+    }
+
+    #[test]
+    fn eur_theory() {
+        assert!((eur_safa_theory(0.3, 0.5) - 0.3).abs() < 1e-12);
+        assert!((eur_safa_theory(0.9, 0.5) - 0.5).abs() < 1e-12);
+        assert!((eur_fedavg_theory(0.5, 0.3) - 0.35).abs() < 1e-12);
+        // SAFA EUR dominates FedAvg EUR everywhere.
+        property("EUR safa >= fedavg", 100, |g| {
+            let c = g.f64_range(0.01, 1.0);
+            let r = g.f64_range(0.0, 0.99);
+            assert!(eur_safa_theory(c, r) >= eur_fedavg_theory(c, r) - 1e-12);
+        });
+    }
+}

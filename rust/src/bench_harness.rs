@@ -1,0 +1,380 @@
+//! Micro-benchmark + experiment-table harness (criterion replacement).
+//!
+//! Two roles:
+//!
+//! 1. [`Bencher`] — wall-clock micro-benchmarks with warmup, repeated
+//!    timed iterations, and mean/stddev/min reporting. Used by
+//!    `rust/benches/microbench_hotpath.rs` for the L3 perf pass.
+//! 2. [`Table`] — a formatter that prints the paper's cr × C grids in the
+//!    same layout as Tables IV–XV and writes machine-readable CSV/JSON
+//!    next to them under `results/`.
+
+use crate::util::json::Json;
+use crate::util::stats;
+use std::fmt::Write as _;
+use std::hint::black_box;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+/// Result of one micro-benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>12}  ({} iters)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            format!("±{}", fmt_ns(self.stddev_ns)),
+            format!("min {}", fmt_ns(self.min_ns)),
+            self.iters
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Micro-benchmark runner.
+pub struct Bencher {
+    /// Target total measurement time per benchmark.
+    pub measure_time: Duration,
+    /// Warmup time before measurement.
+    pub warmup_time: Duration,
+    /// Number of timed samples to collect.
+    pub samples: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            measure_time: Duration::from_millis(900),
+            warmup_time: Duration::from_millis(200),
+            samples: 20,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        let mut b = Bencher::default();
+        // SAFA_BENCH_FAST=1 trims times for CI-style smoke runs.
+        if std::env::var("SAFA_BENCH_FAST").as_deref() == Ok("1") {
+            b.measure_time = Duration::from_millis(120);
+            b.warmup_time = Duration::from_millis(30);
+            b.samples = 8;
+        }
+        b
+    }
+
+    /// Time `f`, which should return a value that depends on the work
+    /// (it is passed through `black_box` to defeat DCE).
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + calibration: how many iters fit in one sample?
+        let warmup_end = Instant::now() + self.warmup_time;
+        let mut calib_iters: u64 = 0;
+        let calib_start = Instant::now();
+        while Instant::now() < warmup_end {
+            black_box(f());
+            calib_iters += 1;
+        }
+        let per_iter = calib_start.elapsed().as_nanos() as f64 / calib_iters.max(1) as f64;
+        let sample_ns = self.measure_time.as_nanos() as f64 / self.samples as f64;
+        let iters_per_sample = ((sample_ns / per_iter.max(1.0)).ceil() as u64).max(1);
+
+        let mut sample_means = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let start = Instant::now();
+            for _ in 0..iters_per_sample {
+                black_box(f());
+            }
+            let elapsed = start.elapsed().as_nanos() as f64;
+            sample_means.push(elapsed / iters_per_sample as f64);
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: iters_per_sample * self.samples as u64,
+            mean_ns: stats::mean(&sample_means),
+            stddev_ns: stats::stddev_sample(&sample_means),
+            min_ns: stats::min(&sample_means).unwrap_or(0.0),
+            max_ns: stats::max(&sample_means).unwrap_or(0.0),
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Dump all results as JSON under `results/`.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        let mut arr = Vec::new();
+        for r in &self.results {
+            let mut o = Json::obj();
+            o.set("name", Json::Str(r.name.clone()));
+            o.set("mean_ns", Json::Num(r.mean_ns));
+            o.set("stddev_ns", Json::Num(r.stddev_ns));
+            o.set("min_ns", Json::Num(r.min_ns));
+            o.set("iters", Json::Num(r.iters as f64));
+            arr.push(o);
+        }
+        write_results_file(path, &Json::Arr(arr).to_string_pretty())
+    }
+}
+
+/// Ensure `results/` exists and write a file inside it.
+pub fn write_results_file(path: &str, contents: &str) -> std::io::Result<()> {
+    let p = Path::new(path);
+    if let Some(dir) = p.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(p, contents)
+}
+
+/// A cr × C grid table in the paper's layout (one block per protocol).
+pub struct Table {
+    pub title: String,
+    pub col_header: Vec<String>,
+    pub row_header: Vec<String>,
+    /// blocks: (protocol name, rows×cols values)
+    pub blocks: Vec<(String, Vec<Vec<f64>>)>,
+    pub precision: usize,
+}
+
+impl Table {
+    pub fn new(title: &str, crs: &[f64], cs: &[f64]) -> Table {
+        Table {
+            title: title.to_string(),
+            col_header: cs.iter().map(|c| format!("C = {c}")).collect(),
+            row_header: crs.iter().map(|cr| format!("{cr}")).collect(),
+            blocks: Vec::new(),
+            precision: 2,
+        }
+    }
+
+    pub fn add_block(&mut self, protocol: &str, values: Vec<Vec<f64>>) {
+        assert_eq!(values.len(), self.row_header.len(), "row count mismatch");
+        for row in &values {
+            assert_eq!(row.len(), self.col_header.len(), "col count mismatch");
+        }
+        self.blocks.push((protocol.to_string(), values));
+    }
+
+    /// Render in the paper's visual layout.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let width = 12.max(self.precision + 6);
+        let _ = writeln!(out, "=== {} ===", self.title);
+        for (proto, rows) in &self.blocks {
+            let _ = writeln!(out, "--- {proto} ---");
+            let _ = write!(out, "{:>6}", "cr");
+            for h in &self.col_header {
+                let _ = write!(out, "{h:>width$}");
+            }
+            let _ = writeln!(out);
+            for (ri, row) in rows.iter().enumerate() {
+                let _ = write!(out, "{:>6}", self.row_header[ri]);
+                for v in row {
+                    let _ = write!(out, "{:>width$.prec$}", v, prec = self.precision);
+                }
+                let _ = writeln!(out);
+            }
+        }
+        out
+    }
+
+    /// CSV with one line per (protocol, cr, C) cell.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("protocol,cr,C,value\n");
+        for (proto, rows) in &self.blocks {
+            for (ri, row) in rows.iter().enumerate() {
+                for (ci, v) in row.iter().enumerate() {
+                    let c = self.col_header[ci].trim_start_matches("C = ");
+                    let _ = writeln!(out, "{proto},{},{c},{v}", self.row_header[ri]);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("title", Json::Str(self.title.clone()));
+        let mut blocks = Vec::new();
+        for (proto, rows) in &self.blocks {
+            let mut b = Json::obj();
+            b.set("protocol", Json::Str(proto.clone()));
+            b.set(
+                "rows",
+                Json::Arr(
+                    rows.iter()
+                        .map(|r| Json::Arr(r.iter().map(|&v| Json::Num(v)).collect()))
+                        .collect(),
+                ),
+            );
+            blocks.push(b);
+        }
+        o.set("blocks", Json::Arr(blocks));
+        o.set(
+            "cr",
+            Json::Arr(self.row_header.iter().map(|s| Json::Str(s.clone())).collect()),
+        );
+        o.set(
+            "C",
+            Json::Arr(self.col_header.iter().map(|s| Json::Str(s.clone())).collect()),
+        );
+        o
+    }
+
+    /// Print to stdout and persist CSV + JSON under `results/<stem>.*`.
+    pub fn emit(&self, stem: &str) {
+        print!("{}", self.render());
+        let _ = write_results_file(&format!("results/{stem}.csv"), &self.to_csv());
+        let _ = write_results_file(
+            &format!("results/{stem}.json"),
+            &self.to_json().to_string_pretty(),
+        );
+    }
+}
+
+/// A named (x, series...) line-plot dump for the paper's figures.
+pub struct Series {
+    pub title: String,
+    pub x_label: String,
+    pub x: Vec<f64>,
+    pub lines: Vec<(String, Vec<f64>)>,
+}
+
+impl Series {
+    pub fn new(title: &str, x_label: &str, x: Vec<f64>) -> Series {
+        Series {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            x,
+            lines: Vec::new(),
+        }
+    }
+
+    pub fn add_line(&mut self, name: &str, ys: Vec<f64>) {
+        assert_eq!(ys.len(), self.x.len(), "series length mismatch");
+        self.lines.push((name.to_string(), ys));
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = write!(out, "{}", self.x_label);
+        for (name, _) in &self.lines {
+            let _ = write!(out, ",{name}");
+        }
+        let _ = writeln!(out);
+        for (i, x) in self.x.iter().enumerate() {
+            let _ = write!(out, "{x}");
+            for (_, ys) in &self.lines {
+                let _ = write!(out, ",{}", ys[i]);
+            }
+            let _ = writeln!(out);
+        }
+        out
+    }
+
+    /// Render a coarse ASCII sparkline per series (terminal-friendly view
+    /// of the figure) plus first/last values.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "=== {} (x = {}) ===", self.title, self.x_label);
+        for (name, ys) in &self.lines {
+            let lo = stats::min(ys).unwrap_or(0.0);
+            let hi = stats::max(ys).unwrap_or(1.0);
+            let glyphs = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+            let spark: String = ys
+                .iter()
+                .map(|&y| {
+                    let t = if hi > lo { (y - lo) / (hi - lo) } else { 0.0 };
+                    glyphs[((t * 7.0).round() as usize).min(7)]
+                })
+                .collect();
+            let _ = writeln!(
+                out,
+                "{name:<28} {spark}  [{:.4} → {:.4}, min {:.4}]",
+                ys.first().copied().unwrap_or(0.0),
+                ys.last().copied().unwrap_or(0.0),
+                lo
+            );
+        }
+        out
+    }
+
+    pub fn emit(&self, stem: &str) {
+        print!("{}", self.render());
+        let _ = write_results_file(&format!("results/{stem}.csv"), &self.to_csv());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher {
+            measure_time: Duration::from_millis(20),
+            warmup_time: Duration::from_millis(5),
+            samples: 4,
+            results: Vec::new(),
+        };
+        let r = b.bench("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters >= 4);
+    }
+
+    #[test]
+    fn table_render_and_csv() {
+        let mut t = Table::new("demo", &[0.1, 0.3], &[0.1, 0.5]);
+        t.add_block("SAFA", vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let text = t.render();
+        assert!(text.contains("SAFA"));
+        assert!(text.contains("C = 0.5"));
+        let csv = t.to_csv();
+        assert!(csv.contains("SAFA,0.3,0.5,4"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row count mismatch")]
+    fn table_shape_checked() {
+        let mut t = Table::new("demo", &[0.1, 0.3], &[0.1]);
+        t.add_block("X", vec![vec![1.0]]);
+    }
+
+    #[test]
+    fn series_csv() {
+        let mut s = Series::new("loss", "round", vec![1.0, 2.0, 3.0]);
+        s.add_line("safa", vec![0.9, 0.5, 0.3]);
+        let csv = s.to_csv();
+        assert!(csv.starts_with("round,safa\n"));
+        assert!(csv.contains("3,0.3"));
+        assert!(s.render().contains("safa"));
+    }
+}

@@ -1,0 +1,185 @@
+//! Simulated end devices (clients).
+//!
+//! Each client carries the environment attributes the paper draws once
+//! per experiment — performance (batches/s, Exp(λ=1)) and shard size —
+//! plus the protocol-visible state: its local model, the model's version
+//! lineage, whether it committed last round (Def. 1), whether it was
+//! picked last round (CFCFM priority) and the crash-partial accounting
+//! used for the futility metric.
+
+use crate::config::ExperimentConfig;
+use crate::data::FedData;
+use crate::model::ParamVec;
+use crate::util::rng::{Distribution, Exponential, Pcg64};
+
+/// An in-flight local-training job (SAFA's continuation semantics).
+///
+/// SAFA clients keep training across round boundaries: a crash pauses the
+/// job for the rest of the round (device offline — no progress, nothing
+/// lost), and a job whose remaining time exceeds the round keeps running
+/// into the next round. The job's base model content is the client's
+/// `local_model` (unchanged until commit), so only timing state lives
+/// here. Forced synchronization (up-to-date or deprecated) abandons the
+/// job — that destroyed progress is what the futility metric charges.
+#[derive(Debug, Clone, Copy)]
+pub struct Job {
+    /// Seconds of work left (download already included at job start).
+    pub remaining: f64,
+    /// Full job duration, for progress-fraction accounting.
+    pub total: f64,
+    /// Global version of the base model this job trains on.
+    pub base_version: i64,
+}
+
+impl Job {
+    /// Fraction of the job already done.
+    pub fn progress(&self) -> f64 {
+        if self.total <= 0.0 {
+            0.0
+        } else {
+            (1.0 - self.remaining / self.total).clamp(0.0, 1.0)
+        }
+    }
+}
+
+/// Per-client simulation + protocol state.
+#[derive(Debug, Clone)]
+pub struct ClientState {
+    pub id: usize,
+    /// Speed in batches/second (drawn once, Exp(λ)).
+    pub perf: f64,
+    /// Mini-batches per local epoch (from shard size and B).
+    pub batches_per_epoch: usize,
+    /// Shard size n_k (aggregation weight numerator).
+    pub n_k: usize,
+    /// Current local model.
+    pub local_model: ParamVec,
+    /// Local model version v_k (lineage: base version + 1 after training).
+    pub version: i64,
+    /// Version of the global model this client's current/ongoing training
+    /// is based on.
+    pub base_version: i64,
+    /// Did this client successfully commit in the previous round?
+    /// (Definition 1's "up-to-date" test.)
+    pub committed_last: bool,
+    /// Was this client picked (P set) in the previous round?
+    /// (Algorithm 1 prioritizes clients NOT in P(t-1).)
+    pub picked_last: bool,
+    /// Accumulated crash-partial training work not yet committed or
+    /// destroyed (futility accounting; see DESIGN.md §7). Used by the
+    /// selection-ahead protocols (FedAvg/FedCS), whose servers discard
+    /// late work.
+    pub pending_partial: f64,
+    /// In-flight training job (SAFA continuation semantics).
+    pub job: Option<Job>,
+}
+
+impl ClientState {
+    /// Local training time for E epochs (paper Eq. 18).
+    pub fn t_train(&self, epochs: usize) -> f64 {
+        crate::net::t_train(self.batches_per_epoch, epochs, self.perf)
+    }
+
+    /// Version lag relative to the current global version.
+    pub fn lag(&self, global_version: i64) -> i64 {
+        global_version - self.version
+    }
+}
+
+/// Build the client fleet for an experiment. Performance draws use a
+/// dedicated RNG stream so fleets are identical across protocols for the
+/// same seed (apples-to-apples comparisons, as in the paper's tables).
+pub fn build_clients(
+    cfg: &ExperimentConfig,
+    data: &FedData,
+    init_model: &ParamVec,
+    rng: &mut Pcg64,
+) -> Vec<ClientState> {
+    let perf_dist = Exponential::new(cfg.env.perf_lambda);
+    (0..cfg.env.m)
+        .map(|id| {
+            // Floor performance: the paper's Exp(1) draws can be
+            // arbitrarily close to zero, which models permanently
+            // straggling devices; the tiny floor only avoids inf times.
+            let perf = perf_dist.sample(rng).max(1e-4);
+            let n_k = data.client_size(id);
+            ClientState {
+                id,
+                perf,
+                batches_per_epoch: data.client_batches(id, cfg.train.batch_size),
+                n_k,
+                local_model: init_model.clone(),
+                version: 0,
+                base_version: 0,
+                committed_last: true, // everyone starts in sync with w(0)
+                picked_last: false,
+                pending_partial: 0.0,
+                job: None,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::data::{partition_gaussian, synth, FedData};
+
+    fn env() -> (ExperimentConfig, FedData) {
+        let cfg = presets::preset("tiny").unwrap();
+        let (train, test) = synth::generate(cfg.task.kind, cfg.task.n, cfg.task.n_test, 3);
+        let mut rng = Pcg64::new(3);
+        let partitions = partition_gaussian(train.n, cfg.env.m, 0.3, &mut rng);
+        (
+            cfg,
+            FedData {
+                train,
+                test,
+                partitions,
+            },
+        )
+    }
+
+    #[test]
+    fn fleet_construction() {
+        let (cfg, data) = env();
+        let init = ParamVec::zeros(14);
+        let mut rng = Pcg64::new(7);
+        let clients = build_clients(&cfg, &data, &init, &mut rng);
+        assert_eq!(clients.len(), cfg.env.m);
+        for (k, c) in clients.iter().enumerate() {
+            assert_eq!(c.id, k);
+            assert!(c.perf > 0.0);
+            assert_eq!(c.n_k, data.client_size(k));
+            assert_eq!(
+                c.batches_per_epoch,
+                data.client_size(k).div_ceil(cfg.train.batch_size)
+            );
+            assert_eq!(c.version, 0);
+            assert!(c.committed_last);
+        }
+    }
+
+    #[test]
+    fn t_train_scales_inversely_with_perf() {
+        let (cfg, data) = env();
+        let init = ParamVec::zeros(14);
+        let mut rng = Pcg64::new(9);
+        let mut clients = build_clients(&cfg, &data, &init, &mut rng);
+        clients[0].perf = 2.0;
+        clients[0].batches_per_epoch = 10;
+        assert!((clients[0].t_train(4) - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fleet_is_deterministic() {
+        let (cfg, data) = env();
+        let init = ParamVec::zeros(14);
+        let a = build_clients(&cfg, &data, &init, &mut Pcg64::new(11));
+        let b = build_clients(&cfg, &data, &init, &mut Pcg64::new(11));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.perf, y.perf);
+        }
+    }
+}

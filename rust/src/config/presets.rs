@@ -1,0 +1,281 @@
+//! Experiment presets: the paper's Table II settings plus scaled-down
+//! variants sized for a single-core box.
+//!
+//! Calibration notes:
+//! * `server_bw_bps` is calibrated so T_dist matches the paper's tables:
+//!   Tables V/IX correspond to ~0.404 s per 10 MB model; Table VII to
+//!   ~0.204 s per model for the CNN. The paper *states* 10 Gbps but its
+//!   own numbers imply an effective ~198 Mbps serialized stream — we
+//!   reproduce the tables, not the prose (see EXPERIMENTS.md §Notes).
+//! * T_lim values (830 s / 5600 s / 1620 s) are the paper's.
+
+use super::{
+    Backend, CnnArch, EnvConfig, ExperimentConfig, ProtocolConfig, ProtocolKind, TaskConfig,
+    TaskKind, TrainConfig,
+};
+use crate::error::{Result, SafaError};
+
+const MB_BITS: f64 = 8e6;
+
+fn base_env(m: usize) -> EnvConfig {
+    EnvConfig {
+        m,
+        crash_prob: 0.1,
+        perf_lambda: 1.0,
+        partition_rel_std: 0.3,
+        client_bw_bps: 1.40e6,
+        // 10 MB / 0.404 s ≈ 198 Mbps effective per-model stream.
+        server_bw_bps: 198.02e6,
+        model_size_bits: 10.0 * MB_BITS,
+    }
+}
+
+fn base_protocol() -> ProtocolConfig {
+    ProtocolConfig {
+        kind: ProtocolKind::Safa,
+        c_fraction: 0.3,
+        tau: 5,
+    }
+}
+
+/// Task 1 (paper): Boston-like regression, n=506, d=13, m=5, 100 rounds,
+/// E=3, B=5, T_lim=830 s.
+///
+/// Learning-rate deviation: the paper lists lr=1e-4, which presumes
+/// unnormalized Boston features (raw scales up to ~400 make effective
+/// gradients ~100x larger). Our synthetic generator standardizes
+/// features, so we scale lr to 2e-3 to land in the same convergence
+/// regime — the paper's ~0.64 accuracy ceiling is reached by round ~100
+/// under reliable settings, and protocol differentiation appears at
+/// small C / high cr exactly as in Table X. See EXPERIMENTS.md §Notes.
+pub fn task1() -> ExperimentConfig {
+    ExperimentConfig {
+        name: "task1-regression".into(),
+        task: TaskConfig {
+            kind: TaskKind::Regression,
+            n: 506,
+            d: 13,
+            num_classes: 1,
+            n_test: 100,
+            cnn: CnnArch::paper(),
+        },
+        env: base_env(5),
+        train: TrainConfig {
+            rounds: 100,
+            epochs: 3,
+            batch_size: 5,
+            lr: 2e-3,
+            t_lim: 830.0,
+        },
+        protocol: base_protocol(),
+        backend: Backend::Native,
+        seed: 1,
+        eval_every: 1,
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+/// Task 2 (paper): MNIST-like CNN, n=70000, d=784, m=100, 50 rounds, E=5,
+/// B=40, lr=1e-3, T_lim=5600 s.
+pub fn task2() -> ExperimentConfig {
+    let mut env = base_env(100);
+    // Table VII implies ~0.204 s per model for the CNN task.
+    env.server_bw_bps = 392.16e6;
+    ExperimentConfig {
+        name: "task2-cnn".into(),
+        task: TaskConfig {
+            kind: TaskKind::Cnn,
+            n: 70_000,
+            d: 28 * 28,
+            num_classes: 10,
+            n_test: 10_000,
+            cnn: CnnArch::paper(),
+        },
+        env,
+        train: TrainConfig {
+            rounds: 50,
+            epochs: 5,
+            batch_size: 40,
+            lr: 1e-3,
+            t_lim: 5600.0,
+        },
+        protocol: base_protocol(),
+        backend: Backend::Native,
+        seed: 1,
+        eval_every: 1,
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+/// Task 3 (paper): KDD-like SVM, n=186480, d=35, m=500, 100 rounds, E=5,
+/// B=100, lr=1e-2, T_lim=1620 s.
+pub fn task3() -> ExperimentConfig {
+    ExperimentConfig {
+        name: "task3-svm".into(),
+        task: TaskConfig {
+            kind: TaskKind::Svm,
+            n: 186_480,
+            d: 35,
+            num_classes: 2,
+            n_test: 20_000,
+            cnn: CnnArch::paper(),
+        },
+        env: base_env(500),
+        train: TrainConfig {
+            rounds: 100,
+            epochs: 5,
+            batch_size: 100,
+            lr: 1e-2,
+            t_lim: 1620.0,
+        },
+        protocol: base_protocol(),
+        backend: Backend::Native,
+        seed: 1,
+        eval_every: 1,
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+/// Scaled variants: identical environment *shape* (same m, same timing
+/// constants, same E/B/lr) but smaller datasets and fewer rounds so full
+/// protocol × cr × C grids finish on one core. The timing metrics
+/// (round length, T_dist, SR, EUR, VV, futility) are invariant to the
+/// dataset scaling because they depend only on batch *counts* per client,
+/// which we preserve proportionally.
+pub fn task1_scaled() -> ExperimentConfig {
+    let mut cfg = task1();
+    cfg.name = "task1-regression-scaled".into();
+    // Task 1 is already tiny; only trim rounds slightly.
+    cfg.train.rounds = 100;
+    cfg
+}
+
+pub fn task2_scaled() -> ExperimentConfig {
+    let mut cfg = task2();
+    cfg.name = "task2-cnn-scaled".into();
+    cfg.task.n = 4_000;
+    cfg.task.n_test = 800;
+    cfg.task.cnn = CnnArch::scaled();
+    cfg.train.rounds = 25;
+    cfg
+}
+
+pub fn task3_scaled() -> ExperimentConfig {
+    let mut cfg = task3();
+    cfg.name = "task3-svm-scaled".into();
+    cfg.task.n = 30_000;
+    cfg.task.n_test = 4_000;
+    cfg.env.m = 500;
+    cfg.train.rounds = 40;
+    cfg
+}
+
+/// Tiny preset for unit/integration tests and the quickstart example.
+pub fn tiny() -> ExperimentConfig {
+    let mut cfg = task1();
+    cfg.name = "tiny".into();
+    cfg.task.n = 120;
+    cfg.task.n_test = 30;
+    cfg.env.m = 4;
+    cfg.train.rounds = 8;
+    cfg.train.epochs = 2;
+    cfg.train.lr = 1e-3;
+    cfg
+}
+
+/// Look up a preset by name.
+pub fn preset(name: &str) -> Result<ExperimentConfig> {
+    match name.to_ascii_lowercase().as_str() {
+        "task1" => Ok(task1()),
+        "task2" => Ok(task2()),
+        "task3" => Ok(task3()),
+        "task1-scaled" | "task1_scaled" => Ok(task1_scaled()),
+        "task2-scaled" | "task2_scaled" => Ok(task2_scaled()),
+        "task3-scaled" | "task3_scaled" => Ok(task3_scaled()),
+        "tiny" => Ok(tiny()),
+        other => Err(SafaError::Config(format!("unknown preset '{other}'"))),
+    }
+}
+
+pub fn preset_names() -> &'static [&'static str] {
+    &[
+        "task1",
+        "task2",
+        "task3",
+        "task1-scaled",
+        "task2-scaled",
+        "task3-scaled",
+        "tiny",
+    ]
+}
+
+/// Paper-or-scaled preset for a task index (1..=3), honouring the
+/// `SAFA_PRESET=paper` environment switch used by the bench suite.
+pub fn scaled_preset(task: usize) -> ExperimentConfig {
+    let paper = std::env::var("SAFA_PRESET").as_deref() == Ok("paper");
+    match (task, paper) {
+        (1, true) => task1(),
+        (1, false) => task1_scaled(),
+        (2, true) => task2(),
+        (2, false) => task2_scaled(),
+        (3, true) => task3(),
+        (3, false) => task3_scaled(),
+        _ => panic!("scaled_preset: task must be 1..=3"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_table2() {
+        let t1 = task1();
+        assert_eq!(t1.task.n, 506);
+        assert_eq!(t1.task.d, 13);
+        assert_eq!(t1.env.m, 5);
+        assert_eq!(t1.train.rounds, 100);
+        assert_eq!(t1.train.epochs, 3);
+        assert_eq!(t1.train.batch_size, 5);
+        assert!((t1.train.lr - 2e-3).abs() < 1e-12); // documented deviation
+        assert_eq!(t1.train.t_lim, 830.0);
+
+        let t2 = task2();
+        assert_eq!(t2.task.n, 70_000);
+        assert_eq!(t2.task.d, 784);
+        assert_eq!(t2.env.m, 100);
+        assert_eq!(t2.train.rounds, 50);
+        assert_eq!(t2.train.epochs, 5);
+        assert_eq!(t2.train.batch_size, 40);
+        assert_eq!(t2.train.t_lim, 5600.0);
+
+        let t3 = task3();
+        assert_eq!(t3.task.n, 186_480);
+        assert_eq!(t3.task.d, 35);
+        assert_eq!(t3.env.m, 500);
+        assert_eq!(t3.train.batch_size, 100);
+        assert_eq!(t3.train.t_lim, 1620.0);
+    }
+
+    #[test]
+    fn tdist_calibration() {
+        // One 10 MB model over the calibrated server stream ≈ 0.404 s.
+        let t1 = task1();
+        let per_model = t1.env.model_size_bits / t1.env.server_bw_bps;
+        assert!((per_model - 0.404).abs() < 1e-3, "per_model={per_model}");
+        // CNN task ≈ 0.204 s.
+        let t2 = task2();
+        let per_model = t2.env.model_size_bits / t2.env.server_bw_bps;
+        assert!((per_model - 0.204).abs() < 1e-3, "per_model={per_model}");
+    }
+
+    #[test]
+    fn all_presets_validate() {
+        for name in preset_names() {
+            let cfg = preset(name).unwrap();
+            cfg.validate()
+                .unwrap_or_else(|e| panic!("preset {name} invalid: {e}"));
+        }
+        assert!(preset("nope").is_err());
+    }
+}

@@ -1,0 +1,200 @@
+//! The federation coordinator: owns the round loop (Alg. 2's server
+//! process), drives the configured protocol against the environment and
+//! collects the paper's metrics into a [`RunResult`].
+
+use crate::config::ExperimentConfig;
+use crate::data::FedData;
+use crate::error::Result;
+use crate::metrics::{RoundRecord, RunResult};
+use crate::model::Trainer;
+use crate::protocol::{make_protocol, FedEnv, Protocol};
+use std::sync::Arc;
+
+/// Orchestrates a full federated-learning run.
+pub struct Coordinator {
+    pub env: FedEnv,
+    pub protocol: Box<dyn Protocol>,
+}
+
+impl Coordinator {
+    /// Build everything from a config (data synthesis included).
+    pub fn new(cfg: &ExperimentConfig) -> Result<Coordinator> {
+        let env = FedEnv::new(cfg)?;
+        let protocol = make_protocol(&env);
+        Ok(Coordinator { env, protocol })
+    }
+
+    /// Build with shared data (benchmark grids reuse one dataset).
+    pub fn with_data(cfg: &ExperimentConfig, data: Arc<FedData>) -> Result<Coordinator> {
+        let env = FedEnv::with_data(cfg, data)?;
+        let protocol = make_protocol(&env);
+        Ok(Coordinator { env, protocol })
+    }
+
+    /// Build with an injected trainer (the XLA runtime path).
+    pub fn with_trainer(
+        cfg: &ExperimentConfig,
+        data: Arc<FedData>,
+        trainer: Box<dyn Trainer>,
+    ) -> Result<Coordinator> {
+        let env = FedEnv::with_trainer(cfg, data, trainer)?;
+        let protocol = make_protocol(&env);
+        Ok(Coordinator { env, protocol })
+    }
+
+    /// Run all configured rounds and return the metric record.
+    pub fn run(&mut self) -> RunResult {
+        let cfg = self.env.cfg.clone();
+        let mut rounds: Vec<RoundRecord> = Vec::with_capacity(cfg.train.rounds);
+        for t in 1..=cfg.train.rounds {
+            let rec = self.protocol.run_round(t, &mut self.env);
+            log::debug!(
+                "[{}] round {t}/{}: len={:.1}s picked={} committed={} crashed={} loss={:?}",
+                self.protocol.kind().name(),
+                cfg.train.rounds,
+                rec.round_len,
+                rec.n_picked,
+                rec.n_committed,
+                rec.n_crashed,
+                rec.eval.map(|e| e.loss)
+            );
+            rounds.push(rec);
+        }
+        self.protocol.finalize(&mut self.env);
+        let final_eval = Some(self.env.trainer.evaluate(self.protocol.global()));
+        RunResult {
+            protocol: self.protocol.kind().name().to_string(),
+            task: cfg.task.kind.name().to_string(),
+            c_fraction: cfg.protocol.c_fraction,
+            crash_prob: cfg.env.crash_prob,
+            tau: cfg.protocol.tau,
+            seed: cfg.seed,
+            m: cfg.env.m,
+            rounds,
+            final_eval,
+        }
+    }
+}
+
+/// Convenience: run one experiment end-to-end from a config.
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunResult> {
+    Ok(Coordinator::new(cfg)?.run())
+}
+
+/// Run the same config with shared data (grid sweeps).
+pub fn run_with_data(cfg: &ExperimentConfig, data: Arc<FedData>) -> Result<RunResult> {
+    Ok(Coordinator::with_data(cfg, data)?.run())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, ProtocolKind};
+
+    #[test]
+    fn full_run_produces_all_rounds() {
+        let cfg = presets::preset("tiny").unwrap();
+        let result = run_experiment(&cfg).unwrap();
+        assert_eq!(result.rounds.len(), cfg.train.rounds);
+        assert!(result.final_eval.is_some());
+        assert_eq!(result.protocol, "SAFA");
+    }
+
+    #[test]
+    fn runs_are_reproducible() {
+        let cfg = presets::preset("tiny").unwrap();
+        let a = run_experiment(&cfg).unwrap();
+        let b = run_experiment(&cfg).unwrap();
+        for (x, y) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(x.round_len, y.round_len);
+            assert_eq!(x.n_picked, y.n_picked);
+            assert_eq!(x.eval.map(|e| e.loss), y.eval.map(|e| e.loss));
+        }
+        assert_eq!(
+            a.final_eval.unwrap().accuracy,
+            b.final_eval.unwrap().accuracy
+        );
+    }
+
+    #[test]
+    fn all_protocols_complete_under_crashes() {
+        for kind in ProtocolKind::ALL {
+            for crash in [0.0, 0.5, 1.0] {
+                let mut cfg = presets::preset("tiny").unwrap();
+                cfg.protocol.kind = kind;
+                cfg.env.crash_prob = crash;
+                cfg.train.rounds = 4;
+                let result = run_experiment(&cfg)
+                    .unwrap_or_else(|e| panic!("{kind:?} cr={crash}: {e}"));
+                assert_eq!(result.rounds.len(), 4);
+            }
+        }
+    }
+
+    #[test]
+    fn safa_converges_on_tiny_regression() {
+        let mut cfg = presets::preset("tiny").unwrap();
+        cfg.train.rounds = 20;
+        cfg.train.lr = 5e-3;
+        cfg.env.crash_prob = 0.1;
+        let result = run_experiment(&cfg).unwrap();
+        let first = result.rounds[0].eval.unwrap().loss;
+        let best = result.best_loss().unwrap();
+        assert!(best < first * 0.8, "loss {first} -> best {best}");
+    }
+
+    #[test]
+    fn safa_rounds_are_faster_than_fedavg_at_small_c() {
+        // The paper's efficiency headline (Tables IV/VI/VIII): with a
+        // small selection fraction under crashes, SAFA's post-training
+        // selection closes rounds much earlier than FedAvg's synchronous
+        // wait. This is the robust, scale-independent claim — quality
+        // comparisons at the paper's full configuration live in the
+        // benches (EXPERIMENTS.md).
+        let mut safa_len = Vec::new();
+        let mut fedavg_len = Vec::new();
+        for seed in 1..=3u64 {
+            for kind in [ProtocolKind::Safa, ProtocolKind::FedAvg] {
+                let mut cfg = presets::preset("task1").unwrap();
+                cfg.backend = crate::config::Backend::Null;
+                cfg.protocol.kind = kind;
+                cfg.protocol.c_fraction = 0.1;
+                cfg.env.crash_prob = 0.3;
+                cfg.train.rounds = 50;
+                cfg.seed = seed;
+                let r = run_experiment(&cfg).unwrap();
+                match kind {
+                    ProtocolKind::Safa => safa_len.push(r.avg_round_len()),
+                    _ => fedavg_len.push(r.avg_round_len()),
+                }
+            }
+        }
+        let safa: f64 = safa_len.iter().sum::<f64>() / safa_len.len() as f64;
+        let fedavg: f64 = fedavg_len.iter().sum::<f64>() / fedavg_len.len() as f64;
+        assert!(
+            safa < fedavg,
+            "SAFA avg round {safa}s should beat FedAvg {fedavg}s at C=0.25"
+        );
+    }
+
+    #[test]
+    fn safa_quality_competitive_with_fedavg_at_task1_config() {
+        // Table X's regime: at the paper's Task-1 configuration both
+        // protocols approach the accuracy ceiling; SAFA must stay within
+        // a few points of FedAvg (and beats it at small C / high cr —
+        // asserted by the benches, not here, for runtime reasons).
+        let mut cfg = presets::preset("task1").unwrap();
+        cfg.protocol.c_fraction = 0.3;
+        cfg.env.crash_prob = 0.3;
+        cfg.train.rounds = 100;
+        cfg.seed = 2;
+        cfg.protocol.kind = ProtocolKind::Safa;
+        let safa = run_experiment(&cfg).unwrap().best_accuracy().unwrap();
+        cfg.protocol.kind = ProtocolKind::FedAvg;
+        let fedavg = run_experiment(&cfg).unwrap().best_accuracy().unwrap();
+        assert!(
+            safa > fedavg - 0.05,
+            "SAFA accuracy {safa} vs FedAvg {fedavg}"
+        );
+    }
+}

@@ -1,0 +1,100 @@
+//! Datasets, synthetic generators and the federated partitioner.
+
+pub mod partition;
+pub mod synth;
+
+pub use partition::{partition_gaussian, Partition};
+
+use crate::config::TaskKind;
+
+/// A dense dataset: `n` rows of `d` f32 features plus one label per row.
+///
+/// Labels are stored as f32: the regression target for Task 1, the class
+/// index (0..10) for Task 2, and ±1 for the SVM Task 3.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub n: usize,
+    pub d: usize,
+    pub task: TaskKind,
+}
+
+impl Dataset {
+    pub fn new(task: TaskKind, x: Vec<f32>, y: Vec<f32>, d: usize) -> Dataset {
+        assert!(d > 0, "d must be positive");
+        assert_eq!(x.len() % d, 0, "x length not a multiple of d");
+        let n = x.len() / d;
+        assert_eq!(y.len(), n, "label count mismatch");
+        Dataset { x, y, n, d, task }
+    }
+
+    /// Row `i` as a feature slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Gather a subset of rows into a new dense block (used to feed the
+    /// XLA runtime, which wants contiguous buffers).
+    pub fn gather(&self, idx: &[usize]) -> (Vec<f32>, Vec<f32>) {
+        let mut x = Vec::with_capacity(idx.len() * self.d);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(self.row(i));
+            y.push(self.y[i]);
+        }
+        (x, y)
+    }
+}
+
+/// Train + test split plus the per-client index partition.
+#[derive(Debug, Clone)]
+pub struct FedData {
+    pub train: Dataset,
+    pub test: Dataset,
+    pub partitions: Vec<Partition>,
+}
+
+impl FedData {
+    /// Samples held by client `k`.
+    pub fn client_size(&self, k: usize) -> usize {
+        self.partitions[k].indices.len()
+    }
+
+    /// Total training samples across clients (= n when fully assigned).
+    pub fn total_size(&self) -> usize {
+        self.partitions.iter().map(|p| p.indices.len()).sum()
+    }
+
+    /// Number of mini-batches client `k` processes per epoch.
+    pub fn client_batches(&self, k: usize, batch_size: usize) -> usize {
+        self.client_size(k).div_ceil(batch_size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_shape_checks() {
+        let ds = Dataset::new(
+            TaskKind::Regression,
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            vec![0.5, 1.5],
+            3,
+        );
+        assert_eq!(ds.n, 2);
+        assert_eq!(ds.row(1), &[4.0, 5.0, 6.0]);
+        let (x, y) = ds.gather(&[1, 0]);
+        assert_eq!(x, vec![4.0, 5.0, 6.0, 1.0, 2.0, 3.0]);
+        assert_eq!(y, vec![1.5, 0.5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "label count mismatch")]
+    fn mismatched_labels_panic() {
+        Dataset::new(TaskKind::Svm, vec![1.0, 2.0], vec![1.0, -1.0, 1.0], 2);
+    }
+}

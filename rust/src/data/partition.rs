@@ -1,0 +1,132 @@
+//! Federated data partitioning.
+//!
+//! The paper assumes local data sizes follow N(mu, 0.3*mu) with mu = n/m
+//! (§IV-A). We sample raw sizes from that Gaussian, clamp to >= 1,
+//! renormalize so they sum exactly to n, and deal shuffled sample indices
+//! accordingly — every sample belongs to exactly one client.
+
+use crate::util::rng::{Distribution, Normal, Pcg64};
+
+/// One client's shard: indices into the global training set.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub client: usize,
+    pub indices: Vec<usize>,
+}
+
+/// Partition `n` samples across `m` clients with Gaussian-distributed
+/// shard sizes (relative std `rel_std`, the paper uses 0.3).
+pub fn partition_gaussian(n: usize, m: usize, rel_std: f64, rng: &mut Pcg64) -> Vec<Partition> {
+    assert!(m > 0 && n >= m, "need n >= m >= 1");
+    let mu = n as f64 / m as f64;
+    let dist = Normal::new(mu, rel_std * mu);
+
+    // Draw raw sizes, clamp at 1.
+    let mut sizes: Vec<f64> = (0..m).map(|_| dist.sample(rng).max(1.0)).collect();
+    // Scale so they sum to n, then round with largest-remainder to keep
+    // the total exact and every shard >= 1.
+    let total: f64 = sizes.iter().sum();
+    for s in sizes.iter_mut() {
+        *s *= n as f64 / total;
+    }
+    let mut int_sizes: Vec<usize> = sizes.iter().map(|&s| s.floor().max(1.0) as usize).collect();
+    let mut assigned: usize = int_sizes.iter().sum();
+    // Distribute the remainder by largest fractional part.
+    let mut order: Vec<usize> = (0..m).collect();
+    order.sort_by(|&a, &b| {
+        let fa = sizes[a] - sizes[a].floor();
+        let fb = sizes[b] - sizes[b].floor();
+        fb.partial_cmp(&fa).unwrap()
+    });
+    let mut i = 0;
+    while assigned < n {
+        int_sizes[order[i % m]] += 1;
+        assigned += 1;
+        i += 1;
+    }
+    // If clamping overshot (rare), trim from the largest shards.
+    while assigned > n {
+        let (argmax, _) = int_sizes
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &s)| s)
+            .unwrap();
+        if int_sizes[argmax] > 1 {
+            int_sizes[argmax] -= 1;
+            assigned -= 1;
+        } else {
+            break;
+        }
+    }
+
+    // Deal shuffled indices.
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let mut parts = Vec::with_capacity(m);
+    let mut cursor = 0;
+    for (client, &size) in int_sizes.iter().enumerate() {
+        let end = (cursor + size).min(n);
+        parts.push(Partition {
+            client,
+            indices: idx[cursor..end].to_vec(),
+        });
+        cursor = end;
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+
+    #[test]
+    fn partitions_conserve_mass() {
+        let mut rng = Pcg64::new(5);
+        let parts = partition_gaussian(506, 5, 0.3, &mut rng);
+        assert_eq!(parts.len(), 5);
+        let total: usize = parts.iter().map(|p| p.indices.len()).sum();
+        assert_eq!(total, 506);
+        // No duplicates across clients.
+        let mut all: Vec<usize> = parts.iter().flat_map(|p| p.indices.clone()).collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 506);
+    }
+
+    #[test]
+    fn sizes_are_heterogeneous() {
+        let mut rng = Pcg64::new(7);
+        let parts = partition_gaussian(10_000, 100, 0.3, &mut rng);
+        let sizes: Vec<f64> = parts.iter().map(|p| p.indices.len() as f64).collect();
+        let mean = crate::util::stats::mean(&sizes);
+        let std = crate::util::stats::variance(&sizes).sqrt();
+        assert!((mean - 100.0).abs() < 1.0);
+        // Relative std should be near 0.3 (loose bound: clamping skews it).
+        assert!(std / mean > 0.15 && std / mean < 0.45, "rel std {}", std / mean);
+    }
+
+    #[test]
+    fn property_mass_and_minimum_shard() {
+        property("partition mass conserved", 100, |g| {
+            let m = g.usize_range(1, 40);
+            let n = m + g.usize_range(0, 2_000);
+            let rel = g.f64_range(0.05, 0.6);
+            let parts = partition_gaussian(n, m, rel, g.rng());
+            assert_eq!(parts.len(), m);
+            let total: usize = parts.iter().map(|p| p.indices.len()).sum();
+            assert_eq!(total, n);
+            assert!(parts.iter().all(|p| !p.indices.is_empty()));
+            assert!(parts.iter().all(|p| p.indices.iter().all(|&i| i < n)));
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = partition_gaussian(1000, 10, 0.3, &mut Pcg64::new(42));
+        let b = partition_gaussian(1000, 10, 0.3, &mut Pcg64::new(42));
+        for (pa, pb) in a.iter().zip(&b) {
+            assert_eq!(pa.indices, pb.indices);
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! Library-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the SAFA library.
+#[derive(Debug, Error)]
+pub enum SafaError {
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("data error: {0}")]
+    Data(String),
+
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    #[error("protocol error: {0}")]
+    Protocol(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json error: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+
+    #[error("toml error: {0}")]
+    Toml(#[from] crate::util::toml::TomlError),
+
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for SafaError {
+    fn from(e: xla::Error) -> Self {
+        SafaError::Xla(format!("{e:?}"))
+    }
+}
+
+pub type Result<T> = std::result::Result<T, SafaError>;

@@ -1,0 +1,284 @@
+//! Experiment drivers shared by the bench suite (`rust/benches/`) and the
+//! CLI: protocol × cr × C grids in the paper's table layout, loss-trace
+//! figures and the lag-tolerance sweep.
+//!
+//! Scale policy: timing/overhead/SR/futility grids run the paper's exact
+//! Table II profiles on the Null backend (their metrics are independent
+//! of gradient numerics); accuracy grids and loss traces run real
+//! training on scaled configs sized for one core (see DESIGN.md §6 and
+//! the preset docs). `SAFA_PRESET=paper` upgrades everything to paper
+//! scale.
+
+use crate::bench_harness::{Series, Table};
+use crate::config::{presets, Backend, CnnArch, ExperimentConfig, ProtocolKind, TaskKind};
+use crate::coordinator::run_with_data;
+use crate::data::{partition_gaussian, synth, FedData};
+use crate::metrics::RunResult;
+use crate::util::rng::Pcg64;
+use std::sync::Arc;
+
+/// The paper's evaluation grid.
+pub const CRS: [f64; 4] = [0.1, 0.3, 0.5, 0.7];
+pub const CS: [f64; 5] = [0.1, 0.3, 0.5, 0.7, 1.0];
+
+/// Which scalar a grid cell reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    RoundLen,
+    TDist,
+    BestAccuracy,
+    SyncRatio,
+    Futility,
+    Eur,
+    VersionVariance,
+    BestLoss,
+}
+
+impl Metric {
+    pub fn extract(&self, r: &RunResult) -> f64 {
+        match self {
+            Metric::RoundLen => r.avg_round_len(),
+            Metric::TDist => r.avg_t_dist(),
+            Metric::BestAccuracy => r.best_accuracy().unwrap_or(f64::NAN),
+            Metric::SyncRatio => r.sync_ratio(),
+            Metric::Futility => r.futility(),
+            Metric::Eur => r.eur(),
+            Metric::VersionVariance => r.version_variance(),
+            Metric::BestLoss => r.best_loss().unwrap_or(f64::NAN),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::RoundLen => "avg_round_len_s",
+            Metric::TDist => "avg_t_dist_s",
+            Metric::BestAccuracy => "best_accuracy",
+            Metric::SyncRatio => "sync_ratio",
+            Metric::Futility => "futility",
+            Metric::Eur => "eur",
+            Metric::VersionVariance => "version_variance",
+            Metric::BestLoss => "best_loss",
+        }
+    }
+}
+
+/// Timing-grid config: the paper's exact environment profile with the
+/// Null trainer (round length / T_dist / SR / EUR / futility are
+/// invariant to gradient numerics).
+pub fn timing_cfg(task: usize) -> ExperimentConfig {
+    let mut cfg = match task {
+        1 => presets::task1(),
+        2 => presets::task2(),
+        3 => presets::task3(),
+        _ => panic!("task must be 1..=3"),
+    };
+    cfg.backend = Backend::Null;
+    cfg.eval_every = 1_000_000;
+    if fast_mode() {
+        cfg.train.rounds = cfg.train.rounds.min(15);
+    }
+    cfg
+}
+
+/// Accuracy-grid config: real training, scaled to finish a full
+/// 4-protocol grid on one core. `SAFA_PRESET=paper` restores Table II.
+pub fn accuracy_cfg(task: usize) -> ExperimentConfig {
+    if std::env::var("SAFA_PRESET").as_deref() == Ok("paper") {
+        let mut cfg = match task {
+            1 => presets::task1(),
+            2 => presets::task2(),
+            3 => presets::task3(),
+            _ => panic!("task must be 1..=3"),
+        };
+        cfg.backend = Backend::Native;
+        return cfg;
+    }
+    let mut cfg = match task {
+        1 => presets::task1(), // already laptop-sized: run at paper scale
+        2 => {
+            let mut c = presets::task2_scaled();
+            // Further reduction for the 80-run grid (documented in
+            // EXPERIMENTS.md): protocol ordering is preserved, absolute
+            // accuracies are lower than the paper's MNIST numbers.
+            c.env.m = 10;
+            c.task.n = 600;
+            c.task.n_test = 200;
+            c.task.cnn = CnnArch {
+                c1: 6,
+                c2: 12,
+                hidden: 48,
+            };
+            c.train.batch_size = 20;
+            c.train.epochs = 3;
+            c.train.rounds = 8;
+            c.train.lr = 5e-3;
+            c
+        }
+        3 => {
+            let mut c = presets::task3_scaled();
+            c.env.m = 50;
+            c.task.n = 5_000;
+            c.task.n_test = 2_000;
+            c.train.rounds = 15;
+            c
+        }
+        _ => panic!("task must be 1..=3"),
+    };
+    cfg.backend = Backend::Native;
+    if fast_mode() {
+        cfg.train.rounds = cfg.train.rounds.min(6);
+    }
+    cfg
+}
+
+fn fast_mode() -> bool {
+    std::env::var("SAFA_BENCH_FAST").as_deref() == Ok("1")
+}
+
+/// Share one dataset + partition across a grid (the paper holds data
+/// fixed while varying protocol/C/cr).
+pub fn shared_data(cfg: &ExperimentConfig) -> Arc<FedData> {
+    let (train, test) = synth::generate(cfg.task.kind, cfg.task.n, cfg.task.n_test, cfg.seed);
+    let mut rng = Pcg64::with_stream(cfg.seed, 0x9a57);
+    let partitions = partition_gaussian(train.n, cfg.env.m, cfg.env.partition_rel_std, &mut rng);
+    Arc::new(FedData {
+        train,
+        test,
+        partitions,
+    })
+}
+
+/// Run a full cr × C grid for each protocol and return the paper-layout
+/// table.
+pub fn grid_table(
+    title: &str,
+    base: &ExperimentConfig,
+    protocols: &[ProtocolKind],
+    metric: Metric,
+) -> Table {
+    let data = shared_data(base);
+    let mut table = Table::new(title, &CRS, &CS);
+    table.precision = match metric {
+        Metric::RoundLen | Metric::TDist => 2,
+        _ => 4,
+    };
+    for proto in protocols {
+        let mut rows = Vec::new();
+        for &cr in &CRS {
+            let mut row = Vec::new();
+            for &c in &CS {
+                let mut cfg = base.clone();
+                cfg.protocol.kind = *proto;
+                cfg.protocol.c_fraction = c;
+                cfg.env.crash_prob = cr;
+                let result = run_with_data(&cfg, Arc::clone(&data))
+                    .unwrap_or_else(|e| panic!("{title} {proto:?} cr={cr} C={c}: {e}"));
+                row.push(metric.extract(&result));
+            }
+            rows.push(row);
+        }
+        table.add_block(proto.name(), rows);
+    }
+    table
+}
+
+/// Figs. 6–8: loss traces at C = 0.3 for each crash probability, all
+/// four protocols.
+pub fn loss_trace_figure(task: usize, title: &str) -> Vec<Series> {
+    let base = accuracy_cfg(task);
+    let data = shared_data(&base);
+    let mut figures = Vec::new();
+    for &cr in &CRS {
+        let x: Vec<f64> = (1..=base.train.rounds).map(|r| r as f64).collect();
+        let mut s = Series::new(&format!("{title} (cr={cr}, C=0.3)"), "round", x);
+        for proto in ProtocolKind::ALL {
+            let mut cfg = base.clone();
+            cfg.protocol.kind = proto;
+            cfg.protocol.c_fraction = 0.3;
+            cfg.env.crash_prob = cr;
+            let result = run_with_data(&cfg, Arc::clone(&data))
+                .unwrap_or_else(|e| panic!("{title} {proto:?} cr={cr}: {e}"));
+            let trace: Vec<f64> = result
+                .loss_trace()
+                .into_iter()
+                .map(|l| if l.is_nan() { 0.0 } else { l })
+                .collect();
+            s.add_line(proto.name(), trace);
+        }
+        figures.push(s);
+    }
+    figures
+}
+
+/// Figs. 3–4: the lag-tolerance sweep on Task 1 — best loss, SR, EUR and
+/// VV as functions of tau for (C, cr) combinations.
+pub struct TauSweep {
+    pub taus: Vec<usize>,
+    /// (label, best_loss, sr, eur, vv) per (C, cr) combo, indexed by tau.
+    pub lines: Vec<(String, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>)>,
+}
+
+pub fn tau_sweep() -> TauSweep {
+    let mut base = accuracy_cfg(1);
+    debug_assert_eq!(base.task.kind, TaskKind::Regression);
+    base.protocol.kind = ProtocolKind::Safa;
+    if fast_mode() {
+        base.train.rounds = base.train.rounds.min(20);
+    }
+    let data = shared_data(&base);
+    let taus: Vec<usize> = (1..=10).collect();
+    let mut lines = Vec::new();
+    for &c in &[0.1, 0.5, 1.0] {
+        for &cr in &[0.3, 0.7] {
+            let mut loss = Vec::new();
+            let mut sr = Vec::new();
+            let mut eur = Vec::new();
+            let mut vv = Vec::new();
+            for &tau in &taus {
+                let mut cfg = base.clone();
+                cfg.protocol.c_fraction = c;
+                cfg.env.crash_prob = cr;
+                cfg.protocol.tau = tau;
+                let r = run_with_data(&cfg, Arc::clone(&data))
+                    .unwrap_or_else(|e| panic!("tau sweep tau={tau}: {e}"));
+                loss.push(r.best_loss().unwrap_or(f64::NAN));
+                sr.push(r.sync_ratio());
+                eur.push(r.eur());
+                vv.push(r.version_variance());
+            }
+            lines.push((format!("C={c},cr={cr}"), loss, sr, eur, vv));
+        }
+    }
+    TauSweep { taus, lines }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_cfg_uses_paper_profiles() {
+        let t2 = timing_cfg(2);
+        assert_eq!(t2.env.m, 100);
+        assert_eq!(t2.backend, Backend::Null);
+        assert_eq!(t2.train.t_lim, 5600.0);
+    }
+
+    #[test]
+    fn tiny_grid_runs() {
+        let mut base = timing_cfg(1);
+        base.train.rounds = 3;
+        let table = grid_table(
+            "smoke",
+            &base,
+            &[ProtocolKind::FedAvg, ProtocolKind::Safa],
+            Metric::RoundLen,
+        );
+        assert_eq!(table.blocks.len(), 2);
+        assert_eq!(table.blocks[0].1.len(), CRS.len());
+        assert!(table
+            .blocks
+            .iter()
+            .all(|(_, rows)| rows.iter().all(|r| r.iter().all(|v| v.is_finite()))));
+    }
+}

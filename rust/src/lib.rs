@@ -1,0 +1,37 @@
+//! # SAFA — Semi-Asynchronous Federated Averaging
+//!
+//! A production-quality reproduction of *"SAFA: a Semi-Asynchronous
+//! Protocol for Fast Federated Learning with Low Overhead"* (Wu et al.,
+//! IEEE TC 2020) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the federated coordinator: SAFA's lag-tolerant
+//!   model distribution (Eq. 3), post-training CFCFM client selection
+//!   (Alg. 1) and three-step discriminative aggregation (Eqs. 6–8), plus
+//!   FedAvg / FedCS / fully-local baselines, a discrete-event edge
+//!   simulator and the paper's full metric suite.
+//! * **L2/L1 (python/, build-time only)** — JAX task models whose hot
+//!   spot is a Pallas fused-linear kernel, AOT-lowered once to HLO text.
+//! * **Runtime bridge** — [`runtime`] loads those artifacts with the
+//!   `xla` crate's PJRT CPU client and executes them from the Rust hot
+//!   path; Python never runs at experiment time.
+//!
+//! See `DESIGN.md` for the system inventory and per-experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod analysis;
+pub mod bench_harness;
+pub mod client;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod experiments;
+pub mod metrics;
+pub mod model;
+pub mod net;
+pub mod protocol;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use error::{Result, SafaError};

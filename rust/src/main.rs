@@ -1,0 +1,235 @@
+//! `safa` — launcher CLI for the SAFA federated-learning reproduction.
+//!
+//! ```text
+//! safa run     [--preset task1] [--protocol safa|fedavg|fedcs|local]
+//!              [--c 0.3] [--cr 0.1] [--tau 5] [--rounds N] [--seed S]
+//!              [--backend native|xla|null] [--config file.toml]
+//!              [--out results/run.json]
+//! safa sweep   [--preset task1] [--protocols safa,fedavg]
+//!              [--c 0.1,0.3] [--cr 0.1,0.3,0.5,0.7] [--metric round_len]
+//! safa bias    [--cr 0.3] [--rounds 20]         # Fig. 5 closed form
+//! safa presets                                   # list presets
+//! ```
+
+use safa::bench_harness::{write_results_file, Series, Table};
+use safa::config::{presets, Backend, ExperimentConfig, ProtocolKind};
+use safa::coordinator::run_experiment;
+use safa::util::cli::Args;
+use safa::util::logging;
+
+fn main() {
+    logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(argv, &["help", "quiet"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let code = match cmd {
+        "run" => cmd_run(&args),
+        "sweep" => cmd_sweep(&args),
+        "bias" => cmd_bias(&args),
+        "presets" => {
+            for name in presets::preset_names() {
+                println!("{name}");
+            }
+            Ok(())
+        }
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+    .map_or_else(
+        |e: anyhow::Error| {
+            eprintln!("error: {e}");
+            1
+        },
+        |_| 0,
+    );
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "safa — SAFA semi-asynchronous federated learning (paper reproduction)\n\
+         \n\
+         Commands:\n\
+         \x20 run      run one experiment (see --preset/--protocol/--c/--cr/--tau)\n\
+         \x20 sweep    run a protocol × C × cr grid and print a paper-style table\n\
+         \x20 bias     print the Fig. 5 closed-form bias series\n\
+         \x20 presets  list available presets\n"
+    );
+}
+
+/// Build a config from --config/--preset plus CLI overrides.
+fn build_config(args: &Args) -> anyhow::Result<ExperimentConfig> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)?;
+        let doc = safa::util::toml::parse(&text)?;
+        ExperimentConfig::from_toml(&doc)?
+    } else {
+        presets::preset(args.get("preset").unwrap_or("task1"))?
+    };
+    if let Some(p) = args.get("protocol") {
+        cfg.protocol.kind = ProtocolKind::parse(p)?;
+    }
+    if let Some(c) = args.get_parsed::<f64>("c")? {
+        cfg.protocol.c_fraction = c;
+    }
+    if let Some(cr) = args.get_parsed::<f64>("cr")? {
+        cfg.env.crash_prob = cr;
+    }
+    if let Some(tau) = args.get_parsed::<usize>("tau")? {
+        cfg.protocol.tau = tau;
+    }
+    if let Some(r) = args.get_parsed::<usize>("rounds")? {
+        cfg.train.rounds = r;
+    }
+    if let Some(s) = args.get_parsed::<u64>("seed")? {
+        cfg.seed = s;
+    }
+    if let Some(m) = args.get_parsed::<usize>("m")? {
+        cfg.env.m = m;
+    }
+    if let Some(b) = args.get("backend") {
+        cfg.backend = Backend::parse(b)?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let cfg = build_config(args)?;
+    log::info!(
+        "running {} on {} (m={}, C={}, cr={}, tau={}, rounds={})",
+        cfg.protocol.kind.name(),
+        cfg.task.kind.name(),
+        cfg.env.m,
+        cfg.protocol.c_fraction,
+        cfg.env.crash_prob,
+        cfg.protocol.tau,
+        cfg.train.rounds
+    );
+    let result = if cfg.backend == Backend::Xla {
+        run_with_xla(&cfg)?
+    } else {
+        run_experiment(&cfg)?
+    };
+    println!(
+        "protocol={} rounds={} avg_round_len={:.2}s avg_t_dist={:.2}s SR={:.3} EUR={:.3} VV={:.3} futility={:.3}",
+        result.protocol,
+        result.rounds.len(),
+        result.avg_round_len(),
+        result.avg_t_dist(),
+        result.sync_ratio(),
+        result.eur(),
+        result.version_variance(),
+        result.futility(),
+    );
+    if let Some(loss) = result.best_loss() {
+        println!("best_loss={loss:.6}");
+    }
+    if let Some(acc) = result.best_accuracy() {
+        println!("best_accuracy={acc:.4}");
+    }
+    if let Some(e) = result.final_eval {
+        println!("final_loss={:.6} final_accuracy={:.4}", e.loss, e.accuracy);
+    }
+    let out = args
+        .get("out")
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("results/run_{}_{}.json", result.task, result.protocol));
+    write_results_file(&out, &result.to_json().to_string_pretty())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// Run with the XLA (PJRT artifact) backend.
+fn run_with_xla(cfg: &ExperimentConfig) -> anyhow::Result<safa::metrics::RunResult> {
+    use safa::coordinator::Coordinator;
+    use safa::data::{partition_gaussian, synth, FedData};
+    use safa::runtime::XlaTrainer;
+    use safa::util::rng::Pcg64;
+    use std::sync::Arc;
+    let (train, test) = synth::generate(cfg.task.kind, cfg.task.n, cfg.task.n_test, cfg.seed);
+    let mut rng = Pcg64::with_stream(cfg.seed, 0x9a57);
+    let partitions = partition_gaussian(train.n, cfg.env.m, cfg.env.partition_rel_std, &mut rng);
+    let data = Arc::new(FedData {
+        train,
+        test,
+        partitions,
+    });
+    let trainer = XlaTrainer::new(cfg, Arc::clone(&data))?;
+    Ok(Coordinator::with_trainer(cfg, data, Box::new(trainer))?.run())
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let base = build_config(args)?;
+    let protocols: Vec<ProtocolKind> = match args.get("protocols") {
+        Some(spec) => spec
+            .split(',')
+            .map(|s| ProtocolKind::parse(s.trim()))
+            .collect::<Result<_, _>>()?,
+        None => vec![ProtocolKind::FedAvg, ProtocolKind::FedCs, ProtocolKind::Safa],
+    };
+    let cs: Vec<f64> = args
+        .get_list("c")?
+        .unwrap_or_else(|| vec![0.1, 0.3, 0.5, 0.7, 1.0]);
+    let crs: Vec<f64> = args
+        .get_list("cr")?
+        .unwrap_or_else(|| vec![0.1, 0.3, 0.5, 0.7]);
+    let metric = args.get("metric").unwrap_or("round_len").to_string();
+
+    let mut table = Table::new(
+        &format!("{} — {}", base.name, metric),
+        &crs,
+        &cs,
+    );
+    for proto in &protocols {
+        let mut rows = Vec::new();
+        for &cr in &crs {
+            let mut row = Vec::new();
+            for &c in &cs {
+                let mut cfg = base.clone();
+                cfg.protocol.kind = *proto;
+                cfg.protocol.c_fraction = c;
+                cfg.env.crash_prob = cr;
+                let r = run_experiment(&cfg)?;
+                let v = match metric.as_str() {
+                    "round_len" => r.avg_round_len(),
+                    "t_dist" => r.avg_t_dist(),
+                    "sr" => r.sync_ratio(),
+                    "eur" => r.eur(),
+                    "vv" => r.version_variance(),
+                    "futility" => r.futility(),
+                    "best_loss" => r.best_loss().unwrap_or(f64::NAN),
+                    "best_accuracy" => r.best_accuracy().unwrap_or(f64::NAN),
+                    other => anyhow::bail!("unknown metric '{other}'"),
+                };
+                row.push(v);
+            }
+            rows.push(row);
+        }
+        table.add_block(proto.name(), rows);
+    }
+    table.emit(&format!("sweep_{}_{metric}", base.task.kind.name()));
+    Ok(())
+}
+
+fn cmd_bias(args: &Args) -> anyhow::Result<()> {
+    let cr = args.get_or("cr", 0.3)?;
+    let rounds = args.get_or("rounds", 20u32)?;
+    let (fedavg, [c1, c2, c3]) = safa::analysis::fig5_series(cr, rounds);
+    let x: Vec<f64> = (1..=rounds).map(|r| r as f64).collect();
+    let mut s = Series::new(&format!("Fig. 5 bias (cr={cr})"), "round", x);
+    s.add_line("FedAvg", fedavg);
+    s.add_line("SAFA case 1", c1);
+    s.add_line("SAFA case 2", c2);
+    s.add_line("SAFA case 3", c3);
+    s.emit("fig5_bias_cli");
+    Ok(())
+}

@@ -1,0 +1,295 @@
+//! The paper's metric suite: per-round records and run-level summaries of
+//! EUR (Eq. 4), SR (Eq. 9), VV (Eq. 10), futility percentage, round
+//! length and model quality.
+
+use crate::model::EvalResult;
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Everything measured in one federated round.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Round length T (Eq. 17 realization), seconds.
+    pub round_len: f64,
+    /// Server distribution overhead T_dist (Eq. 19), seconds.
+    pub t_dist: f64,
+    /// Number of clients forced to synchronize (downloads).
+    pub m_sync: usize,
+    /// |P(t)| — picked clients whose updates enter this aggregation.
+    pub n_picked: usize,
+    /// Failed participants (crash + overtime).
+    pub n_crashed: usize,
+    /// Successfully committed updates (picked + undrafted).
+    pub n_committed: usize,
+    /// |Q(t)| — undrafted (committed but bypassed).
+    pub n_undrafted: usize,
+    /// Variance of the client model-version distribution after the round.
+    pub version_variance: f64,
+    /// Wasted training work destroyed by forced synchronization this
+    /// round (futility numerator contribution).
+    pub futility_wasted: f64,
+    /// Attempted training work this round (denominator contribution).
+    pub futility_total: f64,
+    /// Mean training loss over committed updates (NaN-free; 0 if none).
+    pub train_loss: f64,
+    /// Global model quality, when evaluated this round.
+    pub eval: Option<EvalResult>,
+}
+
+impl RoundRecord {
+    /// Effective Update Ratio for this round (Eq. 4): picked minus
+    /// picked-and-crashed over all clients. Picked clients that crashed
+    /// can only exist in selection-ahead-of-training protocols.
+    pub fn eur(&self, m: usize) -> f64 {
+        self.n_picked as f64 / m as f64
+    }
+
+    /// Synchronization ratio for this round.
+    pub fn sr(&self, m: usize) -> f64 {
+        self.m_sync as f64 / m as f64
+    }
+}
+
+/// A full run: config echo plus per-round records.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub protocol: String,
+    pub task: String,
+    pub c_fraction: f64,
+    pub crash_prob: f64,
+    pub tau: usize,
+    pub seed: u64,
+    pub m: usize,
+    pub rounds: Vec<RoundRecord>,
+    /// Quality of the final global model (after `finalize`, which matters
+    /// for the fully-local baseline).
+    pub final_eval: Option<EvalResult>,
+}
+
+impl RunResult {
+    /// Average federated round length (Tables IV/VI/VIII).
+    pub fn avg_round_len(&self) -> f64 {
+        stats::mean(&self.rounds.iter().map(|r| r.round_len).collect::<Vec<_>>())
+    }
+
+    /// Average model-distribution overhead (Tables V/VII/IX).
+    pub fn avg_t_dist(&self) -> f64 {
+        stats::mean(&self.rounds.iter().map(|r| r.t_dist).collect::<Vec<_>>())
+    }
+
+    /// Synchronization Ratio over the run (Eq. 9).
+    pub fn sync_ratio(&self) -> f64 {
+        stats::mean(
+            &self
+                .rounds
+                .iter()
+                .map(|r| r.sr(self.m))
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Mean Effective Update Ratio (Eq. 4 averaged over rounds).
+    pub fn eur(&self) -> f64 {
+        stats::mean(
+            &self
+                .rounds
+                .iter()
+                .map(|r| r.eur(self.m))
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Mean Version Variance (Eq. 10).
+    pub fn version_variance(&self) -> f64 {
+        stats::mean(
+            &self
+                .rounds
+                .iter()
+                .map(|r| r.version_variance)
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Futility percentage: wasted / attempted local work
+    /// (Tables XI/XIII/XV).
+    pub fn futility(&self) -> f64 {
+        let wasted: f64 = self.rounds.iter().map(|r| r.futility_wasted).sum();
+        let total: f64 = self.rounds.iter().map(|r| r.futility_total).sum();
+        if total > 0.0 {
+            wasted / total
+        } else {
+            0.0
+        }
+    }
+
+    /// Best (minimum) global loss over evaluated rounds.
+    pub fn best_loss(&self) -> Option<f64> {
+        let mut best: Option<f64> = None;
+        for r in &self.rounds {
+            if let Some(e) = r.eval {
+                best = Some(best.map_or(e.loss, |b: f64| b.min(e.loss)));
+            }
+        }
+        if let Some(e) = self.final_eval {
+            best = Some(best.map_or(e.loss, |b: f64| b.min(e.loss)));
+        }
+        best
+    }
+
+    /// Best (maximum) accuracy over evaluated rounds
+    /// (Tables X/XII/XIV).
+    pub fn best_accuracy(&self) -> Option<f64> {
+        let mut best: Option<f64> = None;
+        for r in &self.rounds {
+            if let Some(e) = r.eval {
+                best = Some(best.map_or(e.accuracy, |b: f64| b.max(e.accuracy)));
+            }
+        }
+        if let Some(e) = self.final_eval {
+            best = Some(best.map_or(e.accuracy, |b: f64| b.max(e.accuracy)));
+        }
+        best
+    }
+
+    /// Per-round loss trace (Figs. 6–8); rounds without evaluation carry
+    /// the previous value forward so traces stay aligned.
+    pub fn loss_trace(&self) -> Vec<f64> {
+        let mut trace = Vec::with_capacity(self.rounds.len());
+        let mut last = f64::NAN;
+        for r in &self.rounds {
+            if let Some(e) = r.eval {
+                last = e.loss;
+            }
+            trace.push(last);
+        }
+        trace
+    }
+
+    /// Serialize the run for `results/`.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("protocol", Json::Str(self.protocol.clone()));
+        o.set("task", Json::Str(self.task.clone()));
+        o.set("C", Json::Num(self.c_fraction));
+        o.set("cr", Json::Num(self.crash_prob));
+        o.set("tau", Json::Num(self.tau as f64));
+        o.set("seed", Json::Num(self.seed as f64));
+        o.set("avg_round_len", Json::Num(self.avg_round_len()));
+        o.set("avg_t_dist", Json::Num(self.avg_t_dist()));
+        o.set("sync_ratio", Json::Num(self.sync_ratio()));
+        o.set("eur", Json::Num(self.eur()));
+        o.set("version_variance", Json::Num(self.version_variance()));
+        o.set("futility", Json::Num(self.futility()));
+        if let Some(l) = self.best_loss() {
+            o.set("best_loss", Json::Num(l));
+        }
+        if let Some(a) = self.best_accuracy() {
+            o.set("best_accuracy", Json::Num(a));
+        }
+        let rounds: Vec<Json> = self
+            .rounds
+            .iter()
+            .map(|r| {
+                let mut j = Json::obj();
+                j.set("round", Json::Num(r.round as f64));
+                j.set("round_len", Json::Num(r.round_len));
+                j.set("t_dist", Json::Num(r.t_dist));
+                j.set("picked", Json::Num(r.n_picked as f64));
+                j.set("committed", Json::Num(r.n_committed as f64));
+                j.set("crashed", Json::Num(r.n_crashed as f64));
+                j.set("vv", Json::Num(r.version_variance));
+                if let Some(e) = r.eval {
+                    j.set("loss", Json::Num(e.loss));
+                    j.set("acc", Json::Num(e.accuracy));
+                }
+                j
+            })
+            .collect();
+        o.set("rounds", Json::Arr(rounds));
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(round: usize, len: f64, picked: usize, sync: usize) -> RoundRecord {
+        RoundRecord {
+            round,
+            round_len: len,
+            t_dist: 1.0,
+            m_sync: sync,
+            n_picked: picked,
+            n_crashed: 0,
+            n_committed: picked,
+            n_undrafted: 0,
+            version_variance: 0.5,
+            futility_wasted: 0.1,
+            futility_total: 1.0,
+            train_loss: 0.0,
+            eval: Some(EvalResult {
+                loss: 1.0 / (round + 1) as f64,
+                accuracy: 0.5 + 0.1 * round as f64,
+            }),
+        }
+    }
+
+    fn run() -> RunResult {
+        RunResult {
+            protocol: "SAFA".into(),
+            task: "regression".into(),
+            c_fraction: 0.3,
+            crash_prob: 0.1,
+            tau: 5,
+            seed: 1,
+            m: 10,
+            rounds: vec![record(0, 100.0, 3, 9), record(1, 200.0, 4, 7)],
+            final_eval: None,
+        }
+    }
+
+    #[test]
+    fn summaries() {
+        let r = run();
+        assert_eq!(r.avg_round_len(), 150.0);
+        assert_eq!(r.avg_t_dist(), 1.0);
+        assert!((r.sync_ratio() - 0.8).abs() < 1e-12);
+        assert!((r.eur() - 0.35).abs() < 1e-12);
+        assert!((r.futility() - 0.1).abs() < 1e-12);
+        assert_eq!(r.best_loss(), Some(0.5));
+        assert_eq!(r.best_accuracy(), Some(0.6));
+    }
+
+    #[test]
+    fn loss_trace_carries_forward() {
+        let mut r = run();
+        r.rounds.push(RoundRecord {
+            eval: None,
+            ..record(2, 50.0, 1, 1)
+        });
+        let trace = r.loss_trace();
+        assert_eq!(trace.len(), 3);
+        assert_eq!(trace[2], trace[1]);
+    }
+
+    #[test]
+    fn json_has_summary_fields() {
+        let j = run().to_json();
+        assert!(j.get("avg_round_len").is_some());
+        assert!(j.get("best_accuracy").is_some());
+        assert_eq!(j.get("rounds").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn final_eval_counts_toward_best() {
+        let mut r = run();
+        r.final_eval = Some(EvalResult {
+            loss: 0.01,
+            accuracy: 0.99,
+        });
+        assert_eq!(r.best_loss(), Some(0.01));
+        assert_eq!(r.best_accuracy(), Some(0.99));
+    }
+}

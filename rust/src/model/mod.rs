@@ -1,0 +1,114 @@
+//! Model parameters, the trainer abstraction and backends.
+//!
+//! Protocols treat models as opaque [`ParamVec`]s; a [`Trainer`] performs
+//! client-local SGD and global evaluation. Three backends exist:
+//! pure-Rust [`native`] trainers (fast, used by benchmark grids), the
+//! PJRT-backed [`crate::runtime::XlaTrainer`] (the paper's three-layer
+//! stack), and [`NullTrainer`] (timing-only protocol studies).
+
+pub mod native;
+pub mod params;
+pub mod tensor;
+
+pub use params::{weighted_sum_into, ParamVec};
+
+use crate::config::ExperimentConfig;
+use crate::data::FedData;
+use crate::util::rng::Pcg64;
+use std::sync::Arc;
+
+/// Global-model quality on the held-out test set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalResult {
+    pub loss: f64,
+    /// Accuracy per the paper's Table III formulation for the task.
+    pub accuracy: f64,
+}
+
+/// Outcome of one client-local update (E epochs of minibatch SGD).
+#[derive(Debug, Clone)]
+pub struct LocalUpdate {
+    pub params: ParamVec,
+    /// Mean training loss over the final epoch.
+    pub train_loss: f64,
+}
+
+/// A training backend.
+///
+/// `local_update` runs the paper's `client_update` (Alg. 2): E epochs of
+/// minibatch SGD over client `k`'s shard starting from `base`. Batch
+/// order is reshuffled per epoch from `rng`, which the caller derives
+/// per (client, round) so runs are reproducible across backends.
+pub trait Trainer {
+    /// Flat parameter count.
+    fn dim(&self) -> usize;
+
+    /// Fresh parameter initialization.
+    fn init_params(&self, rng: &mut Pcg64) -> ParamVec;
+
+    /// E epochs of SGD on client `k`'s shard.
+    fn local_update(&mut self, base: &ParamVec, client: usize, rng: &mut Pcg64) -> LocalUpdate;
+
+    /// Loss + accuracy of `params` on the global test set.
+    fn evaluate(&mut self, params: &ParamVec) -> EvalResult;
+}
+
+/// Timing-only backend: parameters never change. Used by the round-length
+/// / T_dist / SR / EUR benches, whose metrics do not depend on numerics.
+pub struct NullTrainer;
+
+impl Trainer for NullTrainer {
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn init_params(&self, _rng: &mut Pcg64) -> ParamVec {
+        ParamVec::zeros(1)
+    }
+
+    fn local_update(&mut self, base: &ParamVec, _client: usize, _rng: &mut Pcg64) -> LocalUpdate {
+        LocalUpdate {
+            params: base.clone(),
+            train_loss: 0.0,
+        }
+    }
+
+    fn evaluate(&mut self, _params: &ParamVec) -> EvalResult {
+        EvalResult {
+            loss: 0.0,
+            accuracy: 0.0,
+        }
+    }
+}
+
+/// Build the configured trainer backend.
+///
+/// `Backend::Xla` construction lives in [`crate::runtime`]; this factory
+/// covers the two self-contained backends and is what the coordinator
+/// uses unless the caller injects a trainer explicitly.
+pub fn make_trainer(cfg: &ExperimentConfig, data: Arc<FedData>) -> Box<dyn Trainer> {
+    use crate::config::{Backend, TaskKind};
+    match cfg.backend {
+        Backend::Null => Box::new(NullTrainer),
+        Backend::Native | Backend::Xla => match cfg.task.kind {
+            TaskKind::Regression => Box::new(native::LinRegTrainer::new(cfg, data)),
+            TaskKind::Svm => Box::new(native::SvmTrainer::new(cfg, data)),
+            TaskKind::Cnn => Box::new(native::CnnTrainer::new(cfg, data)),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_trainer_is_identity() {
+        let mut t = NullTrainer;
+        let mut rng = Pcg64::new(0);
+        let p = t.init_params(&mut rng);
+        let u = t.local_update(&p, 0, &mut rng);
+        assert_eq!(u.params, p);
+        assert_eq!(t.evaluate(&p).loss, 0.0);
+    }
+}

@@ -1,0 +1,622 @@
+//! Native CNN trainer for Task 2 (the paper's MNIST model): two 5×5
+//! convolutions (c1, c2 channels) each followed by ReLU and 2×2 max
+//! pooling, a ReLU fully-connected layer and a softmax output (§IV-A).
+//!
+//! Convolutions are lowered to im2col + matmul in channels-last layout —
+//! the same lowering the Pallas kernel path uses on the Python side (see
+//! DESIGN.md §Hardware-Adaptation) — so the native and XLA backends are
+//! operation-equivalent.
+
+use super::epoch_order;
+use crate::config::{CnnArch, ExperimentConfig};
+use crate::data::FedData;
+use crate::model::tensor::*;
+use crate::model::{EvalResult, LocalUpdate, ParamVec, Trainer};
+use crate::util::rng::{Distribution, Normal, Pcg64};
+use std::sync::Arc;
+
+const SIDE: usize = 28;
+const K: usize = 5;
+const H1: usize = SIDE - K + 1; // 24
+const P1: usize = H1 / 2; // 12
+const H2: usize = P1 - K + 1; // 8
+const P2: usize = H2 / 2; // 4
+const CLASSES: usize = 10;
+
+/// Flat parameter layout offsets for the CNN.
+#[derive(Debug, Clone, Copy)]
+struct Layout {
+    w1: usize, // [c1, 25]
+    b1: usize, // [c1]
+    w2: usize, // [c2, 25*c1]
+    b2: usize, // [c2]
+    wh: usize, // [flat, hidden]
+    bh: usize, // [hidden]
+    wo: usize, // [hidden, 10]
+    bo: usize, // [10]
+    total: usize,
+    c1: usize,
+    c2: usize,
+    hidden: usize,
+    flat: usize,
+}
+
+impl Layout {
+    fn new(arch: CnnArch) -> Layout {
+        let (c1, c2, hidden) = (arch.c1, arch.c2, arch.hidden);
+        let flat = P2 * P2 * c2;
+        let w1 = 0;
+        let b1 = w1 + c1 * K * K;
+        let w2 = b1 + c1;
+        let b2 = w2 + c2 * K * K * c1;
+        let wh = b2 + c2;
+        let bh = wh + flat * hidden;
+        let wo = bh + hidden;
+        let bo = wo + hidden * CLASSES;
+        Layout {
+            w1,
+            b1,
+            w2,
+            b2,
+            wh,
+            bh,
+            wo,
+            bo,
+            total: bo + CLASSES,
+            c1,
+            c2,
+            hidden,
+            flat,
+        }
+    }
+}
+
+/// Reusable forward/backward scratch sized for a max batch.
+struct Scratch {
+    cols1: Vec<f32>,  // [B*576, 25]
+    a1: Vec<f32>,     // [B, 24, 24, c1]
+    p1: Vec<f32>,     // [B, 12, 12, c1]
+    arg1: Vec<u8>,
+    cols2: Vec<f32>,  // [B*64, 25*c1]
+    a2: Vec<f32>,     // [B, 8, 8, c2]
+    p2: Vec<f32>,     // [B, 4, 4, c2] == flat [B, flat]
+    arg2: Vec<u8>,
+    ah: Vec<f32>,     // [B, hidden]
+    zo: Vec<f32>,     // [B, 10]
+    dzo: Vec<f32>,
+    dah: Vec<f32>,
+    dflat: Vec<f32>,
+    da2: Vec<f32>,
+    dcols2: Vec<f32>,
+    dp1: Vec<f32>,
+    da1: Vec<f32>,
+    grad: Vec<f32>, // full parameter gradient
+    xbatch: Vec<f32>,
+    ybatch: Vec<f32>,
+}
+
+impl Scratch {
+    fn new(l: &Layout, max_b: usize) -> Scratch {
+        Scratch {
+            cols1: vec![0.0; max_b * H1 * H1 * K * K],
+            a1: vec![0.0; max_b * H1 * H1 * l.c1],
+            p1: vec![0.0; max_b * P1 * P1 * l.c1],
+            arg1: vec![0u8; max_b * P1 * P1 * l.c1],
+            cols2: vec![0.0; max_b * H2 * H2 * K * K * l.c1],
+            a2: vec![0.0; max_b * H2 * H2 * l.c2],
+            p2: vec![0.0; max_b * l.flat],
+            arg2: vec![0u8; max_b * l.flat],
+            ah: vec![0.0; max_b * l.hidden],
+            zo: vec![0.0; max_b * CLASSES],
+            dzo: vec![0.0; max_b * CLASSES],
+            dah: vec![0.0; max_b * l.hidden],
+            dflat: vec![0.0; max_b * l.flat],
+            da2: vec![0.0; max_b * H2 * H2 * l.c2],
+            dcols2: vec![0.0; max_b * H2 * H2 * K * K * l.c1],
+            dp1: vec![0.0; max_b * P1 * P1 * l.c1],
+            da1: vec![0.0; max_b * H1 * H1 * l.c1],
+            grad: vec![0.0; l.total],
+            xbatch: vec![0.0; max_b * SIDE * SIDE],
+            ybatch: vec![0.0; max_b],
+        }
+    }
+}
+
+pub struct CnnTrainer {
+    data: Arc<FedData>,
+    layout: Layout,
+    epochs: usize,
+    batch: usize,
+    lr: f32,
+    scratch: Scratch,
+}
+
+impl CnnTrainer {
+    pub fn new(cfg: &ExperimentConfig, data: Arc<FedData>) -> Self {
+        assert_eq!(data.train.d, SIDE * SIDE, "CNN expects 28x28 inputs");
+        let layout = Layout::new(cfg.task.cnn);
+        let max_b = cfg.train.batch_size.max(64);
+        CnnTrainer {
+            data,
+            layout,
+            epochs: cfg.train.epochs,
+            batch: cfg.train.batch_size,
+            lr: cfg.train.lr as f32,
+            scratch: Scratch::new(&layout, max_b),
+        }
+    }
+
+    /// Forward pass over `b` images already staged in `scratch.xbatch`.
+    /// Fills activations; logits land in `scratch.zo`.
+    fn forward(&mut self, params: &[f32], b: usize) {
+        let l = self.layout;
+        let s = &mut self.scratch;
+        // conv1 (input is single-channel; NHWC == raw image layout).
+        im2col_nhwc(
+            &mut s.cols1[..b * H1 * H1 * K * K],
+            &s.xbatch[..b * SIDE * SIDE],
+            b,
+            SIDE,
+            SIDE,
+            1,
+            K,
+            K,
+        );
+        let rows1 = b * H1 * H1;
+        matmul_nt(
+            &mut s.a1[..rows1 * l.c1],
+            &s.cols1[..rows1 * K * K],
+            &params[l.w1..l.w1 + l.c1 * K * K],
+            rows1,
+            K * K,
+            l.c1,
+            false,
+        );
+        add_bias(&mut s.a1[..rows1 * l.c1], &params[l.b1..l.b1 + l.c1]);
+        relu(&mut s.a1[..rows1 * l.c1]);
+        maxpool2_nhwc(
+            &mut s.p1[..b * P1 * P1 * l.c1],
+            &mut s.arg1[..b * P1 * P1 * l.c1],
+            &s.a1[..rows1 * l.c1],
+            b,
+            H1,
+            H1,
+            l.c1,
+        );
+        // conv2.
+        im2col_nhwc(
+            &mut s.cols2[..b * H2 * H2 * K * K * l.c1],
+            &s.p1[..b * P1 * P1 * l.c1],
+            b,
+            P1,
+            P1,
+            l.c1,
+            K,
+            K,
+        );
+        let rows2 = b * H2 * H2;
+        matmul_nt(
+            &mut s.a2[..rows2 * l.c2],
+            &s.cols2[..rows2 * K * K * l.c1],
+            &params[l.w2..l.w2 + l.c2 * K * K * l.c1],
+            rows2,
+            K * K * l.c1,
+            l.c2,
+            false,
+        );
+        add_bias(&mut s.a2[..rows2 * l.c2], &params[l.b2..l.b2 + l.c2]);
+        relu(&mut s.a2[..rows2 * l.c2]);
+        maxpool2_nhwc(
+            &mut s.p2[..b * l.flat],
+            &mut s.arg2[..b * l.flat],
+            &s.a2[..rows2 * l.c2],
+            b,
+            H2,
+            H2,
+            l.c2,
+        );
+        // fc hidden.
+        matmul(
+            &mut s.ah[..b * l.hidden],
+            &s.p2[..b * l.flat],
+            &params[l.wh..l.wh + l.flat * l.hidden],
+            b,
+            l.flat,
+            l.hidden,
+            false,
+        );
+        add_bias(&mut s.ah[..b * l.hidden], &params[l.bh..l.bh + l.hidden]);
+        relu(&mut s.ah[..b * l.hidden]);
+        // output.
+        matmul(
+            &mut s.zo[..b * CLASSES],
+            &s.ah[..b * l.hidden],
+            &params[l.wo..l.wo + l.hidden * CLASSES],
+            b,
+            l.hidden,
+            CLASSES,
+            false,
+        );
+        add_bias(&mut s.zo[..b * CLASSES], &params[l.bo..l.bo + CLASSES]);
+    }
+
+    /// Backward pass; fills `scratch.grad`. Must follow `forward` with the
+    /// same batch. Returns mean loss.
+    fn backward(&mut self, params: &[f32], b: usize) -> f64 {
+        let l = self.layout;
+        // Split scratch borrows field-by-field to satisfy the borrow
+        // checker while keeping buffers reused.
+        let loss = {
+            let s = &mut self.scratch;
+            softmax_xent(
+                &mut s.dzo[..b * CLASSES],
+                &s.zo[..b * CLASSES],
+                &s.ybatch[..b],
+                b,
+                CLASSES,
+            )
+        };
+        let s = &mut self.scratch;
+        s.grad.fill(0.0);
+        // output layer.
+        matmul_tn(
+            &mut s.grad[l.wo..l.wo + l.hidden * CLASSES],
+            &s.ah[..b * l.hidden],
+            &s.dzo[..b * CLASSES],
+            l.hidden,
+            b,
+            CLASSES,
+            false,
+        );
+        col_sum(&mut s.grad[l.bo..l.bo + CLASSES], &s.dzo[..b * CLASSES], b, CLASSES);
+        matmul_nt(
+            &mut s.dah[..b * l.hidden],
+            &s.dzo[..b * CLASSES],
+            &params[l.wo..l.wo + l.hidden * CLASSES],
+            b,
+            CLASSES,
+            l.hidden,
+            false,
+        );
+        relu_back(&mut s.dah[..b * l.hidden], &s.ah[..b * l.hidden]);
+        // hidden layer.
+        matmul_tn(
+            &mut s.grad[l.wh..l.wh + l.flat * l.hidden],
+            &s.p2[..b * l.flat],
+            &s.dah[..b * l.hidden],
+            l.flat,
+            b,
+            l.hidden,
+            false,
+        );
+        col_sum(&mut s.grad[l.bh..l.bh + l.hidden], &s.dah[..b * l.hidden], b, l.hidden);
+        matmul_nt(
+            &mut s.dflat[..b * l.flat],
+            &s.dah[..b * l.hidden],
+            &params[l.wh..l.wh + l.flat * l.hidden],
+            b,
+            l.hidden,
+            l.flat,
+            false,
+        );
+        // pool2 backward -> conv2 activations.
+        maxpool2_back_nhwc(
+            &mut s.da2[..b * H2 * H2 * l.c2],
+            &s.dflat[..b * l.flat],
+            &s.arg2[..b * l.flat],
+            b,
+            H2,
+            H2,
+            l.c2,
+        );
+        relu_back(&mut s.da2[..b * H2 * H2 * l.c2], &s.a2[..b * H2 * H2 * l.c2]);
+        let rows2 = b * H2 * H2;
+        matmul_tn(
+            &mut s.grad[l.w2..l.w2 + l.c2 * K * K * l.c1],
+            &s.da2[..rows2 * l.c2],
+            &s.cols2[..rows2 * K * K * l.c1],
+            l.c2,
+            rows2,
+            K * K * l.c1,
+            false,
+        );
+        col_sum(&mut s.grad[l.b2..l.b2 + l.c2], &s.da2[..rows2 * l.c2], rows2, l.c2);
+        matmul(
+            &mut s.dcols2[..rows2 * K * K * l.c1],
+            &s.da2[..rows2 * l.c2],
+            &params[l.w2..l.w2 + l.c2 * K * K * l.c1],
+            rows2,
+            l.c2,
+            K * K * l.c1,
+            false,
+        );
+        col2im_nhwc(
+            &mut s.dp1[..b * P1 * P1 * l.c1],
+            &s.dcols2[..rows2 * K * K * l.c1],
+            b,
+            P1,
+            P1,
+            l.c1,
+            K,
+            K,
+        );
+        // pool1 backward -> conv1 activations.
+        maxpool2_back_nhwc(
+            &mut s.da1[..b * H1 * H1 * l.c1],
+            &s.dp1[..b * P1 * P1 * l.c1],
+            &s.arg1[..b * P1 * P1 * l.c1],
+            b,
+            H1,
+            H1,
+            l.c1,
+        );
+        relu_back(&mut s.da1[..b * H1 * H1 * l.c1], &s.a1[..b * H1 * H1 * l.c1]);
+        let rows1 = b * H1 * H1;
+        matmul_tn(
+            &mut s.grad[l.w1..l.w1 + l.c1 * K * K],
+            &s.da1[..rows1 * l.c1],
+            &s.cols1[..rows1 * K * K],
+            l.c1,
+            rows1,
+            K * K,
+            false,
+        );
+        col_sum(&mut s.grad[l.b1..l.b1 + l.c1], &s.da1[..rows1 * l.c1], rows1, l.c1);
+        loss
+    }
+
+    fn stage_batch(&mut self, idx: &[usize]) {
+        let train = &self.data.train;
+        for (slot, &i) in idx.iter().enumerate() {
+            self.scratch.xbatch[slot * SIDE * SIDE..(slot + 1) * SIDE * SIDE]
+                .copy_from_slice(train.row(i));
+            self.scratch.ybatch[slot] = train.y[i];
+        }
+    }
+}
+
+/// out_rows += bias broadcast over rows of a [rows, c] matrix.
+fn add_bias(x: &mut [f32], bias: &[f32]) {
+    let c = bias.len();
+    for row in x.chunks_mut(c) {
+        for (v, &b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// out[j] = Σ_rows m[row, j] over a [rows, c] matrix.
+fn col_sum(out: &mut [f32], m: &[f32], rows: usize, c: usize) {
+    out.fill(0.0);
+    for r in 0..rows {
+        for (o, &v) in out.iter_mut().zip(&m[r * c..(r + 1) * c]) {
+            *o += v;
+        }
+    }
+}
+
+impl Trainer for CnnTrainer {
+    fn dim(&self) -> usize {
+        self.layout.total
+    }
+
+    fn init_params(&self, rng: &mut Pcg64) -> ParamVec {
+        let l = self.layout;
+        let mut v = vec![0.0f32; l.total];
+        let mut fill = |range: std::ops::Range<usize>, fan_in: usize, rng: &mut Pcg64| {
+            let std = (2.0 / fan_in as f64).sqrt();
+            let dist = Normal::new(0.0, std);
+            for x in &mut v[range] {
+                *x = dist.sample(rng) as f32;
+            }
+        };
+        fill(l.w1..l.w1 + l.c1 * K * K, K * K, rng);
+        fill(l.w2..l.w2 + l.c2 * K * K * l.c1, K * K * l.c1, rng);
+        fill(l.wh..l.wh + l.flat * l.hidden, l.flat, rng);
+        fill(l.wo..l.wo + l.hidden * CLASSES, l.hidden, rng);
+        // Biases stay zero.
+        ParamVec(v)
+    }
+
+    fn local_update(&mut self, base: &ParamVec, client: usize, rng: &mut Pcg64) -> LocalUpdate {
+        assert_eq!(base.dim(), self.layout.total, "param dim mismatch");
+        let mut p = base.clone();
+        let shard = self.data.partitions[client].indices.clone();
+        let mut last_epoch_loss = 0.0f64;
+        for _ in 0..self.epochs {
+            let order = epoch_order(&shard, rng);
+            let mut epoch_loss = 0.0f64;
+            let mut batches = 0usize;
+            for chunk in order.chunks(self.batch) {
+                let b = chunk.len();
+                self.stage_batch(chunk);
+                self.forward(&p.0, b);
+                let loss = self.backward(&p.0, b);
+                let lr = self.lr;
+                for (w, g) in p.0.iter_mut().zip(&self.scratch.grad) {
+                    *w -= lr * g;
+                }
+                epoch_loss += loss;
+                batches += 1;
+            }
+            last_epoch_loss = epoch_loss / batches.max(1) as f64;
+        }
+        LocalUpdate {
+            params: p,
+            train_loss: last_epoch_loss,
+        }
+    }
+
+    fn evaluate(&mut self, params: &ParamVec) -> EvalResult {
+        let data = Arc::clone(&self.data);
+        let test = &data.test;
+        let max_b = self.scratch.ybatch.len();
+        let mut loss = 0.0f64;
+        let mut acc_weighted = 0.0f64;
+        let idx: Vec<usize> = (0..test.n).collect();
+        for chunk in idx.chunks(max_b) {
+            let b = chunk.len();
+            for (slot, &i) in chunk.iter().enumerate() {
+                self.scratch.xbatch[slot * SIDE * SIDE..(slot + 1) * SIDE * SIDE]
+                    .copy_from_slice(test.row(i));
+                self.scratch.ybatch[slot] = test.y[i];
+            }
+            self.forward(&params.0, b);
+            let s = &mut self.scratch;
+            let batch_loss = softmax_xent(
+                &mut s.dzo[..b * CLASSES],
+                &s.zo[..b * CLASSES],
+                &s.ybatch[..b],
+                b,
+                CLASSES,
+            );
+            let batch_acc = argmax_accuracy(&s.zo[..b * CLASSES], &s.ybatch[..b], b, CLASSES);
+            loss += batch_loss * b as f64;
+            acc_weighted += batch_acc * b as f64;
+        }
+        EvalResult {
+            loss: loss / test.n as f64,
+            accuracy: acc_weighted / test.n as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::data::{partition_gaussian, synth, FedData};
+
+    fn small_cfg() -> ExperimentConfig {
+        let mut cfg = presets::preset("task2-scaled").unwrap();
+        cfg.task.n = 300;
+        cfg.task.n_test = 100;
+        cfg.env.m = 3;
+        cfg.task.cnn = CnnArch {
+            c1: 4,
+            c2: 8,
+            hidden: 32,
+        };
+        cfg.train.batch_size = 16;
+        cfg.train.epochs = 1;
+        cfg.train.lr = 0.05;
+        cfg
+    }
+
+    fn make_data(cfg: &ExperimentConfig) -> Arc<FedData> {
+        let (train, test) = synth::generate(cfg.task.kind, cfg.task.n, cfg.task.n_test, cfg.seed);
+        let mut rng = Pcg64::with_stream(cfg.seed, 0x9a57);
+        let partitions = partition_gaussian(train.n, cfg.env.m, cfg.env.partition_rel_std, &mut rng);
+        Arc::new(FedData {
+            train,
+            test,
+            partitions,
+        })
+    }
+
+    #[test]
+    fn layout_total_matches_paper_architecture() {
+        let l = Layout::new(CnnArch::paper());
+        // conv1 20*25+20, conv2 50*500+50, fc 800*500+500, out 500*10+10.
+        assert_eq!(l.total, 520 + 25_050 + 400_500 + 5_010);
+    }
+
+    #[test]
+    fn cnn_gradient_matches_finite_difference() {
+        let cfg = small_cfg();
+        let data = make_data(&cfg);
+        let mut t = CnnTrainer::new(&cfg, data);
+        let mut rng = Pcg64::new(11);
+        let p = t.init_params(&mut rng);
+        // Stage a small fixed batch.
+        let idx: Vec<usize> = (0..6).collect();
+        t.stage_batch(&idx);
+        t.forward(&p.0, 6);
+        let base_loss = t.backward(&p.0, 6);
+        assert!(base_loss > 0.0);
+        let grad = t.scratch.grad.clone();
+        // Spot-check coordinates from every parameter block.
+        let l = t.layout;
+        let coords = [
+            l.w1 + 3,
+            l.b1,
+            l.w2 + 17,
+            l.b2 + 1,
+            l.wh + 101,
+            l.bh + 5,
+            l.wo + 23,
+            l.bo + 7,
+        ];
+        let eps = 2e-3f32;
+        for &ci in &coords {
+            let mut pp = p.clone();
+            pp.0[ci] += eps;
+            t.stage_batch(&idx);
+            t.forward(&pp.0, 6);
+            let lp = t.backward(&pp.0, 6);
+            let mut pm = p.clone();
+            pm.0[ci] -= eps;
+            t.stage_batch(&idx);
+            t.forward(&pm.0, 6);
+            let lm = t.backward(&pm.0, 6);
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            // f32 activations + ReLU/maxpool kinks make central
+            // differences noisy; 6% relative agreement is the realistic
+            // bound here (the exact check lives in the Python tests where
+            // the oracle runs in f64).
+            assert!(
+                (grad[ci] as f64 - fd).abs() < 6e-2 * (1.0 + fd.abs()),
+                "coord {ci}: analytic {} vs fd {fd}",
+                grad[ci]
+            );
+        }
+        // Functional check: one gradient step must reduce the loss.
+        let mut stepped = p.clone();
+        for (w, g) in stepped.0.iter_mut().zip(&grad) {
+            *w -= 0.02 * g;
+        }
+        t.stage_batch(&idx);
+        t.forward(&stepped.0, 6);
+        let new_loss = t.backward(&stepped.0, 6);
+        assert!(
+            new_loss < base_loss,
+            "gradient step increased loss: {base_loss} -> {new_loss}"
+        );
+    }
+
+    #[test]
+    fn cnn_learns_synthetic_digits() {
+        let cfg = small_cfg();
+        let data = make_data(&cfg);
+        let mut t = CnnTrainer::new(&cfg, data);
+        let mut rng = Pcg64::new(13);
+        let mut p = t.init_params(&mut rng);
+        let before = t.evaluate(&p);
+        for _ in 0..6 {
+            for k in 0..3 {
+                p = t.local_update(&p, k, &mut rng).params;
+            }
+        }
+        let after = t.evaluate(&p);
+        assert!(
+            after.accuracy > 0.6 && after.accuracy > before.accuracy,
+            "accuracy {} -> {}",
+            before.accuracy,
+            after.accuracy
+        );
+        assert!(after.loss < before.loss);
+    }
+
+    #[test]
+    fn local_update_deterministic_and_base_immutable() {
+        let cfg = small_cfg();
+        let data = make_data(&cfg);
+        let mut t = CnnTrainer::new(&cfg, data);
+        let base = t.init_params(&mut Pcg64::new(17));
+        let snap = base.clone();
+        let u1 = t.local_update(&base, 0, &mut Pcg64::new(19));
+        let u2 = t.local_update(&base, 0, &mut Pcg64::new(19));
+        assert_eq!(base, snap);
+        assert_eq!(u1.params, u2.params);
+    }
+}

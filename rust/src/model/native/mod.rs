@@ -1,0 +1,22 @@
+//! Pure-Rust trainer backends for the three tasks.
+//!
+//! These mirror the JAX models in `python/compile/model.py` operation-for-
+//! operation (same losses, same update rule, same initialization family),
+//! so the integration tests can check numeric agreement between the
+//! native and XLA paths on identical batches.
+
+mod cnn;
+mod linear;
+
+pub use cnn::CnnTrainer;
+pub use linear::{LinRegTrainer, SvmTrainer};
+
+use crate::util::rng::Pcg64;
+
+/// Shuffle a client's sample indices for one epoch and iterate batches.
+/// Returns the shuffled copy; callers slice it in `batch_size` chunks.
+pub(crate) fn epoch_order(indices: &[usize], rng: &mut Pcg64) -> Vec<usize> {
+    let mut order = indices.to_vec();
+    rng.shuffle(&mut order);
+    order
+}

@@ -1,0 +1,133 @@
+//! Flat model-parameter vectors and the linear algebra the aggregation
+//! step needs (weighted averaging, axpy — the L3 hot path).
+
+/// A model's parameters as one flat f32 vector.
+///
+/// All protocols treat models as opaque vectors; only the trainer knows
+/// the segment layout. Keeping them flat makes the cache/bypass
+/// structures and Eq. (7)'s weighted average simple and fast.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamVec(pub Vec<f32>);
+
+impl ParamVec {
+    pub fn zeros(dim: usize) -> ParamVec {
+        ParamVec(vec![0.0; dim])
+    }
+
+    pub fn dim(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.0
+    }
+
+    /// self += alpha * other (fused multiply-add over the flat vector).
+    pub fn axpy(&mut self, alpha: f32, other: &ParamVec) {
+        debug_assert_eq!(self.dim(), other.dim());
+        for (a, b) in self.0.iter_mut().zip(&other.0) {
+            *a += alpha * b;
+        }
+    }
+
+    /// self *= alpha.
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.0.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// Reset to zeros without reallocating.
+    pub fn clear(&mut self) {
+        self.0.fill(0.0);
+    }
+
+    /// Copy `other` into self without reallocating.
+    pub fn copy_from(&mut self, other: &ParamVec) {
+        debug_assert_eq!(self.dim(), other.dim());
+        self.0.copy_from_slice(&other.0);
+    }
+
+    /// Euclidean norm (useful in tests and divergence diagnostics).
+    pub fn norm(&self) -> f64 {
+        self.0.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// L2 distance to another vector.
+    pub fn dist(&self, other: &ParamVec) -> f64 {
+        debug_assert_eq!(self.dim(), other.dim());
+        self.0
+            .iter()
+            .zip(&other.0)
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+/// Weighted average of entries: out = Σ w_k * entries_k, writing into a
+/// reusable output buffer (Eq. 7's aggregation — the per-round hot path;
+/// avoids allocating a fresh vector every round).
+pub fn weighted_sum_into(out: &mut ParamVec, entries: &[(f32, &ParamVec)]) {
+    out.clear();
+    for &(w, p) in entries {
+        out.axpy(w, p);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+
+    #[test]
+    fn axpy_scale_basics() {
+        let mut a = ParamVec(vec![1.0, 2.0]);
+        let b = ParamVec(vec![10.0, 20.0]);
+        a.axpy(0.5, &b);
+        assert_eq!(a.0, vec![6.0, 12.0]);
+        a.scale(2.0);
+        assert_eq!(a.0, vec![12.0, 24.0]);
+        a.clear();
+        assert_eq!(a.0, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn weighted_sum_is_convex_combination() {
+        property("weighted sum within min/max", 100, |g| {
+            let dim = g.usize_range(1, 32);
+            let k = g.usize_range(1, 8);
+            let entries: Vec<ParamVec> = (0..k)
+                .map(|_| ParamVec(g.vec_f32(dim, -5.0, 5.0)))
+                .collect();
+            // Convex weights.
+            let raw: Vec<f64> = (0..k).map(|_| g.f64_range(0.01, 1.0)).collect();
+            let total: f64 = raw.iter().sum();
+            let weights: Vec<f32> = raw.iter().map(|&w| (w / total) as f32).collect();
+            let pairs: Vec<(f32, &ParamVec)> =
+                weights.iter().copied().zip(entries.iter()).collect();
+            let mut out = ParamVec::zeros(dim);
+            weighted_sum_into(&mut out, &pairs);
+            for i in 0..dim {
+                let lo = entries.iter().map(|e| e.0[i]).fold(f32::MAX, f32::min);
+                let hi = entries.iter().map(|e| e.0[i]).fold(f32::MIN, f32::max);
+                assert!(
+                    out.0[i] >= lo - 1e-4 && out.0[i] <= hi + 1e-4,
+                    "coordinate {i} out of hull: {} not in [{lo}, {hi}]",
+                    out.0[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn norms() {
+        let a = ParamVec(vec![3.0, 4.0]);
+        assert!((a.norm() - 5.0).abs() < 1e-9);
+        let b = ParamVec(vec![0.0, 0.0]);
+        assert!((a.dist(&b) - 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,697 @@
+//! Dense tensor kernels for the native trainers: matmul (three variants),
+//! im2col/col2im convolution lowering, 2×2 max-pooling, ReLU and
+//! softmax-cross-entropy.
+//!
+//! The matmuls use the i-k-j loop order with a contiguous axpy inner loop,
+//! which LLVM auto-vectorizes; this is the native backend's hot path (see
+//! EXPERIMENTS.md §Perf for measurements and the optimization log).
+
+/// c[m,n] = a[m,k] @ b[k,n] (+= when `accumulate`).
+pub fn matmul(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize, accumulate: bool) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if !accumulate {
+        c.fill(0.0);
+    }
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let c_row = &mut c[i * n..(i + 1) * n];
+        for (p, &a_ip) in a_row.iter().enumerate() {
+            if a_ip == 0.0 {
+                continue; // common after ReLU masking
+            }
+            let b_row = &b[p * n..(p + 1) * n];
+            for (c_ij, &b_pj) in c_row.iter_mut().zip(b_row) {
+                *c_ij += a_ip * b_pj;
+            }
+        }
+    }
+}
+
+/// c[m,n] = a[k,m]^T @ b[k,n] (+= when `accumulate`). Used for dW = x^T g.
+pub fn matmul_tn(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    accumulate: bool,
+) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if !accumulate {
+        c.fill(0.0);
+    }
+    for p in 0..k {
+        let a_row = &a[p * m..(p + 1) * m];
+        let b_row = &b[p * n..(p + 1) * n];
+        for (i, &a_pi) in a_row.iter().enumerate() {
+            if a_pi == 0.0 {
+                continue;
+            }
+            let c_row = &mut c[i * n..(i + 1) * n];
+            for (c_ij, &b_pj) in c_row.iter_mut().zip(b_row) {
+                *c_ij += a_pi * b_pj;
+            }
+        }
+    }
+}
+
+/// c[m,n] = a[m,k] @ b[n,k]^T (+= when `accumulate`). Used for dx = g W.
+pub fn matmul_nt(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    accumulate: bool,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    if !accumulate {
+        c.fill(0.0);
+    }
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let c_row = &mut c[i * n..(i + 1) * n];
+        for (j, c_ij) in c_row.iter_mut().enumerate() {
+            let b_row = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (&x, &y) in a_row.iter().zip(b_row) {
+                acc += x * y;
+            }
+            *c_ij += acc;
+        }
+    }
+}
+
+/// im2col for a batch: input [batch, ch, h, w] → cols
+/// [batch*oh*ow, ch*kh*kw] where oh = h-kh+1, ow = w-kw+1 ("valid").
+pub fn im2col(
+    cols: &mut [f32],
+    input: &[f32],
+    batch: usize,
+    ch: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+) {
+    let oh = h - kh + 1;
+    let ow = w - kw + 1;
+    let patch_len = ch * kh * kw;
+    debug_assert_eq!(cols.len(), batch * oh * ow * patch_len);
+    debug_assert_eq!(input.len(), batch * ch * h * w);
+    let mut row = 0usize;
+    for b in 0..batch {
+        let img = &input[b * ch * h * w..(b + 1) * ch * h * w];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst = &mut cols[row * patch_len..(row + 1) * patch_len];
+                let mut d = 0usize;
+                for c in 0..ch {
+                    let plane = &img[c * h * w..(c + 1) * h * w];
+                    for ky in 0..kh {
+                        let src = &plane[(oy + ky) * w + ox..(oy + ky) * w + ox + kw];
+                        dst[d..d + kw].copy_from_slice(src);
+                        d += kw;
+                    }
+                }
+                row += 1;
+            }
+        }
+    }
+}
+
+/// col2im: scatter-add the column gradient back to input layout.
+/// `dcols` is [batch*oh*ow, ch*kh*kw]; `dinput` is [batch, ch, h, w].
+pub fn col2im(
+    dinput: &mut [f32],
+    dcols: &[f32],
+    batch: usize,
+    ch: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+) {
+    let oh = h - kh + 1;
+    let ow = w - kw + 1;
+    let patch_len = ch * kh * kw;
+    dinput.fill(0.0);
+    let mut row = 0usize;
+    for b in 0..batch {
+        let img = &mut dinput[b * ch * h * w..(b + 1) * ch * h * w];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let src = &dcols[row * patch_len..(row + 1) * patch_len];
+                let mut s = 0usize;
+                for c in 0..ch {
+                    let plane = &mut img[c * h * w..(c + 1) * h * w];
+                    for ky in 0..kh {
+                        let dst = &mut plane[(oy + ky) * w + ox..(oy + ky) * w + ox + kw];
+                        for (d, &v) in dst.iter_mut().zip(&src[s..s + kw]) {
+                            *d += v;
+                        }
+                        s += kw;
+                    }
+                }
+                row += 1;
+            }
+        }
+    }
+}
+
+/// 2×2 max-pool (stride 2) over [batch, ch, h, w]; h and w must be even.
+/// Writes pooled output and the argmax index (0..4) per output cell for
+/// the backward pass.
+pub fn maxpool2(
+    out: &mut [f32],
+    argmax: &mut [u8],
+    input: &[f32],
+    batch: usize,
+    ch: usize,
+    h: usize,
+    w: usize,
+) {
+    debug_assert!(h % 2 == 0 && w % 2 == 0);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut o = 0usize;
+    for b in 0..batch {
+        for c in 0..ch {
+            let plane = &input[(b * ch + c) * h * w..(b * ch + c + 1) * h * w];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let base = (2 * oy) * w + 2 * ox;
+                    let vals = [plane[base], plane[base + 1], plane[base + w], plane[base + w + 1]];
+                    let mut best = 0usize;
+                    for i in 1..4 {
+                        if vals[i] > vals[best] {
+                            best = i;
+                        }
+                    }
+                    out[o] = vals[best];
+                    argmax[o] = best as u8;
+                    o += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Backward of [`maxpool2`]: route `dout` to the argmax positions.
+pub fn maxpool2_back(
+    dinput: &mut [f32],
+    dout: &[f32],
+    argmax: &[u8],
+    batch: usize,
+    ch: usize,
+    h: usize,
+    w: usize,
+) {
+    let (oh, ow) = (h / 2, w / 2);
+    dinput.fill(0.0);
+    let mut o = 0usize;
+    for b in 0..batch {
+        for c in 0..ch {
+            let plane = &mut dinput[(b * ch + c) * h * w..(b * ch + c + 1) * h * w];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let base = (2 * oy) * w + 2 * ox;
+                    let off = match argmax[o] {
+                        0 => 0,
+                        1 => 1,
+                        2 => w,
+                        _ => w + 1,
+                    };
+                    plane[base + off] += dout[o];
+                    o += 1;
+                }
+            }
+        }
+    }
+}
+
+/// im2col for channels-last input [batch, h, w, ch] → cols
+/// [batch*oh*ow, kh*kw*ch]. Channels-last keeps conv-as-matmul outputs
+/// batch-major, which is the layout the CNN trainer uses throughout.
+pub fn im2col_nhwc(
+    cols: &mut [f32],
+    input: &[f32],
+    batch: usize,
+    h: usize,
+    w: usize,
+    ch: usize,
+    kh: usize,
+    kw: usize,
+) {
+    let oh = h - kh + 1;
+    let ow = w - kw + 1;
+    let patch_len = kh * kw * ch;
+    debug_assert_eq!(cols.len(), batch * oh * ow * patch_len);
+    debug_assert_eq!(input.len(), batch * h * w * ch);
+    let mut row = 0usize;
+    for b in 0..batch {
+        let img = &input[b * h * w * ch..(b + 1) * h * w * ch];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst = &mut cols[row * patch_len..(row + 1) * patch_len];
+                let mut d = 0usize;
+                for ky in 0..kh {
+                    let src_base = ((oy + ky) * w + ox) * ch;
+                    dst[d..d + kw * ch].copy_from_slice(&img[src_base..src_base + kw * ch]);
+                    d += kw * ch;
+                }
+                row += 1;
+            }
+        }
+    }
+}
+
+/// col2im for channels-last: scatter-add column gradients back to
+/// [batch, h, w, ch].
+pub fn col2im_nhwc(
+    dinput: &mut [f32],
+    dcols: &[f32],
+    batch: usize,
+    h: usize,
+    w: usize,
+    ch: usize,
+    kh: usize,
+    kw: usize,
+) {
+    let oh = h - kh + 1;
+    let ow = w - kw + 1;
+    let patch_len = kh * kw * ch;
+    dinput.fill(0.0);
+    let mut row = 0usize;
+    for b in 0..batch {
+        let img = &mut dinput[b * h * w * ch..(b + 1) * h * w * ch];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let src = &dcols[row * patch_len..(row + 1) * patch_len];
+                let mut s = 0usize;
+                for ky in 0..kh {
+                    let dst_base = ((oy + ky) * w + ox) * ch;
+                    for (d, &v) in img[dst_base..dst_base + kw * ch].iter_mut().zip(&src[s..s + kw * ch]) {
+                        *d += v;
+                    }
+                    s += kw * ch;
+                }
+                row += 1;
+            }
+        }
+    }
+}
+
+/// 2×2 max-pool (stride 2) for channels-last [batch, h, w, ch].
+/// `argmax` stores the winning quadrant (0..4) per output element.
+pub fn maxpool2_nhwc(
+    out: &mut [f32],
+    argmax: &mut [u8],
+    input: &[f32],
+    batch: usize,
+    h: usize,
+    w: usize,
+    ch: usize,
+) {
+    debug_assert!(h % 2 == 0 && w % 2 == 0);
+    let (oh, ow) = (h / 2, w / 2);
+    debug_assert_eq!(out.len(), batch * oh * ow * ch);
+    let mut o = 0usize;
+    for b in 0..batch {
+        let img = &input[b * h * w * ch..(b + 1) * h * w * ch];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let base = ((2 * oy) * w + 2 * ox) * ch;
+                for c in 0..ch {
+                    let vals = [
+                        img[base + c],
+                        img[base + ch + c],
+                        img[base + w * ch + c],
+                        img[base + (w + 1) * ch + c],
+                    ];
+                    let mut best = 0usize;
+                    for i in 1..4 {
+                        if vals[i] > vals[best] {
+                            best = i;
+                        }
+                    }
+                    out[o] = vals[best];
+                    argmax[o] = best as u8;
+                    o += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Backward of [`maxpool2_nhwc`].
+pub fn maxpool2_back_nhwc(
+    dinput: &mut [f32],
+    dout: &[f32],
+    argmax: &[u8],
+    batch: usize,
+    h: usize,
+    w: usize,
+    ch: usize,
+) {
+    let (oh, ow) = (h / 2, w / 2);
+    dinput.fill(0.0);
+    let mut o = 0usize;
+    for b in 0..batch {
+        let img = &mut dinput[b * h * w * ch..(b + 1) * h * w * ch];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let base = ((2 * oy) * w + 2 * ox) * ch;
+                for c in 0..ch {
+                    let off = match argmax[o] {
+                        0 => c,
+                        1 => ch + c,
+                        2 => w * ch + c,
+                        _ => (w + 1) * ch + c,
+                    };
+                    img[base + off] += dout[o];
+                    o += 1;
+                }
+            }
+        }
+    }
+}
+
+/// In-place ReLU; returns nothing, mask recoverable from the output.
+pub fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Backward ReLU: zero `grad` where the forward *output* was zero.
+pub fn relu_back(grad: &mut [f32], fwd_out: &[f32]) {
+    for (g, &y) in grad.iter_mut().zip(fwd_out) {
+        if y <= 0.0 {
+            *g = 0.0;
+        }
+    }
+}
+
+/// Softmax + cross-entropy over logits [batch, classes] with integer
+/// labels. Returns mean loss; writes dlogits (already divided by batch).
+pub fn softmax_xent(
+    dlogits: &mut [f32],
+    logits: &[f32],
+    labels: &[f32],
+    batch: usize,
+    classes: usize,
+) -> f64 {
+    let mut loss = 0.0f64;
+    for b in 0..batch {
+        let row = &logits[b * classes..(b + 1) * classes];
+        let drow = &mut dlogits[b * classes..(b + 1) * classes];
+        let maxv = row.iter().copied().fold(f32::MIN, f32::max);
+        let mut sum = 0.0f32;
+        for (d, &l) in drow.iter_mut().zip(row) {
+            *d = (l - maxv).exp();
+            sum += *d;
+        }
+        let label = labels[b] as usize;
+        let p = drow[label] / sum;
+        loss += -(p.max(1e-12) as f64).ln();
+        for d in drow.iter_mut() {
+            *d /= sum * batch as f32;
+        }
+        drow[label] -= 1.0 / batch as f32;
+    }
+    loss / batch as f64
+}
+
+/// Accuracy for logits [batch, classes] vs integer labels.
+pub fn argmax_accuracy(logits: &[f32], labels: &[f32], batch: usize, classes: usize) -> f64 {
+    let mut correct = 0usize;
+    for b in 0..batch {
+        let row = &logits[b * classes..(b + 1) * classes];
+        let mut best = 0usize;
+        for i in 1..classes {
+            if row[i] > row[best] {
+                best = i;
+            }
+        }
+        if best == labels[b] as usize {
+            correct += 1;
+        }
+    }
+    correct as f64 / batch as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+
+    fn matmul_naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for p in 0..k {
+                    acc += a[i * k + p] * b[p * n + j];
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        property("matmul == naive", 50, |g| {
+            let m = g.usize_range(1, 8);
+            let k = g.usize_range(1, 8);
+            let n = g.usize_range(1, 8);
+            let a = g.vec_f32(m * k, -2.0, 2.0);
+            let b = g.vec_f32(k * n, -2.0, 2.0);
+            let want = matmul_naive(&a, &b, m, k, n);
+            let mut c = vec![0.0; m * n];
+            matmul(&mut c, &a, &b, m, k, n, false);
+            for (x, y) in c.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+            }
+        });
+    }
+
+    #[test]
+    fn matmul_tn_nt_match_transposes() {
+        property("tn/nt variants", 50, |g| {
+            let m = g.usize_range(1, 6);
+            let k = g.usize_range(1, 6);
+            let n = g.usize_range(1, 6);
+            // tn: a stored as [k, m]
+            let a_t = g.vec_f32(k * m, -2.0, 2.0);
+            let b = g.vec_f32(k * n, -2.0, 2.0);
+            let mut a = vec![0.0; m * k];
+            for p in 0..k {
+                for i in 0..m {
+                    a[i * k + p] = a_t[p * m + i];
+                }
+            }
+            let want = matmul_naive(&a, &b, m, k, n);
+            let mut c = vec![0.0; m * n];
+            matmul_tn(&mut c, &a_t, &b, m, k, n, false);
+            for (x, y) in c.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-4);
+            }
+            // nt: b stored as [n, k]
+            let b_t = g.vec_f32(n * k, -2.0, 2.0);
+            let mut b2 = vec![0.0; k * n];
+            for j in 0..n {
+                for p in 0..k {
+                    b2[p * n + j] = b_t[j * k + p];
+                }
+            }
+            let want = matmul_naive(&a, &b2, m, k, n);
+            let mut c = vec![0.0; m * n];
+            matmul_nt(&mut c, &a, &b_t, m, k, n, false);
+            for (x, y) in c.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn accumulate_adds() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let b = vec![2.0, 3.0, 4.0, 5.0];
+        let mut c = vec![1.0; 4];
+        matmul(&mut c, &a, &b, 2, 2, 2, true);
+        assert_eq!(c, vec![3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn im2col_col2im_roundtrip_counts() {
+        // col2im(im2col(x)) multiplies each pixel by its patch coverage.
+        let (b, c, h, w, k) = (2usize, 3usize, 6usize, 5usize, 3usize);
+        let input: Vec<f32> = (0..b * c * h * w).map(|i| i as f32 * 0.1).collect();
+        let (oh, ow) = (h - k + 1, w - k + 1);
+        let mut cols = vec![0.0; b * oh * ow * c * k * k];
+        im2col(&mut cols, &input, b, c, h, w, k, k);
+        let mut back = vec![0.0; input.len()];
+        col2im(&mut back, &cols, b, c, h, w, k, k);
+        // Coverage of pixel (y,x) = #windows containing it:
+        // count of o in [0, dim-k] with o <= p <= o+k-1.
+        let cover1d = |p: usize, dim: usize| -> f32 {
+            let lo = p.saturating_sub(k - 1);
+            let hi = p.min(dim - k);
+            (hi + 1 - lo) as f32
+        };
+        for bi in 0..b {
+            for ci in 0..c {
+                for y in 0..h {
+                    for x in 0..w {
+                        let cover = cover1d(y, h) * cover1d(x, w);
+                        let idx = ((bi * c + ci) * h + y) * w + x;
+                        assert!(
+                            (back[idx] - cover * input[idx]).abs() < 1e-3,
+                            "pixel ({y},{x}) cover {cover}: {} vs {}",
+                            back[idx],
+                            cover * input[idx]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn maxpool_and_backward() {
+        let input = vec![
+            1.0, 2.0, 5.0, 6.0, //
+            3.0, 4.0, 7.0, 8.0, //
+            0.0, -1.0, 1.0, 0.0, //
+            -2.0, -3.0, 0.0, 0.5,
+        ];
+        let mut out = vec![0.0; 4];
+        let mut arg = vec![0u8; 4];
+        maxpool2(&mut out, &mut arg, &input, 1, 1, 4, 4);
+        assert_eq!(out, vec![4.0, 8.0, 0.0, 1.0]);
+        let mut dinput = vec![0.0; 16];
+        maxpool2_back(&mut dinput, &[1.0, 2.0, 3.0, 4.0], &arg, 1, 1, 4, 4);
+        assert_eq!(dinput[5], 1.0); // 4.0 was at (1,1)
+        assert_eq!(dinput[7], 2.0); // 8.0 at (1,3)
+        assert_eq!(dinput[8], 3.0); // 0.0 at (2,0)
+        assert_eq!(dinput[10], 4.0); // 1.0 at (2,2)
+        assert_eq!(dinput.iter().filter(|&&v| v != 0.0).count(), 4);
+    }
+
+    #[test]
+    fn softmax_xent_gradient_matches_finite_difference() {
+        let logits = vec![0.5, -0.2, 0.1, 2.0, 0.0, -1.0];
+        let labels = vec![2.0, 0.0];
+        let mut grad = vec![0.0; 6];
+        let loss = softmax_xent(&mut grad, &logits, &labels, 2, 3);
+        assert!(loss > 0.0);
+        let eps = 1e-3f32;
+        for i in 0..6 {
+            let mut lp = logits.clone();
+            lp[i] += eps;
+            let mut lm = logits.clone();
+            lm[i] -= eps;
+            let mut scratch = vec![0.0; 6];
+            let fp = softmax_xent(&mut scratch, &lp, &labels, 2, 3);
+            let fm = softmax_xent(&mut scratch, &lm, &labels, 2, 3);
+            let fd = ((fp - fm) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (grad[i] - fd).abs() < 1e-3,
+                "grad[{i}] = {} vs fd {fd}",
+                grad[i]
+            );
+        }
+    }
+
+    #[test]
+    fn nhwc_im2col_matches_nchw_for_single_channel() {
+        // With ch=1, NHWC and NCHW layouts coincide.
+        let (b, h, w, k) = (2usize, 6usize, 6usize, 3usize);
+        let input: Vec<f32> = (0..b * h * w).map(|i| (i as f32).sin()).collect();
+        let (oh, ow) = (h - k + 1, w - k + 1);
+        let mut c1 = vec![0.0; b * oh * ow * k * k];
+        let mut c2 = vec![0.0; b * oh * ow * k * k];
+        im2col(&mut c1, &input, b, 1, h, w, k, k);
+        im2col_nhwc(&mut c2, &input, b, h, w, 1, k, k);
+        assert_eq!(c1, c2);
+        // And col2im agrees too.
+        let mut d1 = vec![0.0; input.len()];
+        let mut d2 = vec![0.0; input.len()];
+        col2im(&mut d1, &c1, b, 1, h, w, k, k);
+        col2im_nhwc(&mut d2, &c2, b, h, w, 1, k, k);
+        assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn nhwc_pool_and_back() {
+        // [1, 2, 2, 2]: two channels interleaved.
+        let input = vec![
+            1.0, 10.0, // (0,0) c0,c1
+            2.0, 9.0, // (0,1)
+            3.0, 12.0, // (1,0)
+            0.0, 11.0, // (1,1)
+        ];
+        let mut out = vec![0.0; 2];
+        let mut arg = vec![0u8; 2];
+        maxpool2_nhwc(&mut out, &mut arg, &input, 1, 2, 2, 2);
+        assert_eq!(out, vec![3.0, 12.0]);
+        let mut dinput = vec![0.0; 8];
+        maxpool2_back_nhwc(&mut dinput, &[5.0, 7.0], &arg, 1, 2, 2, 2);
+        assert_eq!(dinput[4], 5.0); // c0 max at (1,0)
+        assert_eq!(dinput[5], 7.0); // c1 max at (1,0)
+        assert_eq!(dinput.iter().filter(|&&v| v != 0.0).count(), 2);
+    }
+
+    #[test]
+    fn nhwc_col2im_coverage() {
+        let (b, h, w, ch, k) = (1usize, 5usize, 4usize, 3usize, 2usize);
+        let input: Vec<f32> = (0..b * h * w * ch).map(|i| i as f32 * 0.01 + 1.0).collect();
+        let (oh, ow) = (h - k + 1, w - k + 1);
+        let mut cols = vec![0.0; b * oh * ow * k * k * ch];
+        im2col_nhwc(&mut cols, &input, b, h, w, ch, k, k);
+        let mut back = vec![0.0; input.len()];
+        col2im_nhwc(&mut back, &cols, b, h, w, ch, k, k);
+        let cover1d = |p: usize, dim: usize| -> f32 {
+            let lo = p.saturating_sub(k - 1);
+            let hi = p.min(dim - k);
+            (hi + 1 - lo) as f32
+        };
+        for y in 0..h {
+            for x in 0..w {
+                for c in 0..ch {
+                    let idx = (y * w + x) * ch + c;
+                    let want = cover1d(y, h) * cover1d(x, w) * input[idx];
+                    assert!((back[idx] - want).abs() < 1e-4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn relu_and_back() {
+        let mut x = vec![-1.0, 0.0, 2.0];
+        relu(&mut x);
+        assert_eq!(x, vec![0.0, 0.0, 2.0]);
+        let mut g = vec![1.0, 1.0, 1.0];
+        relu_back(&mut g, &x);
+        assert_eq!(g, vec![0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let logits = vec![0.9, 0.1, 0.2, 0.8];
+        let labels = vec![0.0, 0.0];
+        assert_eq!(argmax_accuracy(&logits, &labels, 2, 2), 0.5);
+    }
+}

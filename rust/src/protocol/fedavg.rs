@@ -1,0 +1,220 @@
+//! FedAvg baseline (McMahan et al. 2017), as evaluated in the paper:
+//! selection-ahead-of-training with synchronous aggregation.
+//!
+//! * Round start: the server picks a random C·m subset and pushes w(t−1)
+//!   to every selected client (they overwrite their local models —
+//!   the progress-waste the paper's futility metric charges to FedAvg).
+//! * The server waits for the selected clients. Crashed clients are
+//!   detected (devices opt out / drop), so the server does not block on
+//!   them; clients that would exceed T_lim hold the round open until the
+//!   deadline fires (the paper's low-round-efficiency failure mode).
+//! * Aggregation: w(t) = Σ n_k·w'_k / Σ n_k over committed selected
+//!   clients only.
+
+use super::{aggregate_subset, FedEnv, Protocol};
+use crate::config::ProtocolKind;
+use crate::metrics::RoundRecord;
+use crate::model::ParamVec;
+use crate::net;
+use crate::sim::{simulate_round, FailReason};
+
+pub struct FedAvg {
+    global: ParamVec,
+}
+
+impl FedAvg {
+    pub fn new(global: ParamVec) -> FedAvg {
+        FedAvg { global }
+    }
+}
+
+impl Protocol for FedAvg {
+    fn kind(&self) -> ProtocolKind {
+        ProtocolKind::FedAvg
+    }
+
+    fn global(&self) -> &ParamVec {
+        &self.global
+    }
+
+    fn run_round(&mut self, t: usize, env: &mut FedEnv) -> RoundRecord {
+        let m = env.m();
+        let quota = env.cfg.quota();
+
+        // Random selection ahead of training.
+        let mut sel_rng = env.round_rng(t, 0xfeda);
+        let selected = sel_rng.sample_indices(m, quota);
+        let m_sync = selected.len();
+        let t_dist = env.net.t_dist(m_sync);
+
+        // Forced sync destroys any uncommitted partial work the selected
+        // clients carried (futility accounting).
+        let mut futility_wasted = 0.0;
+        for &k in &selected {
+            futility_wasted += env.clients[k].pending_partial;
+            env.clients[k].pending_partial = 0.0;
+            env.clients[k].local_model.copy_from(&self.global);
+            env.clients[k].version = t as i64 - 1;
+            env.clients[k].base_version = t as i64 - 1;
+        }
+
+        let synced = vec![true; selected.len()];
+        let round_rng = env.round_rng(t, 0xc4a5);
+        let sim = simulate_round(&env.cfg, &env.net, &env.clients, &selected, &synced, &round_rng);
+        let futility_total = selected.len() as f64;
+
+        // The server waits for every selected client it believes alive:
+        // overtime stragglers hold the round open until T_lim; crashes
+        // are detected and skipped.
+        let client_term = if sim
+            .failures
+            .iter()
+            .any(|&(_, reason, _)| reason == FailReason::Overtime)
+        {
+            env.cfg.train.t_lim
+        } else {
+            sim.last_arrival()
+        };
+        let round_len = net::round_length(t_dist, client_term, env.cfg.train.t_lim);
+
+        // Local training for committed clients.
+        let mut updates: Vec<(usize, ParamVec)> = Vec::new();
+        let mut train_loss_sum = 0.0;
+        let committed: Vec<usize> = sim.committed().collect();
+        for &k in &committed {
+            let base = env.clients[k].local_model.clone();
+            let mut rng = env.client_train_rng(t, k);
+            let u = env.trainer.local_update(&base, k, &mut rng);
+            train_loss_sum += u.train_loss;
+            updates.push((k, u.params));
+        }
+
+        // Synchronous aggregation over the committed subset.
+        if let Some(agg) = aggregate_subset(env, &committed, &updates) {
+            self.global = agg;
+        }
+
+        // Client state: committed clients hold their update; crashed
+        // selected clients accumulate partial work that the next forced
+        // sync will destroy.
+        for (k, params) in &updates {
+            let c = &mut env.clients[*k];
+            c.local_model.copy_from(params);
+            c.version = c.base_version + 1;
+            c.committed_last = true;
+            c.pending_partial = 0.0;
+        }
+        for &(k, _, partial) in &sim.failures {
+            env.clients[k].pending_partial += partial;
+            env.clients[k].committed_last = false;
+        }
+        for k in 0..m {
+            env.clients[k].picked_last = committed.contains(&k);
+        }
+
+        let eval = if t % env.cfg.eval_every == 0 {
+            Some(env.trainer.evaluate(&self.global))
+        } else {
+            None
+        };
+
+        RoundRecord {
+            round: t,
+            round_len,
+            t_dist,
+            m_sync,
+            n_picked: committed.len(),
+            n_crashed: sim.failures.len(),
+            n_committed: committed.len(),
+            n_undrafted: 0,
+            version_variance: env.version_variance(),
+            futility_wasted,
+            futility_total,
+            train_loss: if committed.is_empty() {
+                0.0
+            } else {
+                train_loss_sum / committed.len() as f64
+            },
+            eval,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::util::proptest::property;
+
+    fn tiny_env(crash: f64, c_fraction: f64) -> FedEnv {
+        let mut cfg = presets::preset("tiny").unwrap();
+        cfg.env.crash_prob = crash;
+        cfg.protocol.c_fraction = c_fraction;
+        FedEnv::new(&cfg).unwrap()
+    }
+
+    #[test]
+    fn selects_exactly_quota_and_syncs_them() {
+        let mut env = tiny_env(0.0, 0.5);
+        let quota = env.cfg.quota();
+        let mut p = FedAvg::new(env.init_global());
+        let rec = p.run_round(1, &mut env);
+        assert_eq!(rec.m_sync, quota);
+        assert_eq!(rec.n_committed, quota);
+        assert_eq!(rec.n_undrafted, 0);
+        assert!((rec.sr(env.m()) - 0.5).abs() < 0.26); // ceil rounding
+    }
+
+    #[test]
+    fn crashes_reduce_eur() {
+        property("fedavg eur = committed fraction", 15, |g| {
+            let crash = g.f64_range(0.0, 1.0);
+            let mut cfg = presets::preset("tiny").unwrap();
+            cfg.env.crash_prob = crash;
+            cfg.protocol.c_fraction = 1.0;
+            cfg.seed = g.u64();
+            let mut env = FedEnv::new(&cfg).unwrap();
+            let mut p = FedAvg::new(env.init_global());
+            let rec = p.run_round(1, &mut env);
+            assert_eq!(rec.n_committed + rec.n_crashed, env.m());
+            assert!(rec.eur(env.m()) <= 1.0);
+        });
+    }
+
+    #[test]
+    fn all_crashed_keeps_global() {
+        let mut env = tiny_env(1.0, 1.0);
+        let g0 = env.init_global();
+        let mut p = FedAvg::new(g0.clone());
+        let _ = p.run_round(1, &mut env);
+        assert_eq!(p.global(), &g0);
+    }
+
+    #[test]
+    fn futility_accrues_from_crash_partials() {
+        let mut env = tiny_env(1.0, 1.0);
+        let mut p = FedAvg::new(env.init_global());
+        let r1 = p.run_round(1, &mut env);
+        // Round 1: everyone crashes; nothing destroyed yet.
+        assert_eq!(r1.futility_wasted, 0.0);
+        assert!(env.clients.iter().all(|c| c.pending_partial > 0.0));
+        // Round 2: re-selected clients are force-synced; their partials
+        // are destroyed.
+        let r2 = p.run_round(2, &mut env);
+        assert!(r2.futility_wasted > 0.0);
+    }
+
+    #[test]
+    fn unselected_clients_do_not_train() {
+        let mut env = tiny_env(0.0, 0.25); // quota 1 of 4
+        let mut p = FedAvg::new(env.init_global());
+        let rec = p.run_round(1, &mut env);
+        assert_eq!(rec.n_committed, 1);
+        let trained = env
+            .clients
+            .iter()
+            .filter(|c| c.version == 1)
+            .count();
+        assert_eq!(trained, 1);
+    }
+}

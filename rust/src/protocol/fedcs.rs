@@ -1,0 +1,226 @@
+//! FedCS baseline (Nishio & Yonetani 2019), as characterized in the
+//! paper: FedAvg with *estimation-based client filtering* at the
+//! selection stage.
+//!
+//! The server requests resource information from a candidate pool (twice
+//! the quota, capped at m), estimates each candidate's round time from
+//! its known speed and link bandwidth, and greedily keeps the fastest
+//! `quota` candidates whose estimate fits the deadline. Estimates are
+//! perfect up to crashes — the paper's criticism that FedCS "relies on
+//! accurate estimation and does not take client unreliability into
+//! account" is preserved: crashes still waste the slots.
+
+use super::{aggregate_subset, FedEnv, Protocol};
+use crate::config::ProtocolKind;
+use crate::metrics::RoundRecord;
+use crate::model::ParamVec;
+use crate::net;
+use crate::sim::{simulate_round, FailReason};
+
+/// Candidate pool size factor (resource requests per selection slot).
+const POOL_FACTOR: usize = 2;
+
+pub struct FedCs {
+    global: ParamVec,
+}
+
+impl FedCs {
+    pub fn new(global: ParamVec) -> FedCs {
+        FedCs { global }
+    }
+
+    /// Estimated round time for client `k` (perfect information model).
+    fn estimate(env: &FedEnv, k: usize) -> f64 {
+        env.net.t_down() + env.clients[k].t_train(env.cfg.train.epochs) + env.net.t_up()
+    }
+}
+
+impl Protocol for FedCs {
+    fn kind(&self) -> ProtocolKind {
+        ProtocolKind::FedCs
+    }
+
+    fn global(&self) -> &ParamVec {
+        &self.global
+    }
+
+    fn run_round(&mut self, t: usize, env: &mut FedEnv) -> RoundRecord {
+        let m = env.m();
+        let quota = env.cfg.quota();
+
+        // Resource-request pool, then keep the fastest-estimated quota
+        // clients that fit the deadline.
+        let mut sel_rng = env.round_rng(t, 0xfeda);
+        let pool_size = (quota * POOL_FACTOR).min(m);
+        let mut pool = sel_rng.sample_indices(m, pool_size);
+        pool.sort_by(|&a, &b| {
+            Self::estimate(env, a)
+                .partial_cmp(&Self::estimate(env, b))
+                .unwrap()
+        });
+        let selected: Vec<usize> = pool
+            .into_iter()
+            .filter(|&k| Self::estimate(env, k) <= env.cfg.train.t_lim)
+            .take(quota)
+            .collect();
+
+        let m_sync = selected.len();
+        let t_dist = env.net.t_dist(m_sync);
+
+        let mut futility_wasted = 0.0;
+        for &k in &selected {
+            futility_wasted += env.clients[k].pending_partial;
+            env.clients[k].pending_partial = 0.0;
+            env.clients[k].local_model.copy_from(&self.global);
+            env.clients[k].version = t as i64 - 1;
+            env.clients[k].base_version = t as i64 - 1;
+        }
+
+        let synced = vec![true; selected.len()];
+        let round_rng = env.round_rng(t, 0xc4a5);
+        let sim = simulate_round(&env.cfg, &env.net, &env.clients, &selected, &synced, &round_rng);
+        let futility_total = selected.len() as f64;
+
+        // Estimation is accurate, so overtime cannot occur among the
+        // selected (they were filtered); the wait ends at the last
+        // non-crashed arrival. Keep the general rule anyway for safety.
+        let client_term = if sim
+            .failures
+            .iter()
+            .any(|&(_, r, _)| r == FailReason::Overtime)
+        {
+            env.cfg.train.t_lim
+        } else {
+            sim.last_arrival()
+        };
+        let round_len = net::round_length(t_dist, client_term, env.cfg.train.t_lim);
+
+        let committed: Vec<usize> = sim.committed().collect();
+        let mut updates: Vec<(usize, ParamVec)> = Vec::new();
+        let mut train_loss_sum = 0.0;
+        for &k in &committed {
+            let base = env.clients[k].local_model.clone();
+            let mut rng = env.client_train_rng(t, k);
+            let u = env.trainer.local_update(&base, k, &mut rng);
+            train_loss_sum += u.train_loss;
+            updates.push((k, u.params));
+        }
+        if let Some(agg) = aggregate_subset(env, &committed, &updates) {
+            self.global = agg;
+        }
+
+        for (k, params) in &updates {
+            let c = &mut env.clients[*k];
+            c.local_model.copy_from(params);
+            c.version = c.base_version + 1;
+            c.committed_last = true;
+            c.pending_partial = 0.0;
+        }
+        for &(k, _, partial) in &sim.failures {
+            env.clients[k].pending_partial += partial;
+            env.clients[k].committed_last = false;
+        }
+        for k in 0..m {
+            env.clients[k].picked_last = committed.contains(&k);
+        }
+
+        let eval = if t % env.cfg.eval_every == 0 {
+            Some(env.trainer.evaluate(&self.global))
+        } else {
+            None
+        };
+
+        RoundRecord {
+            round: t,
+            round_len,
+            t_dist,
+            m_sync,
+            n_picked: committed.len(),
+            n_crashed: sim.failures.len(),
+            n_committed: committed.len(),
+            n_undrafted: 0,
+            version_variance: env.version_variance(),
+            futility_wasted,
+            futility_total,
+            train_loss: if committed.is_empty() {
+                0.0
+            } else {
+                train_loss_sum / committed.len() as f64
+            },
+            eval,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn tiny_env(crash: f64, c_fraction: f64) -> FedEnv {
+        let mut cfg = presets::preset("tiny").unwrap();
+        cfg.env.crash_prob = crash;
+        cfg.protocol.c_fraction = c_fraction;
+        FedEnv::new(&cfg).unwrap()
+    }
+
+    #[test]
+    fn prefers_faster_clients() {
+        let mut env = tiny_env(0.0, 0.5); // quota 2 of 4
+        // Give clients strictly ordered speeds.
+        for (i, c) in env.clients.iter_mut().enumerate() {
+            c.perf = (i + 1) as f64;
+            c.batches_per_epoch = 10;
+        }
+        let mut p = FedCs::new(env.init_global());
+        let rec = p.run_round(1, &mut env);
+        assert_eq!(rec.n_committed, 2);
+        // With a pool of 4 (2*quota = 4 = m), the two fastest clients
+        // (ids 2, 3) must be the selected ones.
+        let trained: Vec<usize> = env
+            .clients
+            .iter()
+            .filter(|c| c.version == 1)
+            .map(|c| c.id)
+            .collect();
+        assert_eq!(trained, vec![2, 3]);
+    }
+
+    #[test]
+    fn filters_clients_that_cannot_meet_deadline() {
+        let mut env = tiny_env(0.0, 1.0);
+        // Make one client impossibly slow.
+        env.clients[0].perf = 1e-9;
+        let mut p = FedCs::new(env.init_global());
+        let rec = p.run_round(1, &mut env);
+        assert_eq!(rec.m_sync, env.m() - 1, "slow client filtered");
+        // And the round never hits the deadline.
+        assert!(rec.round_len < env.cfg.train.t_lim);
+    }
+
+    #[test]
+    fn round_shorter_or_equal_than_fedavg_with_same_seed() {
+        // Statistical smoke: across a few seeds FedCS should never be
+        // slower than FedAvg when both select from the same fleet.
+        for seed in 0..5u64 {
+            let mut cfg = presets::preset("tiny").unwrap();
+            cfg.env.crash_prob = 0.0;
+            cfg.protocol.c_fraction = 0.5;
+            cfg.seed = seed;
+            let mut env_a = FedEnv::new(&cfg).unwrap();
+            let mut env_c = FedEnv::new(&cfg).unwrap();
+            let mut fa = FedAvg::new(env_a.init_global());
+            let mut fc = FedCs::new(env_c.init_global());
+            let ra = fa.run_round(1, &mut env_a);
+            let rc = fc.run_round(1, &mut env_c);
+            assert!(
+                rc.round_len <= ra.round_len + 1e-9,
+                "seed {seed}: FedCS {} > FedAvg {}",
+                rc.round_len,
+                ra.round_len
+            );
+        }
+    }
+
+    use super::super::FedAvg;
+}

@@ -1,0 +1,179 @@
+//! Fully-local baseline: clients train on their own shards every round
+//! with no intermediate aggregation; one weighted average over a random
+//! C-fraction of local models is taken after the final round (§IV-A:
+//! "the fully local protocol never performs the global aggregation until
+//! the end of the final round").
+
+use super::{FedEnv, Protocol};
+use crate::config::ProtocolKind;
+use crate::metrics::RoundRecord;
+use crate::model::ParamVec;
+use crate::net;
+use crate::sim::simulate_round;
+
+pub struct FullyLocal {
+    /// Holds w(0) during training; replaced by the final aggregate in
+    /// `finalize`.
+    global: ParamVec,
+    finalized: bool,
+}
+
+impl FullyLocal {
+    pub fn new(global: ParamVec) -> FullyLocal {
+        FullyLocal {
+            global,
+            finalized: false,
+        }
+    }
+}
+
+impl Protocol for FullyLocal {
+    fn kind(&self) -> ProtocolKind {
+        ProtocolKind::FullyLocal
+    }
+
+    fn global(&self) -> &ParamVec {
+        &self.global
+    }
+
+    fn run_round(&mut self, t: usize, env: &mut FedEnv) -> RoundRecord {
+        let m = env.m();
+        // Every client trains from its own model; no distribution, no
+        // uploads (m_sync = 0, T_dist = 0, commits are local-only).
+        let participants: Vec<usize> = (0..m).collect();
+        let synced = vec![false; m];
+        let round_rng = env.round_rng(t, 0xc4a5);
+        let sim = simulate_round(&env.cfg, &env.net, &env.clients, &participants, &synced, &round_rng);
+
+        let mut train_loss_sum = 0.0;
+        let finished: Vec<usize> = sim.committed().collect();
+        for &k in &finished {
+            let base = env.clients[k].local_model.clone();
+            let mut rng = env.client_train_rng(t, k);
+            let u = env.trainer.local_update(&base, k, &mut rng);
+            train_loss_sum += u.train_loss;
+            let c = &mut env.clients[k];
+            c.local_model.copy_from(&u.params);
+            c.version = c.version + 1; // local lineage only
+        }
+
+        // Round pacing: last finisher (no uploads, so subtract t_up is
+        // debatable; we keep the simulated arrival to stay comparable).
+        let round_len = net::round_length(0.0, sim.last_arrival(), env.cfg.train.t_lim);
+
+        let eval = if t % env.cfg.eval_every == 0 {
+            // During training the "global model" is meaningless for the
+            // fully-local baseline; the paper evaluates it only after the
+            // final aggregation. We report the mean of local-model
+            // accuracies (over a fixed-size client sample to bound eval
+            // cost at m=500) as the per-round trace.
+            let sample = m.min(8);
+            let mut srng = env.round_rng(t, 0xe7a1);
+            let ids = srng.sample_indices(m, sample);
+            let mut loss = 0.0;
+            let mut acc = 0.0;
+            for k in ids {
+                let model = env.clients[k].local_model.clone();
+                let e = env.trainer.evaluate(&model);
+                loss += e.loss;
+                acc += e.accuracy;
+            }
+            Some(crate::model::EvalResult {
+                loss: loss / sample as f64,
+                accuracy: acc / sample as f64,
+            })
+        } else {
+            None
+        };
+
+        RoundRecord {
+            round: t,
+            round_len,
+            t_dist: 0.0,
+            m_sync: 0,
+            n_picked: 0,
+            n_crashed: sim.failures.len(),
+            n_committed: finished.len(),
+            n_undrafted: 0,
+            version_variance: env.version_variance(),
+            futility_wasted: 0.0,
+            futility_total: m as f64,
+            train_loss: if finished.is_empty() {
+                0.0
+            } else {
+                train_loss_sum / finished.len() as f64
+            },
+            eval,
+        }
+    }
+
+    fn finalize(&mut self, env: &mut FedEnv) {
+        if self.finalized {
+            return;
+        }
+        self.finalized = true;
+        // Single end-of-run aggregation over a random C-fraction.
+        let quota = env.cfg.quota();
+        let mut rng = env.round_rng(env.cfg.train.rounds + 1, 0xf17a);
+        let subset = rng.sample_indices(env.m(), quota);
+        let total: f64 = subset.iter().map(|&k| env.clients[k].n_k as f64).sum();
+        let mut agg = ParamVec::zeros(self.global.dim());
+        for &k in &subset {
+            let w = (env.clients[k].n_k as f64 / total) as f32;
+            agg.axpy(w, &env.clients[k].local_model);
+        }
+        self.global = agg;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn no_distribution_overhead() {
+        let mut cfg = presets::preset("tiny").unwrap();
+        cfg.env.crash_prob = 0.0;
+        let mut env = FedEnv::new(&cfg).unwrap();
+        let mut p = FullyLocal::new(env.init_global());
+        let rec = p.run_round(1, &mut env);
+        assert_eq!(rec.t_dist, 0.0);
+        assert_eq!(rec.m_sync, 0);
+        assert_eq!(rec.n_picked, 0);
+        assert_eq!(rec.n_committed, env.m());
+    }
+
+    #[test]
+    fn models_diverge_without_aggregation() {
+        let mut cfg = presets::preset("tiny").unwrap();
+        cfg.env.crash_prob = 0.0;
+        let mut env = FedEnv::new(&cfg).unwrap();
+        let mut p = FullyLocal::new(env.init_global());
+        for t in 1..=3 {
+            let _ = p.run_round(t, &mut env);
+        }
+        // Different shards -> different local models.
+        let d01 = env.clients[0].local_model.dist(&env.clients[1].local_model);
+        assert!(d01 > 1e-9, "local models should diverge, dist {d01}");
+    }
+
+    #[test]
+    fn finalize_aggregates_once() {
+        let mut cfg = presets::preset("tiny").unwrap();
+        cfg.env.crash_prob = 0.0;
+        cfg.protocol.c_fraction = 1.0;
+        let mut env = FedEnv::new(&cfg).unwrap();
+        let g0 = env.init_global();
+        let mut p = FullyLocal::new(g0.clone());
+        for t in 1..=2 {
+            let _ = p.run_round(t, &mut env);
+        }
+        assert_eq!(p.global(), &g0, "global untouched before finalize");
+        p.finalize(&mut env);
+        assert_ne!(p.global(), &g0, "finalize installs the aggregate");
+        let snapshot = p.global().clone();
+        p.finalize(&mut env);
+        assert_eq!(p.global(), &snapshot, "finalize is idempotent");
+    }
+}

@@ -1,0 +1,240 @@
+//! Federated protocols: SAFA (the paper's contribution) and the three
+//! baselines it is evaluated against (FedAvg, FedCS, fully-local).
+//!
+//! A [`Protocol`] drives one federated round at a time against a shared
+//! [`FedEnv`] (clients, data, trainer, network model, RNG). The
+//! coordinator owns the round loop and metric collection.
+
+mod fedavg;
+mod fedcs;
+mod local;
+mod safa;
+
+pub use fedavg::FedAvg;
+pub use fedcs::FedCs;
+pub use local::FullyLocal;
+pub use safa::{Safa, SafaOptions};
+
+use crate::client::{build_clients, ClientState};
+use crate::config::{ExperimentConfig, ProtocolKind};
+use crate::data::{partition_gaussian, synth, FedData};
+use crate::error::Result;
+use crate::metrics::RoundRecord;
+use crate::model::{make_trainer, ParamVec, Trainer};
+use crate::net::NetworkModel;
+use crate::util::rng::Pcg64;
+use crate::util::stats;
+use std::sync::Arc;
+
+/// Shared experiment state every protocol operates on.
+pub struct FedEnv {
+    pub cfg: ExperimentConfig,
+    pub data: Arc<FedData>,
+    pub clients: Vec<ClientState>,
+    pub trainer: Box<dyn Trainer>,
+    pub net: NetworkModel,
+    /// Aggregation weights n_k / n (Eq. 7).
+    pub weights: Vec<f32>,
+    root_rng: Pcg64,
+}
+
+impl FedEnv {
+    /// Build the environment: synthesize data, partition it, draw the
+    /// client fleet, and initialize the trainer and global model. All
+    /// randomness descends from `cfg.seed`.
+    pub fn new(cfg: &ExperimentConfig) -> Result<FedEnv> {
+        cfg.validate()?;
+        let (train, test) = synth::generate(cfg.task.kind, cfg.task.n, cfg.task.n_test, cfg.seed);
+        let mut part_rng = Pcg64::with_stream(cfg.seed, 0x9a57);
+        let partitions =
+            partition_gaussian(train.n, cfg.env.m, cfg.env.partition_rel_std, &mut part_rng);
+        let data = Arc::new(FedData {
+            train,
+            test,
+            partitions,
+        });
+        Self::with_data(cfg, data)
+    }
+
+    /// Build from pre-made data (lets benches reuse one dataset across a
+    /// protocol grid, and tests inject tiny fixtures).
+    pub fn with_data(cfg: &ExperimentConfig, data: Arc<FedData>) -> Result<FedEnv> {
+        let trainer = make_trainer(cfg, Arc::clone(&data));
+        Self::with_trainer(cfg, data, trainer)
+    }
+
+    /// Full injection point (the XLA runtime backend enters here).
+    pub fn with_trainer(
+        cfg: &ExperimentConfig,
+        data: Arc<FedData>,
+        trainer: Box<dyn Trainer>,
+    ) -> Result<FedEnv> {
+        let root_rng = Pcg64::with_stream(cfg.seed, 0x5afa);
+        let mut init_rng = root_rng.split(0x1817);
+        let init = trainer.init_params(&mut init_rng);
+        let mut fleet_rng = root_rng.split(0xf1ee);
+        let clients = build_clients(cfg, &data, &init, &mut fleet_rng);
+        let total: f64 = clients.iter().map(|c| c.n_k as f64).sum();
+        let weights = clients.iter().map(|c| (c.n_k as f64 / total) as f32).collect();
+        let net = NetworkModel::new(&cfg.env);
+        Ok(FedEnv {
+            cfg: cfg.clone(),
+            data,
+            clients,
+            trainer,
+            net,
+            weights,
+            root_rng,
+        })
+    }
+
+    /// Fresh global-model initialization (same across protocols for a
+    /// given seed).
+    pub fn init_global(&self) -> ParamVec {
+        let mut rng = self.root_rng.split(0x1817);
+        self.trainer.init_params(&mut rng)
+    }
+
+    /// RNG stream for round-level events (crashes, selection shuffles).
+    pub fn round_rng(&self, t: usize, salt: u64) -> Pcg64 {
+        self.root_rng.split(t as u64).split(salt)
+    }
+
+    /// RNG stream for client `k`'s local training in round `t`
+    /// (batch shuffling) — identical across protocols.
+    pub fn client_train_rng(&self, t: usize, k: usize) -> Pcg64 {
+        self.root_rng
+            .split(t as u64)
+            .split(0x7a11 + k as u64)
+    }
+
+    /// Variance of the fleet's local-model versions (Eq. 10's per-round
+    /// term).
+    pub fn version_variance(&self) -> f64 {
+        let vs: Vec<f64> = self.clients.iter().map(|c| c.version as f64).collect();
+        stats::variance(&vs)
+    }
+
+    pub fn m(&self) -> usize {
+        self.cfg.env.m
+    }
+}
+
+/// A federated protocol.
+pub trait Protocol {
+    fn kind(&self) -> ProtocolKind;
+
+    /// Current global model parameters.
+    fn global(&self) -> &ParamVec;
+
+    /// Execute one federated round (1-based `t`).
+    fn run_round(&mut self, t: usize, env: &mut FedEnv) -> RoundRecord;
+
+    /// Called once after the final round; the fully-local baseline
+    /// performs its only aggregation here. Default: no-op.
+    fn finalize(&mut self, _env: &mut FedEnv) {}
+}
+
+/// Build a protocol instance for the configured kind.
+pub fn make_protocol(env: &FedEnv) -> Box<dyn Protocol> {
+    let global = env.init_global();
+    match env.cfg.protocol.kind {
+        ProtocolKind::Safa => Box::new(Safa::new(env, global)),
+        ProtocolKind::FedAvg => Box::new(FedAvg::new(global)),
+        ProtocolKind::FedCs => Box::new(FedCs::new(global)),
+        ProtocolKind::FullyLocal => Box::new(FullyLocal::new(global)),
+    }
+}
+
+/// FedAvg-style weighted aggregation over a committed subset:
+/// w = Σ_{k∈S} n_k·w_k / Σ_{k∈S} n_k. Returns None for an empty set.
+pub(crate) fn aggregate_subset(
+    env: &FedEnv,
+    subset: &[usize],
+    updates: &[(usize, ParamVec)],
+) -> Option<ParamVec> {
+    if subset.is_empty() {
+        return None;
+    }
+    let total: f64 = subset.iter().map(|&k| env.clients[k].n_k as f64).sum();
+    let mut out = ParamVec::zeros(env.trainer.dim());
+    for &k in subset {
+        let w = (env.clients[k].n_k as f64 / total) as f32;
+        let update = updates
+            .iter()
+            .find(|(id, _)| *id == k)
+            .map(|(_, p)| p)
+            .expect("aggregate_subset: missing update");
+        out.axpy(w, update);
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn env_construction_is_deterministic() {
+        let cfg = presets::preset("tiny").unwrap();
+        let a = FedEnv::new(&cfg).unwrap();
+        let b = FedEnv::new(&cfg).unwrap();
+        assert_eq!(a.init_global(), b.init_global());
+        for (x, y) in a.clients.iter().zip(&b.clients) {
+            assert_eq!(x.perf, y.perf);
+            assert_eq!(x.n_k, y.n_k);
+        }
+        assert_eq!(a.weights, b.weights);
+    }
+
+    #[test]
+    fn weights_sum_to_one() {
+        let cfg = presets::preset("tiny").unwrap();
+        let env = FedEnv::new(&cfg).unwrap();
+        let sum: f64 = env.weights.iter().map(|&w| w as f64).sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn client_rng_streams_differ_by_round_and_client() {
+        let cfg = presets::preset("tiny").unwrap();
+        let env = FedEnv::new(&cfg).unwrap();
+        let mut a = env.client_train_rng(1, 0);
+        let mut b = env.client_train_rng(1, 1);
+        let mut c = env.client_train_rng(2, 0);
+        let mut a2 = env.client_train_rng(1, 0);
+        assert_eq!(a.next_u64(), a2.next_u64());
+        assert_ne!(a.next_u64(), b.next_u64());
+        assert_ne!(b.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn aggregate_subset_weighted_mean() {
+        let cfg = presets::preset("tiny").unwrap();
+        let mut env = FedEnv::new(&cfg).unwrap();
+        // Two clients with known sizes.
+        env.clients[0].n_k = 10;
+        env.clients[1].n_k = 30;
+        let dim = env.trainer.dim();
+        let updates = vec![
+            (0usize, ParamVec(vec![1.0; dim])),
+            (1usize, ParamVec(vec![2.0; dim])),
+        ];
+        let agg = aggregate_subset(&env, &[0, 1], &updates).unwrap();
+        assert!((agg.0[0] - 1.75).abs() < 1e-6);
+        assert!(aggregate_subset(&env, &[], &updates).is_none());
+    }
+
+    #[test]
+    fn make_protocol_matches_kind() {
+        for kind in ProtocolKind::ALL {
+            let mut cfg = presets::preset("tiny").unwrap();
+            cfg.protocol.kind = kind;
+            let env = FedEnv::new(&cfg).unwrap();
+            let p = make_protocol(&env);
+            assert_eq!(p.kind(), kind);
+            assert_eq!(p.global().dim(), env.trainer.dim());
+        }
+    }
+}

@@ -1,0 +1,504 @@
+//! The SAFA protocol (paper §III).
+//!
+//! Round structure (Alg. 2):
+//! 1. **Lag-tolerant distribution** (Eq. 3): classify clients as
+//!    *up-to-date* (committed last round, Def. 1), *deprecated*
+//!    (version lag beyond τ, Def. 2) or *tolerable* (Def. 3). Only the
+//!    first two groups download w(t−1); tolerable clients stay
+//!    asynchronous and keep training on their stale base.
+//! 2. **Local training**: *all* clients train (SAFA removes FedAvg's
+//!    selection-ahead-of-training restriction, §III-B); crashes and
+//!    deadline overruns produce the failed set K(t).
+//! 3. **CFCFM post-training selection** (Alg. 1): updates are accepted in
+//!    arrival order; clients not picked last round have priority; the
+//!    round closes when C·m new picks accumulated, all survivors arrived,
+//!    or T_lim fires. Remaining committers are *undrafted* (Q(t)).
+//! 4. **Three-step discriminative aggregation** (Eqs. 6–8): picked
+//!    entries overwrite the cache; deprecated entries are reset to
+//!    w(t−1); the weighted average over all m cache entries becomes
+//!    w(t); undrafted updates enter the cache *after* aggregation (the
+//!    bypass), taking effect next round.
+
+use super::{FedEnv, Protocol};
+use crate::config::ProtocolKind;
+use crate::metrics::RoundRecord;
+use crate::model::ParamVec;
+use crate::net;
+use crate::sim::simulate_continuation;
+
+/// Ablation switches for the design-choice study (bench
+/// `ablation_safa`): disable the bypass (Eq. 8) or CFCFM's compensatory
+/// priority to quantify each mechanism's contribution.
+#[derive(Debug, Clone, Copy)]
+pub struct SafaOptions {
+    /// Carry undrafted updates into the cache (Eq. 8). Off = undrafted
+    /// work is discarded like FedAvg does.
+    pub bypass: bool,
+    /// Prioritize clients missed last round (Alg. 1). Off = pure
+    /// first-come-first-merge.
+    pub compensatory: bool,
+}
+
+impl Default for SafaOptions {
+    fn default() -> Self {
+        SafaOptions {
+            bypass: true,
+            compensatory: true,
+        }
+    }
+}
+
+pub struct Safa {
+    /// Current global model w(t−1).
+    global: ParamVec,
+    /// Ablation switches (all on = the paper's SAFA).
+    opts: SafaOptions,
+    /// Global version (round index of the last aggregation; starts 0).
+    global_version: i64,
+    /// Per-client cache entries w*_k (Eq. 6); one per client, initialized
+    /// to w(0).
+    cache: Vec<ParamVec>,
+    /// Scratch for the aggregation output (reused every round — avoids a
+    /// d-sized allocation on the hot path).
+    agg_scratch: ParamVec,
+}
+
+impl Safa {
+    pub fn new(env: &FedEnv, global: ParamVec) -> Safa {
+        Self::with_options(env, global, SafaOptions::default())
+    }
+
+    /// Construct with ablation switches (see [`SafaOptions`]).
+    pub fn with_options(env: &FedEnv, global: ParamVec, opts: SafaOptions) -> Safa {
+        let cache = vec![global.clone(); env.m()];
+        let dim = global.dim();
+        Safa {
+            global,
+            opts,
+            global_version: 0,
+            cache,
+            agg_scratch: ParamVec::zeros(dim),
+        }
+    }
+
+    /// Expose the cache for invariant tests.
+    #[cfg(test)]
+    pub(crate) fn cache(&self) -> &[ParamVec] {
+        &self.cache
+    }
+}
+
+impl Protocol for Safa {
+    fn kind(&self) -> ProtocolKind {
+        ProtocolKind::Safa
+    }
+
+    fn global(&self) -> &ParamVec {
+        &self.global
+    }
+
+    fn run_round(&mut self, t: usize, env: &mut FedEnv) -> RoundRecord {
+        let m = env.m();
+        let tau = env.cfg.protocol.tau as i64;
+        let t_i = t as i64;
+        debug_assert_eq!(self.global_version, t_i - 1, "round driven out of order");
+
+        // --- Step 1: lag-tolerant distribution (Eq. 3). ---
+        let mut synced = vec![false; m];
+        let mut deprecated = vec![false; m];
+        let mut futility_wasted = 0.0f64;
+        for k in 0..m {
+            let c = &env.clients[k];
+            let is_deprecated = c.version < t_i - tau;
+            let is_up_to_date = c.committed_last;
+            if is_deprecated || is_up_to_date {
+                synced[k] = true;
+                deprecated[k] = is_deprecated && !is_up_to_date;
+            }
+        }
+        // Apply the downloads and (re)start training jobs. Synced clients
+        // adopt w(t-1); a forced sync of a deprecated client abandons its
+        // in-flight job — that destroyed progress is the futility cost.
+        // Tolerable clients continue their in-flight jobs (SAFA's
+        // continuation semantics: crashes pause, stragglers span rounds).
+        let epochs = env.cfg.train.epochs;
+        for k in 0..m {
+            if synced[k] {
+                if let Some(job) = env.clients[k].job.take() {
+                    futility_wasted += job.progress();
+                }
+                env.clients[k].local_model.copy_from(&self.global);
+                env.clients[k].version = t_i - 1;
+                env.clients[k].base_version = t_i - 1;
+                let total =
+                    env.net.t_down() + env.clients[k].t_train(epochs) + env.net.t_up();
+                env.clients[k].job = Some(crate::client::Job {
+                    remaining: total,
+                    total,
+                    base_version: t_i - 1,
+                });
+            } else if env.clients[k].job.is_none() {
+                // Tolerable without a job (committed long ago but never
+                // re-synced — possible only via exotic configs): train on
+                // the stale local model without a download.
+                let total = env.clients[k].t_train(epochs) + env.net.t_up();
+                env.clients[k].job = Some(crate::client::Job {
+                    remaining: total,
+                    total,
+                    base_version: env.clients[k].version,
+                });
+            }
+        }
+        let m_sync = synced.iter().filter(|&&s| s).count();
+        let t_dist = env.net.t_dist(m_sync);
+
+        // --- Step 2: everyone's job advances. ---
+        let participants: Vec<usize> = (0..m).collect();
+        let jobs: Vec<f64> = env
+            .clients
+            .iter()
+            .map(|c| c.job.map(|j| j.remaining).unwrap_or(f64::INFINITY))
+            .collect();
+        let round_rng = env.round_rng(t, 0xc4a5);
+        let sim = simulate_continuation(&env.cfg, &participants, &jobs, &round_rng);
+        let futility_total = m as f64;
+
+        // Run actual local updates only for committed clients (failed
+        // clients' numerics never reach the server this round).
+        let mut updates: Vec<(usize, ParamVec, f64)> = Vec::with_capacity(sim.arrivals.len());
+        for a in &sim.arrivals {
+            let k = a.client;
+            let base = env.clients[k].local_model.clone();
+            let mut rng = env.client_train_rng(t, k);
+            let u = env.trainer.local_update(&base, k, &mut rng);
+            updates.push((k, u.params, u.train_loss));
+        }
+
+        // --- Step 3: CFCFM selection (Alg. 1). ---
+        let quota = env.cfg.quota();
+        let mut picked: Vec<usize> = Vec::with_capacity(quota);
+        let mut undrafted: Vec<usize> = Vec::new();
+        let mut close_time: Option<f64> = None;
+        for a in &sim.arrivals {
+            let k = a.client;
+            if close_time.is_none() {
+                if !self.opts.compensatory || !env.clients[k].picked_last {
+                    picked.push(k);
+                    if picked.len() >= quota {
+                        close_time = Some(a.time);
+                    }
+                } else {
+                    undrafted.push(k);
+                }
+            } else {
+                // Round already closed; late arrivals (within T_lim)
+                // still commit to the bypass (Fig. 1's undrafted
+                // clients).
+                undrafted.push(k);
+            }
+        }
+        // Quota unmet by new arrivals: fill from undrafted in arrival
+        // order (Alg. 1's post-deadline block).
+        while picked.len() < quota && !undrafted.is_empty() {
+            picked.push(undrafted.remove(0));
+        }
+        // Round close: quota time, else the last arrival (the semi-async
+        // server never blocks on in-flight stragglers — their commits
+        // simply arrive in a later round), else T_lim when only
+        // stragglers remain, else immediate.
+        let client_term = close_time.unwrap_or_else(|| {
+            if !sim.arrivals.is_empty() {
+                sim.last_arrival()
+            } else if !sim.stragglers.is_empty() {
+                env.cfg.train.t_lim
+            } else {
+                0.0
+            }
+        });
+        let round_len = net::round_length(t_dist, client_term, env.cfg.train.t_lim);
+        // Stragglers progress for the round's duration.
+        let duration = client_term.min(env.cfg.train.t_lim);
+        for &k in &sim.stragglers {
+            if let Some(job) = env.clients[k].job.as_mut() {
+                job.remaining -= duration;
+            }
+        }
+
+        // --- Step 4: three-step discriminative aggregation. ---
+        // (6) Pre-aggregation cache update.
+        for &k in &picked {
+            let update = updates
+                .iter()
+                .find(|(id, _, _)| *id == k)
+                .map(|(_, p, _)| p)
+                .expect("picked client without update");
+            self.cache[k].copy_from(update);
+        }
+        for k in 0..m {
+            if deprecated[k] && !picked.contains(&k) {
+                // Deprecated entries are replaced by w(t-1) to purge
+                // heavy staleness (Eq. 6 middle case).
+                self.cache[k].copy_from(&self.global);
+            }
+        }
+        // (7) SAFA aggregation over ALL m cache entries.
+        self.agg_scratch.clear();
+        for k in 0..m {
+            self.agg_scratch.axpy(env.weights[k], &self.cache[k]);
+        }
+        self.global.copy_from(&self.agg_scratch);
+        self.global_version = t_i;
+        // (8) Post-aggregation cache update: bypass carries undrafted
+        // updates into the cache for round t+1 (skipped under the
+        // no-bypass ablation — undrafted work is then discarded).
+        for &k in undrafted.iter().filter(|_| self.opts.bypass) {
+            let update = updates
+                .iter()
+                .find(|(id, _, _)| *id == k)
+                .map(|(_, p, _)| p)
+                .expect("undrafted client without update");
+            self.cache[k].copy_from(update);
+        }
+
+        // --- Client state transitions. ---
+        let committed: Vec<usize> = sim.arrivals.iter().map(|a| a.client).collect();
+        let n_failed = sim.crashed.len() + sim.stragglers.len();
+        for &k in sim.crashed.iter().chain(&sim.stragglers) {
+            env.clients[k].committed_last = false;
+        }
+        let mut train_loss_sum = 0.0;
+        for (k, params, loss) in &updates {
+            let c = &mut env.clients[*k];
+            c.local_model.copy_from(params);
+            c.version = c.job.map(|j| j.base_version).unwrap_or(c.base_version) + 1;
+            c.committed_last = true;
+            c.job = None; // job complete
+            train_loss_sum += loss;
+        }
+        for k in 0..m {
+            env.clients[k].picked_last = picked.contains(&k);
+        }
+
+        let eval = if t % env.cfg.eval_every == 0 {
+            Some(env.trainer.evaluate(&self.global))
+        } else {
+            None
+        };
+
+        RoundRecord {
+            round: t,
+            round_len,
+            t_dist,
+            m_sync,
+            n_picked: picked.len(),
+            n_crashed: n_failed,
+            n_committed: committed.len(),
+            n_undrafted: undrafted.len(),
+            version_variance: env.version_variance(),
+            futility_wasted,
+            futility_total,
+            train_loss: if updates.is_empty() {
+                0.0
+            } else {
+                train_loss_sum / updates.len() as f64
+            },
+            eval,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::util::proptest::property;
+
+    fn tiny_env(crash: f64, c_fraction: f64, tau: usize) -> FedEnv {
+        let mut cfg = presets::preset("tiny").unwrap();
+        cfg.env.crash_prob = crash;
+        cfg.protocol.c_fraction = c_fraction;
+        cfg.protocol.tau = tau;
+        FedEnv::new(&cfg).unwrap()
+    }
+
+    #[test]
+    fn round_one_syncs_everyone() {
+        let mut env = tiny_env(0.0, 0.5, 2);
+        let mut safa = Safa::new(&env, env.init_global());
+        let rec = safa.run_round(1, &mut env);
+        // All clients start up-to-date -> all sync in round 1.
+        assert_eq!(rec.m_sync, env.m());
+        assert!(rec.t_dist > 0.0);
+    }
+
+    #[test]
+    fn no_crash_picks_exactly_quota() {
+        let mut env = tiny_env(0.0, 0.5, 2);
+        let quota = env.cfg.quota();
+        let mut safa = Safa::new(&env, env.init_global());
+        let rec = safa.run_round(1, &mut env);
+        assert_eq!(rec.n_picked, quota);
+        assert_eq!(rec.n_committed, env.m());
+        assert_eq!(rec.n_undrafted, env.m() - quota);
+        assert_eq!(rec.n_crashed, 0);
+    }
+
+    #[test]
+    fn all_crashed_leaves_global_unchanged_in_round_one() {
+        let mut env = tiny_env(1.0, 0.5, 2);
+        let g0 = env.init_global();
+        let mut safa = Safa::new(&env, g0.clone());
+        let rec = safa.run_round(1, &mut env);
+        assert_eq!(rec.n_committed, 0);
+        assert_eq!(rec.n_picked, 0);
+        // Cache entries all equal w(0) -> aggregation reproduces w(0).
+        assert!(safa.global().dist(&g0) < 1e-6);
+    }
+
+    #[test]
+    fn cfcfm_prioritizes_clients_missed_last_round() {
+        let mut env = tiny_env(0.0, 0.25, 3); // quota = 1 of 4
+        let mut safa = Safa::new(&env, env.init_global());
+        let r1 = safa.run_round(1, &mut env);
+        assert_eq!(r1.n_picked, 1);
+        let picked_first: Vec<usize> = env
+            .clients
+            .iter()
+            .filter(|c| c.picked_last)
+            .map(|c| c.id)
+            .collect();
+        assert_eq!(picked_first.len(), 1);
+        // Round 2: the round-1 pick must NOT be picked again while
+        // unpicked clients' updates are available.
+        let _r2 = safa.run_round(2, &mut env);
+        let picked_second: Vec<usize> = env
+            .clients
+            .iter()
+            .filter(|c| c.picked_last)
+            .map(|c| c.id)
+            .collect();
+        assert_eq!(picked_second.len(), 1);
+        assert_ne!(picked_first[0], picked_second[0]);
+    }
+
+    #[test]
+    fn deprecated_clients_forced_to_sync() {
+        let mut env = tiny_env(1.0, 0.5, 2); // everyone crashes forever
+        let mut safa = Safa::new(&env, env.init_global());
+        // Rounds 1, 2: clients' version stays 0; deprecated when
+        // version < t - tau, i.e. 0 < t - 2 -> from t = 3 onward.
+        let r1 = safa.run_round(1, &mut env);
+        assert_eq!(r1.m_sync, env.m()); // initial up-to-date sync
+        let r2 = safa.run_round(2, &mut env);
+        assert_eq!(r2.m_sync, 0); // tolerable now
+        let r3 = safa.run_round(3, &mut env);
+        assert_eq!(r3.m_sync, env.m()); // all deprecated -> forced sync
+        // After forced sync their version advances to t-1 = 2.
+        assert!(env.clients.iter().all(|c| c.version == 2));
+    }
+
+    #[test]
+    fn version_lag_never_exceeds_tau_after_distribution() {
+        property("safa version lag bounded", 20, |g| {
+            let crash = g.f64_range(0.0, 0.9);
+            let tau = g.usize_range(1, 4);
+            let mut cfg = presets::preset("tiny").unwrap();
+            cfg.env.crash_prob = crash;
+            cfg.protocol.tau = tau;
+            cfg.protocol.c_fraction = *g.choose(&[0.25, 0.5, 1.0]);
+            cfg.seed = g.u64();
+            let mut env = FedEnv::new(&cfg).unwrap();
+            let mut safa = Safa::new(&env, env.init_global());
+            for t in 1..=6 {
+                let _ = safa.run_round(t, &mut env);
+                // Post-round invariant: every client's version lag w.r.t.
+                // the new global version is at most tau + 1 (a client can
+                // add one round of lag by crashing right after the check).
+                for c in &env.clients {
+                    let lag = safa.global_version - c.version;
+                    assert!(
+                        lag <= tau as i64 + 1,
+                        "client {} lag {lag} > tau+1 (tau={tau}, t={t})",
+                        c.id
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn aggregation_is_convex_in_cache_entries() {
+        property("safa aggregate convex", 15, |g| {
+            let mut cfg = presets::preset("tiny").unwrap();
+            cfg.env.crash_prob = g.f64_range(0.0, 0.8);
+            cfg.seed = g.u64();
+            let mut env = FedEnv::new(&cfg).unwrap();
+            let mut safa = Safa::new(&env, env.init_global());
+            for t in 1..=3 {
+                let _ = safa.run_round(t, &mut env);
+                // Global must lie inside the coordinate-wise hull of the
+                // cache entries (weights sum to 1).
+                let g_vec = safa.global().as_slice();
+                for i in (0..g_vec.len()).step_by(7) {
+                    let lo = safa
+                        .cache()
+                        .iter()
+                        .map(|e| e.0[i])
+                        .fold(f32::MAX, f32::min);
+                    let hi = safa
+                        .cache()
+                        .iter()
+                        .map(|e| e.0[i])
+                        .fold(f32::MIN, f32::max);
+                    assert!(
+                        g_vec[i] >= lo - 1e-4 && g_vec[i] <= hi + 1e-4,
+                        "coord {i} out of hull at t={t}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn undrafted_updates_take_effect_next_round() {
+        // With quota 1 and no crashes, round 1 leaves m-1 undrafted
+        // updates in the bypass; their content must be in the cache
+        // before round 2's aggregation.
+        let mut env = tiny_env(0.0, 0.25, 3);
+        let mut safa = Safa::new(&env, env.init_global());
+        let _ = safa.run_round(1, &mut env);
+        // Each committed client's cache entry equals its local model
+        // (picked via Eq. 6, undrafted via Eq. 8).
+        for c in &env.clients {
+            assert!(
+                safa.cache()[c.id].dist(&c.local_model) < 1e-6,
+                "client {} cache entry diverges",
+                c.id
+            );
+        }
+    }
+
+    #[test]
+    fn eur_at_most_commit_fraction() {
+        property("safa eur bounds", 15, |g| {
+            let mut cfg = presets::preset("tiny").unwrap();
+            cfg.env.crash_prob = g.f64_range(0.0, 1.0);
+            cfg.protocol.c_fraction = *g.choose(&[0.25, 0.5, 0.75, 1.0]);
+            cfg.seed = g.u64();
+            let mut env = FedEnv::new(&cfg).unwrap();
+            let quota = env.cfg.quota();
+            let mut safa = Safa::new(&env, env.init_global());
+            for t in 1..=4 {
+                let rec = safa.run_round(t, &mut env);
+                assert!(rec.n_picked <= quota);
+                assert!(rec.n_picked <= rec.n_committed);
+                assert_eq!(
+                    rec.n_committed,
+                    rec.n_picked + rec.n_undrafted,
+                    "commit split"
+                );
+                assert_eq!(rec.n_committed + rec.n_crashed, env.m());
+            }
+        });
+    }
+}

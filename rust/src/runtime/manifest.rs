@@ -1,0 +1,205 @@
+//! The AOT artifact manifest: shapes, file names and the parameter
+//! initialization recipe, emitted by `python/compile/aot.py` so the Rust
+//! runtime never hard-codes Python-side layout decisions.
+
+use crate::error::{Result, SafaError};
+use crate::model::ParamVec;
+use crate::util::json::Json;
+use crate::util::rng::{Distribution, Normal, Pcg64};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One parameter block of the flat layout: `len` values initialized as
+/// N(0, std) (std = 0 → zeros, used for biases).
+#[derive(Debug, Clone, PartialEq)]
+pub struct InitBlock {
+    pub len: usize,
+    pub std: f64,
+}
+
+/// Artifact description for one task.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskArtifact {
+    pub name: String,
+    pub train_hlo: String,
+    pub eval_hlo: String,
+    pub param_dim: usize,
+    pub d: usize,
+    pub batch_size: usize,
+    pub max_batches: usize,
+    pub n_test: usize,
+    pub lr: f64,
+    pub init: Vec<InitBlock>,
+}
+
+impl TaskArtifact {
+    /// Initialize parameters per the manifest recipe (same family as the
+    /// native backend: Gaussian weights, zero biases).
+    pub fn init_params(&self, rng: &mut Pcg64) -> ParamVec {
+        let mut v = Vec::with_capacity(self.param_dim);
+        for block in &self.init {
+            if block.std == 0.0 {
+                v.extend(std::iter::repeat(0.0f32).take(block.len));
+            } else {
+                let dist = Normal::new(0.0, block.std);
+                v.extend((0..block.len).map(|_| dist.sample(rng) as f32));
+            }
+        }
+        assert_eq!(v.len(), self.param_dim, "init blocks disagree with param_dim");
+        ParamVec(v)
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub tasks: BTreeMap<String, TaskArtifact>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = Path::new(dir).join("manifest.json");
+        if !path.exists() {
+            return Err(SafaError::Artifact(format!(
+                "missing {}; run `make artifacts` first",
+                path.display()
+            )));
+        }
+        let text = std::fs::read_to_string(&path)?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let doc = Json::parse(text)?;
+        let tasks_json = doc
+            .get("tasks")
+            .ok_or_else(|| SafaError::Artifact("manifest missing 'tasks'".into()))?;
+        let obj = match tasks_json {
+            Json::Obj(m) => m,
+            _ => return Err(SafaError::Artifact("'tasks' is not an object".into())),
+        };
+        let mut tasks = BTreeMap::new();
+        for (name, t) in obj {
+            let get_num = |key: &str| -> Result<usize> {
+                t.get(key)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| SafaError::Artifact(format!("task {name}: missing '{key}'")))
+            };
+            let get_str = |key: &str| -> Result<String> {
+                t.get(key)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| SafaError::Artifact(format!("task {name}: missing '{key}'")))
+            };
+            let init_json = t
+                .get("init")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| SafaError::Artifact(format!("task {name}: missing 'init'")))?;
+            let mut init = Vec::new();
+            for b in init_json {
+                init.push(InitBlock {
+                    len: b
+                        .get("len")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| SafaError::Artifact("init block missing len".into()))?,
+                    std: b
+                        .get("std")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| SafaError::Artifact("init block missing std".into()))?,
+                });
+            }
+            let artifact = TaskArtifact {
+                name: name.clone(),
+                train_hlo: get_str("train_hlo")?,
+                eval_hlo: get_str("eval_hlo")?,
+                param_dim: get_num("param_dim")?,
+                d: get_num("d")?,
+                batch_size: get_num("batch_size")?,
+                max_batches: get_num("max_batches")?,
+                n_test: get_num("n_test")?,
+                lr: t
+                    .get("lr")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| SafaError::Artifact(format!("task {name}: missing 'lr'")))?,
+                init,
+            };
+            let total: usize = artifact.init.iter().map(|b| b.len).sum();
+            if total != artifact.param_dim {
+                return Err(SafaError::Artifact(format!(
+                    "task {name}: init blocks sum to {total} != param_dim {}",
+                    artifact.param_dim
+                )));
+            }
+            tasks.insert(name.clone(), artifact);
+        }
+        Ok(Manifest { tasks })
+    }
+
+    pub fn task(&self, name: &str) -> Result<&TaskArtifact> {
+        self.tasks.get(name).ok_or_else(|| {
+            SafaError::Artifact(format!(
+                "task '{name}' not in manifest (have: {:?}); rebuild artifacts",
+                self.tasks.keys().collect::<Vec<_>>()
+            ))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "tasks": {
+        "regression": {
+          "train_hlo": "regression_train.hlo.txt",
+          "eval_hlo": "regression_eval.hlo.txt",
+          "param_dim": 14,
+          "d": 13,
+          "batch_size": 5,
+          "max_batches": 32,
+          "n_test": 100,
+          "lr": 0.0001,
+          "init": [{"len": 13, "std": 0.01}, {"len": 1, "std": 0}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let t = m.task("regression").unwrap();
+        assert_eq!(t.param_dim, 14);
+        assert_eq!(t.max_batches, 32);
+        assert_eq!(t.init.len(), 2);
+        assert!((t.lr - 1e-4).abs() < 1e-12);
+        assert!(m.task("cnn").is_err());
+    }
+
+    #[test]
+    fn init_params_respects_blocks() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let t = m.task("regression").unwrap();
+        let mut rng = Pcg64::new(1);
+        let p = t.init_params(&mut rng);
+        assert_eq!(p.dim(), 14);
+        // Bias block (last value) must be exactly zero.
+        assert_eq!(p.0[13], 0.0);
+        // Weight block is random (not all zero).
+        assert!(p.0[..13].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn rejects_inconsistent_init() {
+        let bad = SAMPLE.replace("\"param_dim\": 14", "\"param_dim\": 15");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_a_clear_error() {
+        let err = Manifest::load("/nonexistent-dir").unwrap_err();
+        assert!(format!("{err}").contains("make artifacts"));
+    }
+}

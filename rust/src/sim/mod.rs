@@ -1,0 +1,303 @@
+//! Discrete-event round simulation.
+//!
+//! Given the set of participating clients for a round (who trains, and
+//! who must download the global model first), this module draws crashes,
+//! computes per-client finish times (Eqs. 17–18) and produces the ordered
+//! arrival sequence the protocols consume. Virtual time only — nothing
+//! here blocks on wall-clock.
+
+use crate::client::ClientState;
+use crate::config::ExperimentConfig;
+use crate::net::NetworkModel;
+use crate::util::rng::{Bernoulli, Pcg64};
+
+/// One committed update arriving at the server.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Arrival {
+    pub client: usize,
+    /// Virtual time (seconds from round start, after T_dist) at which the
+    /// upload completes.
+    pub time: f64,
+}
+
+/// Why a participant failed to commit this round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailReason {
+    /// Drew the per-round crash (opt-out / drop-offline) event.
+    Crash,
+    /// Would finish after the round deadline T_lim — the paper reckons
+    /// such clients crashed too (§III-B).
+    Overtime,
+}
+
+/// Outcome of simulating one round's local-training phase.
+#[derive(Debug, Clone)]
+pub struct RoundSim {
+    /// Committed updates ordered by arrival time.
+    pub arrivals: Vec<Arrival>,
+    /// (client, reason, partial-progress) for each failed participant.
+    /// Partial progress is the fraction of the round's training work done
+    /// before the failure (uniform at crash; capped at deadline fraction
+    /// for overtime clients).
+    pub failures: Vec<(usize, FailReason, f64)>,
+}
+
+impl RoundSim {
+    pub fn committed(&self) -> impl Iterator<Item = usize> + '_ {
+        self.arrivals.iter().map(|a| a.client)
+    }
+
+    pub fn crashed_set(&self) -> Vec<usize> {
+        self.failures.iter().map(|&(k, _, _)| k).collect()
+    }
+
+    /// Time of the last arrival (0.0 when nothing arrived).
+    pub fn last_arrival(&self) -> f64 {
+        self.arrivals.last().map(|a| a.time).unwrap_or(0.0)
+    }
+}
+
+/// Simulate the training phase of round `t`.
+///
+/// * `participants` — client ids that train this round.
+/// * `synced` — per participant, whether it downloaded the global model
+///   at round start (adds T_down to its finish time).
+/// * Crash draws come from a per-(round, client) RNG stream derived from
+///   `round_rng`, so the crash pattern is identical across protocols run
+///   with the same experiment seed.
+pub fn simulate_round(
+    cfg: &ExperimentConfig,
+    net: &NetworkModel,
+    clients: &[ClientState],
+    participants: &[usize],
+    synced: &[bool],
+    round_rng: &Pcg64,
+) -> RoundSim {
+    assert_eq!(participants.len(), synced.len());
+    let crash = Bernoulli::new(cfg.env.crash_prob);
+    let mut arrivals = Vec::with_capacity(participants.len());
+    let mut failures = Vec::new();
+    for (&k, &was_synced) in participants.iter().zip(synced) {
+        let mut crng = round_rng.split(k as u64);
+        let c = &clients[k];
+        let t_train = c.t_train(cfg.train.epochs);
+        let finish =
+            if was_synced { net.t_down() } else { 0.0 } + t_train + net.t_up();
+        if crash.draw(&mut crng) {
+            // Crash strikes uniformly through the round's work.
+            let partial = crng.next_f64();
+            failures.push((k, FailReason::Crash, partial));
+        } else if finish > cfg.train.t_lim {
+            // Progress made by the deadline, as a fraction of the total.
+            let partial = (cfg.train.t_lim / finish).clamp(0.0, 1.0);
+            failures.push((k, FailReason::Overtime, partial));
+        } else {
+            arrivals.push(Arrival {
+                client: k,
+                time: finish,
+            });
+        }
+    }
+    arrivals.sort_by(|a, b| a.time.partial_cmp(&b.time).unwrap());
+    RoundSim { arrivals, failures }
+}
+
+/// Outcome of simulating one round under SAFA's continuation semantics.
+#[derive(Debug, Clone)]
+pub struct ContinuationSim {
+    /// Jobs completing this round (remaining ≤ T_lim), by arrival time.
+    pub arrivals: Vec<Arrival>,
+    /// Clients offline this round (crash draw) — jobs paused, no loss.
+    pub crashed: Vec<usize>,
+    /// Alive clients whose jobs exceed even T_lim — they keep running
+    /// into the next round (the paper's stragglers).
+    pub stragglers: Vec<usize>,
+}
+
+impl ContinuationSim {
+    pub fn last_arrival(&self) -> f64 {
+        self.arrivals.last().map(|a| a.time).unwrap_or(0.0)
+    }
+}
+
+/// Simulate one SAFA round over in-flight jobs.
+///
+/// `jobs[i]` is the remaining work (seconds) for `participants[i]`'s
+/// current job. A crashed client pauses (no progress, no commit); an
+/// alive client whose remaining fits inside T_lim arrives at that time;
+/// anything longer is a straggler that continues next round. Crash draws
+/// use the same per-(round, client) streams as [`simulate_round`], so
+/// SAFA and the baselines face identical crash patterns per seed.
+pub fn simulate_continuation(
+    cfg: &ExperimentConfig,
+    participants: &[usize],
+    jobs: &[f64],
+    round_rng: &Pcg64,
+) -> ContinuationSim {
+    assert_eq!(participants.len(), jobs.len());
+    let crash = Bernoulli::new(cfg.env.crash_prob);
+    let mut arrivals = Vec::new();
+    let mut crashed = Vec::new();
+    let mut stragglers = Vec::new();
+    for (&k, &remaining) in participants.iter().zip(jobs) {
+        let mut crng = round_rng.split(k as u64);
+        if crash.draw(&mut crng) {
+            crashed.push(k);
+        } else if remaining <= cfg.train.t_lim {
+            arrivals.push(Arrival {
+                client: k,
+                time: remaining,
+            });
+        } else {
+            stragglers.push(k);
+        }
+    }
+    arrivals.sort_by(|a, b| a.time.partial_cmp(&b.time).unwrap());
+    ContinuationSim {
+        arrivals,
+        crashed,
+        stragglers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::data::{partition_gaussian, synth, FedData};
+    use crate::model::ParamVec;
+
+    fn setup(crash: f64) -> (ExperimentConfig, Vec<ClientState>, NetworkModel) {
+        let mut cfg = presets::preset("tiny").unwrap();
+        cfg.env.crash_prob = crash;
+        let (train, test) = synth::generate(cfg.task.kind, cfg.task.n, cfg.task.n_test, 1);
+        let mut rng = Pcg64::new(1);
+        let partitions = partition_gaussian(train.n, cfg.env.m, 0.3, &mut rng);
+        let data = FedData {
+            train,
+            test,
+            partitions,
+        };
+        let clients =
+            crate::client::build_clients(&cfg, &data, &ParamVec::zeros(1), &mut rng);
+        let net = NetworkModel::new(&cfg.env);
+        (cfg, clients, net)
+    }
+
+    #[test]
+    fn no_crash_all_fast_clients_arrive_sorted() {
+        let (mut cfg, mut clients, net) = setup(0.0);
+        cfg.train.t_lim = 1e9;
+        for c in clients.iter_mut() {
+            c.perf = 1.0 + c.id as f64; // deterministic distinct speeds
+            c.batches_per_epoch = 10; // equalize work so speed decides
+        }
+        let parts: Vec<usize> = (0..clients.len()).collect();
+        let synced = vec![true; parts.len()];
+        let sim = simulate_round(&cfg, &net, &clients, &parts, &synced, &Pcg64::new(2));
+        assert_eq!(sim.arrivals.len(), parts.len());
+        assert!(sim.failures.is_empty());
+        for w in sim.arrivals.windows(2) {
+            assert!(w[0].time <= w[1].time);
+        }
+        // Fastest client (highest perf) arrives first.
+        assert_eq!(sim.arrivals[0].client, clients.len() - 1);
+    }
+
+    #[test]
+    fn crash_prob_one_fails_everyone() {
+        let (cfg, clients, net) = setup(1.0);
+        let parts: Vec<usize> = (0..clients.len()).collect();
+        let synced = vec![false; parts.len()];
+        let sim = simulate_round(&cfg, &net, &clients, &parts, &synced, &Pcg64::new(3));
+        assert!(sim.arrivals.is_empty());
+        assert_eq!(sim.failures.len(), parts.len());
+        for &(_, reason, partial) in &sim.failures {
+            assert_eq!(reason, FailReason::Crash);
+            assert!((0.0..1.0).contains(&partial));
+        }
+    }
+
+    #[test]
+    fn slow_clients_go_overtime() {
+        let (mut cfg, mut clients, net) = setup(0.0);
+        cfg.train.t_lim = 10.0; // everything times out (t_up alone is 57 s)
+        for c in clients.iter_mut() {
+            c.perf = 1.0;
+        }
+        let parts = vec![0usize];
+        let sim = simulate_round(&cfg, &net, &clients, &parts, &[false], &Pcg64::new(4));
+        assert!(sim.arrivals.is_empty());
+        assert_eq!(sim.failures[0].1, FailReason::Overtime);
+        assert!(sim.failures[0].2 < 1.0);
+    }
+
+    #[test]
+    fn sync_adds_download_time() {
+        let (mut cfg, mut clients, net) = setup(0.0);
+        cfg.train.t_lim = 1e9;
+        clients[0].perf = 1.0;
+        let a = simulate_round(&cfg, &net, &clients, &[0], &[false], &Pcg64::new(5));
+        let b = simulate_round(&cfg, &net, &clients, &[0], &[true], &Pcg64::new(5));
+        assert!((b.arrivals[0].time - a.arrivals[0].time - net.t_down()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn continuation_partitions_participants() {
+        let (mut cfg, _clients, _net) = setup(0.0);
+        cfg.train.t_lim = 100.0;
+        let parts = vec![0usize, 1, 2];
+        let jobs = vec![50.0, 150.0, 99.9];
+        let sim = simulate_continuation(&cfg, &parts, &jobs, &Pcg64::new(8));
+        assert_eq!(sim.arrivals.len(), 2);
+        assert_eq!(sim.arrivals[0].client, 0);
+        assert_eq!(sim.arrivals[1].client, 2);
+        assert_eq!(sim.stragglers, vec![1]);
+        assert!(sim.crashed.is_empty());
+        assert!((sim.last_arrival() - 99.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn continuation_crash_pauses_everyone() {
+        let (cfg, _clients, _net) = setup(1.0);
+        let parts = vec![0usize, 1];
+        let jobs = vec![10.0, 20.0];
+        let sim = simulate_continuation(&cfg, &parts, &jobs, &Pcg64::new(9));
+        assert!(sim.arrivals.is_empty());
+        assert_eq!(sim.crashed, vec![0, 1]);
+        assert!(sim.stragglers.is_empty());
+    }
+
+    #[test]
+    fn continuation_and_round_share_crash_pattern() {
+        // Same (round_rng, client) streams drive both simulators.
+        let (cfg, clients, net) = setup(0.5);
+        let parts: Vec<usize> = (0..clients.len()).collect();
+        let rr = Pcg64::new(10);
+        let a = simulate_round(&cfg, &net, &clients, &parts, &vec![false; parts.len()], &rr);
+        let b = simulate_continuation(&cfg, &parts, &vec![1.0; parts.len()], &rr);
+        let crashed_a: Vec<usize> = a
+            .failures
+            .iter()
+            .filter(|&&(_, r, _)| r == FailReason::Crash)
+            .map(|&(k, _, _)| k)
+            .collect();
+        assert_eq!(crashed_a, b.crashed);
+    }
+
+    #[test]
+    fn crash_pattern_is_per_round_stream() {
+        let (cfg, clients, net) = setup(0.5);
+        let parts: Vec<usize> = (0..clients.len()).collect();
+        let synced = vec![false; parts.len()];
+        let r1 = simulate_round(&cfg, &net, &clients, &parts, &synced, &Pcg64::new(6));
+        let r1b = simulate_round(&cfg, &net, &clients, &parts, &synced, &Pcg64::new(6));
+        let r2 = simulate_round(&cfg, &net, &clients, &parts, &synced, &Pcg64::new(7));
+        assert_eq!(r1.crashed_set(), r1b.crashed_set());
+        // Different round stream -> (almost surely) different pattern.
+        assert_ne!(
+            (r1.crashed_set(), r1.arrivals.len()),
+            (r2.crashed_set(), r2.arrivals.len())
+        );
+    }
+}

@@ -1,0 +1,153 @@
+//! Hand-rolled CLI argument parser (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and subcommands. The launcher in `main.rs` defines its commands on top
+//! of this.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parsed arguments: options (last occurrence wins), flags and positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "CLI error: {}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse a raw argument list. `known_flags` lists long options that do
+    /// NOT take a value (everything else with `--` does).
+    pub fn parse<I, S>(argv: I, known_flags: &[&str]) -> Result<Args, CliError>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().map(Into::into).peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body.is_empty() {
+                    // "--" terminates option parsing.
+                    args.positional.extend(iter);
+                    break;
+                }
+                if let Some(eq) = body.find('=') {
+                    args.options
+                        .insert(body[..eq].to_string(), body[eq + 1..].to_string());
+                } else if known_flags.contains(&body) {
+                    args.flags.push(body.to_string());
+                } else {
+                    let val = iter
+                        .next()
+                        .ok_or_else(|| CliError(format!("--{body} expects a value")))?;
+                    args.options.insert(body.to_string(), val);
+                }
+            } else {
+                args.positional.push(arg);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name}: cannot parse '{s}'"))),
+        }
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError> {
+        Ok(self.get_parsed(name)?.unwrap_or(default))
+    }
+
+    /// Parse a comma-separated list option, e.g. `--cr 0.1,0.3`.
+    pub fn get_list<T: std::str::FromStr>(&self, name: &str) -> Result<Option<Vec<T>>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .split(',')
+                .map(|part| {
+                    part.trim()
+                        .parse::<T>()
+                        .map_err(|_| CliError(format!("--{name}: cannot parse '{part}'")))
+                })
+                .collect::<Result<Vec<T>, _>>()
+                .map(Some),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_mixed_arguments() {
+        let args = Args::parse(
+            vec!["run", "--task", "task1", "--tau=5", "--verbose", "extra"],
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(args.positional, vec!["run", "extra"]);
+        assert_eq!(args.get("task"), Some("task1"));
+        assert_eq!(args.get("tau"), Some("5"));
+        assert!(args.has_flag("verbose"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(vec!["--task"], &[]).is_err());
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let args = Args::parse(vec!["--a", "1", "--", "--b", "2"], &[]).unwrap();
+        assert_eq!(args.get("a"), Some("1"));
+        assert_eq!(args.positional, vec!["--b", "2"]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let args = Args::parse(vec!["--n", "42", "--f", "0.5"], &[]).unwrap();
+        assert_eq!(args.get_or("n", 0usize).unwrap(), 42);
+        assert_eq!(args.get_or("f", 0.0f64).unwrap(), 0.5);
+        assert_eq!(args.get_or("missing", 7i32).unwrap(), 7);
+        assert!(args.get_parsed::<usize>("f").is_err());
+    }
+
+    #[test]
+    fn list_option() {
+        let args = Args::parse(vec!["--cr", "0.1,0.3, 0.5"], &[]).unwrap();
+        let crs: Vec<f64> = args.get_list("cr").unwrap().unwrap();
+        assert_eq!(crs, vec![0.1, 0.3, 0.5]);
+    }
+
+    #[test]
+    fn last_occurrence_wins() {
+        let args = Args::parse(vec!["--x", "1", "--x", "2"], &[]).unwrap();
+        assert_eq!(args.get("x"), Some("2"));
+    }
+}

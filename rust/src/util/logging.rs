@@ -1,0 +1,70 @@
+//! Tiny logger backend for the `log` facade (no `env_logger` offline).
+//!
+//! Level is taken from `SAFA_LOG` (error|warn|info|debug|trace), default
+//! `info`. Output goes to stderr with a monotonic-ish timestamp relative
+//! to process start, which is what you want when comparing against the
+//! simulator's *virtual* clock printed by the coordinator.
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+struct SimpleLogger {
+    start: Instant,
+}
+
+impl log::Log for SimpleLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{t:10.3}s {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceLock<SimpleLogger> = OnceLock::new();
+
+/// Initialize the global logger. Safe to call multiple times.
+pub fn init() {
+    let logger = LOGGER.get_or_init(|| SimpleLogger {
+        start: Instant::now(),
+    });
+    if log::set_logger(logger).is_ok() {
+        log::set_max_level(level_from_env());
+    }
+}
+
+fn level_from_env() -> LevelFilter {
+    match std::env::var("SAFA_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        Ok("off") => LevelFilter::Off,
+        _ => LevelFilter::Info,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke");
+    }
+}

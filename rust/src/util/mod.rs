@@ -1,0 +1,11 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! RNG + distributions, JSON/TOML codecs, stats, logging, CLI parsing and
+//! a property-testing mini-framework.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod toml;

@@ -1,0 +1,154 @@
+//! Minimal property-based testing framework (no `proptest` crate offline).
+//!
+//! Usage (`no_run`: doctest binaries don't inherit the xla rpath in this
+//! image; the same snippet executes in the unit tests below):
+//! ```no_run
+//! use safa::util::proptest::{property, Gen};
+//! property("sum is commutative", 200, |g: &mut Gen| {
+//!     let a = g.f64_range(-1e3, 1e3);
+//!     let b = g.f64_range(-1e3, 1e3);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! Each case gets a fresh deterministic RNG derived from the property name
+//! and case index, so failures are reproducible: the panic message reports
+//! the case index, and `Gen::from_case(name, idx)` replays it exactly.
+//! There is no shrinking — cases are kept small instead, which in practice
+//! localizes failures well for the coordinator invariants we test.
+
+use crate::util::rng::{Distribution, Normal, Pcg64};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Case generator handed to property bodies.
+pub struct Gen {
+    rng: Pcg64,
+}
+
+impl Gen {
+    /// Deterministic generator for case `idx` of property `name`.
+    pub fn from_case(name: &str, idx: u64) -> Gen {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in name.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3); // FNV-1a
+        }
+        Gen {
+            rng: Pcg64::with_stream(h, idx),
+        }
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn usize_range(&mut self, lo: usize, hi_inclusive: usize) -> usize {
+        assert!(hi_inclusive >= lo);
+        lo + self.rng.index(hi_inclusive - lo + 1)
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.next_f64()
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        Normal::new(mean, std).sample(&mut self.rng)
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_range(lo, hi)).collect()
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len)
+            .map(|_| lo + (hi - lo) * self.rng.next_f32())
+            .collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.index(xs.len())]
+    }
+
+    /// A random subset of [0, n), each element included with prob p.
+    pub fn subset(&mut self, n: usize, p: f64) -> Vec<usize> {
+        (0..n).filter(|_| self.rng.next_f64() < p).collect()
+    }
+}
+
+/// Run `cases` random cases of a property; panic with the failing case
+/// index on the first failure.
+pub fn property<F: FnMut(&mut Gen)>(name: &str, cases: u64, mut body: F) {
+    for idx in 0..cases {
+        let mut g = Gen::from_case(name, idx);
+        let result = catch_unwind(AssertUnwindSafe(|| body(&mut g)));
+        if let Err(panic) = result {
+            let msg = panic
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| panic.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed at case {idx}/{cases}: {msg}\n\
+                 replay with Gen::from_case({name:?}, {idx})"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        property("trivially true", 50, |_g| {
+            count += 1;
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at case")]
+    fn failing_property_reports_case() {
+        property("always false", 10, |_g| {
+            assert!(false, "intentional");
+        });
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut g1 = Gen::from_case("p", 3);
+        let mut g2 = Gen::from_case("p", 3);
+        assert_eq!(g1.u64(), g2.u64());
+        let mut g3 = Gen::from_case("p", 4);
+        assert_ne!(Gen::from_case("p", 3).u64(), g3.u64());
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        property("bounds", 100, |g| {
+            let x = g.usize_range(3, 9);
+            assert!((3..=9).contains(&x));
+            let f = g.f64_range(-2.0, 2.0);
+            assert!((-2.0..2.0).contains(&f));
+            let v = g.vec_f64(5, 0.0, 1.0);
+            assert_eq!(v.len(), 5);
+            let s = g.subset(10, 0.5);
+            assert!(s.iter().all(|&i| i < 10));
+        });
+    }
+}

@@ -1,0 +1,355 @@
+//! Deterministic, splittable pseudo-random number generation.
+//!
+//! The offline build environment has no `rand` crate, so this module
+//! implements everything the simulator needs from scratch:
+//!
+//! * [`Pcg64`] — a PCG-XSL-RR 128/64 generator (O'Neill 2014). Fast, small
+//!   state, excellent statistical quality for simulation purposes.
+//! * Splitting: [`Pcg64::split`] derives an independent child stream via a
+//!   SplitMix64 hash of the parent state and a label, so every client /
+//!   round / subsystem gets its own stream and experiments are bit-
+//!   reproducible regardless of iteration order.
+//! * Distributions: [`Uniform`], [`Normal`] (Box–Muller), [`Exponential`]
+//!   (inverse CDF) and [`Bernoulli`], which are exactly the ones the SAFA
+//!   paper's environment model draws from (partition sizes ~ N(mu, 0.3mu),
+//!   client speeds ~ Exp(1), crashes ~ Bernoulli(cr)).
+
+/// PCG-XSL-RR 128/64: 128-bit LCG state, 64-bit xorshift-rotate output.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+/// SplitMix64 finalizer — used for seeding and stream derivation.
+#[inline]
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl Pcg64 {
+    /// Create a generator from a 64-bit seed (stream 0).
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0)
+    }
+
+    /// Create a generator from a seed and a stream id. Different stream
+    /// ids yield statistically independent sequences for the same seed.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let s0 = splitmix64(seed);
+        let s1 = splitmix64(s0 ^ 0xdead_beef_cafe_f00d);
+        let t0 = splitmix64(stream ^ 0x5851_f42d_4c95_7f2d);
+        let t1 = splitmix64(t0 ^ seed);
+        let state = ((s0 as u128) << 64) | s1 as u128;
+        // The increment must be odd for the LCG to be full-period.
+        let inc = ((((t0 as u128) << 64) | t1 as u128) << 1) | 1;
+        let mut rng = Pcg64 { state, inc };
+        // Warm up so that near-zero states decorrelate.
+        rng.next_u64();
+        rng.next_u64();
+        rng
+    }
+
+    /// Derive an independent child generator labelled by `label`.
+    ///
+    /// Children with distinct labels (e.g. client ids, round indices) are
+    /// independent of each other and of the parent's future output.
+    pub fn split(&self, label: u64) -> Pcg64 {
+        let hi = splitmix64((self.state >> 64) as u64 ^ label);
+        let lo = splitmix64(self.state as u64 ^ label.rotate_left(32));
+        Pcg64::with_stream(hi ^ lo, label.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        // XSL-RR output function.
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform f64 in [0, 1) with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "next_below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize index in [0, n).
+    #[inline]
+    pub fn index(&mut self, n: usize) -> usize {
+        self.next_below(n as u64) as usize
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (k <= n), uniformly.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_indices: k > n");
+        let mut idx: Vec<usize> = (0..n).collect();
+        // Partial Fisher–Yates: only the first k positions are needed.
+        for i in 0..k {
+            let j = i + self.index(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+/// A sampleable distribution over f64.
+pub trait Distribution {
+    fn sample(&self, rng: &mut Pcg64) -> f64;
+}
+
+/// Uniform distribution on [lo, hi).
+#[derive(Debug, Clone, Copy)]
+pub struct Uniform {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Uniform {
+    pub fn new(lo: f64, hi: f64) -> Self {
+        assert!(hi >= lo, "Uniform: hi < lo");
+        Uniform { lo, hi }
+    }
+}
+
+impl Distribution for Uniform {
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        self.lo + (self.hi - self.lo) * rng.next_f64()
+    }
+}
+
+/// Gaussian via Box–Muller (fresh pair each call; the spare is discarded
+/// to keep the sampler stateless and splitting-safe).
+#[derive(Debug, Clone, Copy)]
+pub struct Normal {
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl Normal {
+    pub fn new(mean: f64, std: f64) -> Self {
+        assert!(std >= 0.0, "Normal: negative std");
+        Normal { mean, std }
+    }
+}
+
+impl Distribution for Normal {
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        // Box–Muller; u1 in (0,1] to avoid ln(0).
+        let u1 = 1.0 - rng.next_f64();
+        let u2 = rng.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        self.mean + self.std * r * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+}
+
+/// Exponential with rate `lambda` (mean 1/lambda), via inverse CDF.
+#[derive(Debug, Clone, Copy)]
+pub struct Exponential {
+    pub lambda: f64,
+}
+
+impl Exponential {
+    pub fn new(lambda: f64) -> Self {
+        assert!(lambda > 0.0, "Exponential: lambda <= 0");
+        Exponential { lambda }
+    }
+}
+
+impl Distribution for Exponential {
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        let u = 1.0 - rng.next_f64(); // in (0, 1]
+        -u.ln() / self.lambda
+    }
+}
+
+/// Bernoulli trial.
+#[derive(Debug, Clone, Copy)]
+pub struct Bernoulli {
+    pub p: f64,
+}
+
+impl Bernoulli {
+    pub fn new(p: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p), "Bernoulli: p outside [0,1]");
+        Bernoulli { p }
+    }
+
+    #[inline]
+    pub fn draw(&self, rng: &mut Pcg64) -> bool {
+        rng.next_f64() < self.p
+    }
+}
+
+impl Distribution for Bernoulli {
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        if self.draw(rng) {
+            1.0
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn split_streams_are_independent_of_parent() {
+        let parent = Pcg64::new(7);
+        let mut c1 = parent.split(1);
+        let mut c2 = parent.split(2);
+        let mut c1b = parent.split(1);
+        // Same label -> same stream; different label -> different stream.
+        assert_eq!(c1.next_u64(), c1b.next_u64());
+        let mut c1x = parent.split(1);
+        c1x.next_u64();
+        assert_ne!(c1x.next_u64(), c2.next_u64());
+    }
+
+    #[test]
+    fn uniform_f64_in_unit_interval() {
+        let mut rng = Pcg64::new(9);
+        for _ in 0..10_000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn next_below_unbiased_smoke() {
+        let mut rng = Pcg64::new(11);
+        let mut counts = [0usize; 5];
+        let n = 50_000;
+        for _ in 0..n {
+            counts[rng.next_below(5) as usize] += 1;
+        }
+        for &c in &counts {
+            let p = c as f64 / n as f64;
+            assert!((p - 0.2).abs() < 0.01, "bucket p={p}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(13);
+        let d = Normal::new(3.0, 2.0);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| d.sample(&mut rng)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!((mean - 3.0).abs() < 0.05, "mean={mean}");
+        assert!((var - 4.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn exponential_moments() {
+        let mut rng = Pcg64::new(17);
+        let d = Exponential::new(1.0);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| d.sample(&mut rng)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.02, "mean={mean}");
+        assert!(xs.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut rng = Pcg64::new(19);
+        let d = Bernoulli::new(0.3);
+        let n = 100_000;
+        let hits = (0..n).filter(|_| d.draw(&mut rng)).count();
+        let p = hits as f64 / n as f64;
+        assert!((p - 0.3).abs() < 0.01, "p={p}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(23);
+        let mut xs: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut rng = Pcg64::new(29);
+        for _ in 0..100 {
+            let ks = rng.sample_indices(50, 20);
+            assert_eq!(ks.len(), 20);
+            let mut s = ks.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 20);
+            assert!(ks.iter().all(|&i| i < 50));
+        }
+    }
+
+    #[test]
+    fn sample_indices_full_set() {
+        let mut rng = Pcg64::new(31);
+        let mut ks = rng.sample_indices(10, 10);
+        ks.sort_unstable();
+        assert_eq!(ks, (0..10).collect::<Vec<_>>());
+    }
+}

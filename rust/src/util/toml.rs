@@ -1,0 +1,323 @@
+//! Minimal TOML-subset parser for experiment config files.
+//!
+//! Supports the subset actually used by SAFA configs:
+//! `[section]` headers, `key = value` pairs with string / integer / float /
+//! boolean / homogeneous-array values, `#` comments, and bare or quoted
+//! keys. Nested tables are flattened to dotted keys
+//! (`[protocol]` + `tau = 5` → `protocol.tau`).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A TOML scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: flattened dotted-key → value map.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(TomlValue::as_str)
+    }
+
+    pub fn get_i64(&self, key: &str) -> Option<i64> {
+        self.get(key).and_then(TomlValue::as_i64)
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(TomlValue::as_f64)
+    }
+
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(TomlValue::as_bool)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "TOML error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc = TomlDoc::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or(TomlError {
+                line: lineno + 1,
+                msg: "unterminated section header".into(),
+            })?;
+            let name = name.trim();
+            if name.is_empty() || name.contains('[') {
+                return Err(TomlError {
+                    line: lineno + 1,
+                    msg: "bad section name".into(),
+                });
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line.find('=').ok_or(TomlError {
+            line: lineno + 1,
+            msg: "expected 'key = value'".into(),
+        })?;
+        let key_raw = line[..eq].trim();
+        let key = unquote_key(key_raw).ok_or(TomlError {
+            line: lineno + 1,
+            msg: format!("bad key '{key_raw}'"),
+        })?;
+        let val_text = line[eq + 1..].trim();
+        let val = parse_value(val_text).map_err(|msg| TomlError {
+            line: lineno + 1,
+            msg,
+        })?;
+        let full_key = if section.is_empty() {
+            key
+        } else {
+            format!("{section}.{key}")
+        };
+        doc.entries.insert(full_key, val);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote_key(key: &str) -> Option<String> {
+    if let Some(inner) = key.strip_prefix('"').and_then(|k| k.strip_suffix('"')) {
+        return Some(inner.to_string());
+    }
+    if !key.is_empty()
+        && key
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.')
+    {
+        Some(key.to_string())
+    } else {
+        None
+    }
+}
+
+fn parse_value(text: &str) -> Result<TomlValue, String> {
+    let text = text.trim();
+    if text.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = text.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    _ => return Err("bad escape in string".into()),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(TomlValue::Str(out));
+    }
+    if text == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if text == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(parse_value(part)?);
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    // Number: integer if it parses as i64 and has no '.', 'e', 'E'.
+    let clean = text.replace('_', "");
+    if !clean.contains('.') && !clean.contains('e') && !clean.contains('E') {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    clean
+        .parse::<f64>()
+        .map(TomlValue::Float)
+        .map_err(|_| format!("cannot parse value '{text}'"))
+}
+
+/// Split on commas that are not inside nested brackets or strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_document() {
+        let doc = parse(
+            r#"
+            # experiment config
+            name = "task1"
+            seed = 42
+
+            [protocol]
+            kind = "safa"
+            tau = 5
+            c_fraction = 0.3
+            verbose = false
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("name"), Some("task1"));
+        assert_eq!(doc.get_i64("seed"), Some(42));
+        assert_eq!(doc.get_str("protocol.kind"), Some("safa"));
+        assert_eq!(doc.get_i64("protocol.tau"), Some(5));
+        assert_eq!(doc.get_f64("protocol.c_fraction"), Some(0.3));
+        assert_eq!(doc.get_bool("protocol.verbose"), Some(false));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = parse("xs = [0.1, 0.3, 0.5]\nnames = [\"a\", \"b\"]").unwrap();
+        let xs = doc.get("xs").unwrap().as_array().unwrap();
+        assert_eq!(xs.len(), 3);
+        assert_eq!(xs[1].as_f64(), Some(0.3));
+        let names = doc.get("names").unwrap().as_array().unwrap();
+        assert_eq!(names[0].as_str(), Some("a"));
+    }
+
+    #[test]
+    fn comments_and_hash_in_strings() {
+        let doc = parse("s = \"a#b\" # trailing").unwrap();
+        assert_eq!(doc.get_str("s"), Some("a#b"));
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = parse("a = 3\nb = 3.0\nc = 1e-4\nd = 1_000").unwrap();
+        assert_eq!(doc.get("a"), Some(&TomlValue::Int(3)));
+        assert_eq!(doc.get("b"), Some(&TomlValue::Float(3.0)));
+        assert!((doc.get_f64("c").unwrap() - 1e-4).abs() < 1e-12);
+        assert_eq!(doc.get_i64("d"), Some(1000));
+        // Int coerces to f64 on demand.
+        assert_eq!(doc.get_f64("a"), Some(3.0));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = parse("[unterminated").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn string_escapes() {
+        let doc = parse(r#"s = "line1\nline2\t\"q\"""#).unwrap();
+        assert_eq!(doc.get_str("s"), Some("line1\nline2\t\"q\""));
+    }
+}

@@ -1,0 +1,171 @@
+//! End-to-end integration tests over the native backend: full federated
+//! runs per protocol per task, cross-protocol metric relationships, and
+//! the paper's qualitative claims at reduced scale.
+
+use safa::config::{presets, Backend, ProtocolKind};
+use safa::coordinator::run_experiment;
+use safa::util::proptest::property;
+
+#[test]
+fn every_protocol_times_every_task_profile() {
+    // Timing-only runs at the real Table II profiles (m up to 500) —
+    // cheap because the Null backend skips numerics.
+    for preset_name in ["task1", "task2", "task3"] {
+        for kind in ProtocolKind::ALL {
+            let mut cfg = presets::preset(preset_name).unwrap();
+            cfg.backend = Backend::Null;
+            cfg.protocol.kind = kind;
+            cfg.train.rounds = 6;
+            cfg.eval_every = 1_000_000; // no eval
+            let r = run_experiment(&cfg)
+                .unwrap_or_else(|e| panic!("{preset_name}/{kind:?}: {e}"));
+            assert_eq!(r.rounds.len(), 6);
+            for rec in &r.rounds {
+                assert!(rec.round_len >= rec.t_dist);
+                assert!(rec.round_len <= cfg.train.t_lim + rec.t_dist + 1e-9);
+                assert!(rec.n_committed + rec.n_crashed <= cfg.env.m);
+            }
+        }
+    }
+}
+
+#[test]
+fn sr_matches_paper_structure() {
+    // Table XI/XIII/XV structure: FedAvg SR == C exactly; SAFA SR tracks
+    // the commit rate (≈ 1 - cr) instead of C.
+    let mut cfg = presets::preset("task2").unwrap();
+    cfg.backend = Backend::Null;
+    cfg.train.rounds = 30;
+    cfg.eval_every = 1_000_000;
+    cfg.protocol.c_fraction = 0.3;
+    cfg.env.crash_prob = 0.3;
+
+    cfg.protocol.kind = ProtocolKind::FedAvg;
+    let fedavg = run_experiment(&cfg).unwrap();
+    assert!(
+        (fedavg.sync_ratio() - 0.3).abs() < 1e-9,
+        "FedAvg SR {} != C",
+        fedavg.sync_ratio()
+    );
+
+    cfg.protocol.kind = ProtocolKind::Safa;
+    let safa = run_experiment(&cfg).unwrap();
+    let sr = safa.sync_ratio();
+    assert!(
+        (sr - 0.7).abs() < 0.12,
+        "SAFA SR {sr} should track 1-cr=0.7 (paper Table XIII: ~0.71)"
+    );
+}
+
+#[test]
+fn eur_ordering_safa_above_fedavg() {
+    // Eq. 5 / Fig. 2: SAFA's post-training selection dominates FedAvg's
+    // EUR whenever crashes occur.
+    property("EUR(SAFA) >= EUR(FedAvg) - eps", 8, |g| {
+        let cr = g.f64_range(0.2, 0.8);
+        let c = *g.choose(&[0.1, 0.3, 0.5]);
+        let mut cfg = presets::preset("task2").unwrap();
+        cfg.backend = Backend::Null;
+        cfg.train.rounds = 15;
+        cfg.eval_every = 1_000_000;
+        cfg.protocol.c_fraction = c;
+        cfg.env.crash_prob = cr;
+        cfg.seed = g.u64() % 1000;
+        cfg.protocol.kind = ProtocolKind::Safa;
+        let safa = run_experiment(&cfg).unwrap().eur();
+        cfg.protocol.kind = ProtocolKind::FedAvg;
+        let fedavg = run_experiment(&cfg).unwrap().eur();
+        assert!(
+            safa >= fedavg - 0.05,
+            "C={c} cr={cr}: EUR safa {safa} < fedavg {fedavg}"
+        );
+    });
+}
+
+#[test]
+fn futility_structure_matches_paper() {
+    // Tables XI/XIII/XV: FedAvg futility ≈ cr/2, SAFA ≤ a few percent.
+    let mut cfg = presets::preset("task2").unwrap();
+    cfg.backend = Backend::Null;
+    cfg.train.rounds = 40;
+    cfg.eval_every = 1_000_000;
+    cfg.protocol.c_fraction = 0.5;
+    for cr in [0.3, 0.7] {
+        cfg.env.crash_prob = cr;
+        cfg.protocol.kind = ProtocolKind::FedAvg;
+        let f = run_experiment(&cfg).unwrap().futility();
+        assert!(
+            (f - cr / 2.0).abs() < 0.08,
+            "FedAvg futility {f} should be near cr/2 = {}",
+            cr / 2.0
+        );
+        cfg.protocol.kind = ProtocolKind::Safa;
+        let s = run_experiment(&cfg).unwrap().futility();
+        assert!(s < 0.10, "SAFA futility {s} should be small (paper < 0.04)");
+        assert!(s < f, "SAFA futility {s} must beat FedAvg {f}");
+    }
+}
+
+#[test]
+fn safa_round_efficiency_headline_task2() {
+    // Table VI's headline: at C=0.1 with crashes, SAFA rounds are an
+    // order of magnitude shorter than FedAvg's deadline-bound rounds.
+    let mut cfg = presets::preset("task2").unwrap();
+    cfg.backend = Backend::Null;
+    cfg.train.rounds = 20;
+    cfg.eval_every = 1_000_000;
+    cfg.protocol.c_fraction = 0.1;
+    cfg.env.crash_prob = 0.3;
+    cfg.protocol.kind = ProtocolKind::Safa;
+    let safa = run_experiment(&cfg).unwrap().avg_round_len();
+    cfg.protocol.kind = ProtocolKind::FedAvg;
+    let fedavg = run_experiment(&cfg).unwrap().avg_round_len();
+    cfg.protocol.kind = ProtocolKind::FedCs;
+    let fedcs = run_experiment(&cfg).unwrap().avg_round_len();
+    assert!(
+        safa * 4.0 < fedavg,
+        "SAFA {safa}s should be >=4x faster than FedAvg {fedavg}s (paper: up to 27x)"
+    );
+    assert!(
+        fedcs < fedavg,
+        "FedCS {fedcs}s should beat FedAvg {fedavg}s"
+    );
+    assert!(
+        safa < fedcs,
+        "SAFA {safa}s should beat FedCS {fedcs}s (paper: up to 6x)"
+    );
+}
+
+#[test]
+fn quality_runs_complete_on_all_tasks_scaled() {
+    // Real training on heavily reduced configs — smoke that the three
+    // native trainers integrate with every protocol.
+    for (preset_name, n, m, rounds) in
+        [("task1", 120usize, 4usize, 5usize), ("task3-scaled", 2_000, 10, 3)]
+    {
+        for kind in [ProtocolKind::Safa, ProtocolKind::FedAvg] {
+            let mut cfg = presets::preset(preset_name).unwrap();
+            cfg.protocol.kind = kind;
+            cfg.task.n = n;
+            cfg.task.n_test = 100;
+            cfg.env.m = m;
+            cfg.train.rounds = rounds;
+            let r = run_experiment(&cfg)
+                .unwrap_or_else(|e| panic!("{preset_name}/{kind:?}: {e}"));
+            assert!(r.best_loss().unwrap().is_finite());
+        }
+    }
+    // CNN: tiniest viable run.
+    let mut cfg = presets::preset("task2-scaled").unwrap();
+    cfg.task.n = 200;
+    cfg.task.n_test = 80;
+    cfg.env.m = 4;
+    cfg.train.rounds = 2;
+    cfg.task.cnn = safa::config::CnnArch {
+        c1: 4,
+        c2: 8,
+        hidden: 32,
+    };
+    let r = run_experiment(&cfg).unwrap();
+    assert!(r.best_accuracy().unwrap() > 0.05);
+}

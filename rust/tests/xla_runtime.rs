@@ -1,0 +1,174 @@
+//! Integration tests for the PJRT runtime: load the AOT artifacts, run
+//! local updates and evaluation through XLA, and check numeric agreement
+//! with the pure-Rust native backend on identical batches.
+//!
+//! These tests skip (pass trivially with a notice) when `artifacts/` has
+//! not been built — run `make artifacts` first for full coverage.
+
+use safa::config::{presets, Backend, ExperimentConfig};
+use safa::coordinator::Coordinator;
+use safa::data::{partition_gaussian, synth, FedData};
+use safa::model::{make_trainer, Trainer};
+use safa::runtime::{Manifest, XlaTrainer};
+use safa::util::rng::Pcg64;
+use std::sync::Arc;
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn skip_notice(test: &str) {
+    eprintln!("SKIP {test}: artifacts/ missing — run `make artifacts`");
+}
+
+/// Config matching the regression artifact shapes.
+fn regression_cfg() -> ExperimentConfig {
+    let mut cfg = presets::preset("task1").unwrap();
+    cfg.backend = Backend::Xla;
+    cfg.train.rounds = 5;
+    cfg
+}
+
+fn make_data(cfg: &ExperimentConfig) -> Arc<FedData> {
+    let (train, test) = synth::generate(cfg.task.kind, cfg.task.n, cfg.task.n_test, cfg.seed);
+    let mut rng = Pcg64::with_stream(cfg.seed, 0x9a57);
+    let partitions = partition_gaussian(train.n, cfg.env.m, cfg.env.partition_rel_std, &mut rng);
+    Arc::new(FedData {
+        train,
+        test,
+        partitions,
+    })
+}
+
+#[test]
+fn manifest_loads_and_describes_all_tasks() {
+    if !artifacts_ready() {
+        skip_notice("manifest_loads");
+        return;
+    }
+    let m = Manifest::load("artifacts").unwrap();
+    for task in ["regression", "cnn", "svm"] {
+        let t = m.task(task).unwrap();
+        assert!(t.param_dim > 0);
+        assert!(std::path::Path::new("artifacts").join(&t.train_hlo).exists());
+        assert!(std::path::Path::new("artifacts").join(&t.eval_hlo).exists());
+    }
+}
+
+#[test]
+fn xla_local_update_agrees_with_native_backend() {
+    if !artifacts_ready() {
+        skip_notice("xla_vs_native");
+        return;
+    }
+    let cfg = regression_cfg();
+    let data = make_data(&cfg);
+    let mut xla = XlaTrainer::new(&cfg, Arc::clone(&data)).expect("load artifacts");
+    let mut native = make_trainer(
+        &ExperimentConfig {
+            backend: Backend::Native,
+            ..cfg.clone()
+        },
+        Arc::clone(&data),
+    );
+    assert_eq!(xla.dim(), native.dim(), "param dim mismatch");
+    let base = native.init_params(&mut Pcg64::new(7));
+    for client in 0..cfg.env.m {
+        // Identical RNG stream -> identical batch order in both backends.
+        let ux = xla.local_update(&base, client, &mut Pcg64::new(42));
+        let un = native.local_update(&base, client, &mut Pcg64::new(42));
+        let dist = ux.params.dist(&un.params);
+        let norm = un.params.norm().max(1e-9);
+        assert!(
+            dist / norm < 1e-4,
+            "client {client}: XLA vs native param distance {dist} (rel {})",
+            dist / norm
+        );
+        assert!(
+            (ux.train_loss - un.train_loss).abs() < 1e-3 * (1.0 + un.train_loss.abs()),
+            "client {client}: loss {} vs {}",
+            ux.train_loss,
+            un.train_loss
+        );
+    }
+}
+
+#[test]
+fn xla_eval_agrees_with_native_backend() {
+    if !artifacts_ready() {
+        skip_notice("xla_eval");
+        return;
+    }
+    let cfg = regression_cfg();
+    let data = make_data(&cfg);
+    let mut xla = XlaTrainer::new(&cfg, Arc::clone(&data)).expect("load artifacts");
+    let mut native = make_trainer(
+        &ExperimentConfig {
+            backend: Backend::Native,
+            ..cfg.clone()
+        },
+        Arc::clone(&data),
+    );
+    let params = native.init_params(&mut Pcg64::new(11));
+    let ex = xla.evaluate(&params);
+    let en = native.evaluate(&params);
+    assert!(
+        (ex.loss - en.loss).abs() < 1e-3 * (1.0 + en.loss.abs()),
+        "loss {} vs {}",
+        ex.loss,
+        en.loss
+    );
+    assert!(
+        (ex.accuracy - en.accuracy).abs() < 1e-4,
+        "acc {} vs {}",
+        ex.accuracy,
+        en.accuracy
+    );
+}
+
+#[test]
+fn full_federated_run_on_xla_backend() {
+    if !artifacts_ready() {
+        skip_notice("xla_full_run");
+        return;
+    }
+    let cfg = regression_cfg();
+    let data = make_data(&cfg);
+    let trainer = XlaTrainer::new(&cfg, Arc::clone(&data)).expect("load artifacts");
+    let mut coord = Coordinator::with_trainer(&cfg, data, Box::new(trainer)).unwrap();
+    let result = coord.run();
+    assert_eq!(result.rounds.len(), 5);
+    let first = result.rounds[0].eval.unwrap().loss;
+    let last = result.rounds[4].eval.unwrap().loss;
+    assert!(
+        last < first,
+        "XLA-backed federated training should reduce loss: {first} -> {last}"
+    );
+}
+
+#[test]
+fn xla_svm_task_runs() {
+    if !artifacts_ready() {
+        skip_notice("xla_svm");
+        return;
+    }
+    let mut cfg = presets::preset("task3-scaled").unwrap();
+    cfg.backend = Backend::Xla;
+    cfg.task.n = 2_000; // keep shards within the artifact's max_batches
+    cfg.task.n_test = 4_000;
+    cfg.env.m = 20;
+    let data = make_data(&cfg);
+    let mut xla = XlaTrainer::new(&cfg, Arc::clone(&data)).expect("load artifacts");
+    let mut native = make_trainer(
+        &ExperimentConfig {
+            backend: Backend::Native,
+            ..cfg.clone()
+        },
+        Arc::clone(&data),
+    );
+    let base = native.init_params(&mut Pcg64::new(5));
+    let ux = xla.local_update(&base, 0, &mut Pcg64::new(9));
+    let un = native.local_update(&base, 0, &mut Pcg64::new(9));
+    let rel = ux.params.dist(&un.params) / un.params.norm().max(1e-9);
+    assert!(rel < 1e-4, "svm xla/native relative distance {rel}");
+}
