@@ -11,7 +11,7 @@ use safa::config::{presets, ProtocolKind};
 use safa::coordinator::run_with_data;
 use safa::experiments::shared_data;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     safa::util::logging::init();
     let mut cfg = presets::preset("task3-scaled")?;
     cfg.env.m = 200;

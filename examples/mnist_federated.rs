@@ -36,7 +36,7 @@ fn config() -> ExperimentConfig {
     cfg
 }
 
-fn run(kind: ProtocolKind, use_xla: bool) -> anyhow::Result<RunResult> {
+fn run(kind: ProtocolKind, use_xla: bool) -> Result<RunResult, Box<dyn std::error::Error>> {
     let mut cfg = config();
     cfg.protocol.kind = kind;
     cfg.backend = if use_xla { Backend::Xla } else { Backend::Native };
@@ -57,13 +57,18 @@ fn run(kind: ProtocolKind, use_xla: bool) -> anyhow::Result<RunResult> {
     Ok(coord.run())
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     safa::util::logging::init();
-    let use_xla = std::path::Path::new("artifacts/manifest.json").exists();
+    // The XLA path needs both the AOT artifacts on disk and a build with
+    // the `xla` feature (the default build ships a stub trainer).
+    let use_xla =
+        cfg!(feature = "xla") && std::path::Path::new("artifacts/manifest.json").exists();
     if use_xla {
         println!("backend: XLA (PJRT executing the JAX/Pallas AOT artifacts)");
     } else {
-        println!("backend: native (run `make artifacts` for the XLA path)");
+        println!(
+            "backend: native (run `make artifacts` and build with --features xla for the XLA path)"
+        );
     }
 
     let safa_run = run(ProtocolKind::Safa, use_xla)?;

@@ -10,7 +10,7 @@
 use safa::config::presets;
 use safa::coordinator::run_experiment;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     safa::util::logging::init();
 
     // Start from the `tiny` preset and tweak it like a user would.

@@ -1,0 +1,89 @@
+//! Churn sweep: SAFA vs. FedAvg vs. FedAsync under two-state Markov
+//! on/off churn on the Task-1 profile.
+//!
+//! Two grids over (mean downtime × mean uptime) dwell times:
+//! * average federated round length (Null trainer — timing only), and
+//! * best accuracy (native trainer, real gradients).
+//!
+//! `SAFA_BENCH_FAST=1` trims rounds for smoke runs. Emits the usual
+//! stdout tables plus CSV/JSON under `results/`.
+
+use safa::bench_harness::Table;
+use safa::config::{presets, Backend, ChurnModel, ExperimentConfig, ProtocolKind};
+use safa::coordinator::run_experiment;
+
+const UPTIMES_S: [f64; 3] = [800.0, 400.0, 200.0];
+const DOWNTIMES_S: [f64; 2] = [100.0, 400.0];
+const PROTOCOLS: [ProtocolKind; 3] = [
+    ProtocolKind::FedAvg,
+    ProtocolKind::Safa,
+    ProtocolKind::FedAsync,
+];
+
+fn fast_mode() -> bool {
+    std::env::var("SAFA_BENCH_FAST").as_deref() == Ok("1")
+}
+
+fn churn_table(title: &str) -> Table {
+    Table {
+        title: title.to_string(),
+        col_header: UPTIMES_S.iter().map(|u| format!("up {u}s")).collect(),
+        row_header: DOWNTIMES_S.iter().map(|d| format!("dn {d}s")).collect(),
+        blocks: Vec::new(),
+        precision: 2,
+    }
+}
+
+fn run_grid(title: &str, mut base: ExperimentConfig, value: impl Fn(&safa::metrics::RunResult) -> f64) -> Table {
+    let mut table = churn_table(title);
+    if fast_mode() {
+        base.train.rounds = base.train.rounds.min(8);
+    }
+    for proto in PROTOCOLS {
+        let mut rows = Vec::new();
+        for &down in &DOWNTIMES_S {
+            let mut row = Vec::new();
+            for &up in &UPTIMES_S {
+                let mut cfg = base.clone();
+                cfg.protocol.kind = proto;
+                cfg.env.churn = ChurnModel::Markov {
+                    mean_uptime_s: up,
+                    mean_downtime_s: down,
+                };
+                let r = run_experiment(&cfg)
+                    .unwrap_or_else(|e| panic!("{title} {proto:?} up={up} down={down}: {e}"));
+                row.push(value(&r));
+            }
+            rows.push(row);
+        }
+        table.add_block(proto.name(), rows);
+    }
+    table
+}
+
+fn main() {
+    safa::util::logging::init();
+
+    // Timing grid: paper Task-1 profile, Null trainer.
+    let mut timing = presets::task1();
+    timing.backend = Backend::Null;
+    timing.eval_every = 1_000_000;
+    timing.train.rounds = 30;
+    let t = run_grid(
+        "Churn sweep — Task 1 avg round length (s) under Markov churn",
+        timing,
+        |r| r.avg_round_len(),
+    );
+    t.emit("churn_sweep_round_length");
+
+    // Accuracy grid: real training at Task-1 scale (already tiny).
+    let mut acc = presets::task1();
+    acc.backend = Backend::Native;
+    acc.train.rounds = 30;
+    let t = run_grid(
+        "Churn sweep — Task 1 best accuracy under Markov churn",
+        acc,
+        |r| r.best_accuracy().unwrap_or(f64::NAN),
+    );
+    t.emit("churn_sweep_accuracy");
+}

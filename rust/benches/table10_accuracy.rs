@@ -1,4 +1,5 @@
-//! Table X: best accuracy of the global model on Task 1 (4 protocols).
+//! Table X: best accuracy of the global model on Task 1 (the paper's 4
+//! protocols plus the FedAsync baseline as an extra row).
 //!
 //! Real training on the paper Task-1 configuration (see DESIGN.md §6 /
 //! EXPERIMENTS.md for the scaling argument); `SAFA_PRESET=paper` runs

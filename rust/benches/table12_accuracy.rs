@@ -1,4 +1,5 @@
-//! Table XII: best accuracy of the global model on Task 2 (4 protocols).
+//! Table XII: best accuracy of the global model on Task 2 (the paper's 4
+//! protocols plus the FedAsync baseline as an extra row).
 //!
 //! Real training on the scaled configuration (see DESIGN.md §6 /
 //! EXPERIMENTS.md for the scaling argument); `SAFA_PRESET=paper` runs

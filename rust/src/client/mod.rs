@@ -84,6 +84,23 @@ impl ClientState {
     pub fn lag(&self, global_version: i64) -> i64 {
         global_version - self.version
     }
+
+    /// Begin a fresh training job of `total` seconds based on global
+    /// version `base_version` (replaces any in-flight job).
+    pub fn start_job(&mut self, total: f64, base_version: i64) {
+        self.job = Some(Job {
+            remaining: total,
+            total,
+            base_version,
+        });
+    }
+
+    /// Global version of the base model the client's current training
+    /// builds on: the in-flight job's base if one exists, else the base
+    /// of the last (re)synchronization.
+    pub fn job_base_version(&self) -> i64 {
+        self.job.map(|j| j.base_version).unwrap_or(self.base_version)
+    }
 }
 
 /// Build the client fleet for an experiment. Performance draws use a

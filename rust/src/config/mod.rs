@@ -45,6 +45,10 @@ pub enum ProtocolKind {
     Safa,
     FedAvg,
     FedCs,
+    /// Fully-asynchronous baseline with staleness-discounted server
+    /// updates (Xie et al. 2019), for comparison against SAFA's
+    /// semi-asynchronous middle ground.
+    FedAsync,
     FullyLocal,
 }
 
@@ -54,6 +58,7 @@ impl ProtocolKind {
             "safa" => Ok(ProtocolKind::Safa),
             "fedavg" => Ok(ProtocolKind::FedAvg),
             "fedcs" => Ok(ProtocolKind::FedCs),
+            "fedasync" | "fed_async" | "async" => Ok(ProtocolKind::FedAsync),
             "local" | "fullylocal" | "fully_local" => Ok(ProtocolKind::FullyLocal),
             other => Err(SafaError::Config(format!("unknown protocol '{other}'"))),
         }
@@ -64,14 +69,16 @@ impl ProtocolKind {
             ProtocolKind::Safa => "SAFA",
             ProtocolKind::FedAvg => "FedAvg",
             ProtocolKind::FedCs => "FedCS",
+            ProtocolKind::FedAsync => "FedAsync",
             ProtocolKind::FullyLocal => "FullyLocal",
         }
     }
 
-    pub const ALL: [ProtocolKind; 4] = [
+    pub const ALL: [ProtocolKind; 5] = [
         ProtocolKind::FullyLocal,
         ProtocolKind::FedAvg,
         ProtocolKind::FedCs,
+        ProtocolKind::FedAsync,
         ProtocolKind::Safa,
     ];
 }
@@ -144,6 +151,95 @@ pub struct TaskConfig {
     pub cnn: CnnArch,
 }
 
+/// Client availability / churn process (consumed by the fleet engine,
+/// [`crate::engine`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ChurnModel {
+    /// Paper parity (§IV-A): one i.i.d. Bernoulli(`crash_prob`) draw per
+    /// (round, client); an offline client is offline all round.
+    Bernoulli,
+    /// Two-state on/off churn with exponential dwell times (seconds);
+    /// clients drop and recover mid-round, and their state persists
+    /// across rounds. Ignores `crash_prob`.
+    Markov {
+        mean_uptime_s: f64,
+        mean_downtime_s: f64,
+    },
+    /// Deterministic replay of an online/offline matrix loaded from a
+    /// file: one line per round, one `0`/`1` char per client; the trace
+    /// cycles when the run is longer.
+    Trace { path: String },
+}
+
+impl ChurnModel {
+    /// Default Markov mean uptime (seconds), shared by the TOML and CLI
+    /// parsers so both spell the same default model.
+    pub const DEFAULT_UPTIME_S: f64 = 2000.0;
+    /// Default Markov mean downtime (seconds).
+    pub const DEFAULT_DOWNTIME_S: f64 = 500.0;
+
+    /// Build a model from parsed front-end parts (shared by the TOML and
+    /// CLI parsers so they cannot drift): `kind` is one of
+    /// bernoulli|markov|trace (case-insensitive), missing dwell times
+    /// fall back to the defaults above, and trace requires a file path.
+    /// Parameters that do not apply to the chosen kind are rejected —
+    /// silently ignoring them would hide a misconfigured run.
+    pub fn from_parts(
+        kind: &str,
+        uptime_s: Option<f64>,
+        downtime_s: Option<f64>,
+        trace_path: Option<&str>,
+    ) -> Result<ChurnModel> {
+        let has_dwell = uptime_s.is_some() || downtime_s.is_some();
+        match kind.to_ascii_lowercase().as_str() {
+            "bernoulli" => {
+                if has_dwell || trace_path.is_some() {
+                    return Err(SafaError::Config(
+                        "bernoulli churn takes no dwell times or trace file \
+                         (did you mean churn = \"markov\" or \"trace\"?)"
+                            .into(),
+                    ));
+                }
+                Ok(ChurnModel::Bernoulli)
+            }
+            "markov" => {
+                if trace_path.is_some() {
+                    return Err(SafaError::Config(
+                        "markov churn takes dwell times, not a trace file \
+                         (did you mean churn = \"trace\"?)"
+                            .into(),
+                    ));
+                }
+                Ok(ChurnModel::Markov {
+                    mean_uptime_s: uptime_s.unwrap_or(Self::DEFAULT_UPTIME_S),
+                    mean_downtime_s: downtime_s.unwrap_or(Self::DEFAULT_DOWNTIME_S),
+                })
+            }
+            "trace" => {
+                if has_dwell {
+                    return Err(SafaError::Config(
+                        "trace churn takes a trace file, not dwell times \
+                         (did you mean churn = \"markov\"?)"
+                            .into(),
+                    ));
+                }
+                Ok(ChurnModel::Trace {
+                    path: trace_path
+                        .ok_or_else(|| {
+                            SafaError::Config(
+                                "trace churn requires a trace file path \
+                                 (env.churn_trace in TOML, --churn-trace on the CLI)"
+                                    .into(),
+                            )
+                        })?
+                        .to_string(),
+                })
+            }
+            other => Err(SafaError::Config(format!("unknown churn model '{other}'"))),
+        }
+    }
+}
+
 /// Edge-environment parameters (paper §IV-A).
 #[derive(Debug, Clone)]
 pub struct EnvConfig {
@@ -168,6 +264,8 @@ pub struct EnvConfig {
     pub server_bw_bps: f64,
     /// Compressed model size in bits (paper: 10 MB after compression).
     pub model_size_bits: f64,
+    /// Client availability process (default: the paper's Bernoulli).
+    pub churn: ChurnModel,
 }
 
 /// Federated-optimization parameters.
@@ -193,6 +291,11 @@ pub struct ProtocolConfig {
     pub c_fraction: f64,
     /// Lag tolerance tau (SAFA only).
     pub tau: usize,
+    /// Base server mixing rate alpha (FedAsync only): each applied update
+    /// moves the global model by `alpha / (1 + staleness)^staleness_exp`.
+    pub alpha: f64,
+    /// Polynomial staleness-discount exponent `a` (FedAsync only).
+    pub staleness_exp: f64,
 }
 
 /// A complete experiment description.
@@ -237,6 +340,43 @@ impl ExperimentConfig {
         if self.protocol.kind == ProtocolKind::Safa && self.protocol.tau == 0 {
             return e("tau must be >= 1 for SAFA".into());
         }
+        if self.protocol.kind == ProtocolKind::FedAsync {
+            if !(0.0..=1.0).contains(&self.protocol.alpha) || self.protocol.alpha == 0.0 {
+                return e(format!("alpha {} outside (0,1]", self.protocol.alpha));
+            }
+            // Finiteness first so NaN (which every comparison rejects)
+            // cannot slip through and poison the discount weights.
+            if !self.protocol.staleness_exp.is_finite() || self.protocol.staleness_exp < 0.0 {
+                return e(format!(
+                    "staleness_exp {} must be >= 0 and finite",
+                    self.protocol.staleness_exp
+                ));
+            }
+        }
+        match &self.env.churn {
+            ChurnModel::Markov {
+                mean_uptime_s,
+                mean_downtime_s,
+            } => {
+                // Finiteness first so NaN/inf fail too (an infinite dwell
+                // would panic inside Exponential::new).
+                if !mean_uptime_s.is_finite()
+                    || !mean_downtime_s.is_finite()
+                    || *mean_uptime_s <= 0.0
+                    || *mean_downtime_s <= 0.0
+                {
+                    return e(format!(
+                        "Markov churn dwell times must be positive and finite (up={mean_uptime_s}, down={mean_downtime_s})"
+                    ));
+                }
+            }
+            ChurnModel::Trace { path } => {
+                if path.is_empty() {
+                    return e("trace churn requires a trace file path".into());
+                }
+            }
+            ChurnModel::Bernoulli => {}
+        }
         if self.train.rounds == 0 || self.train.epochs == 0 || self.train.batch_size == 0 {
             return e("rounds, epochs and batch_size must be positive".into());
         }
@@ -278,6 +418,12 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_i64("protocol.tau") {
             cfg.protocol.tau = v as usize;
         }
+        if let Some(v) = doc.get_f64("protocol.alpha") {
+            cfg.protocol.alpha = v;
+        }
+        if let Some(v) = doc.get_f64("protocol.staleness_exp") {
+            cfg.protocol.staleness_exp = v;
+        }
         if let Some(v) = doc.get_i64("env.m") {
             cfg.env.m = v as usize;
         }
@@ -292,6 +438,23 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_f64("env.model_size_mb") {
             cfg.env.model_size_bits = v * 8e6;
+        }
+        if let Some(v) = doc.get_str("env.churn") {
+            cfg.env.churn = ChurnModel::from_parts(
+                v,
+                doc.get_f64("env.churn_uptime_s"),
+                doc.get_f64("env.churn_downtime_s"),
+                doc.get_str("env.churn_trace"),
+            )?;
+        } else if doc.get_f64("env.churn_uptime_s").is_some()
+            || doc.get_f64("env.churn_downtime_s").is_some()
+            || doc.get_str("env.churn_trace").is_some()
+        {
+            return Err(SafaError::Config(
+                "env.churn_uptime_s / env.churn_downtime_s / env.churn_trace \
+                 require env.churn = \"markov\" or \"trace\""
+                    .into(),
+            ));
         }
         if let Some(v) = doc.get_i64("train.rounds") {
             cfg.train.rounds = v as usize;
@@ -389,7 +552,88 @@ mod tests {
         assert_eq!(TaskKind::parse("TASK2").unwrap(), TaskKind::Cnn);
         assert!(TaskKind::parse("task9").is_err());
         assert_eq!(ProtocolKind::parse("FedCS").unwrap(), ProtocolKind::FedCs);
+        assert_eq!(
+            ProtocolKind::parse("FedAsync").unwrap(),
+            ProtocolKind::FedAsync
+        );
         assert!(ProtocolKind::parse("x").is_err());
         assert_eq!(Backend::parse("XLA").unwrap(), Backend::Xla);
+    }
+
+    #[test]
+    fn from_toml_configures_churn_and_fedasync() {
+        let doc = crate::util::toml::parse(
+            r#"
+            preset = "tiny"
+            [protocol]
+            kind = "fedasync"
+            alpha = 0.4
+            staleness_exp = 1.0
+            [env]
+            churn = "markov"
+            churn_uptime_s = 300.0
+            churn_downtime_s = 100.0
+            "#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.protocol.kind, ProtocolKind::FedAsync);
+        assert_eq!(cfg.protocol.alpha, 0.4);
+        assert_eq!(cfg.protocol.staleness_exp, 1.0);
+        assert_eq!(
+            cfg.env.churn,
+            ChurnModel::Markov {
+                mean_uptime_s: 300.0,
+                mean_downtime_s: 100.0
+            }
+        );
+    }
+
+    #[test]
+    fn from_parts_rejects_inapplicable_churn_params() {
+        assert!(ChurnModel::from_parts("bernoulli", None, None, None).is_ok());
+        assert!(ChurnModel::from_parts("bernoulli", Some(50.0), None, None).is_err());
+        assert!(ChurnModel::from_parts("bernoulli", None, None, Some("f.txt")).is_err());
+        assert!(ChurnModel::from_parts("markov", Some(300.0), Some(100.0), None).is_ok());
+        assert!(ChurnModel::from_parts("markov", None, None, Some("f.txt")).is_err());
+        assert!(ChurnModel::from_parts("trace", None, None, Some("f.txt")).is_ok());
+        assert!(ChurnModel::from_parts("trace", Some(300.0), None, Some("f.txt")).is_err());
+        assert!(ChurnModel::from_parts("trace", None, None, None).is_err());
+        assert!(ChurnModel::from_parts("weibull", None, None, None).is_err());
+        // Defaults fill in missing Markov dwell times.
+        match ChurnModel::from_parts("markov", None, None, None).unwrap() {
+            ChurnModel::Markov {
+                mean_uptime_s,
+                mean_downtime_s,
+            } => {
+                assert_eq!(mean_uptime_s, ChurnModel::DEFAULT_UPTIME_S);
+                assert_eq!(mean_downtime_s, ChurnModel::DEFAULT_DOWNTIME_S);
+            }
+            other => panic!("expected Markov, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn validation_catches_bad_churn_and_alpha() {
+        let mut cfg = preset("tiny").unwrap();
+        cfg.env.churn = ChurnModel::Markov {
+            mean_uptime_s: 0.0,
+            mean_downtime_s: 100.0,
+        };
+        assert!(cfg.validate().is_err());
+        let mut cfg = preset("tiny").unwrap();
+        cfg.env.churn = ChurnModel::Trace { path: String::new() };
+        assert!(cfg.validate().is_err());
+        let mut cfg = preset("tiny").unwrap();
+        cfg.protocol.kind = ProtocolKind::FedAsync;
+        cfg.protocol.alpha = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.protocol.alpha = 1.5;
+        assert!(cfg.validate().is_err());
+        cfg.protocol.alpha = 0.6;
+        cfg.protocol.staleness_exp = -1.0;
+        assert!(cfg.validate().is_err());
+        cfg.protocol.staleness_exp = 0.5;
+        assert!(cfg.validate().is_ok());
     }
 }

@@ -10,8 +10,8 @@
 //! * T_lim values (830 s / 5600 s / 1620 s) are the paper's.
 
 use super::{
-    Backend, CnnArch, EnvConfig, ExperimentConfig, ProtocolConfig, ProtocolKind, TaskConfig,
-    TaskKind, TrainConfig,
+    Backend, ChurnModel, CnnArch, EnvConfig, ExperimentConfig, ProtocolConfig, ProtocolKind,
+    TaskConfig, TaskKind, TrainConfig,
 };
 use crate::error::{Result, SafaError};
 
@@ -27,6 +27,7 @@ fn base_env(m: usize) -> EnvConfig {
         // 10 MB / 0.404 s ≈ 198 Mbps effective per-model stream.
         server_bw_bps: 198.02e6,
         model_size_bits: 10.0 * MB_BITS,
+        churn: ChurnModel::Bernoulli,
     }
 }
 
@@ -35,6 +36,10 @@ fn base_protocol() -> ProtocolConfig {
         kind: ProtocolKind::Safa,
         c_fraction: 0.3,
         tau: 5,
+        // FedAsync defaults (Xie et al. 2019): alpha = 0.6 with a
+        // polynomial staleness discount of exponent 0.5.
+        alpha: 0.6,
+        staleness_exp: 0.5,
     }
 }
 
@@ -183,6 +188,34 @@ pub fn tiny() -> ExperimentConfig {
     cfg
 }
 
+/// Markov-churn variant of a preset: clients flap on/off with
+/// exponential dwell times sized relative to the task's T_lim, so drops
+/// and recoveries land mid-round (the regime SAFA targets; `crash_prob`
+/// is ignored under Markov churn).
+fn with_markov_churn(mut cfg: ExperimentConfig, suffix: &str) -> ExperimentConfig {
+    cfg.name = format!("{}-{suffix}", cfg.name);
+    cfg.env.churn = ChurnModel::Markov {
+        mean_uptime_s: cfg.train.t_lim * 0.6,
+        mean_downtime_s: cfg.train.t_lim * 0.25,
+    };
+    cfg
+}
+
+/// Tiny Markov-churn preset for tests and the churn examples.
+pub fn tiny_churn() -> ExperimentConfig {
+    with_markov_churn(tiny(), "churn")
+}
+
+/// Task-1 profile under Markov churn (the `churn_sweep` bench's base).
+pub fn task1_churn() -> ExperimentConfig {
+    with_markov_churn(task1(), "churn")
+}
+
+/// Task-2 profile under Markov churn.
+pub fn task2_churn() -> ExperimentConfig {
+    with_markov_churn(task2(), "churn")
+}
+
 /// Look up a preset by name.
 pub fn preset(name: &str) -> Result<ExperimentConfig> {
     match name.to_ascii_lowercase().as_str() {
@@ -192,7 +225,10 @@ pub fn preset(name: &str) -> Result<ExperimentConfig> {
         "task1-scaled" | "task1_scaled" => Ok(task1_scaled()),
         "task2-scaled" | "task2_scaled" => Ok(task2_scaled()),
         "task3-scaled" | "task3_scaled" => Ok(task3_scaled()),
+        "task1-churn" | "task1_churn" => Ok(task1_churn()),
+        "task2-churn" | "task2_churn" => Ok(task2_churn()),
         "tiny" => Ok(tiny()),
+        "tiny-churn" | "tiny_churn" => Ok(tiny_churn()),
         other => Err(SafaError::Config(format!("unknown preset '{other}'"))),
     }
 }
@@ -205,7 +241,10 @@ pub fn preset_names() -> &'static [&'static str] {
         "task1-scaled",
         "task2-scaled",
         "task3-scaled",
+        "task1-churn",
+        "task2-churn",
         "tiny",
+        "tiny-churn",
     ]
 }
 
@@ -267,6 +306,24 @@ mod tests {
         let t2 = task2();
         let per_model = t2.env.model_size_bits / t2.env.server_bw_bps;
         assert!((per_model - 0.204).abs() < 1e-3, "per_model={per_model}");
+    }
+
+    #[test]
+    fn churn_presets_use_markov_dwell_times() {
+        for name in ["tiny-churn", "task1-churn", "task2-churn"] {
+            let cfg = preset(name).unwrap();
+            match cfg.env.churn {
+                ChurnModel::Markov {
+                    mean_uptime_s,
+                    mean_downtime_s,
+                } => {
+                    assert!(mean_uptime_s > 0.0 && mean_uptime_s < cfg.train.t_lim);
+                    assert!(mean_downtime_s > 0.0 && mean_downtime_s < mean_uptime_s);
+                }
+                ref other => panic!("{name}: expected Markov churn, got {other:?}"),
+            }
+        }
+        assert_eq!(preset("tiny").unwrap().env.churn, ChurnModel::Bernoulli);
     }
 
     #[test]

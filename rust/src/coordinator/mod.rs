@@ -48,7 +48,7 @@ impl Coordinator {
         let mut rounds: Vec<RoundRecord> = Vec::with_capacity(cfg.train.rounds);
         for t in 1..=cfg.train.rounds {
             let rec = self.protocol.run_round(t, &mut self.env);
-            log::debug!(
+            crate::log_debug!(
                 "[{}] round {t}/{}: len={:.1}s picked={} committed={} crashed={} loss={:?}",
                 self.protocol.kind().name(),
                 cfg.train.rounds,
@@ -132,6 +132,23 @@ mod tests {
     }
 
     #[test]
+    fn all_protocols_complete_under_markov_churn() {
+        for kind in ProtocolKind::ALL {
+            let mut cfg = presets::preset("tiny-churn").unwrap();
+            cfg.protocol.kind = kind;
+            cfg.train.rounds = 4;
+            let result =
+                run_experiment(&cfg).unwrap_or_else(|e| panic!("{kind:?} under churn: {e}"));
+            assert_eq!(result.rounds.len(), 4);
+            let f = result.avg_online_fraction();
+            assert!(
+                f > 0.0 && f <= 1.0,
+                "{kind:?}: online fraction {f} out of range"
+            );
+        }
+    }
+
+    #[test]
     fn safa_converges_on_tiny_regression() {
         let mut cfg = presets::preset("tiny").unwrap();
         cfg.train.rounds = 20;
@@ -173,7 +190,7 @@ mod tests {
         let fedavg: f64 = fedavg_len.iter().sum::<f64>() / fedavg_len.len() as f64;
         assert!(
             safa < fedavg,
-            "SAFA avg round {safa}s should beat FedAvg {fedavg}s at C=0.25"
+            "SAFA avg round {safa}s should beat FedAvg {fedavg}s at C=0.1"
         );
     }
 

@@ -1,0 +1,337 @@
+//! Pluggable client-availability models for the fleet engine.
+//!
+//! Three models, all driven by the per-(round, client) RNG streams the
+//! legacy simulator already uses (`round_rng.split(k)`), so availability
+//! patterns are identical across protocols for the same experiment seed:
+//!
+//! * [`AvailabilityModel::BernoulliPerRound`] — the paper's §IV-A model:
+//!   one i.i.d. Bernoulli(cr) draw per (round, client); an offline client
+//!   is offline for the whole round. Consumes exactly one draw per
+//!   client, which is what makes the engine bit-for-bit equivalent to the
+//!   seed implementation.
+//! * [`AvailabilityModel::Markov`] — a two-state on/off process with
+//!   exponential dwell times (seconds). State persists across rounds (a
+//!   client that flaps off stays off until its recovery fires); at most
+//!   one transition is sampled per round window, which yields the
+//!   `GoOffline` / `ComeOnline` mid-round events. Like the paper's
+//!   Bernoulli model, churn is **round-indexed**: every round draws one
+//!   window over `[0, T_lim]` and advances the on/off state by one
+//!   window, regardless of how early the protocol closes the round.
+//!   Dwell times therefore shape *where in the window* transitions land,
+//!   not a wall-clock rate across protocols with different round
+//!   lengths — which is what keeps the (round, client) availability
+//!   pattern identical across protocols for a given seed, the property
+//!   every cross-protocol comparison in the paper relies on.
+//! * [`AvailabilityModel::Trace`] — deterministic replay of a recorded
+//!   online/offline matrix (round-major), loaded from a file named in the
+//!   config; traces shorter than the run cycle.
+
+use crate::config::{ChurnModel, EnvConfig};
+use crate::error::{Result, SafaError};
+use crate::util::rng::{Bernoulli, Distribution, Exponential, Pcg64};
+
+/// A client's availability over one round window `[0, horizon]`.
+///
+/// At most one transition per window: either the client starts online and
+/// possibly drops at `goes_offline_at`, or it starts offline and possibly
+/// recovers at `comes_online_at`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClientWindow {
+    pub online_at_start: bool,
+    /// Mid-round drop time (seconds from round start), strictly inside
+    /// the window when present.
+    pub goes_offline_at: Option<f64>,
+    /// Mid-round recovery time, strictly inside the window when present.
+    pub comes_online_at: Option<f64>,
+}
+
+impl ClientWindow {
+    pub const ALWAYS_ON: ClientWindow = ClientWindow {
+        online_at_start: true,
+        goes_offline_at: None,
+        comes_online_at: None,
+    };
+
+    /// Seconds spent online within `[0, horizon]`.
+    pub fn online_seconds(&self, horizon: f64) -> f64 {
+        if self.online_at_start {
+            self.goes_offline_at.unwrap_or(horizon).min(horizon)
+        } else {
+            match self.comes_online_at {
+                Some(t) => (horizon - t).max(0.0),
+                None => 0.0,
+            }
+        }
+    }
+}
+
+/// Which availability process governs the fleet.
+#[derive(Debug, Clone)]
+pub enum AvailabilityModel {
+    /// Paper parity: i.i.d. per-round crash draws.
+    BernoulliPerRound { crash_prob: f64 },
+    /// Two-state on/off churn with exponential dwell times (seconds).
+    Markov {
+        mean_uptime_s: f64,
+        mean_downtime_s: f64,
+    },
+    /// Deterministic replay: `rounds[r][k]` = client `k` online in round
+    /// `r+1`. Cycles when the run is longer than the trace.
+    Trace { rounds: Vec<Vec<bool>> },
+}
+
+impl AvailabilityModel {
+    /// Build the model named by the environment config (loads the trace
+    /// file for [`ChurnModel::Trace`]).
+    pub fn from_env(env: &EnvConfig) -> Result<AvailabilityModel> {
+        match &env.churn {
+            ChurnModel::Bernoulli => Ok(AvailabilityModel::BernoulliPerRound {
+                crash_prob: env.crash_prob,
+            }),
+            ChurnModel::Markov {
+                mean_uptime_s,
+                mean_downtime_s,
+            } => Ok(AvailabilityModel::Markov {
+                mean_uptime_s: *mean_uptime_s,
+                mean_downtime_s: *mean_downtime_s,
+            }),
+            ChurnModel::Trace { path } => {
+                let text = std::fs::read_to_string(path).map_err(|e| {
+                    SafaError::Config(format!("cannot read churn trace '{path}': {e}"))
+                })?;
+                Ok(AvailabilityModel::Trace {
+                    rounds: parse_trace(&text)?,
+                })
+            }
+        }
+    }
+
+    pub fn is_bernoulli(&self) -> bool {
+        matches!(self, AvailabilityModel::BernoulliPerRound { .. })
+    }
+
+    /// Draw client `k`'s window for round `t` (1-based).
+    ///
+    /// `persisted` carries the client's on/off state across rounds
+    /// (Markov only); `crng` must be the per-(round, client) stream
+    /// `round_rng.split(k)` so patterns match the legacy simulator.
+    pub fn window(
+        &self,
+        persisted: &mut Option<bool>,
+        crng: &mut Pcg64,
+        t: usize,
+        client: usize,
+        horizon: f64,
+    ) -> ClientWindow {
+        match self {
+            AvailabilityModel::BernoulliPerRound { crash_prob } => {
+                let offline = Bernoulli::new(*crash_prob).draw(crng);
+                ClientWindow {
+                    online_at_start: !offline,
+                    goes_offline_at: None,
+                    comes_online_at: None,
+                }
+            }
+            AvailabilityModel::Markov {
+                mean_uptime_s,
+                mean_downtime_s,
+            } => {
+                let stationary_up = mean_uptime_s / (mean_uptime_s + mean_downtime_s);
+                let online = *persisted.get_or_insert_with(|| crng.next_f64() < stationary_up);
+                if online {
+                    let dwell = Exponential::new(1.0 / mean_uptime_s).sample(crng);
+                    if dwell < horizon {
+                        *persisted = Some(false);
+                        ClientWindow {
+                            online_at_start: true,
+                            goes_offline_at: Some(dwell),
+                            comes_online_at: None,
+                        }
+                    } else {
+                        *persisted = Some(true);
+                        ClientWindow::ALWAYS_ON
+                    }
+                } else {
+                    let wake = Exponential::new(1.0 / mean_downtime_s).sample(crng);
+                    if wake < horizon {
+                        *persisted = Some(true);
+                        ClientWindow {
+                            online_at_start: false,
+                            goes_offline_at: None,
+                            comes_online_at: Some(wake),
+                        }
+                    } else {
+                        *persisted = Some(false);
+                        ClientWindow {
+                            online_at_start: false,
+                            goes_offline_at: None,
+                            comes_online_at: None,
+                        }
+                    }
+                }
+            }
+            AvailabilityModel::Trace { rounds } => {
+                if rounds.is_empty() {
+                    return ClientWindow::ALWAYS_ON;
+                }
+                let row = &rounds[t.saturating_sub(1) % rounds.len()];
+                let online = row.get(client).copied().unwrap_or(true);
+                ClientWindow {
+                    online_at_start: online,
+                    goes_offline_at: None,
+                    comes_online_at: None,
+                }
+            }
+        }
+    }
+}
+
+/// Parse a trace: one line per round, one `0`/`1` character per client
+/// (whitespace and blank lines ignored).
+pub fn parse_trace(text: &str) -> Result<Vec<Vec<bool>>> {
+    let mut rounds = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut row = Vec::with_capacity(line.len());
+        for c in line.chars() {
+            match c {
+                '1' => row.push(true),
+                '0' => row.push(false),
+                c if c.is_whitespace() => {}
+                other => {
+                    return Err(SafaError::Config(format!(
+                        "churn trace line {}: unexpected character '{other}'",
+                        lineno + 1
+                    )))
+                }
+            }
+        }
+        rounds.push(row);
+    }
+    if rounds.is_empty() {
+        return Err(SafaError::Config("churn trace is empty".into()));
+    }
+    Ok(rounds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bernoulli_consumes_one_draw_and_matches_rate() {
+        let model = AvailabilityModel::BernoulliPerRound { crash_prob: 0.3 };
+        let mut offline = 0;
+        let n = 20_000;
+        for k in 0..n {
+            let mut crng = Pcg64::new(77).split(k);
+            let mut state = None;
+            let w = model.window(&mut state, &mut crng, 1, k as usize, 830.0);
+            assert_eq!(w.goes_offline_at, None);
+            assert_eq!(w.comes_online_at, None);
+            if !w.online_at_start {
+                offline += 1;
+            }
+            // The next value must be the stream's second output (the
+            // engine uses it for the legacy crash-partial draw).
+            let mut fresh = Pcg64::new(77).split(k);
+            fresh.next_f64();
+            assert_eq!(crng.next_f64(), fresh.next_f64());
+        }
+        let rate = offline as f64 / n as f64;
+        assert!((rate - 0.3).abs() < 0.02, "offline rate {rate}");
+    }
+
+    #[test]
+    fn markov_state_persists_across_rounds() {
+        let model = AvailabilityModel::Markov {
+            mean_uptime_s: 400.0,
+            mean_downtime_s: 200.0,
+        };
+        // A client that drops mid-round must start the next round offline.
+        let root = Pcg64::new(5);
+        let mut found = false;
+        for k in 0..200u64 {
+            let mut state = None;
+            let w1 = model.window(&mut state, &mut root.split(k), 1, k as usize, 830.0);
+            if w1.online_at_start && w1.goes_offline_at.is_some() {
+                assert_eq!(state, Some(false));
+                let w2 =
+                    model.window(&mut state, &mut root.split(1000 + k), 2, k as usize, 830.0);
+                assert!(!w2.online_at_start, "dropped client must start round 2 offline");
+                found = true;
+                break;
+            }
+        }
+        assert!(found, "no mid-round drop sampled in 200 clients");
+    }
+
+    #[test]
+    fn markov_windows_are_deterministic_per_stream() {
+        let model = AvailabilityModel::Markov {
+            mean_uptime_s: 300.0,
+            mean_downtime_s: 100.0,
+        };
+        for k in 0..50u64 {
+            let (mut s1, mut s2) = (None, None);
+            let a = model.window(&mut s1, &mut Pcg64::new(9).split(k), 1, k as usize, 830.0);
+            let b = model.window(&mut s2, &mut Pcg64::new(9).split(k), 1, k as usize, 830.0);
+            assert_eq!(a, b);
+            assert_eq!(s1, s2);
+        }
+    }
+
+    #[test]
+    fn trace_replays_and_cycles() {
+        let rounds = parse_trace("101\n010\n").unwrap();
+        let model = AvailabilityModel::Trace { rounds };
+        let mut crng = Pcg64::new(1);
+        let mut state = None;
+        // Round 1 = "101".
+        assert!(model.window(&mut state, &mut crng, 1, 0, 10.0).online_at_start);
+        assert!(!model.window(&mut state, &mut crng, 1, 1, 10.0).online_at_start);
+        assert!(model.window(&mut state, &mut crng, 1, 2, 10.0).online_at_start);
+        // Clients beyond the row default to online.
+        assert!(model.window(&mut state, &mut crng, 1, 9, 10.0).online_at_start);
+        // Round 3 cycles back to "101".
+        assert!(!model.window(&mut state, &mut crng, 3, 1, 10.0).online_at_start);
+    }
+
+    #[test]
+    fn trace_parser_rejects_garbage() {
+        assert!(parse_trace("10x1").is_err());
+        assert!(parse_trace("").is_err());
+        assert!(parse_trace("\n  \n").is_err());
+        assert_eq!(parse_trace(" 1 0 \n11\n").unwrap(), vec![
+            vec![true, false],
+            vec![true, true]
+        ]);
+    }
+
+    #[test]
+    fn online_seconds_accounting() {
+        let w = ClientWindow::ALWAYS_ON;
+        assert_eq!(w.online_seconds(100.0), 100.0);
+        let w = ClientWindow {
+            online_at_start: true,
+            goes_offline_at: Some(30.0),
+            comes_online_at: None,
+        };
+        assert_eq!(w.online_seconds(100.0), 30.0);
+        let w = ClientWindow {
+            online_at_start: false,
+            goes_offline_at: None,
+            comes_online_at: Some(70.0),
+        };
+        assert_eq!(w.online_seconds(100.0), 30.0);
+        let w = ClientWindow {
+            online_at_start: false,
+            goes_offline_at: None,
+            comes_online_at: None,
+        };
+        assert_eq!(w.online_seconds(100.0), 0.0);
+    }
+}

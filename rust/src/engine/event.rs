@@ -1,0 +1,198 @@
+//! Typed events and the binary-heap scheduler over one virtual clock.
+//!
+//! Ordering is fully deterministic: events pop by `(time, class, seq)`
+//! where `seq` is the scheduling order. `class` separates ordinary client
+//! events (class 0) from the round deadline (class 1), so an upload that
+//! lands *exactly* on `T_lim` is still processed before the deadline
+//! fires — matching the paper's `finish <= T_lim` commit rule.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// What happened at a point in virtual time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A client finished downloading the global model.
+    DownloadDone,
+    /// A client finished its local training epochs.
+    TrainDone,
+    /// A client's upload reached the server (a commit, if in time).
+    UploadDone,
+    /// A client dropped offline mid-round (churn).
+    GoOffline,
+    /// A previously offline client came back mid-round (churn).
+    ComeOnline,
+    /// The round deadline `T_lim` fired.
+    RoundDeadline,
+}
+
+/// One scheduled occurrence.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    /// Virtual time, seconds from round start.
+    pub time: f64,
+    /// The client concerned (`None` for fleet-wide events).
+    pub client: Option<usize>,
+    pub kind: EventKind,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Scheduled {
+    time: f64,
+    /// 0 = ordinary event, 1 = deadline (fires after same-time events).
+    class: u8,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Scheduled {}
+
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed on every key: `BinaryHeap` is a max-heap and we want
+        // the earliest (time, class, seq) out first.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.class.cmp(&self.class))
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Deterministic discrete-event queue over one virtual clock.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Scheduled>,
+    seq: u64,
+    now: f64,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    /// Current virtual time (time of the last popped event).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule an ordinary event. Must not be in the queue's past.
+    pub fn schedule(&mut self, event: Event) {
+        debug_assert!(
+            event.time >= self.now,
+            "event at {} scheduled in the past (now {})",
+            event.time,
+            self.now
+        );
+        self.push(event, 0);
+    }
+
+    /// Schedule a deadline-class event: at equal timestamps it fires
+    /// *after* every ordinary event, so `finish == T_lim` still commits.
+    pub fn schedule_deadline(&mut self, event: Event) {
+        debug_assert!(event.time >= self.now);
+        self.push(event, 1);
+    }
+
+    fn push(&mut self, event: Event, class: u8) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Scheduled {
+            time: event.time,
+            class,
+            seq,
+            event,
+        });
+    }
+
+    /// Pop the earliest event and advance the clock to it.
+    pub fn pop(&mut self) -> Option<Event> {
+        let s = self.heap.pop()?;
+        self.now = s.time;
+        Some(s.event)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(time: f64, kind: EventKind) -> Event {
+        Event {
+            time,
+            client: None,
+            kind,
+        }
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(ev(3.0, EventKind::TrainDone));
+        q.schedule(ev(1.0, EventKind::DownloadDone));
+        q.schedule(ev(2.0, EventKind::GoOffline));
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop().unwrap().time, 1.0);
+        assert_eq!(q.now(), 1.0);
+        assert_eq!(q.pop().unwrap().time, 2.0);
+        assert_eq!(q.pop().unwrap().time, 3.0);
+        assert!(q.pop().is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn ties_break_by_scheduling_order() {
+        let mut q = EventQueue::new();
+        q.schedule(Event {
+            time: 5.0,
+            client: Some(2),
+            kind: EventKind::UploadDone,
+        });
+        q.schedule(Event {
+            time: 5.0,
+            client: Some(0),
+            kind: EventKind::UploadDone,
+        });
+        assert_eq!(q.pop().unwrap().client, Some(2));
+        assert_eq!(q.pop().unwrap().client, Some(0));
+    }
+
+    #[test]
+    fn deadline_fires_after_same_time_events() {
+        let mut q = EventQueue::new();
+        // Deadline scheduled FIRST (lower seq) but still loses the tie.
+        q.schedule_deadline(ev(10.0, EventKind::RoundDeadline));
+        q.schedule(ev(10.0, EventKind::UploadDone));
+        assert_eq!(q.pop().unwrap().kind, EventKind::UploadDone);
+        assert_eq!(q.pop().unwrap().kind, EventKind::RoundDeadline);
+    }
+
+    #[test]
+    fn deadline_still_respects_time() {
+        let mut q = EventQueue::new();
+        q.schedule_deadline(ev(4.0, EventKind::RoundDeadline));
+        q.schedule(ev(9.0, EventKind::UploadDone));
+        assert_eq!(q.pop().unwrap().kind, EventKind::RoundDeadline);
+    }
+}

@@ -1,0 +1,518 @@
+//! The fleet engine: event-driven execution of one federated round.
+//!
+//! Every participant's round is a chain of typed events on one virtual
+//! clock — `DownloadDone → TrainDone → UploadDone` for fresh jobs
+//! ([`FleetEngine::run_round`]) or a single resumed `UploadDone` for
+//! SAFA's in-flight jobs ([`FleetEngine::run_continuation`]) — preempted
+//! by `GoOffline` / `ComeOnline` churn events and closed by the
+//! `RoundDeadline`. Outputs are the same [`RoundSim`] / [`ContinuationSim`]
+//! records the protocols already consume.
+//!
+//! # Equivalence guarantee
+//!
+//! Under [`AvailabilityModel::BernoulliPerRound`] the engine consumes the
+//! per-(round, client) RNG streams in exactly the legacy order (crash
+//! draw, then crash-partial draw) and accumulates finish times with the
+//! same operation order, so arrivals, times and failure sets are
+//! **bit-for-bit identical** to the seed implementation (asserted by the
+//! property and preset tests in this module).
+//!
+//! # Churn semantics (Markov / trace models)
+//!
+//! * A client offline at round start that never recovers is a `Crash`
+//!   failure with zero partial progress (it never trained).
+//! * A mid-round `GoOffline` before the upload lands is a `Crash` with
+//!   partial progress equal to the fraction of the job done at the drop.
+//!   In continuation mode the paused job conservatively keeps its full
+//!   remaining time (progress in a partially-online round is dropped).
+//! * A `ComeOnline` recovery lets the client start (or resume) late; jobs
+//!   that still fit before `T_lim` commit. A late starter that misses the
+//!   deadline is an `Overtime` failure in [`FleetEngine::run_round`]
+//!   (fresh jobs are round-scoped), while in
+//!   [`FleetEngine::run_continuation`] it counts as crashed-for-the-round
+//!   rather than a straggler, because the client was not online for the
+//!   round's full span.
+//! * Ties between a drop and an upload at the same instant resolve in
+//!   favour of the drop (the crash event is scheduled first).
+
+use super::availability::{AvailabilityModel, ClientWindow};
+use super::event::{Event, EventKind, EventQueue};
+use crate::client::ClientState;
+use crate::config::ExperimentConfig;
+use crate::error::Result;
+use crate::net::NetworkModel;
+use crate::sim::{Arrival, ContinuationSim, FailReason, RoundSim};
+use crate::util::rng::Pcg64;
+
+/// Shared references a [`FleetEngine::run_round`] call needs (bundled to
+/// keep the call site readable and the argument list short).
+pub struct RoundCtx<'a> {
+    pub cfg: &'a ExperimentConfig,
+    pub net: &'a NetworkModel,
+    pub clients: &'a [ClientState],
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// Offline, waiting for a `ComeOnline` recovery.
+    Idle,
+    /// Online and working through its event chain.
+    Active,
+    Done,
+    Failed,
+}
+
+struct Slot {
+    /// When this participant's job (re)starts (0.0, or the recovery time).
+    start: f64,
+    /// Full job duration from `start` (download + train + upload).
+    duration: f64,
+    phase: Phase,
+    synced: bool,
+}
+
+/// Discrete-event simulator for a fleet of clients under an availability
+/// model. One engine instance should drive all rounds of a run so that
+/// Markov churn state persists across rounds; the availability draws use
+/// per-(round, client) streams, so patterns are identical across
+/// protocols for the same seed regardless of which protocol runs.
+pub struct FleetEngine {
+    avail: AvailabilityModel,
+    /// Fleet size. Windows are drawn for the *whole* fleet every round so
+    /// Markov state advances identically no matter which subset a
+    /// protocol selects.
+    m: usize,
+    /// Persisted per-client on/off state (Markov churn).
+    churn_state: Vec<Option<bool>>,
+}
+
+impl FleetEngine {
+    pub fn new(avail: AvailabilityModel, m: usize) -> FleetEngine {
+        FleetEngine {
+            avail,
+            m,
+            churn_state: vec![None; m],
+        }
+    }
+
+    /// Build from the experiment config (`env.churn`); loads the trace
+    /// file for trace replay.
+    pub fn from_config(cfg: &ExperimentConfig) -> Result<FleetEngine> {
+        Ok(FleetEngine::new(
+            AvailabilityModel::from_env(&cfg.env)?,
+            cfg.env.m,
+        ))
+    }
+
+    pub fn availability(&self) -> &AvailabilityModel {
+        &self.avail
+    }
+
+    fn ensure_fleet(&mut self, m: usize) {
+        if m > self.m {
+            self.m = m;
+            self.churn_state.resize(m, None);
+        }
+    }
+
+    /// Draw this round's availability windows, returning each drawn
+    /// client's window plus its RNG stream positioned after the
+    /// availability draw (the Bernoulli crash-partial draw continues
+    /// from there, exactly like the legacy simulator).
+    ///
+    /// Markov churn advances the *whole* fleet so the on/off pattern is
+    /// identical no matter which subset a protocol selects; the
+    /// stateless models (Bernoulli, trace) draw participants only —
+    /// per-client streams are independent splits, so skipping
+    /// non-participants changes nothing they observe.
+    fn begin_round(
+        &mut self,
+        t: usize,
+        horizon: f64,
+        round_rng: &Pcg64,
+        participants: &[usize],
+    ) -> Vec<Option<(ClientWindow, Pcg64)>> {
+        let mut windows: Vec<Option<(ClientWindow, Pcg64)>> = vec![None; self.m];
+        if matches!(self.avail, AvailabilityModel::Markov { .. }) {
+            for k in 0..self.m {
+                windows[k] = Some(self.draw_window(k, t, horizon, round_rng));
+            }
+        } else {
+            for &k in participants {
+                if windows[k].is_none() {
+                    windows[k] = Some(self.draw_window(k, t, horizon, round_rng));
+                }
+            }
+        }
+        windows
+    }
+
+    /// Draw one client's window on its per-(round, client) stream,
+    /// returning the stream positioned after the availability draw.
+    fn draw_window(
+        &mut self,
+        k: usize,
+        t: usize,
+        horizon: f64,
+        round_rng: &Pcg64,
+    ) -> (ClientWindow, Pcg64) {
+        let mut crng = round_rng.split(k as u64);
+        let w = self
+            .avail
+            .window(&mut self.churn_state[k], &mut crng, t, k, horizon);
+        (w, crng)
+    }
+
+    /// The paper's crash probability is late-bound in the legacy
+    /// simulator (read from the config at every call); keep that
+    /// contract so tests and sweeps may adjust `cfg.env.crash_prob`
+    /// between rounds.
+    fn refresh_bernoulli(&mut self, cfg: &ExperimentConfig) {
+        if let AvailabilityModel::BernoulliPerRound { crash_prob } = &mut self.avail {
+            *crash_prob = cfg.env.crash_prob;
+        }
+    }
+
+    /// Simulate the training phase of round `t` where every participant
+    /// starts a fresh job (FedAvg / FedCS / fully-local semantics, and
+    /// SAFA's forced syncs). Drop-in replacement for the seed's
+    /// `simulate_round` loop. Participant ids must be distinct (events
+    /// route per client, so a duplicate has no well-defined outcome).
+    pub fn run_round(
+        &mut self,
+        t: usize,
+        ctx: RoundCtx<'_>,
+        participants: &[usize],
+        synced: &[bool],
+        round_rng: &Pcg64,
+    ) -> RoundSim {
+        assert_eq!(participants.len(), synced.len());
+        let t_lim = ctx.cfg.train.t_lim;
+        let epochs = ctx.cfg.train.epochs;
+        self.refresh_bernoulli(ctx.cfg);
+        self.ensure_fleet(ctx.clients.len());
+        let mut windows = self.begin_round(t, t_lim, round_rng, participants);
+
+        let mut q = EventQueue::new();
+        let mut slots: Vec<Slot> = Vec::with_capacity(participants.len());
+        let mut pos_of: Vec<Option<usize>> = vec![None; self.m];
+        let mut failures: Vec<Option<(FailReason, f64)>> = vec![None; participants.len()];
+        let mut arrivals: Vec<(usize, Arrival)> = Vec::new();
+        let mut online_time = 0.0;
+        let mut last_drop = 0.0f64;
+
+        for (pos, (&k, &was_synced)) in participants.iter().zip(synced).enumerate() {
+            assert!(pos_of[k].is_none(), "duplicate participant {k}");
+            let (w, mut crng) = windows[k].take().expect("window drawn for participant");
+            online_time += w.online_seconds(t_lim);
+            pos_of[k] = Some(pos);
+            let t_train = ctx.clients[k].t_train(epochs);
+            let duration = if was_synced { ctx.net.t_down() } else { 0.0 } + t_train + ctx.net.t_up();
+            if w.online_at_start {
+                slots.push(Slot {
+                    start: 0.0,
+                    duration,
+                    phase: Phase::Active,
+                    synced: was_synced,
+                });
+                // Crash first so an exact drop/upload tie favours the drop.
+                if let Some(off) = w.goes_offline_at {
+                    q.schedule(Event {
+                        time: off,
+                        client: Some(k),
+                        kind: EventKind::GoOffline,
+                    });
+                }
+                let head = if was_synced {
+                    Event {
+                        time: ctx.net.t_down(),
+                        client: Some(k),
+                        kind: EventKind::DownloadDone,
+                    }
+                } else {
+                    Event {
+                        time: t_train,
+                        client: Some(k),
+                        kind: EventKind::TrainDone,
+                    }
+                };
+                q.schedule(head);
+            } else if let Some(on) = w.comes_online_at {
+                slots.push(Slot {
+                    start: on,
+                    duration,
+                    phase: Phase::Idle,
+                    synced: was_synced,
+                });
+                q.schedule(Event {
+                    time: on,
+                    client: Some(k),
+                    kind: EventKind::ComeOnline,
+                });
+            } else {
+                // Offline for the whole round. Under Bernoulli this is
+                // the paper's crash: the device trained into the round
+                // and dropped uniformly through its work (legacy second
+                // draw); under churn models it never started.
+                let partial = if self.avail.is_bernoulli() {
+                    crng.next_f64()
+                } else {
+                    0.0
+                };
+                slots.push(Slot {
+                    start: 0.0,
+                    duration,
+                    phase: Phase::Failed,
+                    synced: was_synced,
+                });
+                failures[pos] = Some((FailReason::Crash, partial));
+            }
+        }
+        q.schedule_deadline(Event {
+            time: t_lim,
+            client: None,
+            kind: EventKind::RoundDeadline,
+        });
+
+        while let Some(ev) = q.pop() {
+            if ev.kind == EventKind::RoundDeadline {
+                break;
+            }
+            let k = ev.client.expect("client event without a client");
+            let pos = pos_of[k].expect("event for a non-participant");
+            let slot = &mut slots[pos];
+            match ev.kind {
+                EventKind::ComeOnline => {
+                    if slot.phase == Phase::Idle {
+                        slot.phase = Phase::Active;
+                        let t_train = ctx.clients[k].t_train(epochs);
+                        let head = if slot.synced {
+                            Event {
+                                time: ev.time + ctx.net.t_down(),
+                                client: Some(k),
+                                kind: EventKind::DownloadDone,
+                            }
+                        } else {
+                            Event {
+                                time: ev.time + t_train,
+                                client: Some(k),
+                                kind: EventKind::TrainDone,
+                            }
+                        };
+                        q.schedule(head);
+                    }
+                }
+                EventKind::DownloadDone => {
+                    if slot.phase == Phase::Active {
+                        q.schedule(Event {
+                            time: ev.time + ctx.clients[k].t_train(epochs),
+                            client: Some(k),
+                            kind: EventKind::TrainDone,
+                        });
+                    }
+                }
+                EventKind::TrainDone => {
+                    if slot.phase == Phase::Active {
+                        q.schedule(Event {
+                            time: ev.time + ctx.net.t_up(),
+                            client: Some(k),
+                            kind: EventKind::UploadDone,
+                        });
+                    }
+                }
+                EventKind::UploadDone => {
+                    if slot.phase == Phase::Active {
+                        slot.phase = Phase::Done;
+                        arrivals.push((
+                            pos,
+                            Arrival {
+                                client: k,
+                                time: ev.time,
+                            },
+                        ));
+                    }
+                }
+                EventKind::GoOffline => {
+                    // Only Active slots can drop: a window carries at
+                    // most one transition, so an Idle (offline-at-start)
+                    // client never schedules a GoOffline.
+                    if slot.phase == Phase::Active {
+                        slot.phase = Phase::Failed;
+                        let done = ((ev.time - slot.start) / slot.duration).clamp(0.0, 1.0);
+                        failures[pos] = Some((FailReason::Crash, done));
+                        last_drop = last_drop.max(ev.time);
+                    }
+                }
+                EventKind::RoundDeadline => unreachable!(),
+            }
+        }
+
+        // Deadline: anyone still working goes overtime (the paper counts
+        // them as crashed too, §III-B), credited with the fraction of the
+        // job done by T_lim.
+        for (pos, slot) in slots.iter().enumerate() {
+            if matches!(slot.phase, Phase::Active | Phase::Idle) {
+                let partial = ((t_lim - slot.start) / slot.duration).clamp(0.0, 1.0);
+                failures[pos] = Some((FailReason::Overtime, partial));
+            }
+        }
+
+        RoundSim {
+            arrivals: sort_arrivals(arrivals),
+            failures: participants
+                .iter()
+                .enumerate()
+                .filter_map(|(pos, &k)| failures[pos].map(|(r, p)| (k, r, p)))
+                .collect(),
+            online_time,
+            offline_time: participants.len() as f64 * t_lim - online_time,
+            last_drop,
+        }
+    }
+
+    /// Simulate one round over in-flight jobs (SAFA / FedAsync
+    /// continuation semantics): `jobs[i]` is the remaining work for
+    /// `participants[i]`. Drop-in replacement for the seed's
+    /// `simulate_continuation` loop. Participant ids must be distinct.
+    pub fn run_continuation(
+        &mut self,
+        t: usize,
+        cfg: &ExperimentConfig,
+        participants: &[usize],
+        jobs: &[f64],
+        round_rng: &Pcg64,
+    ) -> ContinuationSim {
+        assert_eq!(participants.len(), jobs.len());
+        let t_lim = cfg.train.t_lim;
+        self.refresh_bernoulli(cfg);
+        let fleet = participants.iter().copied().max().map_or(0, |k| k + 1);
+        self.ensure_fleet(fleet);
+        let mut windows = self.begin_round(t, t_lim, round_rng, participants);
+
+        #[derive(Clone, Copy, PartialEq, Eq)]
+        enum Outcome {
+            Pending,
+            Arrived,
+            Crashed,
+            Straggler,
+        }
+        let mut q = EventQueue::new();
+        let mut outcome = vec![Outcome::Pending; participants.len()];
+        let mut late_start = vec![false; participants.len()];
+        let mut pos_of: Vec<Option<usize>> = vec![None; self.m];
+        let mut arrivals: Vec<(usize, Arrival)> = Vec::new();
+        let mut online_time = 0.0;
+
+        for (pos, (&k, &remaining)) in participants.iter().zip(jobs).enumerate() {
+            assert!(pos_of[k].is_none(), "duplicate participant {k}");
+            let (w, _) = windows[k].take().expect("window drawn for participant");
+            online_time += w.online_seconds(t_lim);
+            pos_of[k] = Some(pos);
+            if w.online_at_start {
+                // Crash first so an exact drop/upload tie favours the drop.
+                if let Some(off) = w.goes_offline_at {
+                    q.schedule(Event {
+                        time: off,
+                        client: Some(k),
+                        kind: EventKind::GoOffline,
+                    });
+                }
+                if remaining.is_finite() {
+                    q.schedule(Event {
+                        time: remaining,
+                        client: Some(k),
+                        kind: EventKind::UploadDone,
+                    });
+                }
+            } else if let Some(on) = w.comes_online_at {
+                late_start[pos] = true;
+                if remaining.is_finite() {
+                    q.schedule(Event {
+                        time: on + remaining,
+                        client: Some(k),
+                        kind: EventKind::UploadDone,
+                    });
+                }
+            } else {
+                outcome[pos] = Outcome::Crashed;
+            }
+        }
+        q.schedule_deadline(Event {
+            time: t_lim,
+            client: None,
+            kind: EventKind::RoundDeadline,
+        });
+
+        while let Some(ev) = q.pop() {
+            if ev.kind == EventKind::RoundDeadline {
+                break;
+            }
+            let k = ev.client.expect("client event without a client");
+            let pos = pos_of[k].expect("event for a non-participant");
+            match ev.kind {
+                EventKind::UploadDone => {
+                    if outcome[pos] == Outcome::Pending {
+                        outcome[pos] = Outcome::Arrived;
+                        arrivals.push((
+                            pos,
+                            Arrival {
+                                client: k,
+                                time: ev.time,
+                            },
+                        ));
+                    }
+                }
+                EventKind::GoOffline => {
+                    if outcome[pos] == Outcome::Pending {
+                        // The job pauses; this round's partial progress is
+                        // conservatively dropped (see module docs).
+                        outcome[pos] = Outcome::Crashed;
+                    }
+                }
+                _ => {}
+            }
+        }
+        for (pos, o) in outcome.iter_mut().enumerate() {
+            if *o == Outcome::Pending {
+                // Online through the deadline but the job spans rounds:
+                // a straggler — unless it started late, in which case it
+                // counts as paused for this round.
+                *o = if late_start[pos] {
+                    Outcome::Crashed
+                } else {
+                    Outcome::Straggler
+                };
+            }
+        }
+
+        ContinuationSim {
+            arrivals: sort_arrivals(arrivals),
+            crashed: participants
+                .iter()
+                .enumerate()
+                .filter(|&(pos, _)| outcome[pos] == Outcome::Crashed)
+                .map(|(_, &k)| k)
+                .collect(),
+            stragglers: participants
+                .iter()
+                .enumerate()
+                .filter(|&(pos, _)| outcome[pos] == Outcome::Straggler)
+                .map(|(_, &k)| k)
+                .collect(),
+            online_time,
+            offline_time: participants.len() as f64 * t_lim - online_time,
+        }
+    }
+}
+
+/// Order arrivals by (time, participant position) — identical to the
+/// legacy stable sort of a participant-ordered vector.
+fn sort_arrivals(mut arrivals: Vec<(usize, Arrival)>) -> Vec<Arrival> {
+    arrivals.sort_by(|a, b| {
+        a.1.time
+            .partial_cmp(&b.1.time)
+            .unwrap()
+            .then(a.0.cmp(&b.0))
+    });
+    arrivals.into_iter().map(|(_, a)| a).collect()
+}

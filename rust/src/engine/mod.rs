@@ -1,0 +1,301 @@
+//! Discrete-event fleet engine: a binary-heap event scheduler over one
+//! global virtual clock, typed events (`DownloadDone`, `TrainDone`,
+//! `UploadDone`, `GoOffline`, `ComeOnline`, `RoundDeadline`) and
+//! pluggable client-availability models.
+//!
+//! The engine is the single execution substrate for every protocol:
+//! SAFA, FedAvg, FedCS, the fully-local baseline and the FedAsync
+//! baseline all drive their rounds through [`FleetEngine`] (held by
+//! `protocol::FedEnv`). Three availability models plug in:
+//!
+//! * per-round Bernoulli crashes (paper parity — bit-for-bit equivalent
+//!   to the seed's `simulate_round` / `simulate_continuation` loops),
+//! * two-state Markov on/off churn with exponential dwell times and
+//!   mid-round `GoOffline` / `ComeOnline` events,
+//! * deterministic trace replay loaded from a file named in the config.
+//!
+//! All availability draws come from the existing per-(round, client) RNG
+//! streams (`round_rng.split(k)`), so crash/churn patterns are
+//! reproducible and identical across protocols for a given seed.
+
+mod availability;
+mod event;
+mod fleet;
+
+pub use availability::{parse_trace, AvailabilityModel, ClientWindow};
+pub use event::{Event, EventKind, EventQueue};
+pub use fleet::{FleetEngine, RoundCtx};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, ChurnModel, ExperimentConfig};
+    use crate::net::NetworkModel;
+    use crate::protocol::FedEnv;
+    use crate::sim::{
+        reference_continuation, reference_round, simulate_continuation, simulate_round,
+        ContinuationSim, RoundSim,
+    };
+    use crate::util::proptest::property;
+    use crate::util::rng::Pcg64;
+
+    fn assert_round_eq(engine: &RoundSim, reference: &RoundSim, ctx: &str) {
+        assert_eq!(
+            engine.arrivals.len(),
+            reference.arrivals.len(),
+            "{ctx}: arrival count"
+        );
+        for (a, b) in engine.arrivals.iter().zip(&reference.arrivals) {
+            assert_eq!(a.client, b.client, "{ctx}: arrival order");
+            assert_eq!(a.time.to_bits(), b.time.to_bits(), "{ctx}: arrival time");
+        }
+        assert_eq!(engine.failures.len(), reference.failures.len(), "{ctx}: failures");
+        for (&(ka, ra, pa), &(kb, rb, pb)) in engine.failures.iter().zip(&reference.failures) {
+            assert_eq!(ka, kb, "{ctx}: failed client");
+            assert_eq!(ra, rb, "{ctx}: failure reason");
+            assert_eq!(pa.to_bits(), pb.to_bits(), "{ctx}: failure partial");
+        }
+        // Bernoulli crashes are opt-outs at round start — never a
+        // detected mid-round drop.
+        assert_eq!(engine.last_drop.to_bits(), reference.last_drop.to_bits(), "{ctx}: last_drop");
+    }
+
+    fn assert_cont_eq(engine: &ContinuationSim, reference: &ContinuationSim, ctx: &str) {
+        assert_eq!(
+            engine.arrivals.len(),
+            reference.arrivals.len(),
+            "{ctx}: arrival count"
+        );
+        for (a, b) in engine.arrivals.iter().zip(&reference.arrivals) {
+            assert_eq!(a.client, b.client, "{ctx}: arrival order");
+            assert_eq!(a.time.to_bits(), b.time.to_bits(), "{ctx}: arrival time");
+        }
+        assert_eq!(engine.crashed, reference.crashed, "{ctx}: crashed set");
+        assert_eq!(engine.stragglers, reference.stragglers, "{ctx}: stragglers");
+    }
+
+    /// Acceptance: under Bernoulli availability the engine reproduces the
+    /// seed implementation exactly on the tiny and task1 presets, seeds
+    /// 1–5, across sync patterns and rounds.
+    #[test]
+    fn engine_matches_seed_implementation_on_presets() {
+        for preset_name in ["tiny", "task1"] {
+            for seed in 1..=5u64 {
+                let mut cfg = presets::preset(preset_name).unwrap();
+                cfg.seed = seed;
+                cfg.env.crash_prob = 0.3;
+                let env = FedEnv::new(&cfg).unwrap();
+                let m = env.m();
+                let parts: Vec<usize> = (0..m).collect();
+                let patterns: Vec<Vec<bool>> = vec![
+                    vec![true; m],
+                    vec![false; m],
+                    (0..m).map(|k| k % 2 == 0).collect(),
+                ];
+                for t in 1..=4 {
+                    let rng = env.round_rng(t, 0xc4a5);
+                    for synced in &patterns {
+                        let ctx = format!("{preset_name} seed={seed} t={t}");
+                        let e = simulate_round(&cfg, &env.net, &env.clients, &parts, synced, &rng);
+                        let r = reference_round(&cfg, &env.net, &env.clients, &parts, synced, &rng);
+                        assert_round_eq(&e, &r, &ctx);
+                    }
+                    // Continuation over realistic in-flight job times.
+                    let jobs: Vec<f64> = env
+                        .clients
+                        .iter()
+                        .map(|c| {
+                            env.net.t_down() + c.t_train(cfg.train.epochs) + env.net.t_up()
+                        })
+                        .collect();
+                    let e = simulate_continuation(&cfg, &parts, &jobs, &rng);
+                    let r = reference_continuation(&cfg, &parts, &jobs, &rng);
+                    assert_cont_eq(&e, &r, &format!("{preset_name} seed={seed} t={t} cont"));
+                }
+            }
+        }
+    }
+
+    /// Property: equivalence holds across random configs, fleet shapes,
+    /// crash rates and deadlines.
+    #[test]
+    fn engine_equivalence_property() {
+        property("engine == seed simulate_round", 40, |g| {
+            let mut cfg = presets::preset("tiny").unwrap();
+            cfg.env.crash_prob = g.f64_range(0.0, 1.0);
+            cfg.train.t_lim = *g.choose(&[10.0, 300.0, 830.0, 1e9]);
+            cfg.env.m = g.usize_range(1, 8);
+            let net = NetworkModel::new(&cfg.env);
+            let clients: Vec<crate::client::ClientState> = (0..cfg.env.m)
+                .map(|id| crate::client::ClientState {
+                    id,
+                    perf: g.f64_range(1e-3, 4.0),
+                    batches_per_epoch: g.usize_range(1, 40),
+                    n_k: 10,
+                    local_model: crate::model::ParamVec::zeros(1),
+                    version: 0,
+                    base_version: 0,
+                    committed_last: true,
+                    picked_last: false,
+                    pending_partial: 0.0,
+                    job: None,
+                })
+                .collect();
+            let parts: Vec<usize> = (0..cfg.env.m).collect();
+            let synced: Vec<bool> = (0..cfg.env.m).map(|_| g.bool()).collect();
+            let rng = Pcg64::new(g.u64());
+            let e = simulate_round(&cfg, &net, &clients, &parts, &synced, &rng);
+            let r = reference_round(&cfg, &net, &clients, &parts, &synced, &rng);
+            assert_round_eq(&e, &r, "property");
+
+            let jobs: Vec<f64> = (0..cfg.env.m)
+                .map(|_| g.f64_range(1.0, 2.0 * cfg.train.t_lim))
+                .collect();
+            let e = simulate_continuation(&cfg, &parts, &jobs, &rng);
+            let r = reference_continuation(&cfg, &parts, &jobs, &rng);
+            assert_cont_eq(&e, &r, "property cont");
+        });
+    }
+
+    fn markov_cfg() -> ExperimentConfig {
+        let mut cfg = presets::preset("tiny").unwrap();
+        cfg.env.churn = ChurnModel::Markov {
+            mean_uptime_s: 400.0,
+            mean_downtime_s: 200.0,
+        };
+        cfg
+    }
+
+    /// Satellite: Markov churn preserves the per-seed determinism the
+    /// Bernoulli model guarantees (`crash_pattern_is_per_round_stream`).
+    #[test]
+    fn markov_churn_is_per_round_stream_deterministic() {
+        let cfg = markov_cfg();
+        let env = FedEnv::new(&cfg).unwrap();
+        let parts: Vec<usize> = (0..env.m()).collect();
+        let synced = vec![false; parts.len()];
+        let run = |seed: u64| -> Vec<Vec<usize>> {
+            let mut engine = FleetEngine::from_config(&cfg).unwrap();
+            (1..=6usize)
+                .map(|t| {
+                    let rng = Pcg64::new(seed).split(t as u64);
+                    let ctx = RoundCtx {
+                        cfg: &cfg,
+                        net: &env.net,
+                        clients: &env.clients,
+                    };
+                    engine
+                        .run_round(t, ctx, &parts, &synced, &rng)
+                        .failures
+                        .iter()
+                        .map(|&(k, _, _)| k)
+                        .collect()
+                })
+                .collect()
+        };
+        let a = run(42);
+        let b = run(42);
+        assert_eq!(a, b, "same seed must yield the same churn pattern");
+        let c = run(43);
+        assert_ne!(a, c, "different seeds should (a.s.) differ");
+    }
+
+    /// Markov mid-round drops surface as crashes with in-progress partial
+    /// work, and state persistence keeps dropped clients offline.
+    #[test]
+    fn markov_mid_round_drop_has_partial_progress() {
+        let cfg = markov_cfg();
+        let env = FedEnv::new(&cfg).unwrap();
+        let parts: Vec<usize> = (0..env.m()).collect();
+        let synced = vec![true; parts.len()];
+        let mut engine = FleetEngine::from_config(&cfg).unwrap();
+        let mut saw_partial = false;
+        for t in 1..=40 {
+            let rng = env.round_rng(t, 0xc4a5);
+            let ctx = RoundCtx {
+                cfg: &cfg,
+                net: &env.net,
+                clients: &env.clients,
+            };
+            let sim = engine.run_round(t, ctx, &parts, &synced, &rng);
+            for &(_, reason, partial) in &sim.failures {
+                assert!((0.0..=1.0).contains(&partial));
+                if reason == crate::sim::FailReason::Crash && partial > 0.0 && partial < 1.0 {
+                    saw_partial = true;
+                }
+            }
+            assert!(sim.online_time >= 0.0);
+            assert!(sim.offline_time >= -1e-9);
+        }
+        assert!(saw_partial, "40 Markov rounds produced no mid-round drop");
+    }
+
+    /// `last_drop` reflects detected mid-round disconnects (and only
+    /// those), so the synchronous close rule can wait for them.
+    #[test]
+    fn last_drop_tracks_mid_round_drops() {
+        let cfg = markov_cfg();
+        let env = FedEnv::new(&cfg).unwrap();
+        let parts: Vec<usize> = (0..env.m()).collect();
+        let synced = vec![true; parts.len()];
+        let mut engine = FleetEngine::from_config(&cfg).unwrap();
+        let mut saw_drop = false;
+        for t in 1..=40 {
+            let rng = env.round_rng(t, 0xc4a5);
+            let ctx = RoundCtx {
+                cfg: &cfg,
+                net: &env.net,
+                clients: &env.clients,
+            };
+            let sim = engine.run_round(t, ctx, &parts, &synced, &rng);
+            let mid_round_crash = sim
+                .failures
+                .iter()
+                .any(|&(_, r, p)| r == crate::sim::FailReason::Crash && p > 0.0 && p < 1.0);
+            if mid_round_crash {
+                saw_drop = true;
+                assert!(
+                    sim.last_drop > 0.0 && sim.last_drop <= cfg.train.t_lim,
+                    "t={t}: last_drop {} out of (0, T_lim]",
+                    sim.last_drop
+                );
+            }
+        }
+        assert!(saw_drop, "40 Markov rounds produced no mid-round drop");
+    }
+
+    /// Trace replay is exact: the offline matrix maps straight onto
+    /// failures, and the trace cycles past its end.
+    #[test]
+    fn trace_replay_drives_failures() {
+        let mut cfg = presets::preset("tiny").unwrap(); // m = 4
+        cfg.env.crash_prob = 0.0;
+        let env = FedEnv::new(&cfg).unwrap();
+        let parts: Vec<usize> = (0..env.m()).collect();
+        let synced = vec![false; parts.len()];
+        let rounds = parse_trace("0111\n1011\n1111\n").unwrap();
+        let mut engine = FleetEngine::new(AvailabilityModel::Trace { rounds }, env.m());
+        let mut offline_per_round = Vec::new();
+        for t in 1..=4 {
+            let rng = env.round_rng(t, 0xc4a5);
+            let ctx = RoundCtx {
+                cfg: &cfg,
+                net: &env.net,
+                clients: &env.clients,
+            };
+            let sim = engine.run_round(t, ctx, &parts, &synced, &rng);
+            offline_per_round.push(
+                sim.failures
+                    .iter()
+                    .filter(|&&(_, r, _)| r == crate::sim::FailReason::Crash)
+                    .map(|&(k, _, _)| k)
+                    .collect::<Vec<_>>(),
+            );
+        }
+        assert_eq!(offline_per_round[0], vec![0]);
+        assert_eq!(offline_per_round[1], vec![1]);
+        assert_eq!(offline_per_round[2], Vec::<usize>::new());
+        // Round 4 cycles back to the first trace row.
+        assert_eq!(offline_per_round[3], vec![0]);
+    }
+}

@@ -1,38 +1,67 @@
-//! Library-wide error type.
+//! Library-wide error type (hand-rolled — no `thiserror` offline).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by the SAFA library.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum SafaError {
-    #[error("config error: {0}")]
     Config(String),
-
-    #[error("data error: {0}")]
     Data(String),
-
-    #[error("runtime error: {0}")]
     Runtime(String),
-
-    #[error("artifact error: {0}")]
     Artifact(String),
-
-    #[error("protocol error: {0}")]
     Protocol(String),
-
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("json error: {0}")]
-    Json(#[from] crate::util::json::JsonError),
-
-    #[error("toml error: {0}")]
-    Toml(#[from] crate::util::toml::TomlError),
-
-    #[error("xla error: {0}")]
+    Io(std::io::Error),
+    Json(crate::util::json::JsonError),
+    Toml(crate::util::toml::TomlError),
     Xla(String),
 }
 
+impl fmt::Display for SafaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SafaError::Config(msg) => write!(f, "config error: {msg}"),
+            SafaError::Data(msg) => write!(f, "data error: {msg}"),
+            SafaError::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            SafaError::Artifact(msg) => write!(f, "artifact error: {msg}"),
+            SafaError::Protocol(msg) => write!(f, "protocol error: {msg}"),
+            SafaError::Io(e) => write!(f, "io error: {e}"),
+            SafaError::Json(e) => write!(f, "json error: {e}"),
+            SafaError::Toml(e) => write!(f, "toml error: {e}"),
+            SafaError::Xla(msg) => write!(f, "xla error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SafaError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SafaError::Io(e) => Some(e),
+            SafaError::Json(e) => Some(e),
+            SafaError::Toml(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for SafaError {
+    fn from(e: std::io::Error) -> Self {
+        SafaError::Io(e)
+    }
+}
+
+impl From<crate::util::json::JsonError> for SafaError {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        SafaError::Json(e)
+    }
+}
+
+impl From<crate::util::toml::TomlError> for SafaError {
+    fn from(e: crate::util::toml::TomlError) -> Self {
+        SafaError::Toml(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for SafaError {
     fn from(e: xla::Error) -> Self {
         SafaError::Xla(format!("{e:?}"))
@@ -40,3 +69,28 @@ impl From<xla::Error> for SafaError {
 }
 
 pub type Result<T> = std::result::Result<T, SafaError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_match_variant() {
+        assert_eq!(
+            SafaError::Config("bad".into()).to_string(),
+            "config error: bad"
+        );
+        assert_eq!(
+            SafaError::Artifact("missing".into()).to_string(),
+            "artifact error: missing"
+        );
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let e: SafaError = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.to_string().contains("gone"));
+        use std::error::Error as _;
+        assert!(e.source().is_some());
+    }
+}

@@ -182,8 +182,9 @@ pub fn grid_table(
     table
 }
 
-/// Figs. 6–8: loss traces at C = 0.3 for each crash probability, all
-/// four protocols.
+/// Figs. 6–8: loss traces at C = 0.3 for each crash probability, every
+/// protocol (the paper's four plus the FedAsync baseline as an extra
+/// line).
 pub fn loss_trace_figure(task: usize, title: &str) -> Vec<Series> {
     let base = accuracy_cfg(task);
     let data = shared_data(&base);

@@ -7,8 +7,10 @@
 //! * **L3 (this crate)** — the federated coordinator: SAFA's lag-tolerant
 //!   model distribution (Eq. 3), post-training CFCFM client selection
 //!   (Alg. 1) and three-step discriminative aggregation (Eqs. 6–8), plus
-//!   FedAvg / FedCS / fully-local baselines, a discrete-event edge
-//!   simulator and the paper's full metric suite.
+//!   FedAvg / FedCS / FedAsync / fully-local baselines, a discrete-event
+//!   fleet engine ([`engine`]) with pluggable client-churn models
+//!   (Bernoulli / Markov on-off / trace replay) and the paper's full
+//!   metric suite.
 //! * **L2/L1 (python/, build-time only)** — JAX task models whose hot
 //!   spot is a Pallas fused-linear kernel, AOT-lowered once to HLO text.
 //! * **Runtime bridge** — [`runtime`] loads those artifacts with the
@@ -24,6 +26,7 @@ pub mod client;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod error;
 pub mod experiments;
 pub mod metrics;

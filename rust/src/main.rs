@@ -1,8 +1,11 @@
 //! `safa` — launcher CLI for the SAFA federated-learning reproduction.
 //!
 //! ```text
-//! safa run     [--preset task1] [--protocol safa|fedavg|fedcs|local]
+//! safa run     [--preset task1] [--protocol safa|fedavg|fedcs|fedasync|local]
 //!              [--c 0.3] [--cr 0.1] [--tau 5] [--rounds N] [--seed S]
+//!              [--alpha 0.6] [--staleness-exp 0.5]
+//!              [--churn bernoulli|markov|trace] [--churn-uptime 2000]
+//!              [--churn-downtime 500] [--churn-trace file.txt]
 //!              [--backend native|xla|null] [--config file.toml]
 //!              [--out results/run.json]
 //! safa sweep   [--preset task1] [--protocols safa,fedavg]
@@ -12,10 +15,12 @@
 //! ```
 
 use safa::bench_harness::{write_results_file, Series, Table};
-use safa::config::{presets, Backend, ExperimentConfig, ProtocolKind};
+use safa::config::{presets, Backend, ChurnModel, ExperimentConfig, ProtocolKind};
 use safa::coordinator::run_experiment;
-use safa::util::cli::Args;
+use safa::util::cli::{Args, CliError};
 use safa::util::logging;
+
+type CliResult<T> = Result<T, Box<dyn std::error::Error>>;
 
 fn main() {
     logging::init();
@@ -44,7 +49,7 @@ fn main() {
         }
     }
     .map_or_else(
-        |e: anyhow::Error| {
+        |e: Box<dyn std::error::Error>| {
             eprintln!("error: {e}");
             1
         },
@@ -61,12 +66,16 @@ fn print_help() {
          \x20 run      run one experiment (see --preset/--protocol/--c/--cr/--tau)\n\
          \x20 sweep    run a protocol × C × cr grid and print a paper-style table\n\
          \x20 bias     print the Fig. 5 closed-form bias series\n\
-         \x20 presets  list available presets\n"
+         \x20 presets  list available presets\n\
+         \n\
+         Protocols: safa, fedavg, fedcs, fedasync (--alpha/--staleness-exp), local\n\
+         Churn:     --churn bernoulli|markov|trace, with --churn-uptime /\n\
+         \x20          --churn-downtime (seconds, markov) or --churn-trace <file>\n"
     );
 }
 
 /// Build a config from --config/--preset plus CLI overrides.
-fn build_config(args: &Args) -> anyhow::Result<ExperimentConfig> {
+fn build_config(args: &Args) -> CliResult<ExperimentConfig> {
     let mut cfg = if let Some(path) = args.get("config") {
         let text = std::fs::read_to_string(path)?;
         let doc = safa::util::toml::parse(&text)?;
@@ -86,6 +95,28 @@ fn build_config(args: &Args) -> anyhow::Result<ExperimentConfig> {
     if let Some(tau) = args.get_parsed::<usize>("tau")? {
         cfg.protocol.tau = tau;
     }
+    if let Some(a) = args.get_parsed::<f64>("alpha")? {
+        cfg.protocol.alpha = a;
+    }
+    if let Some(a) = args.get_parsed::<f64>("staleness-exp")? {
+        cfg.protocol.staleness_exp = a;
+    }
+    if let Some(choice) = args.get_choice("churn", &["bernoulli", "markov", "trace"])? {
+        cfg.env.churn = ChurnModel::from_parts(
+            &choice,
+            args.get_parsed::<f64>("churn-uptime")?,
+            args.get_parsed::<f64>("churn-downtime")?,
+            args.get("churn-trace"),
+        )?;
+    } else if args.get("churn-uptime").is_some()
+        || args.get("churn-downtime").is_some()
+        || args.get("churn-trace").is_some()
+    {
+        return Err(CliError(
+            "--churn-uptime/--churn-downtime/--churn-trace require --churn <model>".into(),
+        )
+        .into());
+    }
     if let Some(r) = args.get_parsed::<usize>("rounds")? {
         cfg.train.rounds = r;
     }
@@ -102,9 +133,9 @@ fn build_config(args: &Args) -> anyhow::Result<ExperimentConfig> {
     Ok(cfg)
 }
 
-fn cmd_run(args: &Args) -> anyhow::Result<()> {
+fn cmd_run(args: &Args) -> CliResult<()> {
     let cfg = build_config(args)?;
-    log::info!(
+    safa::log_info!(
         "running {} on {} (m={}, C={}, cr={}, tau={}, rounds={})",
         cfg.protocol.kind.name(),
         cfg.task.kind.name(),
@@ -120,7 +151,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         run_experiment(&cfg)?
     };
     println!(
-        "protocol={} rounds={} avg_round_len={:.2}s avg_t_dist={:.2}s SR={:.3} EUR={:.3} VV={:.3} futility={:.3}",
+        "protocol={} rounds={} avg_round_len={:.2}s avg_t_dist={:.2}s SR={:.3} EUR={:.3} VV={:.3} futility={:.3} online={:.3}",
         result.protocol,
         result.rounds.len(),
         result.avg_round_len(),
@@ -129,7 +160,12 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         result.eur(),
         result.version_variance(),
         result.futility(),
+        result.avg_online_fraction(),
     );
+    let hist = result.staleness_histogram();
+    if hist.iter().skip(1).any(|&c| c > 0) {
+        println!("staleness_histogram={hist:?}");
+    }
     if let Some(loss) = result.best_loss() {
         println!("best_loss={loss:.6}");
     }
@@ -149,7 +185,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
 }
 
 /// Run with the XLA (PJRT artifact) backend.
-fn run_with_xla(cfg: &ExperimentConfig) -> anyhow::Result<safa::metrics::RunResult> {
+fn run_with_xla(cfg: &ExperimentConfig) -> CliResult<safa::metrics::RunResult> {
     use safa::coordinator::Coordinator;
     use safa::data::{partition_gaussian, synth, FedData};
     use safa::runtime::XlaTrainer;
@@ -167,7 +203,7 @@ fn run_with_xla(cfg: &ExperimentConfig) -> anyhow::Result<safa::metrics::RunResu
     Ok(Coordinator::with_trainer(cfg, data, Box::new(trainer))?.run())
 }
 
-fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+fn cmd_sweep(args: &Args) -> CliResult<()> {
     let base = build_config(args)?;
     let protocols: Vec<ProtocolKind> = match args.get("protocols") {
         Some(spec) => spec
@@ -206,9 +242,14 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
                     "eur" => r.eur(),
                     "vv" => r.version_variance(),
                     "futility" => r.futility(),
+                    "online" => r.avg_online_fraction(),
                     "best_loss" => r.best_loss().unwrap_or(f64::NAN),
                     "best_accuracy" => r.best_accuracy().unwrap_or(f64::NAN),
-                    other => anyhow::bail!("unknown metric '{other}'"),
+                    other => {
+                        return Err(
+                            CliError(format!("unknown metric '{other}'")).into()
+                        )
+                    }
                 };
                 row.push(v);
             }
@@ -220,7 +261,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_bias(args: &Args) -> anyhow::Result<()> {
+fn cmd_bias(args: &Args) -> CliResult<()> {
     let cr = args.get_or("cr", 0.3)?;
     let rounds = args.get_or("rounds", 20u32)?;
     let (fedavg, [c1, c2, c3]) = safa::analysis::fig5_series(cr, rounds);

@@ -31,6 +31,15 @@ pub struct RoundRecord {
     pub futility_wasted: f64,
     /// Attempted training work this round (denominator contribution).
     pub futility_total: f64,
+    /// Client-seconds the participants spent online within the round's
+    /// deadline window (fleet-engine availability accounting).
+    pub online_time: f64,
+    /// Client-seconds spent offline within the deadline window.
+    pub offline_time: f64,
+    /// Staleness (in rounds) of each update applied to the global model
+    /// this round: 0 = trained on w(t-1). Sync protocols log zeros;
+    /// FedAsync and SAFA log the real lag of what they merged.
+    pub staleness: Vec<u32>,
     /// Mean training loss over committed updates (NaN-free; 0 if none).
     pub train_loss: f64,
     /// Global model quality, when evaluated this round.
@@ -111,6 +120,38 @@ impl RunResult {
         )
     }
 
+    /// Fraction of client-time spent online across the run (1.0 when the
+    /// engine recorded no availability windows).
+    pub fn avg_online_fraction(&self) -> f64 {
+        let online: f64 = self.rounds.iter().map(|r| r.online_time).sum();
+        let total: f64 = self
+            .rounds
+            .iter()
+            .map(|r| r.online_time + r.offline_time)
+            .sum();
+        if total > 0.0 {
+            online / total
+        } else {
+            1.0
+        }
+    }
+
+    /// Histogram of applied-update staleness over the run: index `s`
+    /// counts updates that were `s` rounds stale when merged.
+    pub fn staleness_histogram(&self) -> Vec<usize> {
+        let mut hist: Vec<usize> = Vec::new();
+        for r in &self.rounds {
+            for &s in &r.staleness {
+                let s = s as usize;
+                if hist.len() <= s {
+                    hist.resize(s + 1, 0);
+                }
+                hist[s] += 1;
+            }
+        }
+        hist
+    }
+
     /// Futility percentage: wasted / attempted local work
     /// (Tables XI/XIII/XV).
     pub fn futility(&self) -> f64 {
@@ -181,6 +222,16 @@ impl RunResult {
         o.set("eur", Json::Num(self.eur()));
         o.set("version_variance", Json::Num(self.version_variance()));
         o.set("futility", Json::Num(self.futility()));
+        o.set("online_fraction", Json::Num(self.avg_online_fraction()));
+        o.set(
+            "staleness_histogram",
+            Json::Arr(
+                self.staleness_histogram()
+                    .into_iter()
+                    .map(|c| Json::Num(c as f64))
+                    .collect(),
+            ),
+        );
         if let Some(l) = self.best_loss() {
             o.set("best_loss", Json::Num(l));
         }
@@ -228,6 +279,9 @@ mod tests {
             version_variance: 0.5,
             futility_wasted: 0.1,
             futility_total: 1.0,
+            online_time: 80.0,
+            offline_time: 20.0,
+            staleness: vec![0, 2],
             train_loss: 0.0,
             eval: Some(EvalResult {
                 loss: 1.0 / (round + 1) as f64,
@@ -260,6 +314,20 @@ mod tests {
         assert!((r.futility() - 0.1).abs() < 1e-12);
         assert_eq!(r.best_loss(), Some(0.5));
         assert_eq!(r.best_accuracy(), Some(0.6));
+        assert!((r.avg_online_fraction() - 0.8).abs() < 1e-12);
+        // Two rounds, each logging staleness [0, 2].
+        assert_eq!(r.staleness_histogram(), vec![2, 0, 2]);
+    }
+
+    #[test]
+    fn online_fraction_defaults_to_one_without_windows() {
+        let mut r = run();
+        for rec in r.rounds.iter_mut() {
+            rec.online_time = 0.0;
+            rec.offline_time = 0.0;
+        }
+        assert_eq!(r.avg_online_fraction(), 1.0);
+        assert!(r.to_json().get("staleness_histogram").is_some());
     }
 
     #[test]

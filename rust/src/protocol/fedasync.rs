@@ -1,0 +1,241 @@
+//! FedAsync baseline (Xie et al. 2019, "Asynchronous Federated
+//! Optimization"), the fully-asynchronous comparison point for SAFA's
+//! semi-asynchronous middle ground.
+//!
+//! Server model: there is no selection and no waiting. Every idle client
+//! immediately pulls the *current* global model and starts a new job
+//! (download + E local epochs + upload); jobs continue across rounds
+//! under the engine's continuation semantics (a crash pauses, a long job
+//! spans rounds). Each upload is applied to the global model the moment
+//! it arrives, in arrival order, with a staleness-discounted mixing rate
+//!
+//! ```text
+//! w ← (1 − α_s)·w + α_s·w_k,   α_s = alpha / (1 + s)^a
+//! ```
+//!
+//! where `s` is the update's staleness in rounds (how many global rounds
+//! passed since the client pulled its base model), `alpha` is
+//! `protocol.alpha` and `a` is `protocol.staleness_exp` — the polynomial
+//! discount from the FedAsync paper.
+//!
+//! Within this round-driven harness a "round" is one reporting window:
+//! the server applies every arrival inside the window and the round
+//! closes at the last arrival (it never blocks on stragglers, mirroring
+//! SAFA's close rule without the quota). Staleness is therefore measured
+//! in rounds, which keeps it comparable with SAFA's version lag.
+
+use super::{FedEnv, Protocol};
+use crate::config::ProtocolKind;
+use crate::metrics::RoundRecord;
+use crate::model::ParamVec;
+
+pub struct FedAsync {
+    /// Current global model.
+    global: ParamVec,
+    /// Round index of the last completed reporting window.
+    global_version: i64,
+}
+
+impl FedAsync {
+    pub fn new(global: ParamVec) -> FedAsync {
+        FedAsync {
+            global,
+            global_version: 0,
+        }
+    }
+}
+
+impl Protocol for FedAsync {
+    fn kind(&self) -> ProtocolKind {
+        ProtocolKind::FedAsync
+    }
+
+    fn global(&self) -> &ParamVec {
+        &self.global
+    }
+
+    fn run_round(&mut self, t: usize, env: &mut FedEnv) -> RoundRecord {
+        let m = env.m();
+        let t_i = t as i64;
+        debug_assert_eq!(self.global_version, t_i - 1, "round driven out of order");
+
+        // --- 1. Every idle client pulls the current global and starts a
+        // fresh job. Paused and in-flight jobs continue untouched — the
+        // fully-async server never forces a sync, so no work is ever
+        // destroyed (futility stays zero by construction).
+        let epochs = env.cfg.train.epochs;
+        let (t_down, t_up) = (env.net.t_down(), env.net.t_up());
+        let mut m_sync = 0;
+        for c in env.clients.iter_mut() {
+            if c.job.is_none() {
+                c.local_model.copy_from(&self.global);
+                c.version = t_i - 1;
+                c.base_version = t_i - 1;
+                let total = t_down + c.t_train(epochs) + t_up;
+                c.start_job(total, t_i - 1);
+                m_sync += 1;
+            }
+        }
+        let t_dist = env.net.t_dist(m_sync);
+
+        // --- 2. Advance the whole fleet on the event engine.
+        let participants: Vec<usize> = (0..m).collect();
+        let jobs: Vec<f64> = env
+            .clients
+            .iter()
+            .map(|c| c.job.map(|j| j.remaining).unwrap_or(f64::INFINITY))
+            .collect();
+        let round_rng = env.round_rng(t, 0xc4a5);
+        let sim = env.simulate_continuation(t, &participants, &jobs, &round_rng);
+
+        // --- 3. Apply arrivals immediately, in arrival order, each
+        // discounted by its staleness.
+        let alpha = env.cfg.protocol.alpha;
+        let a_exp = env.cfg.protocol.staleness_exp;
+        let mut staleness: Vec<u32> = Vec::with_capacity(sim.arrivals.len());
+        let mut train_loss_sum = 0.0;
+        for c in env.clients.iter_mut() {
+            c.picked_last = false;
+        }
+        for arr in &sim.arrivals {
+            let k = arr.client;
+            let base_version = env.clients[k].job_base_version();
+            let s = (t_i - 1 - base_version).max(0) as u32;
+            let base = env.clients[k].local_model.clone();
+            let mut rng = env.client_train_rng(t, k);
+            let u = env.trainer.local_update(&base, k, &mut rng);
+            let alpha_s = (alpha / (1.0 + s as f64).powf(a_exp)) as f32;
+            self.global.scale(1.0 - alpha_s);
+            self.global.axpy(alpha_s, &u.params);
+            staleness.push(s);
+            train_loss_sum += u.train_loss;
+            let c = &mut env.clients[k];
+            c.local_model.copy_from(&u.params);
+            c.version = base_version + 1;
+            c.committed_last = true;
+            c.picked_last = true;
+            c.job = None;
+        }
+        self.global_version = t_i;
+
+        // --- 4. Round close: never wait (no quota) — the shared
+        // continuation rule closes at the last arrival, advances
+        // straggler jobs and clears crashed/straggler up-to-date flags.
+        let round_len = super::close_continuation_round(env, &sim, None, t_dist);
+
+        let eval = if t % env.cfg.eval_every == 0 {
+            Some(env.trainer.evaluate(&self.global))
+        } else {
+            None
+        };
+
+        let n_applied = sim.arrivals.len();
+        RoundRecord {
+            round: t,
+            round_len,
+            t_dist,
+            m_sync,
+            n_picked: n_applied,
+            n_crashed: sim.crashed.len() + sim.stragglers.len(),
+            n_committed: n_applied,
+            n_undrafted: 0,
+            version_variance: env.version_variance(),
+            futility_wasted: 0.0,
+            futility_total: m as f64,
+            online_time: sim.online_time,
+            offline_time: sim.offline_time,
+            staleness,
+            train_loss: if n_applied == 0 {
+                0.0
+            } else {
+                train_loss_sum / n_applied as f64
+            },
+            eval,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn tiny_env(crash: f64) -> FedEnv {
+        let mut cfg = presets::preset("tiny").unwrap();
+        cfg.protocol.kind = crate::config::ProtocolKind::FedAsync;
+        cfg.env.crash_prob = crash;
+        FedEnv::new(&cfg).unwrap()
+    }
+
+    #[test]
+    fn round_one_syncs_everyone_and_applies_fresh_updates() {
+        let mut env = tiny_env(0.0);
+        let mut p = FedAsync::new(env.init_global());
+        let rec = p.run_round(1, &mut env);
+        assert_eq!(rec.m_sync, env.m());
+        assert!(rec.t_dist > 0.0);
+        assert_eq!(rec.n_picked, rec.n_committed);
+        assert_eq!(rec.n_committed + rec.n_crashed, env.m());
+        // Everything applied in round 1 trained on w(0): zero staleness.
+        assert!(rec.staleness.iter().all(|&s| s == 0));
+        assert_eq!(rec.staleness.len(), rec.n_committed);
+        // FedAsync never destroys client work.
+        assert_eq!(rec.futility_wasted, 0.0);
+    }
+
+    #[test]
+    fn all_crashed_pauses_jobs_and_keeps_global() {
+        let mut env = tiny_env(1.0);
+        let g0 = env.init_global();
+        let mut p = FedAsync::new(g0.clone());
+        let r1 = p.run_round(1, &mut env);
+        assert_eq!(r1.n_committed, 0);
+        assert_eq!(p.global(), &g0);
+        // Jobs survive the crash round (paused, not destroyed) …
+        assert!(env.clients.iter().all(|c| c.job.is_some()));
+        // … so no fresh syncs happen in round 2.
+        let r2 = p.run_round(2, &mut env);
+        assert_eq!(r2.m_sync, 0);
+    }
+
+    #[test]
+    fn updates_move_the_global_model() {
+        let mut env = tiny_env(0.0);
+        let g0 = env.init_global();
+        let mut p = FedAsync::new(g0.clone());
+        let rec = p.run_round(1, &mut env);
+        if rec.n_committed > 0 {
+            assert!(p.global().dist(&g0) > 0.0, "applied updates must move w");
+        }
+    }
+
+    #[test]
+    fn stale_updates_are_logged_and_discounted() {
+        // Round 1 under full crashes parks every client on a w(0)-based
+        // job; once crashes stop, those jobs commit one or more rounds
+        // late and must be recorded with staleness >= 1.
+        let mut env = tiny_env(1.0);
+        let mut p = FedAsync::new(env.init_global());
+        let _ = p.run_round(1, &mut env);
+        env.cfg.env.crash_prob = 0.0;
+        let mut saw_stale = false;
+        for t in 2..=4 {
+            let rec = p.run_round(t, &mut env);
+            if rec.staleness.iter().any(|&s| s >= 1) {
+                saw_stale = true;
+            }
+        }
+        assert!(saw_stale, "paused jobs should commit with staleness >= 1");
+    }
+
+    #[test]
+    fn discount_weight_shrinks_with_staleness() {
+        // The mixing-rate formula itself (unit sanity, no fleet needed).
+        let alpha = 0.6;
+        let a = 0.5;
+        let w = |s: f64| alpha / (1.0 + s).powf(a);
+        assert!(w(0.0) > w(1.0));
+        assert!(w(1.0) > w(4.0));
+        assert!((w(0.0) - alpha).abs() < 1e-12);
+    }
+}

@@ -16,7 +16,6 @@ use crate::config::ProtocolKind;
 use crate::metrics::RoundRecord;
 use crate::model::ParamVec;
 use crate::net;
-use crate::sim::{simulate_round, FailReason};
 
 pub struct FedAvg {
     global: ParamVec,
@@ -60,21 +59,14 @@ impl Protocol for FedAvg {
 
         let synced = vec![true; selected.len()];
         let round_rng = env.round_rng(t, 0xc4a5);
-        let sim = simulate_round(&env.cfg, &env.net, &env.clients, &selected, &synced, &round_rng);
+        let sim = env.simulate_round(t, &selected, &synced, &round_rng);
         let futility_total = selected.len() as f64;
 
         // The server waits for every selected client it believes alive:
-        // overtime stragglers hold the round open until T_lim; crashes
-        // are detected and skipped.
-        let client_term = if sim
-            .failures
-            .iter()
-            .any(|&(_, reason, _)| reason == FailReason::Overtime)
-        {
-            env.cfg.train.t_lim
-        } else {
-            sim.last_arrival()
-        };
+        // overtime stragglers hold the round open until T_lim; opt-out
+        // crashes are detected at round start and skipped, but a
+        // mid-round disconnect (churn) is only detected when it happens.
+        let client_term = super::sync_close_term(&sim, env.cfg.train.t_lim);
         let round_len = net::round_length(t_dist, client_term, env.cfg.train.t_lim);
 
         // Local training for committed clients.
@@ -130,6 +122,9 @@ impl Protocol for FedAvg {
             version_variance: env.version_variance(),
             futility_wasted,
             futility_total,
+            online_time: sim.online_time,
+            offline_time: sim.offline_time,
+            staleness: vec![0; committed.len()],
             train_loss: if committed.is_empty() {
                 0.0
             } else {

@@ -15,7 +15,6 @@ use crate::config::ProtocolKind;
 use crate::metrics::RoundRecord;
 use crate::model::ParamVec;
 use crate::net;
-use crate::sim::{simulate_round, FailReason};
 
 /// Candidate pool size factor (resource requests per selection slot).
 const POOL_FACTOR: usize = 2;
@@ -78,21 +77,14 @@ impl Protocol for FedCs {
 
         let synced = vec![true; selected.len()];
         let round_rng = env.round_rng(t, 0xc4a5);
-        let sim = simulate_round(&env.cfg, &env.net, &env.clients, &selected, &synced, &round_rng);
+        let sim = env.simulate_round(t, &selected, &synced, &round_rng);
         let futility_total = selected.len() as f64;
 
         // Estimation is accurate, so overtime cannot occur among the
         // selected (they were filtered); the wait ends at the last
-        // non-crashed arrival. Keep the general rule anyway for safety.
-        let client_term = if sim
-            .failures
-            .iter()
-            .any(|&(_, r, _)| r == FailReason::Overtime)
-        {
-            env.cfg.train.t_lim
-        } else {
-            sim.last_arrival()
-        };
+        // non-crashed arrival — or the last detected mid-round drop
+        // under churn (the shared synchronous close rule).
+        let client_term = super::sync_close_term(&sim, env.cfg.train.t_lim);
         let round_len = net::round_length(t_dist, client_term, env.cfg.train.t_lim);
 
         let committed: Vec<usize> = sim.committed().collect();
@@ -142,6 +134,9 @@ impl Protocol for FedCs {
             version_variance: env.version_variance(),
             futility_wasted,
             futility_total,
+            online_time: sim.online_time,
+            offline_time: sim.offline_time,
+            staleness: vec![0; committed.len()],
             train_loss: if committed.is_empty() {
                 0.0
             } else {

@@ -9,7 +9,6 @@ use crate::config::ProtocolKind;
 use crate::metrics::RoundRecord;
 use crate::model::ParamVec;
 use crate::net;
-use crate::sim::simulate_round;
 
 pub struct FullyLocal {
     /// Holds w(0) during training; replaced by the final aggregate in
@@ -43,7 +42,7 @@ impl Protocol for FullyLocal {
         let participants: Vec<usize> = (0..m).collect();
         let synced = vec![false; m];
         let round_rng = env.round_rng(t, 0xc4a5);
-        let sim = simulate_round(&env.cfg, &env.net, &env.clients, &participants, &synced, &round_rng);
+        let sim = env.simulate_round(t, &participants, &synced, &round_rng);
 
         let mut train_loss_sum = 0.0;
         let finished: Vec<usize> = sim.committed().collect();
@@ -54,7 +53,7 @@ impl Protocol for FullyLocal {
             train_loss_sum += u.train_loss;
             let c = &mut env.clients[k];
             c.local_model.copy_from(&u.params);
-            c.version = c.version + 1; // local lineage only
+            c.version += 1; // local lineage only
         }
 
         // Round pacing: last finisher (no uploads, so subtract t_up is
@@ -98,6 +97,9 @@ impl Protocol for FullyLocal {
             version_variance: env.version_variance(),
             futility_wasted: 0.0,
             futility_total: m as f64,
+            online_time: sim.online_time,
+            offline_time: sim.offline_time,
+            staleness: Vec::new(),
             train_loss: if finished.is_empty() {
                 0.0
             } else {

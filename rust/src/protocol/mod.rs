@@ -1,15 +1,21 @@
-//! Federated protocols: SAFA (the paper's contribution) and the three
-//! baselines it is evaluated against (FedAvg, FedCS, fully-local).
+//! Federated protocols: SAFA (the paper's contribution) and the four
+//! baselines it is evaluated against (FedAvg, FedCS, FedAsync,
+//! fully-local).
 //!
 //! A [`Protocol`] drives one federated round at a time against a shared
-//! [`FedEnv`] (clients, data, trainer, network model, RNG). The
-//! coordinator owns the round loop and metric collection.
+//! [`FedEnv`] (clients, data, trainer, network model, fleet engine, RNG).
+//! The coordinator owns the round loop and metric collection; round
+//! execution happens on the discrete-event fleet engine held by the
+//! environment, which honours the configured availability model
+//! (`env.churn`).
 
+mod fedasync;
 mod fedavg;
 mod fedcs;
 mod local;
 mod safa;
 
+pub use fedasync::FedAsync;
 pub use fedavg::FedAvg;
 pub use fedcs::FedCs;
 pub use local::FullyLocal;
@@ -18,8 +24,10 @@ pub use safa::{Safa, SafaOptions};
 use crate::client::{build_clients, ClientState};
 use crate::config::{ExperimentConfig, ProtocolKind};
 use crate::data::{partition_gaussian, synth, FedData};
+use crate::engine::{FleetEngine, RoundCtx};
 use crate::error::Result;
 use crate::metrics::RoundRecord;
+use crate::sim::{ContinuationSim, FailReason, RoundSim};
 use crate::model::{make_trainer, ParamVec, Trainer};
 use crate::net::NetworkModel;
 use crate::util::rng::Pcg64;
@@ -33,6 +41,9 @@ pub struct FedEnv {
     pub clients: Vec<ClientState>,
     pub trainer: Box<dyn Trainer>,
     pub net: NetworkModel,
+    /// Discrete-event round executor (availability model from
+    /// `cfg.env.churn`; Markov churn state persists across rounds here).
+    pub engine: FleetEngine,
     /// Aggregation weights n_k / n (Eq. 7).
     pub weights: Vec<f32>,
     root_rng: Pcg64,
@@ -77,12 +88,14 @@ impl FedEnv {
         let total: f64 = clients.iter().map(|c| c.n_k as f64).sum();
         let weights = clients.iter().map(|c| (c.n_k as f64 / total) as f32).collect();
         let net = NetworkModel::new(&cfg.env);
+        let engine = FleetEngine::from_config(cfg)?;
         Ok(FedEnv {
             cfg: cfg.clone(),
             data,
             clients,
             trainer,
             net,
+            engine,
             weights,
             root_rng,
         })
@@ -93,6 +106,37 @@ impl FedEnv {
     pub fn init_global(&self) -> ParamVec {
         let mut rng = self.root_rng.split(0x1817);
         self.trainer.init_params(&mut rng)
+    }
+
+    /// Run round `t`'s fresh-job training phase on the fleet engine.
+    /// Bundles the disjoint field borrows (`RoundCtx`) so protocols
+    /// don't repeat the plumbing.
+    pub fn simulate_round(
+        &mut self,
+        t: usize,
+        participants: &[usize],
+        synced: &[bool],
+        round_rng: &Pcg64,
+    ) -> RoundSim {
+        let ctx = RoundCtx {
+            cfg: &self.cfg,
+            net: &self.net,
+            clients: &self.clients,
+        };
+        self.engine.run_round(t, ctx, participants, synced, round_rng)
+    }
+
+    /// Run round `t` over in-flight jobs (continuation semantics) on the
+    /// fleet engine.
+    pub fn simulate_continuation(
+        &mut self,
+        t: usize,
+        participants: &[usize],
+        jobs: &[f64],
+        round_rng: &Pcg64,
+    ) -> ContinuationSim {
+        self.engine
+            .run_continuation(t, &self.cfg, participants, jobs, round_rng)
     }
 
     /// RNG stream for round-level events (crashes, selection shuffles).
@@ -142,8 +186,59 @@ pub fn make_protocol(env: &FedEnv) -> Box<dyn Protocol> {
         ProtocolKind::Safa => Box::new(Safa::new(env, global)),
         ProtocolKind::FedAvg => Box::new(FedAvg::new(global)),
         ProtocolKind::FedCs => Box::new(FedCs::new(global)),
+        ProtocolKind::FedAsync => Box::new(FedAsync::new(global)),
         ProtocolKind::FullyLocal => Box::new(FullyLocal::new(global)),
     }
+}
+
+/// Round-close term for synchronous servers (FedAvg / FedCS): anyone
+/// going overtime holds the round open to the deadline; otherwise the
+/// server waits for the last arrival — or the last *detected* mid-round
+/// disconnect under churn (opt-out crashes at round start add no wait).
+pub(crate) fn sync_close_term(sim: &RoundSim, t_lim: f64) -> f64 {
+    if sim
+        .failures
+        .iter()
+        .any(|&(_, reason, _)| reason == FailReason::Overtime)
+    {
+        t_lim
+    } else {
+        sim.last_arrival().max(sim.last_drop)
+    }
+}
+
+/// Close a continuation-semantics round (SAFA / FedAsync): resolve the
+/// client-side term (quota-close time when given, else the last arrival;
+/// with only stragglers left the window spans T_lim; an empty round
+/// closes immediately), advance straggler jobs by the round's duration,
+/// and mark crashed + straggling clients as not up-to-date. Returns the
+/// round length.
+pub(crate) fn close_continuation_round(
+    env: &mut FedEnv,
+    sim: &crate::sim::ContinuationSim,
+    quota_close: Option<f64>,
+    t_dist: f64,
+) -> f64 {
+    let t_lim = env.cfg.train.t_lim;
+    let client_term = quota_close.unwrap_or_else(|| {
+        if !sim.arrivals.is_empty() {
+            sim.last_arrival()
+        } else if !sim.stragglers.is_empty() {
+            t_lim
+        } else {
+            0.0
+        }
+    });
+    let duration = client_term.min(t_lim);
+    for &k in &sim.stragglers {
+        if let Some(job) = env.clients[k].job.as_mut() {
+            job.remaining -= duration;
+        }
+    }
+    for &k in sim.crashed.iter().chain(&sim.stragglers) {
+        env.clients[k].committed_last = false;
+    }
+    crate::net::round_length(t_dist, client_term, t_lim)
 }
 
 /// FedAvg-style weighted aggregation over a committed subset:
@@ -224,6 +319,36 @@ mod tests {
         let agg = aggregate_subset(&env, &[0, 1], &updates).unwrap();
         assert!((agg.0[0] - 1.75).abs() < 1e-6);
         assert!(aggregate_subset(&env, &[], &updates).is_none());
+    }
+
+    #[test]
+    fn sync_close_term_waits_for_overtime_and_drops() {
+        use crate::sim::Arrival;
+        let base = RoundSim {
+            arrivals: vec![Arrival {
+                client: 0,
+                time: 300.0,
+            }],
+            failures: vec![],
+            online_time: 0.0,
+            offline_time: 0.0,
+            last_drop: 0.0,
+        };
+        assert_eq!(sync_close_term(&base, 830.0), 300.0);
+        // A mid-round disconnect after the last arrival holds the round
+        // open until the server detects it.
+        let mut dropped = base.clone();
+        dropped.failures = vec![(1, FailReason::Crash, 0.5)];
+        dropped.last_drop = 700.0;
+        assert_eq!(sync_close_term(&dropped, 830.0), 700.0);
+        // Overtime dominates: the server waits out the full deadline.
+        let mut over = dropped.clone();
+        over.failures.push((2, FailReason::Overtime, 0.9));
+        assert_eq!(sync_close_term(&over, 830.0), 830.0);
+        // Opt-out crashes at round start (Bernoulli) add no wait.
+        let mut optout = base.clone();
+        optout.failures = vec![(1, FailReason::Crash, 0.2)];
+        assert_eq!(sync_close_term(&optout, 830.0), 300.0);
     }
 
     #[test]

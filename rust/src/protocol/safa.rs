@@ -23,8 +23,6 @@ use super::{FedEnv, Protocol};
 use crate::config::ProtocolKind;
 use crate::metrics::RoundRecord;
 use crate::model::ParamVec;
-use crate::net;
-use crate::sim::simulate_continuation;
 
 /// Ablation switches for the design-choice study (bench
 /// `ablation_safa`): disable the bypass (Eq. 8) or CFCFM's compensatory
@@ -58,6 +56,11 @@ pub struct Safa {
     /// Per-client cache entries w*_k (Eq. 6); one per client, initialized
     /// to w(0).
     cache: Vec<ParamVec>,
+    /// Staleness-at-commit of a bypassed (Eq. 8) cache entry that has not
+    /// yet reached an aggregation. Counted into the round record only
+    /// when the entry actually merges (next round's Eq. 7), and dropped
+    /// if a pick or deprecated reset overwrites it first.
+    pending_bypass: Vec<Option<u32>>,
     /// Scratch for the aggregation output (reused every round — avoids a
     /// d-sized allocation on the hot path).
     agg_scratch: ParamVec,
@@ -77,6 +80,7 @@ impl Safa {
             opts,
             global_version: 0,
             cache,
+            pending_bypass: vec![None; env.m()],
             agg_scratch: ParamVec::zeros(dim),
         }
     }
@@ -132,21 +136,14 @@ impl Protocol for Safa {
                 env.clients[k].base_version = t_i - 1;
                 let total =
                     env.net.t_down() + env.clients[k].t_train(epochs) + env.net.t_up();
-                env.clients[k].job = Some(crate::client::Job {
-                    remaining: total,
-                    total,
-                    base_version: t_i - 1,
-                });
+                env.clients[k].start_job(total, t_i - 1);
             } else if env.clients[k].job.is_none() {
                 // Tolerable without a job (committed long ago but never
                 // re-synced — possible only via exotic configs): train on
                 // the stale local model without a download.
                 let total = env.clients[k].t_train(epochs) + env.net.t_up();
-                env.clients[k].job = Some(crate::client::Job {
-                    remaining: total,
-                    total,
-                    base_version: env.clients[k].version,
-                });
+                let base = env.clients[k].version;
+                env.clients[k].start_job(total, base);
             }
         }
         let m_sync = synced.iter().filter(|&&s| s).count();
@@ -160,7 +157,7 @@ impl Protocol for Safa {
             .map(|c| c.job.map(|j| j.remaining).unwrap_or(f64::INFINITY))
             .collect();
         let round_rng = env.round_rng(t, 0xc4a5);
-        let sim = simulate_continuation(&env.cfg, &participants, &jobs, &round_rng);
+        let sim = env.simulate_continuation(t, &participants, &jobs, &round_rng);
         let futility_total = m as f64;
 
         // Run actual local updates only for committed clients (failed
@@ -202,30 +199,16 @@ impl Protocol for Safa {
         while picked.len() < quota && !undrafted.is_empty() {
             picked.push(undrafted.remove(0));
         }
-        // Round close: quota time, else the last arrival (the semi-async
-        // server never blocks on in-flight stragglers — their commits
-        // simply arrive in a later round), else T_lim when only
-        // stragglers remain, else immediate.
-        let client_term = close_time.unwrap_or_else(|| {
-            if !sim.arrivals.is_empty() {
-                sim.last_arrival()
-            } else if !sim.stragglers.is_empty() {
-                env.cfg.train.t_lim
-            } else {
-                0.0
-            }
-        });
-        let round_len = net::round_length(t_dist, client_term, env.cfg.train.t_lim);
-        // Stragglers progress for the round's duration.
-        let duration = client_term.min(env.cfg.train.t_lim);
-        for &k in &sim.stragglers {
-            if let Some(job) = env.clients[k].job.as_mut() {
-                job.remaining -= duration;
-            }
-        }
+        // Round close: quota time, else the shared continuation rule
+        // (the semi-async server never blocks on in-flight stragglers —
+        // their commits simply arrive in a later round). Also advances
+        // straggler jobs and clears crashed/straggler up-to-date flags.
+        let round_len = super::close_continuation_round(env, &sim, close_time, t_dist);
 
         // --- Step 4: three-step discriminative aggregation. ---
-        // (6) Pre-aggregation cache update.
+        // (6) Pre-aggregation cache update. Picked updates carry the lag
+        // of the base model their job trained on (staleness metric).
+        let mut staleness: Vec<u32> = Vec::with_capacity(picked.len());
         for &k in &picked {
             let update = updates
                 .iter()
@@ -233,12 +216,23 @@ impl Protocol for Safa {
                 .map(|(_, p, _)| p)
                 .expect("picked client without update");
             self.cache[k].copy_from(update);
+            self.pending_bypass[k] = None; // bypassed entry overwritten
+            let base = env.clients[k].job_base_version();
+            staleness.push((t_i - 1 - base).max(0) as u32);
         }
         for k in 0..m {
             if deprecated[k] && !picked.contains(&k) {
                 // Deprecated entries are replaced by w(t-1) to purge
                 // heavy staleness (Eq. 6 middle case).
                 self.cache[k].copy_from(&self.global);
+                self.pending_bypass[k] = None;
+            }
+        }
+        // Bypassed entries that survived to this aggregation merge now,
+        // one round later (and one round staler) than they committed.
+        for k in 0..m {
+            if let Some(s) = self.pending_bypass[k].take() {
+                staleness.push(s + 1);
             }
         }
         // (7) SAFA aggregation over ALL m cache entries.
@@ -251,6 +245,9 @@ impl Protocol for Safa {
         // (8) Post-aggregation cache update: bypass carries undrafted
         // updates into the cache for round t+1 (skipped under the
         // no-bypass ablation — undrafted work is then discarded).
+        // A bypassed update only reaches the global model at a *later*
+        // aggregation (if not overwritten first), so its staleness is
+        // parked here and counted when it actually merges.
         for &k in undrafted.iter().filter(|_| self.opts.bypass) {
             let update = updates
                 .iter()
@@ -258,19 +255,19 @@ impl Protocol for Safa {
                 .map(|(_, p, _)| p)
                 .expect("undrafted client without update");
             self.cache[k].copy_from(update);
+            let base = env.clients[k].job_base_version();
+            self.pending_bypass[k] = Some((t_i - 1 - base).max(0) as u32);
         }
 
-        // --- Client state transitions. ---
+        // --- Client state transitions (crashed/straggler flags were
+        // cleared by close_continuation_round). ---
         let committed: Vec<usize> = sim.arrivals.iter().map(|a| a.client).collect();
         let n_failed = sim.crashed.len() + sim.stragglers.len();
-        for &k in sim.crashed.iter().chain(&sim.stragglers) {
-            env.clients[k].committed_last = false;
-        }
         let mut train_loss_sum = 0.0;
         for (k, params, loss) in &updates {
             let c = &mut env.clients[*k];
             c.local_model.copy_from(params);
-            c.version = c.job.map(|j| j.base_version).unwrap_or(c.base_version) + 1;
+            c.version = c.job_base_version() + 1;
             c.committed_last = true;
             c.job = None; // job complete
             train_loss_sum += loss;
@@ -297,6 +294,9 @@ impl Protocol for Safa {
             version_variance: env.version_variance(),
             futility_wasted,
             futility_total,
+            online_time: sim.online_time,
+            offline_time: sim.offline_time,
+            staleness,
             train_loss: if updates.is_empty() {
                 0.0
             } else {

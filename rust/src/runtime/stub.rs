@@ -1,0 +1,70 @@
+//! Stub [`XlaTrainer`] for builds without the `xla` feature.
+//!
+//! Keeps every call site (CLI `--backend xla`, the mnist example, the
+//! artifact-gated integration tests) compiling in the dependency-free
+//! offline build; constructing the trainer reports how to get the real
+//! one instead.
+
+use crate::config::ExperimentConfig;
+use crate::data::FedData;
+use crate::error::{Result, SafaError};
+use crate::model::{EvalResult, LocalUpdate, ParamVec, Trainer};
+use crate::util::rng::Pcg64;
+use std::sync::Arc;
+
+/// Placeholder with the same constructor surface as the PJRT trainer.
+/// Cannot actually be instantiated — `new` always errors.
+pub struct XlaTrainer {
+    _unconstructible: (),
+}
+
+impl XlaTrainer {
+    /// Always fails: this build carries no PJRT runtime.
+    pub fn new(_cfg: &ExperimentConfig, _data: Arc<FedData>) -> Result<XlaTrainer> {
+        Err(SafaError::Runtime(
+            "this build has no XLA runtime; vendor the `xla` crate and rebuild with \
+             `--features xla` (or use --backend native)"
+                .into(),
+        ))
+    }
+}
+
+impl Trainer for XlaTrainer {
+    fn dim(&self) -> usize {
+        unreachable!("stub XlaTrainer cannot be constructed")
+    }
+
+    fn init_params(&self, _rng: &mut Pcg64) -> ParamVec {
+        unreachable!("stub XlaTrainer cannot be constructed")
+    }
+
+    fn local_update(&mut self, _base: &ParamVec, _client: usize, _rng: &mut Pcg64) -> LocalUpdate {
+        unreachable!("stub XlaTrainer cannot be constructed")
+    }
+
+    fn evaluate(&mut self, _params: &ParamVec) -> EvalResult {
+        unreachable!("stub XlaTrainer cannot be constructed")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::data::{partition_gaussian, synth, FedData};
+
+    #[test]
+    fn stub_reports_missing_feature() {
+        let cfg = presets::preset("tiny").unwrap();
+        let (train, test) = synth::generate(cfg.task.kind, cfg.task.n, cfg.task.n_test, 1);
+        let mut rng = Pcg64::new(1);
+        let partitions = partition_gaussian(train.n, cfg.env.m, 0.3, &mut rng);
+        let data = Arc::new(FedData {
+            train,
+            test,
+            partitions,
+        });
+        let err = XlaTrainer::new(&cfg, data).unwrap_err();
+        assert!(err.to_string().contains("--features xla"), "{err}");
+    }
+}

@@ -1,15 +1,21 @@
-//! Discrete-event round simulation.
+//! Round-simulation records and the legacy simulation entry points.
 //!
-//! Given the set of participating clients for a round (who trains, and
-//! who must download the global model first), this module draws crashes,
-//! computes per-client finish times (Eqs. 17–18) and produces the ordered
-//! arrival sequence the protocols consume. Virtual time only — nothing
-//! here blocks on wall-clock.
+//! The actual execution lives in the discrete-event fleet engine
+//! ([`crate::engine`]): a binary-heap scheduler over one virtual clock
+//! with typed events and pluggable availability models. This module keeps
+//! the output records ([`RoundSim`] / [`ContinuationSim`]) and the seed's
+//! two entry points, [`simulate_round`] and [`simulate_continuation`],
+//! which are now thin engine wrappers fixed to the paper's per-round
+//! Bernoulli crash model. Protocols route through the engine held by
+//! `FedEnv` instead, which additionally honours the configured churn
+//! model (`env.churn`); under the default Bernoulli model both paths are
+//! bit-for-bit identical to the seed implementation.
 
 use crate::client::ClientState;
 use crate::config::ExperimentConfig;
+use crate::engine::{AvailabilityModel, FleetEngine, RoundCtx};
 use crate::net::NetworkModel;
-use crate::util::rng::{Bernoulli, Pcg64};
+use crate::util::rng::Pcg64;
 
 /// One committed update arriving at the server.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -23,7 +29,8 @@ pub struct Arrival {
 /// Why a participant failed to commit this round.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FailReason {
-    /// Drew the per-round crash (opt-out / drop-offline) event.
+    /// Drew the per-round crash (opt-out / drop-offline) event, or went
+    /// offline mid-round under a churn model.
     Crash,
     /// Would finish after the round deadline T_lim — the paper reckons
     /// such clients crashed too (§III-B).
@@ -40,6 +47,16 @@ pub struct RoundSim {
     /// before the failure (uniform at crash; capped at deadline fraction
     /// for overtime clients).
     pub failures: Vec<(usize, FailReason, f64)>,
+    /// Client-seconds the participants spent online within the deadline
+    /// window (availability accounting for the churn metrics).
+    pub online_time: f64,
+    /// Client-seconds spent offline within the deadline window.
+    pub offline_time: f64,
+    /// Latest mid-round drop (`GoOffline`) time among failed
+    /// participants — the moment a synchronous server *detects* the last
+    /// disconnect. 0.0 when every crash is an opt-out at round start
+    /// (the Bernoulli model), so Bernoulli behavior is unchanged.
+    pub last_drop: f64,
 }
 
 impl RoundSim {
@@ -59,12 +76,16 @@ impl RoundSim {
 
 /// Simulate the training phase of round `t`.
 ///
-/// * `participants` — client ids that train this round.
+/// * `participants` — client ids that train this round (must be
+///   distinct; the engine routes events per client).
 /// * `synced` — per participant, whether it downloaded the global model
 ///   at round start (adds T_down to its finish time).
 /// * Crash draws come from a per-(round, client) RNG stream derived from
 ///   `round_rng`, so the crash pattern is identical across protocols run
 ///   with the same experiment seed.
+///
+/// This wrapper always uses the paper's per-round Bernoulli model; churn
+/// models need the round index and run through `FedEnv`'s engine.
 pub fn simulate_round(
     cfg: &ExperimentConfig,
     net: &NetworkModel,
@@ -73,33 +94,13 @@ pub fn simulate_round(
     synced: &[bool],
     round_rng: &Pcg64,
 ) -> RoundSim {
-    assert_eq!(participants.len(), synced.len());
-    let crash = Bernoulli::new(cfg.env.crash_prob);
-    let mut arrivals = Vec::with_capacity(participants.len());
-    let mut failures = Vec::new();
-    for (&k, &was_synced) in participants.iter().zip(synced) {
-        let mut crng = round_rng.split(k as u64);
-        let c = &clients[k];
-        let t_train = c.t_train(cfg.train.epochs);
-        let finish =
-            if was_synced { net.t_down() } else { 0.0 } + t_train + net.t_up();
-        if crash.draw(&mut crng) {
-            // Crash strikes uniformly through the round's work.
-            let partial = crng.next_f64();
-            failures.push((k, FailReason::Crash, partial));
-        } else if finish > cfg.train.t_lim {
-            // Progress made by the deadline, as a fraction of the total.
-            let partial = (cfg.train.t_lim / finish).clamp(0.0, 1.0);
-            failures.push((k, FailReason::Overtime, partial));
-        } else {
-            arrivals.push(Arrival {
-                client: k,
-                time: finish,
-            });
-        }
-    }
-    arrivals.sort_by(|a, b| a.time.partial_cmp(&b.time).unwrap());
-    RoundSim { arrivals, failures }
+    let mut engine = FleetEngine::new(
+        AvailabilityModel::BernoulliPerRound {
+            crash_prob: cfg.env.crash_prob,
+        },
+        clients.len(),
+    );
+    engine.run_round(0, RoundCtx { cfg, net, clients }, participants, synced, round_rng)
 }
 
 /// Outcome of simulating one round under SAFA's continuation semantics.
@@ -107,11 +108,16 @@ pub fn simulate_round(
 pub struct ContinuationSim {
     /// Jobs completing this round (remaining ≤ T_lim), by arrival time.
     pub arrivals: Vec<Arrival>,
-    /// Clients offline this round (crash draw) — jobs paused, no loss.
+    /// Clients offline this round (crash draw or churn) — jobs paused,
+    /// no loss.
     pub crashed: Vec<usize>,
     /// Alive clients whose jobs exceed even T_lim — they keep running
     /// into the next round (the paper's stragglers).
     pub stragglers: Vec<usize>,
+    /// Client-seconds online within the deadline window.
+    pub online_time: f64,
+    /// Client-seconds offline within the deadline window.
+    pub offline_time: f64,
 }
 
 impl ContinuationSim {
@@ -134,6 +140,70 @@ pub fn simulate_continuation(
     jobs: &[f64],
     round_rng: &Pcg64,
 ) -> ContinuationSim {
+    let m = participants.iter().copied().max().map_or(0, |k| k + 1);
+    let mut engine = FleetEngine::new(
+        AvailabilityModel::BernoulliPerRound {
+            crash_prob: cfg.env.crash_prob,
+        },
+        m,
+    );
+    engine.run_continuation(0, cfg, participants, jobs, round_rng)
+}
+
+/// The seed's original loop implementation of [`simulate_round`], kept
+/// verbatim as the oracle for the engine equivalence tests.
+#[cfg(test)]
+pub(crate) fn reference_round(
+    cfg: &ExperimentConfig,
+    net: &NetworkModel,
+    clients: &[ClientState],
+    participants: &[usize],
+    synced: &[bool],
+    round_rng: &Pcg64,
+) -> RoundSim {
+    use crate::util::rng::Bernoulli;
+    assert_eq!(participants.len(), synced.len());
+    let crash = Bernoulli::new(cfg.env.crash_prob);
+    let mut arrivals = Vec::with_capacity(participants.len());
+    let mut failures = Vec::new();
+    for (&k, &was_synced) in participants.iter().zip(synced) {
+        let mut crng = round_rng.split(k as u64);
+        let c = &clients[k];
+        let t_train = c.t_train(cfg.train.epochs);
+        let finish = if was_synced { net.t_down() } else { 0.0 } + t_train + net.t_up();
+        if crash.draw(&mut crng) {
+            let partial = crng.next_f64();
+            failures.push((k, FailReason::Crash, partial));
+        } else if finish > cfg.train.t_lim {
+            let partial = (cfg.train.t_lim / finish).clamp(0.0, 1.0);
+            failures.push((k, FailReason::Overtime, partial));
+        } else {
+            arrivals.push(Arrival {
+                client: k,
+                time: finish,
+            });
+        }
+    }
+    arrivals.sort_by(|a, b| a.time.partial_cmp(&b.time).unwrap());
+    RoundSim {
+        arrivals,
+        failures,
+        online_time: 0.0,
+        offline_time: 0.0,
+        last_drop: 0.0,
+    }
+}
+
+/// The seed's original loop implementation of [`simulate_continuation`],
+/// kept verbatim as the oracle for the engine equivalence tests.
+#[cfg(test)]
+pub(crate) fn reference_continuation(
+    cfg: &ExperimentConfig,
+    participants: &[usize],
+    jobs: &[f64],
+    round_rng: &Pcg64,
+) -> ContinuationSim {
+    use crate::util::rng::Bernoulli;
     assert_eq!(participants.len(), jobs.len());
     let crash = Bernoulli::new(cfg.env.crash_prob);
     let mut arrivals = Vec::new();
@@ -157,6 +227,8 @@ pub fn simulate_continuation(
         arrivals,
         crashed,
         stragglers,
+        online_time: 0.0,
+        offline_time: 0.0,
     }
 }
 
@@ -216,6 +288,9 @@ mod tests {
             assert_eq!(reason, FailReason::Crash);
             assert!((0.0..1.0).contains(&partial));
         }
+        // Everyone offline the whole round.
+        assert_eq!(sim.online_time, 0.0);
+        assert!(sim.offline_time > 0.0);
     }
 
     #[test]

@@ -83,6 +83,24 @@ impl Args {
         Ok(self.get_parsed(name)?.unwrap_or(default))
     }
 
+    /// Value of `--name` validated against an allowed set
+    /// (case-insensitive); returns the lowercased choice.
+    pub fn get_choice(&self, name: &str, allowed: &[&str]) -> Result<Option<String>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => {
+                let lower = s.to_ascii_lowercase();
+                if allowed.contains(&lower.as_str()) {
+                    Ok(Some(lower))
+                } else {
+                    Err(CliError(format!(
+                        "--{name}: expected one of {allowed:?}, got '{s}'"
+                    )))
+                }
+            }
+        }
+    }
+
     /// Parse a comma-separated list option, e.g. `--cr 0.1,0.3`.
     pub fn get_list<T: std::str::FromStr>(&self, name: &str) -> Result<Option<Vec<T>>, CliError> {
         match self.get(name) {
@@ -143,6 +161,18 @@ mod tests {
         let args = Args::parse(vec!["--cr", "0.1,0.3, 0.5"], &[]).unwrap();
         let crs: Vec<f64> = args.get_list("cr").unwrap().unwrap();
         assert_eq!(crs, vec![0.1, 0.3, 0.5]);
+    }
+
+    #[test]
+    fn choice_option_validates() {
+        let args = Args::parse(vec!["--churn", "Markov"], &[]).unwrap();
+        assert_eq!(
+            args.get_choice("churn", &["bernoulli", "markov", "trace"])
+                .unwrap(),
+            Some("markov".to_string())
+        );
+        assert_eq!(args.get_choice("missing", &["a"]).unwrap(), None);
+        assert!(args.get_choice("churn", &["bernoulli"]).is_err());
     }
 
     #[test]

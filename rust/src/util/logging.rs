@@ -1,70 +1,186 @@
-//! Tiny logger backend for the `log` facade (no `env_logger` offline).
+//! Tiny self-contained logger (no `log` / `env_logger` offline).
 //!
-//! Level is taken from `SAFA_LOG` (error|warn|info|debug|trace), default
-//! `info`. Output goes to stderr with a monotonic-ish timestamp relative
-//! to process start, which is what you want when comparing against the
-//! simulator's *virtual* clock printed by the coordinator.
+//! Level is taken from `SAFA_LOG` (off|error|warn|info|debug|trace),
+//! default `info`. Output goes to stderr with a monotonic-ish timestamp
+//! relative to process start, which is what you want when comparing
+//! against the simulator's *virtual* clock printed by the coordinator.
+//!
+//! Use through the crate-root macros:
+//!
+//! ```no_run
+//! safa::util::logging::init();
+//! safa::log_info!("round {} done in {:.1}s", 3, 12.5);
+//! ```
 
-use log::{Level, LevelFilter, Metadata, Record};
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
 
-struct SimpleLogger {
-    start: Instant,
+/// Log severity, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
 }
 
-impl log::Log for SimpleLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= log::max_level()
+impl Level {
+    fn rank(self) -> u8 {
+        match self {
+            Level::Error => 1,
+            Level::Warn => 2,
+            Level::Info => 3,
+            Level::Debug => 4,
+            Level::Trace => 5,
+        }
     }
 
-    fn log(&self, record: &Record) {
-        if !self.enabled(record.metadata()) {
-            return;
-        }
-        let t = self.start.elapsed().as_secs_f64();
-        let lvl = match record.level() {
+    fn tag(self) -> &'static str {
+        match self {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
             Level::Info => "INFO ",
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
-        };
-        eprintln!("[{t:10.3}s {lvl} {}] {}", record.target(), record.args());
+        }
     }
-
-    fn flush(&self) {}
 }
 
-static LOGGER: OnceLock<SimpleLogger> = OnceLock::new();
+/// Max enabled rank (0 = everything off). Default: info.
+static MAX_RANK: AtomicU8 = AtomicU8::new(3);
+static START: OnceLock<Instant> = OnceLock::new();
+static ENV_LEVEL: OnceLock<()> = OnceLock::new();
 
-/// Initialize the global logger. Safe to call multiple times.
+/// Initialize the logger: pin the start timestamp and read `SAFA_LOG`.
+/// Safe to call multiple times — the environment level is applied only
+/// once, so later calls never clobber a `set_max_level` override.
 pub fn init() {
-    let logger = LOGGER.get_or_init(|| SimpleLogger {
-        start: Instant::now(),
-    });
-    if log::set_logger(logger).is_ok() {
-        log::set_max_level(level_from_env());
+    START.get_or_init(Instant::now);
+    ENV_LEVEL.get_or_init(|| MAX_RANK.store(rank_from_env(), Ordering::Relaxed));
+}
+
+/// Override the enabled level (`None` disables all output). An explicit
+/// override outranks `SAFA_LOG`: it also consumes the one-time
+/// environment store, so a later `init()` cannot clobber it.
+pub fn set_max_level(level: Option<Level>) {
+    ENV_LEVEL.get_or_init(|| ());
+    MAX_RANK.store(level.map_or(0, Level::rank), Ordering::Relaxed);
+}
+
+/// Is `level` currently enabled?
+pub fn enabled(level: Level) -> bool {
+    level.rank() <= MAX_RANK.load(Ordering::Relaxed)
+}
+
+/// Emit one record (used by the `log_*!` macros; prefer those).
+pub fn log(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    eprintln!("[{t:10.3}s {} {target}] {args}", level.tag());
+}
+
+fn rank_from_env() -> u8 {
+    match std::env::var("SAFA_LOG").as_deref() {
+        Ok("off") => 0,
+        Ok("error") => Level::Error.rank(),
+        Ok("warn") => Level::Warn.rank(),
+        Ok("debug") => Level::Debug.rank(),
+        Ok("trace") => Level::Trace.rank(),
+        _ => Level::Info.rank(),
     }
 }
 
-fn level_from_env() -> LevelFilter {
-    match std::env::var("SAFA_LOG").as_deref() {
-        Ok("error") => LevelFilter::Error,
-        Ok("warn") => LevelFilter::Warn,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("trace") => LevelFilter::Trace,
-        Ok("off") => LevelFilter::Off,
-        _ => LevelFilter::Info,
-    }
+/// Log at error level (crate-root macro; `safa::log_error!` from
+/// binaries).
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Error,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at warn level.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Warn,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at info level.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Info,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at debug level.
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Debug,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at trace level.
+#[macro_export]
+macro_rules! log_trace {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Trace,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
-        super::init();
-        super::init();
-        log::info!("logger smoke");
+        init();
+        init();
+        crate::log_info!("logger smoke {}", 1 + 1);
+    }
+
+    #[test]
+    fn levels_gate_correctly() {
+        // Consume the one-time SAFA_LOG store first so a concurrent
+        // init() (e.g. from init_is_idempotent) cannot land mid-test.
+        init();
+        // MAX_RANK is process-global; restore whatever was configured
+        // (e.g. via SAFA_LOG) rather than clobbering it with a default.
+        let prior = MAX_RANK.load(Ordering::Relaxed);
+        set_max_level(Some(Level::Warn));
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_max_level(None);
+        assert!(!enabled(Level::Error));
+        MAX_RANK.store(prior, Ordering::Relaxed);
     }
 }

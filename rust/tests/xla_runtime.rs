@@ -3,7 +3,11 @@
 //! with the pure-Rust native backend on identical batches.
 //!
 //! These tests skip (pass trivially with a notice) when `artifacts/` has
-//! not been built — run `make artifacts` first for full coverage.
+//! not been built — run `make artifacts` first for full coverage. The
+//! whole file is gated on the `xla` feature: the default offline build
+//! carries only the stub trainer (see `runtime/stub.rs`).
+
+#![cfg(feature = "xla")]
 
 use safa::config::{presets, Backend, ExperimentConfig};
 use safa::coordinator::Coordinator;
