@@ -1,0 +1,57 @@
+//! Scale-axis bench: full SAFA Null-backend rounds across fleet size ×
+//! fork width (the tentpole measurement for the zero-dep parallel
+//! runtime). Sweeps m ∈ {500, 2k, 10k} × SAFA_THREADS-equivalent widths
+//! {1, 2, 4, 8} on one coordinator per fleet size, so the per-round
+//! scratch pools are warm and steady-state rounds are allocation-free.
+//!
+//! Emits `BENCH_fleet_scale.json` (override with `-- --json <path>`;
+//! format documented in EXPERIMENTS.md) plus the usual
+//! `results/fleet_scale.json`. `SAFA_BENCH_FAST=1` trims the grid and
+//! the measurement time for CI smoke runs.
+//!
+//! Each width gets a fresh coordinator and drives the run from round 1,
+//! and round outcomes are bit-identical across widths
+//! (`tests/determinism.rs`) — so every width replays the *same* round
+//! sequence from the same state (widths only differ in how many of
+//! those rounds the calibrated sample count covers).
+
+use safa::bench_harness::{json_path_from_args, Bencher};
+use safa::config::presets;
+use safa::coordinator::Coordinator;
+use safa::util::parallel;
+
+fn main() {
+    safa::util::logging::init();
+    let fast = std::env::var("SAFA_BENCH_FAST").as_deref() == Ok("1");
+    let mut b = Bencher::new();
+    let fleets: &[usize] = if fast {
+        &[500, 2_000]
+    } else {
+        &[500, 2_000, 10_000]
+    };
+    let widths: &[usize] = &[1, 2, 4, 8];
+
+    for &m in fleets {
+        let mut cfg = presets::preset("fleet10k").expect("fleet10k preset");
+        cfg.env.m = m;
+        for &width in widths {
+            // Fresh coordinator per width so every width replays the
+            // identical round sequence from round 1 (SAFA rounds must be
+            // driven in order; scratch pools warm up during calibration).
+            let mut coord = Coordinator::new(&cfg).expect("coordinator");
+            let mut t = 1usize;
+            b.bench(&format!("safa_null_round_m{m}_t{width}"), || {
+                parallel::with_thread_count(width, || {
+                    let rec = coord.protocol.run_round(t, &mut coord.env);
+                    t += 1;
+                    rec.round_len
+                })
+            });
+        }
+    }
+
+    b.write_json("results/fleet_scale.json")
+        .expect("write results");
+    b.write_json(&json_path_from_args("BENCH_fleet_scale.json"))
+        .expect("write BENCH json");
+}

@@ -2,19 +2,21 @@
 //! aggregation (Eq. 7), cache updates, round simulation at m=500, run
 //! setup and the native matmul kernel.
 
-use safa::bench_harness::Bencher;
+use safa::bench_harness::{json_path_from_args, Bencher};
 use safa::config::presets;
 use safa::coordinator::Coordinator;
 use safa::model::tensor::matmul;
-use safa::model::ParamVec;
+use safa::model::{weighted_sum_slices_into, ParamVec};
 use safa::protocol::FedEnv;
+use safa::util::parallel;
 use safa::util::rng::Pcg64;
 
 fn main() {
     safa::util::logging::init();
     let mut b = Bencher::new();
 
-    // Eq. 7 aggregation at Task-2 paper scale: 100 clients x 431k params.
+    // Eq. 7 aggregation at Task-2 paper scale: 100 clients x 431k params
+    // — the serial baseline (one axpy at a time, the pre-pool shape)...
     let dim = 431_080;
     let m = 100;
     let cache: Vec<ParamVec> = (0..m)
@@ -23,12 +25,25 @@ fn main() {
     let weights: Vec<f32> = vec![1.0 / m as f32; m];
     let mut out = ParamVec::zeros(dim);
     b.bench("aggregate_eq7_m100_d431k", || {
-        out.clear();
-        for (w, entry) in weights.iter().zip(&cache) {
-            out.axpy(*w, entry);
-        }
-        out.0[0]
+        parallel::with_thread_count(1, || {
+            out.clear();
+            for (w, entry) in weights.iter().zip(&cache) {
+                out.axpy(*w, entry);
+            }
+            out.0[0]
+        })
     });
+
+    // ... and the chunked weighted-sum kernel at 1 / 2 / 4 widths
+    // (bit-identical output; see tests/determinism.rs).
+    for threads in [1usize, 2, 4] {
+        b.bench(&format!("weighted_sum_eq7_m100_d431k_t{threads}"), || {
+            parallel::with_thread_count(threads, || {
+                weighted_sum_slices_into(&mut out, &weights, &cache);
+                out.0[0]
+            })
+        });
+    }
 
     // Cache entry refresh (Eq. 6 / Eq. 8 path).
     let update = ParamVec(vec![1.5; dim]);
@@ -72,4 +87,8 @@ fn main() {
 
     b.write_json("results/microbench_hotpath.json")
         .expect("write results");
+    // Machine-readable perf trajectory (format in EXPERIMENTS.md);
+    // override the path with `-- --json <path>`.
+    b.write_json(&json_path_from_args("BENCH_hotpath.json"))
+        .expect("write BENCH json");
 }

@@ -123,7 +123,9 @@ impl Bencher {
         self.results.last().unwrap()
     }
 
-    /// Dump all results as JSON under `results/`.
+    /// Dump all results as JSON: an array of
+    /// `{name, mean_ns, stddev_ns, min_ns, max_ns, iters}` objects (the
+    /// `BENCH_*.json` format documented in EXPERIMENTS.md).
     pub fn write_json(&self, path: &str) -> std::io::Result<()> {
         let mut arr = Vec::new();
         for r in &self.results {
@@ -132,11 +134,32 @@ impl Bencher {
             o.set("mean_ns", Json::Num(r.mean_ns));
             o.set("stddev_ns", Json::Num(r.stddev_ns));
             o.set("min_ns", Json::Num(r.min_ns));
+            o.set("max_ns", Json::Num(r.max_ns));
             o.set("iters", Json::Num(r.iters as f64));
             arr.push(o);
         }
         write_results_file(path, &Json::Arr(arr).to_string_pretty())
     }
+}
+
+/// Resolve a bench's machine-readable output path: honour a
+/// `--json <path>` (or `--json=<path>`) argument — `cargo bench --bench
+/// foo -- --json out.json` forwards it — falling back to
+/// `default_path`. With `harness = false` the bench binary owns its
+/// argv, so this is the whole CLI.
+pub fn json_path_from_args(default_path: &str) -> String {
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--json" {
+            match args.next() {
+                Some(p) => return p,
+                None => panic!("--json requires a path argument"),
+            }
+        } else if let Some(p) = a.strip_prefix("--json=") {
+            return p.to_string();
+        }
+    }
+    default_path.to_string()
 }
 
 /// Ensure `results/` exists and write a file inside it.

@@ -175,6 +175,24 @@ pub fn task3_scaled() -> ExperimentConfig {
     cfg
 }
 
+/// Scale-axis preset: a 10 000-client fleet on the timing-only Null
+/// backend, for the parallel-runtime benches (`benches/fleet_scale.rs`)
+/// and large-m churn sweeps. The environment shape (timing constants,
+/// E/B, T_lim, cr) is Task 3's; the dataset is token-sized because the
+/// Null trainer never touches numerics, but n >= 10·m keeps the
+/// Gaussian partitioner meaningful (shards average 10 samples).
+pub fn fleet10k() -> ExperimentConfig {
+    let mut cfg = task3();
+    cfg.name = "fleet10k".into();
+    cfg.env.m = 10_000;
+    cfg.task.n = 100_000;
+    cfg.task.n_test = 100;
+    cfg.backend = Backend::Null;
+    cfg.train.rounds = 10;
+    cfg.eval_every = 1_000_000; // timing study: never evaluate
+    cfg
+}
+
 /// Tiny preset for unit/integration tests and the quickstart example.
 pub fn tiny() -> ExperimentConfig {
     let mut cfg = task1();
@@ -227,6 +245,7 @@ pub fn preset(name: &str) -> Result<ExperimentConfig> {
         "task3-scaled" | "task3_scaled" => Ok(task3_scaled()),
         "task1-churn" | "task1_churn" => Ok(task1_churn()),
         "task2-churn" | "task2_churn" => Ok(task2_churn()),
+        "fleet10k" => Ok(fleet10k()),
         "tiny" => Ok(tiny()),
         "tiny-churn" | "tiny_churn" => Ok(tiny_churn()),
         other => Err(SafaError::Config(format!("unknown preset '{other}'"))),
@@ -243,6 +262,7 @@ pub fn preset_names() -> &'static [&'static str] {
         "task3-scaled",
         "task1-churn",
         "task2-churn",
+        "fleet10k",
         "tiny",
         "tiny-churn",
     ]
@@ -324,6 +344,16 @@ mod tests {
             }
         }
         assert_eq!(preset("tiny").unwrap().env.churn, ChurnModel::Bernoulli);
+    }
+
+    #[test]
+    fn fleet10k_is_null_backend_at_scale() {
+        let cfg = preset("fleet10k").unwrap();
+        assert_eq!(cfg.env.m, 10_000);
+        assert_eq!(cfg.backend, Backend::Null);
+        assert!(cfg.task.n >= cfg.env.m);
+        // Same environment timing shape as Task 3.
+        assert_eq!(cfg.train.t_lim, task3().train.t_lim);
     }
 
     #[test]

@@ -110,6 +110,19 @@ impl AvailabilityModel {
         matches!(self, AvailabilityModel::BernoulliPerRound { .. })
     }
 
+    /// True when the model never produces mid-round transitions (every
+    /// window is whole-round online or whole-round offline) and carries
+    /// no cross-round state. For such models the engine skips the event
+    /// queue entirely: each participant's outcome is independent, so the
+    /// round computes as a parallel per-client map — bit-for-bit equal
+    /// to the event path (and to the seed loop it reproduces).
+    pub fn is_event_free(&self) -> bool {
+        matches!(
+            self,
+            AvailabilityModel::BernoulliPerRound { .. } | AvailabilityModel::Trace { .. }
+        )
+    }
+
     /// Draw client `k`'s window for round `t` (1-based).
     ///
     /// `persisted` carries the client's on/off state across rounds

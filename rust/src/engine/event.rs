@@ -89,6 +89,20 @@ impl EventQueue {
         self.now
     }
 
+    /// Reset for reuse: drop all events and rewind the clock and
+    /// sequence counter, keeping the heap's allocation (the engine's
+    /// round scratch pools queues across rounds).
+    pub fn clear(&mut self) {
+        self.heap.clear();
+        self.seq = 0;
+        self.now = 0.0;
+    }
+
+    /// Pre-reserve heap capacity so steady-state rounds never grow it.
+    pub fn reserve(&mut self, additional: usize) {
+        self.heap.reserve(additional);
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }

@@ -8,6 +8,25 @@
 //! `RoundDeadline`. Outputs are the same [`RoundSim`] / [`ContinuationSim`]
 //! records the protocols already consume.
 //!
+//! # Execution strategy
+//!
+//! Under an *event-free* availability model (Bernoulli, trace replay —
+//! no mid-round transitions, no cross-round state) every participant's
+//! outcome is independent of every other's, so the engine skips the
+//! event queue and computes the round as a chunked parallel map over
+//! participants (`util::parallel`), followed by a serial consolidation
+//! in participant order. Markov churn keeps the full event path (its
+//! windows interact through the shared clock), but its per-client window
+//! draws still fan out across the pool — each client owns an independent
+//! `round_rng.split(k)` stream and its own state cell, so the draw order
+//! across clients is immaterial.
+//!
+//! All per-round storage lives in a [`RoundScratch`] pool owned by the
+//! engine: steady-state rounds are allocation-free (asserted by
+//! `tests/alloc_free.rs` with a counting allocator; the parallel path
+//! additionally allocates per spawned worker thread, so that test pins
+//! the width to 1).
+//!
 //! # Equivalence guarantee
 //!
 //! Under [`AvailabilityModel::BernoulliPerRound`] the engine consumes the
@@ -15,7 +34,9 @@
 //! draw, then crash-partial draw) and accumulates finish times with the
 //! same operation order, so arrivals, times and failure sets are
 //! **bit-for-bit identical** to the seed implementation (asserted by the
-//! property and preset tests in this module).
+//! property and preset tests in this module) — and identical at every
+//! fork width, because chunking never changes any per-participant
+//! computation or the serial consolidation order (`tests/determinism.rs`).
 //!
 //! # Churn semantics (Markov / trace models)
 //!
@@ -42,7 +63,13 @@ use crate::config::ExperimentConfig;
 use crate::error::Result;
 use crate::net::NetworkModel;
 use crate::sim::{Arrival, ContinuationSim, FailReason, RoundSim};
+use crate::util::parallel;
 use crate::util::rng::Pcg64;
+
+/// Minimum per-worker share of the per-client parallel loops (window
+/// draws, direct outcomes). A draw is a few RNG ops, so below ~64 of
+/// them a fork's spawn cost dominates and the engine stays serial.
+const DRAW_GRAIN: usize = 64;
 
 /// Shared references a [`FleetEngine::run_round`] call needs (bundled to
 /// keep the call site readable and the argument list short).
@@ -71,6 +98,62 @@ struct Slot {
     synced: bool,
 }
 
+/// Per-participant outcome of a continuation round (event path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ContState {
+    Pending,
+    Arrived,
+    Crashed,
+    Straggler,
+}
+
+/// Per-participant outcome of an event-free fresh-job round.
+#[derive(Debug, Clone, Copy)]
+struct DirectSlot {
+    online_secs: f64,
+    /// Arrival time when committed (unset while failed).
+    finish: f64,
+    failure: Option<(FailReason, f64)>,
+}
+
+const EMPTY_DIRECT: DirectSlot = DirectSlot {
+    online_secs: 0.0,
+    finish: f64::NAN,
+    failure: None,
+};
+
+/// Per-participant outcome of an event-free continuation round.
+#[derive(Debug, Clone, Copy)]
+enum ContOutcome {
+    Arrived(f64),
+    Crashed,
+    Straggler,
+}
+
+/// Reusable per-round storage: cleared and refilled every round instead
+/// of reallocated, so steady-state rounds cost zero heap traffic no
+/// matter how large the fleet is.
+#[derive(Default)]
+struct RoundScratch {
+    /// Fleet-indexed windows (Markov whole-fleet draws only).
+    windows: Vec<Option<(ClientWindow, Pcg64)>>,
+    /// Participant-indexed window draws (stream positioned after the
+    /// availability draw, exactly like the legacy simulator).
+    draws: Vec<Option<(ClientWindow, Pcg64)>>,
+    /// Fleet-indexed participant positions (duplicate detection + event
+    /// routing).
+    pos_of: Vec<Option<usize>>,
+    slots: Vec<Slot>,
+    failures: Vec<Option<(FailReason, f64)>>,
+    outcome: Vec<ContState>,
+    late_start: Vec<bool>,
+    direct_round: Vec<DirectSlot>,
+    direct_cont: Vec<(f64, ContOutcome)>,
+    /// (participant position, arrival) pairs, sorted before output.
+    arrivals: Vec<(usize, Arrival)>,
+    queue: EventQueue,
+}
+
 /// Discrete-event simulator for a fleet of clients under an availability
 /// model. One engine instance should drive all rounds of a run so that
 /// Markov churn state persists across rounds; the availability draws use
@@ -84,6 +167,8 @@ pub struct FleetEngine {
     m: usize,
     /// Persisted per-client on/off state (Markov churn).
     churn_state: Vec<Option<bool>>,
+    /// Pooled per-round buffers (see [`RoundScratch`]).
+    scratch: RoundScratch,
 }
 
 impl FleetEngine {
@@ -92,6 +177,7 @@ impl FleetEngine {
             avail,
             m,
             churn_state: vec![None; m],
+            scratch: RoundScratch::default(),
         }
     }
 
@@ -115,52 +201,56 @@ impl FleetEngine {
         }
     }
 
-    /// Draw this round's availability windows, returning each drawn
-    /// client's window plus its RNG stream positioned after the
-    /// availability draw (the Bernoulli crash-partial draw continues
-    /// from there, exactly like the legacy simulator).
+    /// Draw this round's availability windows into `scratch.draws`,
+    /// aligned with `participants`: each entry is the drawn window plus
+    /// its RNG stream positioned after the availability draw (the
+    /// Bernoulli crash-partial draw continues from there, exactly like
+    /// the legacy simulator).
     ///
     /// Markov churn advances the *whole* fleet so the on/off pattern is
     /// identical no matter which subset a protocol selects; the
     /// stateless models (Bernoulli, trace) draw participants only —
     /// per-client streams are independent splits, so skipping
-    /// non-participants changes nothing they observe.
-    fn begin_round(
-        &mut self,
-        t: usize,
-        horizon: f64,
-        round_rng: &Pcg64,
-        participants: &[usize],
-    ) -> Vec<Option<(ClientWindow, Pcg64)>> {
-        let mut windows: Vec<Option<(ClientWindow, Pcg64)>> = vec![None; self.m];
-        if matches!(self.avail, AvailabilityModel::Markov { .. }) {
-            for k in 0..self.m {
-                windows[k] = Some(self.draw_window(k, t, horizon, round_rng));
+    /// non-participants changes nothing they observe. Either way the
+    /// draws fan out across the pool: every client owns its own stream
+    /// (and, for Markov, its own state cell), so chunking is invisible
+    /// to the results.
+    fn begin_round(&mut self, t: usize, horizon: f64, round_rng: &Pcg64, participants: &[usize]) {
+        let m = self.m;
+        let avail = &self.avail;
+        let scratch = &mut self.scratch;
+        scratch.draws.clear();
+        scratch.draws.resize(participants.len(), None);
+        if matches!(avail, AvailabilityModel::Markov { .. }) {
+            if scratch.windows.len() < m {
+                scratch.windows.resize(m, None);
+            }
+            parallel::for_each_chunk2(
+                &mut scratch.windows[..m],
+                &mut self.churn_state[..m],
+                DRAW_GRAIN,
+                |base, ws, states| {
+                    for (i, (w, st)) in ws.iter_mut().zip(states.iter_mut()).enumerate() {
+                        let k = base + i;
+                        let mut crng = round_rng.split(k as u64);
+                        *w = Some((avail.window(st, &mut crng, t, k, horizon), crng));
+                    }
+                },
+            );
+            for (pos, &k) in participants.iter().enumerate() {
+                scratch.draws[pos] = scratch.windows[k].take();
             }
         } else {
-            for &k in participants {
-                if windows[k].is_none() {
-                    windows[k] = Some(self.draw_window(k, t, horizon, round_rng));
+            parallel::for_each_chunk(&mut scratch.draws, DRAW_GRAIN, |base, chunk| {
+                for (i, d) in chunk.iter_mut().enumerate() {
+                    let k = participants[base + i];
+                    let mut crng = round_rng.split(k as u64);
+                    // Stateless models never read or write churn state.
+                    let mut state = None;
+                    *d = Some((avail.window(&mut state, &mut crng, t, k, horizon), crng));
                 }
-            }
+            });
         }
-        windows
-    }
-
-    /// Draw one client's window on its per-(round, client) stream,
-    /// returning the stream positioned after the availability draw.
-    fn draw_window(
-        &mut self,
-        k: usize,
-        t: usize,
-        horizon: f64,
-        round_rng: &Pcg64,
-    ) -> (ClientWindow, Pcg64) {
-        let mut crng = round_rng.split(k as u64);
-        let w = self
-            .avail
-            .window(&mut self.churn_state[k], &mut crng, t, k, horizon);
-        (w, crng)
     }
 
     /// The paper's crash probability is late-bound in the legacy
@@ -186,30 +276,180 @@ impl FleetEngine {
         synced: &[bool],
         round_rng: &Pcg64,
     ) -> RoundSim {
+        let mut out = RoundSim::default();
+        self.run_round_into(t, ctx, participants, synced, round_rng, &mut out);
+        out
+    }
+
+    /// [`FleetEngine::run_round`] writing into a caller-owned record
+    /// whose buffers are reused across rounds (the allocation-free form
+    /// the protocols drive).
+    pub fn run_round_into(
+        &mut self,
+        t: usize,
+        ctx: RoundCtx<'_>,
+        participants: &[usize],
+        synced: &[bool],
+        round_rng: &Pcg64,
+        out: &mut RoundSim,
+    ) {
         assert_eq!(participants.len(), synced.len());
-        let t_lim = ctx.cfg.train.t_lim;
-        let epochs = ctx.cfg.train.epochs;
         self.refresh_bernoulli(ctx.cfg);
         self.ensure_fleet(ctx.clients.len());
-        let mut windows = self.begin_round(t, t_lim, round_rng, participants);
+        let p = participants.len();
+        out.arrivals.clear();
+        out.arrivals.reserve(p);
+        out.failures.clear();
+        out.failures.reserve(p);
+        if self.avail.is_event_free() {
+            self.run_round_direct(t, &ctx, participants, synced, round_rng, out);
+        } else {
+            self.run_round_event(t, &ctx, participants, synced, round_rng, out);
+        }
+    }
 
-        let mut q = EventQueue::new();
-        let mut slots: Vec<Slot> = Vec::with_capacity(participants.len());
-        let mut pos_of: Vec<Option<usize>> = vec![None; self.m];
-        let mut failures: Vec<Option<(FailReason, f64)>> = vec![None; participants.len()];
-        let mut arrivals: Vec<(usize, Arrival)> = Vec::new();
+    /// Event-free fast path: no mid-round transitions can occur, so each
+    /// participant's outcome is an independent function of its own RNG
+    /// stream — computed as a parallel map, then consolidated serially
+    /// in participant order (fixed f64 accumulation order, duplicate
+    /// check, output layout — all identical to the event path).
+    fn run_round_direct(
+        &mut self,
+        t: usize,
+        ctx: &RoundCtx<'_>,
+        participants: &[usize],
+        synced: &[bool],
+        round_rng: &Pcg64,
+        out: &mut RoundSim,
+    ) {
+        let t_lim = ctx.cfg.train.t_lim;
+        let epochs = ctx.cfg.train.epochs;
+        let p = participants.len();
+        let (t_down, t_up) = (ctx.net.t_down(), ctx.net.t_up());
+        let clients = ctx.clients;
+        let avail = &self.avail;
+        let scratch = &mut self.scratch;
+        scratch.direct_round.clear();
+        scratch.direct_round.resize(p, EMPTY_DIRECT);
+        parallel::for_each_chunk(&mut scratch.direct_round, DRAW_GRAIN, |base, chunk| {
+            for (i, slot) in chunk.iter_mut().enumerate() {
+                let pos = base + i;
+                let k = participants[pos];
+                let mut crng = round_rng.split(k as u64);
+                let mut state = None; // event-free models carry no churn state
+                let w = avail.window(&mut state, &mut crng, t, k, t_lim);
+                let online_secs = w.online_seconds(t_lim);
+                if w.online_at_start {
+                    // Same accumulation order as the event chain:
+                    // ((down + train) + up).
+                    let head = if synced[pos] { t_down } else { 0.0 };
+                    let finish = head + clients[k].t_train(epochs) + t_up;
+                    *slot = if finish <= t_lim {
+                        DirectSlot {
+                            online_secs,
+                            finish,
+                            failure: None,
+                        }
+                    } else {
+                        DirectSlot {
+                            online_secs,
+                            finish: f64::NAN,
+                            failure: Some((
+                                FailReason::Overtime,
+                                (t_lim / finish).clamp(0.0, 1.0),
+                            )),
+                        }
+                    };
+                } else {
+                    // Offline for the whole round. Under Bernoulli this
+                    // is the paper's crash: the device trained into the
+                    // round and dropped uniformly through its work
+                    // (legacy second draw); under trace replay it never
+                    // started.
+                    let partial = if avail.is_bernoulli() {
+                        crng.next_f64()
+                    } else {
+                        0.0
+                    };
+                    *slot = DirectSlot {
+                        online_secs,
+                        finish: f64::NAN,
+                        failure: Some((FailReason::Crash, partial)),
+                    };
+                }
+            }
+        });
+
+        scratch.pos_of.clear();
+        scratch.pos_of.resize(self.m, None);
+        scratch.arrivals.clear();
+        scratch.arrivals.reserve(p);
+        let mut online_time = 0.0;
+        for (pos, &k) in participants.iter().enumerate() {
+            assert!(scratch.pos_of[k].is_none(), "duplicate participant {k}");
+            scratch.pos_of[k] = Some(pos);
+            let slot = scratch.direct_round[pos];
+            online_time += slot.online_secs;
+            match slot.failure {
+                Some((reason, partial)) => out.failures.push((k, reason, partial)),
+                None => scratch.arrivals.push((
+                    pos,
+                    Arrival {
+                        client: k,
+                        time: slot.finish,
+                    },
+                )),
+            }
+        }
+        sort_arrivals_into(&mut scratch.arrivals, &mut out.arrivals);
+        out.online_time = online_time;
+        out.offline_time = p as f64 * t_lim - online_time;
+        out.last_drop = 0.0;
+    }
+
+    /// Full event path (Markov churn: windows interact through the
+    /// shared clock).
+    fn run_round_event(
+        &mut self,
+        t: usize,
+        ctx: &RoundCtx<'_>,
+        participants: &[usize],
+        synced: &[bool],
+        round_rng: &Pcg64,
+        out: &mut RoundSim,
+    ) {
+        let t_lim = ctx.cfg.train.t_lim;
+        let epochs = ctx.cfg.train.epochs;
+        self.begin_round(t, t_lim, round_rng, participants);
+        let p = participants.len();
+        let m = self.m;
+        let scratch = &mut self.scratch;
+        scratch.pos_of.clear();
+        scratch.pos_of.resize(m, None);
+        scratch.slots.clear();
+        scratch.slots.reserve(p);
+        scratch.failures.clear();
+        scratch.failures.resize(p, None);
+        scratch.arrivals.clear();
+        scratch.arrivals.reserve(p);
+        scratch.queue.clear();
+        scratch.queue.reserve(2 * p + 2);
+        let q = &mut scratch.queue;
         let mut online_time = 0.0;
         let mut last_drop = 0.0f64;
 
         for (pos, (&k, &was_synced)) in participants.iter().zip(synced).enumerate() {
-            assert!(pos_of[k].is_none(), "duplicate participant {k}");
-            let (w, mut crng) = windows[k].take().expect("window drawn for participant");
+            assert!(scratch.pos_of[k].is_none(), "duplicate participant {k}");
+            let (w, mut crng) = scratch.draws[pos]
+                .take()
+                .expect("window drawn for participant");
             online_time += w.online_seconds(t_lim);
-            pos_of[k] = Some(pos);
+            scratch.pos_of[k] = Some(pos);
             let t_train = ctx.clients[k].t_train(epochs);
-            let duration = if was_synced { ctx.net.t_down() } else { 0.0 } + t_train + ctx.net.t_up();
+            let head = if was_synced { ctx.net.t_down() } else { 0.0 };
+            let duration = head + t_train + ctx.net.t_up();
             if w.online_at_start {
-                slots.push(Slot {
+                scratch.slots.push(Slot {
                     start: 0.0,
                     duration,
                     phase: Phase::Active,
@@ -238,7 +478,7 @@ impl FleetEngine {
                 };
                 q.schedule(head);
             } else if let Some(on) = w.comes_online_at {
-                slots.push(Slot {
+                scratch.slots.push(Slot {
                     start: on,
                     duration,
                     phase: Phase::Idle,
@@ -259,13 +499,13 @@ impl FleetEngine {
                 } else {
                     0.0
                 };
-                slots.push(Slot {
+                scratch.slots.push(Slot {
                     start: 0.0,
                     duration,
                     phase: Phase::Failed,
                     synced: was_synced,
                 });
-                failures[pos] = Some((FailReason::Crash, partial));
+                scratch.failures[pos] = Some((FailReason::Crash, partial));
             }
         }
         q.schedule_deadline(Event {
@@ -279,8 +519,8 @@ impl FleetEngine {
                 break;
             }
             let k = ev.client.expect("client event without a client");
-            let pos = pos_of[k].expect("event for a non-participant");
-            let slot = &mut slots[pos];
+            let pos = scratch.pos_of[k].expect("event for a non-participant");
+            let slot = &mut scratch.slots[pos];
             match ev.kind {
                 EventKind::ComeOnline => {
                     if slot.phase == Phase::Idle {
@@ -323,7 +563,7 @@ impl FleetEngine {
                 EventKind::UploadDone => {
                     if slot.phase == Phase::Active {
                         slot.phase = Phase::Done;
-                        arrivals.push((
+                        scratch.arrivals.push((
                             pos,
                             Arrival {
                                 client: k,
@@ -339,7 +579,7 @@ impl FleetEngine {
                     if slot.phase == Phase::Active {
                         slot.phase = Phase::Failed;
                         let done = ((ev.time - slot.start) / slot.duration).clamp(0.0, 1.0);
-                        failures[pos] = Some((FailReason::Crash, done));
+                        scratch.failures[pos] = Some((FailReason::Crash, done));
                         last_drop = last_drop.max(ev.time);
                     }
                 }
@@ -350,24 +590,22 @@ impl FleetEngine {
         // Deadline: anyone still working goes overtime (the paper counts
         // them as crashed too, §III-B), credited with the fraction of the
         // job done by T_lim.
-        for (pos, slot) in slots.iter().enumerate() {
+        for (pos, slot) in scratch.slots.iter().enumerate() {
             if matches!(slot.phase, Phase::Active | Phase::Idle) {
                 let partial = ((t_lim - slot.start) / slot.duration).clamp(0.0, 1.0);
-                failures[pos] = Some((FailReason::Overtime, partial));
+                scratch.failures[pos] = Some((FailReason::Overtime, partial));
             }
         }
 
-        RoundSim {
-            arrivals: sort_arrivals(arrivals),
-            failures: participants
-                .iter()
-                .enumerate()
-                .filter_map(|(pos, &k)| failures[pos].map(|(r, p)| (k, r, p)))
-                .collect(),
-            online_time,
-            offline_time: participants.len() as f64 * t_lim - online_time,
-            last_drop,
+        sort_arrivals_into(&mut scratch.arrivals, &mut out.arrivals);
+        for (pos, &k) in participants.iter().enumerate() {
+            if let Some((reason, partial)) = scratch.failures[pos] {
+                out.failures.push((k, reason, partial));
+            }
         }
+        out.online_time = online_time;
+        out.offline_time = p as f64 * t_lim - online_time;
+        out.last_drop = last_drop;
     }
 
     /// Simulate one round over in-flight jobs (SAFA / FedAsync
@@ -382,32 +620,137 @@ impl FleetEngine {
         jobs: &[f64],
         round_rng: &Pcg64,
     ) -> ContinuationSim {
+        let mut out = ContinuationSim::default();
+        self.run_continuation_into(t, cfg, participants, jobs, round_rng, &mut out);
+        out
+    }
+
+    /// [`FleetEngine::run_continuation`] writing into a caller-owned,
+    /// buffer-reusing record.
+    pub fn run_continuation_into(
+        &mut self,
+        t: usize,
+        cfg: &ExperimentConfig,
+        participants: &[usize],
+        jobs: &[f64],
+        round_rng: &Pcg64,
+        out: &mut ContinuationSim,
+    ) {
         assert_eq!(participants.len(), jobs.len());
-        let t_lim = cfg.train.t_lim;
         self.refresh_bernoulli(cfg);
         let fleet = participants.iter().copied().max().map_or(0, |k| k + 1);
         self.ensure_fleet(fleet);
-        let mut windows = self.begin_round(t, t_lim, round_rng, participants);
-
-        #[derive(Clone, Copy, PartialEq, Eq)]
-        enum Outcome {
-            Pending,
-            Arrived,
-            Crashed,
-            Straggler,
+        let p = participants.len();
+        out.arrivals.clear();
+        out.arrivals.reserve(p);
+        out.crashed.clear();
+        out.crashed.reserve(p);
+        out.stragglers.clear();
+        out.stragglers.reserve(p);
+        if self.avail.is_event_free() {
+            self.run_continuation_direct(t, cfg, participants, jobs, round_rng, out);
+        } else {
+            self.run_continuation_event(t, cfg, participants, jobs, round_rng, out);
         }
-        let mut q = EventQueue::new();
-        let mut outcome = vec![Outcome::Pending; participants.len()];
-        let mut late_start = vec![false; participants.len()];
-        let mut pos_of: Vec<Option<usize>> = vec![None; self.m];
-        let mut arrivals: Vec<(usize, Arrival)> = Vec::new();
+    }
+
+    /// Event-free fast path for continuation rounds (see
+    /// [`FleetEngine::run_round_direct`]).
+    fn run_continuation_direct(
+        &mut self,
+        t: usize,
+        cfg: &ExperimentConfig,
+        participants: &[usize],
+        jobs: &[f64],
+        round_rng: &Pcg64,
+        out: &mut ContinuationSim,
+    ) {
+        let t_lim = cfg.train.t_lim;
+        let p = participants.len();
+        let avail = &self.avail;
+        let scratch = &mut self.scratch;
+        scratch.direct_cont.clear();
+        scratch.direct_cont.resize(p, (0.0, ContOutcome::Crashed));
+        parallel::for_each_chunk(&mut scratch.direct_cont, DRAW_GRAIN, |base, chunk| {
+            for (i, slot) in chunk.iter_mut().enumerate() {
+                let pos = base + i;
+                let k = participants[pos];
+                let mut crng = round_rng.split(k as u64);
+                let mut state = None;
+                let w = avail.window(&mut state, &mut crng, t, k, t_lim);
+                let outcome = if !w.online_at_start {
+                    // Offline: the job pauses (no legacy second draw in
+                    // continuation mode).
+                    ContOutcome::Crashed
+                } else if jobs[pos] <= t_lim {
+                    ContOutcome::Arrived(jobs[pos])
+                } else {
+                    // Online through the deadline but the job spans
+                    // rounds (covers infinite = no job).
+                    ContOutcome::Straggler
+                };
+                *slot = (w.online_seconds(t_lim), outcome);
+            }
+        });
+
+        scratch.pos_of.clear();
+        scratch.pos_of.resize(self.m, None);
+        scratch.arrivals.clear();
+        scratch.arrivals.reserve(p);
+        let mut online_time = 0.0;
+        for (pos, &k) in participants.iter().enumerate() {
+            assert!(scratch.pos_of[k].is_none(), "duplicate participant {k}");
+            scratch.pos_of[k] = Some(pos);
+            let (secs, outcome) = scratch.direct_cont[pos];
+            online_time += secs;
+            match outcome {
+                ContOutcome::Arrived(time) => {
+                    scratch.arrivals.push((pos, Arrival { client: k, time }))
+                }
+                ContOutcome::Crashed => out.crashed.push(k),
+                ContOutcome::Straggler => out.stragglers.push(k),
+            }
+        }
+        sort_arrivals_into(&mut scratch.arrivals, &mut out.arrivals);
+        out.online_time = online_time;
+        out.offline_time = p as f64 * t_lim - online_time;
+    }
+
+    /// Full event path for continuation rounds.
+    fn run_continuation_event(
+        &mut self,
+        t: usize,
+        cfg: &ExperimentConfig,
+        participants: &[usize],
+        jobs: &[f64],
+        round_rng: &Pcg64,
+        out: &mut ContinuationSim,
+    ) {
+        let t_lim = cfg.train.t_lim;
+        self.begin_round(t, t_lim, round_rng, participants);
+        let p = participants.len();
+        let m = self.m;
+        let scratch = &mut self.scratch;
+        scratch.pos_of.clear();
+        scratch.pos_of.resize(m, None);
+        scratch.outcome.clear();
+        scratch.outcome.resize(p, ContState::Pending);
+        scratch.late_start.clear();
+        scratch.late_start.resize(p, false);
+        scratch.arrivals.clear();
+        scratch.arrivals.reserve(p);
+        scratch.queue.clear();
+        scratch.queue.reserve(2 * p + 2);
+        let q = &mut scratch.queue;
         let mut online_time = 0.0;
 
         for (pos, (&k, &remaining)) in participants.iter().zip(jobs).enumerate() {
-            assert!(pos_of[k].is_none(), "duplicate participant {k}");
-            let (w, _) = windows[k].take().expect("window drawn for participant");
+            assert!(scratch.pos_of[k].is_none(), "duplicate participant {k}");
+            let (w, _) = scratch.draws[pos]
+                .take()
+                .expect("window drawn for participant");
             online_time += w.online_seconds(t_lim);
-            pos_of[k] = Some(pos);
+            scratch.pos_of[k] = Some(pos);
             if w.online_at_start {
                 // Crash first so an exact drop/upload tie favours the drop.
                 if let Some(off) = w.goes_offline_at {
@@ -425,7 +768,7 @@ impl FleetEngine {
                     });
                 }
             } else if let Some(on) = w.comes_online_at {
-                late_start[pos] = true;
+                scratch.late_start[pos] = true;
                 if remaining.is_finite() {
                     q.schedule(Event {
                         time: on + remaining,
@@ -434,7 +777,7 @@ impl FleetEngine {
                     });
                 }
             } else {
-                outcome[pos] = Outcome::Crashed;
+                scratch.outcome[pos] = ContState::Crashed;
             }
         }
         q.schedule_deadline(Event {
@@ -448,12 +791,12 @@ impl FleetEngine {
                 break;
             }
             let k = ev.client.expect("client event without a client");
-            let pos = pos_of[k].expect("event for a non-participant");
+            let pos = scratch.pos_of[k].expect("event for a non-participant");
             match ev.kind {
                 EventKind::UploadDone => {
-                    if outcome[pos] == Outcome::Pending {
-                        outcome[pos] = Outcome::Arrived;
-                        arrivals.push((
+                    if scratch.outcome[pos] == ContState::Pending {
+                        scratch.outcome[pos] = ContState::Arrived;
+                        scratch.arrivals.push((
                             pos,
                             Arrival {
                                 client: k,
@@ -463,56 +806,51 @@ impl FleetEngine {
                     }
                 }
                 EventKind::GoOffline => {
-                    if outcome[pos] == Outcome::Pending {
+                    if scratch.outcome[pos] == ContState::Pending {
                         // The job pauses; this round's partial progress is
                         // conservatively dropped (see module docs).
-                        outcome[pos] = Outcome::Crashed;
+                        scratch.outcome[pos] = ContState::Crashed;
                     }
                 }
                 _ => {}
             }
         }
-        for (pos, o) in outcome.iter_mut().enumerate() {
-            if *o == Outcome::Pending {
+        for (pos, o) in scratch.outcome.iter_mut().enumerate() {
+            if *o == ContState::Pending {
                 // Online through the deadline but the job spans rounds:
                 // a straggler — unless it started late, in which case it
                 // counts as paused for this round.
-                *o = if late_start[pos] {
-                    Outcome::Crashed
+                *o = if scratch.late_start[pos] {
+                    ContState::Crashed
                 } else {
-                    Outcome::Straggler
+                    ContState::Straggler
                 };
             }
         }
 
-        ContinuationSim {
-            arrivals: sort_arrivals(arrivals),
-            crashed: participants
-                .iter()
-                .enumerate()
-                .filter(|&(pos, _)| outcome[pos] == Outcome::Crashed)
-                .map(|(_, &k)| k)
-                .collect(),
-            stragglers: participants
-                .iter()
-                .enumerate()
-                .filter(|&(pos, _)| outcome[pos] == Outcome::Straggler)
-                .map(|(_, &k)| k)
-                .collect(),
-            online_time,
-            offline_time: participants.len() as f64 * t_lim - online_time,
+        sort_arrivals_into(&mut scratch.arrivals, &mut out.arrivals);
+        for (pos, &k) in participants.iter().enumerate() {
+            match scratch.outcome[pos] {
+                ContState::Crashed => out.crashed.push(k),
+                ContState::Straggler => out.stragglers.push(k),
+                _ => {}
+            }
         }
+        out.online_time = online_time;
+        out.offline_time = p as f64 * t_lim - online_time;
     }
 }
 
 /// Order arrivals by (time, participant position) — identical to the
-/// legacy stable sort of a participant-ordered vector.
-fn sort_arrivals(mut arrivals: Vec<(usize, Arrival)>) -> Vec<Arrival> {
-    arrivals.sort_by(|a, b| {
+/// legacy stable sort of a participant-ordered vector (positions are
+/// distinct, so the unstable in-place sort is total and allocation-free)
+/// — and append them to `out`.
+fn sort_arrivals_into(tmp: &mut [(usize, Arrival)], out: &mut Vec<Arrival>) {
+    tmp.sort_unstable_by(|a, b| {
         a.1.time
             .partial_cmp(&b.1.time)
             .unwrap()
             .then(a.0.cmp(&b.0))
     });
-    arrivals.into_iter().map(|(_, a)| a).collect()
+    out.extend(tmp.iter().map(|&(_, a)| a));
 }

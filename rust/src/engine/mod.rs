@@ -17,6 +17,15 @@
 //! All availability draws come from the existing per-(round, client) RNG
 //! streams (`round_rng.split(k)`), so crash/churn patterns are
 //! reproducible and identical across protocols for a given seed.
+//!
+//! Execution is pooled and parallel where it can be without changing a
+//! single bit: per-round storage lives in a reused scratch pool
+//! (steady-state rounds are allocation-free), event-free models
+//! (Bernoulli, trace) compute rounds as chunked parallel per-client
+//! maps, and Markov rounds fan their window draws across
+//! `util::parallel`'s scoped pool — see `fleet.rs` for the determinism
+//! argument and `tests/determinism.rs` for the width-invariance
+//! assertions.
 
 mod availability;
 mod event;

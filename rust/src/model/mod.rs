@@ -10,7 +10,7 @@ pub mod native;
 pub mod params;
 pub mod tensor;
 
-pub use params::{weighted_sum_into, ParamVec};
+pub use params::{weighted_sum_into, weighted_sum_slices_into, ParamVec};
 
 use crate::config::ExperimentConfig;
 use crate::data::FedData;
@@ -51,6 +51,25 @@ pub trait Trainer {
 
     /// Loss + accuracy of `params` on the global test set.
     fn evaluate(&mut self, params: &ParamVec) -> EvalResult;
+
+    /// Shared-state view for backends whose `local_update` never touches
+    /// trainer state, letting the server fan client updates out across
+    /// worker threads (`protocol::collect_updates`). `None` (the
+    /// default) keeps the serial path — required for backends that carry
+    /// forward/backward scratch, like the native CNN.
+    fn stateless(&self) -> Option<&dyn StatelessTrainer> {
+        None
+    }
+}
+
+/// A trainer whose client updates are pure functions of `(base, client,
+/// rng)` — no `&mut self` scratch — and therefore safe to run from many
+/// threads at once. Implementations must return bit-identical results
+/// to their `Trainer::local_update` for the same inputs: the parallel
+/// fan-out path relies on that equivalence to stay bit-for-bit equal to
+/// the serial server.
+pub trait StatelessTrainer: Sync {
+    fn local_update_shared(&self, base: &ParamVec, client: usize, rng: &mut Pcg64) -> LocalUpdate;
 }
 
 /// Timing-only backend: parameters never change. Used by the round-length
@@ -77,6 +96,24 @@ impl Trainer for NullTrainer {
         EvalResult {
             loss: 0.0,
             accuracy: 0.0,
+        }
+    }
+
+    fn stateless(&self) -> Option<&dyn StatelessTrainer> {
+        Some(self)
+    }
+}
+
+impl StatelessTrainer for NullTrainer {
+    fn local_update_shared(
+        &self,
+        base: &ParamVec,
+        _client: usize,
+        _rng: &mut Pcg64,
+    ) -> LocalUpdate {
+        LocalUpdate {
+            params: base.clone(),
+            train_loss: 0.0,
         }
     }
 }

@@ -11,7 +11,7 @@
 use super::epoch_order;
 use crate::config::ExperimentConfig;
 use crate::data::FedData;
-use crate::model::{EvalResult, LocalUpdate, ParamVec, Trainer};
+use crate::model::{EvalResult, LocalUpdate, ParamVec, StatelessTrainer, Trainer};
 use crate::util::rng::{Distribution, Normal, Pcg64};
 use std::sync::Arc;
 
@@ -45,22 +45,10 @@ impl LinRegTrainer {
         }
         acc
     }
-}
 
-impl Trainer for LinRegTrainer {
-    fn dim(&self) -> usize {
-        self.d + 1
-    }
-
-    fn init_params(&self, rng: &mut Pcg64) -> ParamVec {
-        // Small Gaussian init; the Python model matches this family.
-        let dist = Normal::new(0.0, 0.01);
-        let mut v: Vec<f32> = (0..self.d).map(|_| dist.sample(rng) as f32).collect();
-        v.push(0.0); // bias starts at the origin
-        ParamVec(v)
-    }
-
-    fn local_update(&mut self, base: &ParamVec, client: usize, rng: &mut Pcg64) -> LocalUpdate {
+    /// The actual SGD loop; `&self` only, so the parallel update path
+    /// ([`StatelessTrainer`]) can share it across worker threads.
+    fn update_impl(&self, base: &ParamVec, client: usize, rng: &mut Pcg64) -> LocalUpdate {
         let mut p = base.clone();
         let shard = &self.data.partitions[client].indices;
         let train = &self.data.train;
@@ -98,6 +86,28 @@ impl Trainer for LinRegTrainer {
             train_loss: last_epoch_loss,
         }
     }
+}
+
+impl Trainer for LinRegTrainer {
+    fn dim(&self) -> usize {
+        self.d + 1
+    }
+
+    fn init_params(&self, rng: &mut Pcg64) -> ParamVec {
+        // Small Gaussian init; the Python model matches this family.
+        let dist = Normal::new(0.0, 0.01);
+        let mut v: Vec<f32> = (0..self.d).map(|_| dist.sample(rng) as f32).collect();
+        v.push(0.0); // bias starts at the origin
+        ParamVec(v)
+    }
+
+    fn local_update(&mut self, base: &ParamVec, client: usize, rng: &mut Pcg64) -> LocalUpdate {
+        self.update_impl(base, client, rng)
+    }
+
+    fn stateless(&self) -> Option<&dyn StatelessTrainer> {
+        Some(self)
+    }
 
     fn evaluate(&mut self, params: &ParamVec) -> EvalResult {
         let test = &self.data.test;
@@ -116,6 +126,12 @@ impl Trainer for LinRegTrainer {
             loss: loss / test.n as f64,
             accuracy: acc / test.n as f64,
         }
+    }
+}
+
+impl StatelessTrainer for LinRegTrainer {
+    fn local_update_shared(&self, base: &ParamVec, client: usize, rng: &mut Pcg64) -> LocalUpdate {
+        self.update_impl(base, client, rng)
     }
 }
 
@@ -146,21 +162,9 @@ impl SvmTrainer {
         }
         acc
     }
-}
 
-impl Trainer for SvmTrainer {
-    fn dim(&self) -> usize {
-        self.d + 1
-    }
-
-    fn init_params(&self, rng: &mut Pcg64) -> ParamVec {
-        let dist = Normal::new(0.0, 0.01);
-        let mut v: Vec<f32> = (0..self.d).map(|_| dist.sample(rng) as f32).collect();
-        v.push(0.0);
-        ParamVec(v)
-    }
-
-    fn local_update(&mut self, base: &ParamVec, client: usize, rng: &mut Pcg64) -> LocalUpdate {
+    /// `&self`-only SGD loop shared by the serial and parallel paths.
+    fn update_impl(&self, base: &ParamVec, client: usize, rng: &mut Pcg64) -> LocalUpdate {
         let mut p = base.clone();
         let shard = &self.data.partitions[client].indices;
         let train = &self.data.train;
@@ -205,6 +209,27 @@ impl Trainer for SvmTrainer {
             train_loss: last_epoch_loss,
         }
     }
+}
+
+impl Trainer for SvmTrainer {
+    fn dim(&self) -> usize {
+        self.d + 1
+    }
+
+    fn init_params(&self, rng: &mut Pcg64) -> ParamVec {
+        let dist = Normal::new(0.0, 0.01);
+        let mut v: Vec<f32> = (0..self.d).map(|_| dist.sample(rng) as f32).collect();
+        v.push(0.0);
+        ParamVec(v)
+    }
+
+    fn local_update(&mut self, base: &ParamVec, client: usize, rng: &mut Pcg64) -> LocalUpdate {
+        self.update_impl(base, client, rng)
+    }
+
+    fn stateless(&self) -> Option<&dyn StatelessTrainer> {
+        Some(self)
+    }
 
     fn evaluate(&mut self, params: &ParamVec) -> EvalResult {
         let test = &self.data.test;
@@ -222,6 +247,12 @@ impl Trainer for SvmTrainer {
             loss: loss / test.n as f64,
             accuracy: correct as f64 / test.n as f64,
         }
+    }
+}
+
+impl StatelessTrainer for SvmTrainer {
+    fn local_update_shared(&self, base: &ParamVec, client: usize, rng: &mut Pcg64) -> LocalUpdate {
+        self.update_impl(base, client, rng)
     }
 }
 

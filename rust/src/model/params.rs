@@ -1,5 +1,69 @@
 //! Flat model-parameter vectors and the linear algebra the aggregation
 //! step needs (weighted averaging, axpy — the L3 hot path).
+//!
+//! # Kernel notes
+//!
+//! The element-wise kernels (`axpy`, `scale`, `copy_from` and the
+//! weighted sums) are manually unrolled 4-wide and, above a size
+//! threshold, chunked across the scoped pool (`util::parallel`). Both
+//! transformations preserve bit-for-bit results: unrolling element-wise
+//! ops does not reorder any per-element arithmetic, and parallel chunks
+//! partition the index space so each element's update sequence is
+//! unchanged. In particular [`weighted_sum_into`] folds the entries in
+//! a *fixed order per element* (entry 0, 1, 2, …), so Eq. 7 aggregation
+//! is identical across thread counts — asserted by
+//! `tests/determinism.rs`.
+//!
+//! The reductions (`norm`, `dist`) use four independent accumulators to
+//! unlock autovectorization; that *does* reorder the f64 sum, so they
+//! are only tolerance-comparable to the naive loop (property-tested at
+//! 1e-5 relative error). Nothing protocol-visible depends on their bit
+//! patterns.
+
+use crate::util::parallel;
+
+/// Minimum elements per worker before an element-wise kernel forks.
+/// One fork costs a few spawns (~tens of µs), so it only pays above
+/// ~10^5 elements — the 431k-dim CNN regime, not the unit-test vectors.
+const ELEMWISE_GRAIN: usize = 65_536;
+
+/// Minimum *output* elements per worker for the weighted sums. The whole
+/// m-entry reduction runs inside one fork, so the spawn amortizes over
+/// `m × grain` flops and a finer grain is worthwhile.
+const SUM_GRAIN: usize = 4_096;
+
+/// out[i] += alpha * src[i], 4-wide unrolled (per-element ops only —
+/// bit-identical to the naive loop).
+#[inline]
+fn axpy_slice(out: &mut [f32], alpha: f32, src: &[f32]) {
+    debug_assert_eq!(out.len(), src.len());
+    let mut oc = out.chunks_exact_mut(4);
+    let mut sc = src.chunks_exact(4);
+    for (o, s) in oc.by_ref().zip(sc.by_ref()) {
+        o[0] += alpha * s[0];
+        o[1] += alpha * s[1];
+        o[2] += alpha * s[2];
+        o[3] += alpha * s[3];
+    }
+    for (o, s) in oc.into_remainder().iter_mut().zip(sc.remainder()) {
+        *o += alpha * s;
+    }
+}
+
+/// out[i] *= alpha, 4-wide unrolled.
+#[inline]
+fn scale_slice(out: &mut [f32], alpha: f32) {
+    let mut oc = out.chunks_exact_mut(4);
+    for o in oc.by_ref() {
+        o[0] *= alpha;
+        o[1] *= alpha;
+        o[2] *= alpha;
+        o[3] *= alpha;
+    }
+    for o in oc.into_remainder() {
+        *o *= alpha;
+    }
+}
 
 /// A model's parameters as one flat f32 vector.
 ///
@@ -25,16 +89,17 @@ impl ParamVec {
     /// self += alpha * other (fused multiply-add over the flat vector).
     pub fn axpy(&mut self, alpha: f32, other: &ParamVec) {
         debug_assert_eq!(self.dim(), other.dim());
-        for (a, b) in self.0.iter_mut().zip(&other.0) {
-            *a += alpha * b;
-        }
+        let src = &other.0;
+        parallel::for_each_chunk(&mut self.0, ELEMWISE_GRAIN, |off, chunk| {
+            axpy_slice(chunk, alpha, &src[off..off + chunk.len()]);
+        });
     }
 
     /// self *= alpha.
     pub fn scale(&mut self, alpha: f32) {
-        for a in self.0.iter_mut() {
-            *a *= alpha;
-        }
+        parallel::for_each_chunk(&mut self.0, ELEMWISE_GRAIN, |_, chunk| {
+            scale_slice(chunk, alpha);
+        });
     }
 
     /// Reset to zeros without reallocating.
@@ -45,42 +110,99 @@ impl ParamVec {
     /// Copy `other` into self without reallocating.
     pub fn copy_from(&mut self, other: &ParamVec) {
         debug_assert_eq!(self.dim(), other.dim());
-        self.0.copy_from_slice(&other.0);
+        let src = &other.0;
+        parallel::for_each_chunk(&mut self.0, ELEMWISE_GRAIN, |off, chunk| {
+            chunk.copy_from_slice(&src[off..off + chunk.len()]);
+        });
     }
 
     /// Euclidean norm (useful in tests and divergence diagnostics).
     pub fn norm(&self) -> f64 {
-        self.0.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+        let mut acc = [0.0f64; 4];
+        let mut c = self.0.chunks_exact(4);
+        for q in c.by_ref() {
+            acc[0] += (q[0] as f64) * (q[0] as f64);
+            acc[1] += (q[1] as f64) * (q[1] as f64);
+            acc[2] += (q[2] as f64) * (q[2] as f64);
+            acc[3] += (q[3] as f64) * (q[3] as f64);
+        }
+        let mut total = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+        for &x in c.remainder() {
+            total += (x as f64) * (x as f64);
+        }
+        total.sqrt()
     }
 
     /// L2 distance to another vector.
     pub fn dist(&self, other: &ParamVec) -> f64 {
         debug_assert_eq!(self.dim(), other.dim());
-        self.0
-            .iter()
-            .zip(&other.0)
-            .map(|(&a, &b)| {
-                let d = (a - b) as f64;
-                d * d
-            })
-            .sum::<f64>()
-            .sqrt()
+        let mut acc = [0.0f64; 4];
+        let mut a = self.0.chunks_exact(4);
+        let mut b = other.0.chunks_exact(4);
+        for (qa, qb) in a.by_ref().zip(b.by_ref()) {
+            let d0 = (qa[0] - qb[0]) as f64;
+            let d1 = (qa[1] - qb[1]) as f64;
+            let d2 = (qa[2] - qb[2]) as f64;
+            let d3 = (qa[3] - qb[3]) as f64;
+            acc[0] += d0 * d0;
+            acc[1] += d1 * d1;
+            acc[2] += d2 * d2;
+            acc[3] += d3 * d3;
+        }
+        let mut total = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+        for (&x, &y) in a.remainder().iter().zip(b.remainder()) {
+            let d = (x - y) as f64;
+            total += d * d;
+        }
+        total.sqrt()
     }
 }
 
 /// Weighted average of entries: out = Σ w_k * entries_k, writing into a
 /// reusable output buffer (Eq. 7's aggregation — the per-round hot path;
 /// avoids allocating a fresh vector every round).
+///
+/// Chunked over the output dimension: each worker owns a contiguous
+/// coordinate range and folds *all* entries over it in index order, so
+/// the result is bit-identical to the serial clear-then-axpy loop at any
+/// thread count (and far more cache-friendly — each output chunk stays
+/// resident while the m entries stream through).
 pub fn weighted_sum_into(out: &mut ParamVec, entries: &[(f32, &ParamVec)]) {
-    out.clear();
-    for &(w, p) in entries {
-        out.axpy(w, p);
+    for &(_, p) in entries {
+        debug_assert_eq!(out.dim(), p.dim());
     }
+    parallel::for_each_chunk(&mut out.0, SUM_GRAIN, |off, chunk| {
+        chunk.fill(0.0);
+        for &(w, p) in entries {
+            axpy_slice(chunk, w, &p.0[off..off + chunk.len()]);
+        }
+    });
+}
+
+/// [`weighted_sum_into`] over parallel weight/entry slices — the
+/// zero-allocation form SAFA's Eq. 7 uses every round (no per-round
+/// `(f32, &ParamVec)` pair vector to build).
+pub fn weighted_sum_slices_into(out: &mut ParamVec, weights: &[f32], entries: &[ParamVec]) {
+    assert_eq!(
+        weights.len(),
+        entries.len(),
+        "weighted_sum_slices_into: weight/entry count mismatch"
+    );
+    for p in entries {
+        debug_assert_eq!(out.dim(), p.dim());
+    }
+    parallel::for_each_chunk(&mut out.0, SUM_GRAIN, |off, chunk| {
+        chunk.fill(0.0);
+        for (&w, p) in weights.iter().zip(entries) {
+            axpy_slice(chunk, w, &p.0[off..off + chunk.len()]);
+        }
+    });
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::parallel::with_thread_count;
     use crate::util::proptest::property;
 
     #[test]
@@ -121,6 +243,94 @@ mod tests {
                 );
             }
         });
+    }
+
+    #[test]
+    fn slices_form_matches_pairs_form() {
+        property("weighted_sum_slices == weighted_sum pairs", 50, |g| {
+            let dim = g.usize_range(1, 67);
+            let k = g.usize_range(1, 9);
+            let entries: Vec<ParamVec> = (0..k)
+                .map(|_| ParamVec(g.vec_f32(dim, -3.0, 3.0)))
+                .collect();
+            let weights: Vec<f32> = (0..k).map(|_| g.f64_range(-1.0, 1.0) as f32).collect();
+            let pairs: Vec<(f32, &ParamVec)> =
+                weights.iter().copied().zip(entries.iter()).collect();
+            let mut a = ParamVec::zeros(dim);
+            let mut b = ParamVec::zeros(dim);
+            weighted_sum_into(&mut a, &pairs);
+            weighted_sum_slices_into(&mut b, &weights, &entries);
+            assert_eq!(a, b);
+        });
+    }
+
+    /// Satellite: the unrolled/chunked kernels agree with byte-naive
+    /// reference loops — exactly for the element-wise ops, within 1e-5
+    /// relative error for the reordered reductions.
+    #[test]
+    fn unrolled_kernels_match_naive_reference() {
+        property("kernels vs naive loops", 60, |g| {
+            let dim = g.usize_range(1, 130); // covers remainders 0..3
+            let alpha = g.f64_range(-2.0, 2.0) as f32;
+            let xs = g.vec_f32(dim, -10.0, 10.0);
+            let ys = g.vec_f32(dim, -10.0, 10.0);
+
+            // axpy: exact.
+            let mut fast = ParamVec(xs.clone());
+            fast.axpy(alpha, &ParamVec(ys.clone()));
+            let naive: Vec<f32> = xs.iter().zip(&ys).map(|(&a, &b)| a + alpha * b).collect();
+            assert_eq!(fast.0, naive, "axpy diverged");
+
+            // scale: exact.
+            let mut fast = ParamVec(xs.clone());
+            fast.scale(alpha);
+            let naive: Vec<f32> = xs.iter().map(|&a| a * alpha).collect();
+            assert_eq!(fast.0, naive, "scale diverged");
+
+            // dist/norm: 4-accumulator reduction, tolerance-compared.
+            let a = ParamVec(xs.clone());
+            let b = ParamVec(ys.clone());
+            let naive_dist = xs
+                .iter()
+                .zip(&ys)
+                .map(|(&x, &y)| {
+                    let d = (x - y) as f64;
+                    d * d
+                })
+                .sum::<f64>()
+                .sqrt();
+            let rel = (a.dist(&b) - naive_dist).abs() / naive_dist.max(1e-12);
+            assert!(rel < 1e-5, "dist rel err {rel}");
+            let naive_norm = xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+            let rel = (a.norm() - naive_norm).abs() / naive_norm.max(1e-12);
+            assert!(rel < 1e-5, "norm rel err {rel}");
+        });
+    }
+
+    /// Element-wise kernels are bit-identical across fork widths (the
+    /// chunking never reorders per-element arithmetic).
+    #[test]
+    fn elementwise_kernels_are_width_invariant() {
+        // Above ELEMWISE_GRAIN so widths >= 2 genuinely fork (the width
+        // is work-capped at dim / ELEMWISE_GRAIN = 3 workers here).
+        let dim = 3 * ELEMWISE_GRAIN + 17;
+        let xs: Vec<f32> = (0..dim).map(|i| (i as f32).sin()).collect();
+        let ys: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.7).cos()).collect();
+        let reference = with_thread_count(1, || {
+            let mut v = ParamVec(xs.clone());
+            v.axpy(0.3, &ParamVec(ys.clone()));
+            v.scale(1.1);
+            v
+        });
+        for width in [2, 3, 8] {
+            let got = with_thread_count(width, || {
+                let mut v = ParamVec(xs.clone());
+                v.axpy(0.3, &ParamVec(ys.clone()));
+                v.scale(1.1);
+                v
+            });
+            assert_eq!(got, reference, "width {width} diverged");
+        }
     }
 
     #[test]

@@ -24,16 +24,22 @@
 //! SAFA's close rule without the quota). Staleness is therefore measured
 //! in rounds, which keeps it comparable with SAFA's version lag.
 
-use super::{FedEnv, Protocol};
+use super::{collect_updates, FedEnv, Protocol};
 use crate::config::ProtocolKind;
 use crate::metrics::RoundRecord;
 use crate::model::ParamVec;
+use crate::sim::ContinuationSim;
 
 pub struct FedAsync {
     /// Current global model.
     global: ParamVec,
     /// Round index of the last completed reporting window.
     global_version: i64,
+    /// Reused per-round buffers (allocation-free steady state).
+    participants: Vec<usize>,
+    jobs: Vec<f64>,
+    sim: ContinuationSim,
+    updates: Vec<(usize, ParamVec, f64)>,
 }
 
 impl FedAsync {
@@ -41,6 +47,10 @@ impl FedAsync {
         FedAsync {
             global,
             global_version: 0,
+            participants: Vec::new(),
+            jobs: Vec::new(),
+            sim: ContinuationSim::default(),
+            updates: Vec::new(),
         }
     }
 }
@@ -79,38 +89,48 @@ impl Protocol for FedAsync {
         let t_dist = env.net.t_dist(m_sync);
 
         // --- 2. Advance the whole fleet on the event engine.
-        let participants: Vec<usize> = (0..m).collect();
-        let jobs: Vec<f64> = env
-            .clients
-            .iter()
-            .map(|c| c.job.map(|j| j.remaining).unwrap_or(f64::INFINITY))
-            .collect();
+        if self.participants.len() != m {
+            self.participants = (0..m).collect();
+        }
+        self.jobs.clear();
+        self.jobs.extend(
+            env.clients
+                .iter()
+                .map(|c| c.job.map(|j| j.remaining).unwrap_or(f64::INFINITY)),
+        );
         let round_rng = env.round_rng(t, 0xc4a5);
-        let sim = env.simulate_continuation(t, &participants, &jobs, &round_rng);
+        env.simulate_continuation_into(
+            t,
+            &self.participants,
+            &self.jobs,
+            &round_rng,
+            &mut self.sim,
+        );
 
         // --- 3. Apply arrivals immediately, in arrival order, each
-        // discounted by its staleness.
+        // discounted by its staleness. The update *computation* fans out
+        // across the pool for stateless backends (it only reads client
+        // state); the mixing below stays serial because each merge reads
+        // the global the previous one produced.
         let alpha = env.cfg.protocol.alpha;
         let a_exp = env.cfg.protocol.staleness_exp;
-        let mut staleness: Vec<u32> = Vec::with_capacity(sim.arrivals.len());
+        collect_updates(env, t, &self.sim.arrivals, &mut self.updates);
+        let mut staleness: Vec<u32> = Vec::with_capacity(self.updates.len());
         let mut train_loss_sum = 0.0;
         for c in env.clients.iter_mut() {
             c.picked_last = false;
         }
-        for arr in &sim.arrivals {
-            let k = arr.client;
+        for (k, params, loss) in &self.updates {
+            let k = *k;
             let base_version = env.clients[k].job_base_version();
             let s = (t_i - 1 - base_version).max(0) as u32;
-            let base = env.clients[k].local_model.clone();
-            let mut rng = env.client_train_rng(t, k);
-            let u = env.trainer.local_update(&base, k, &mut rng);
             let alpha_s = (alpha / (1.0 + s as f64).powf(a_exp)) as f32;
             self.global.scale(1.0 - alpha_s);
-            self.global.axpy(alpha_s, &u.params);
+            self.global.axpy(alpha_s, params);
             staleness.push(s);
-            train_loss_sum += u.train_loss;
+            train_loss_sum += loss;
             let c = &mut env.clients[k];
-            c.local_model.copy_from(&u.params);
+            c.local_model.copy_from(params);
             c.version = base_version + 1;
             c.committed_last = true;
             c.picked_last = true;
@@ -121,7 +141,7 @@ impl Protocol for FedAsync {
         // --- 4. Round close: never wait (no quota) — the shared
         // continuation rule closes at the last arrival, advances
         // straggler jobs and clears crashed/straggler up-to-date flags.
-        let round_len = super::close_continuation_round(env, &sim, None, t_dist);
+        let round_len = super::close_continuation_round(env, &self.sim, None, t_dist);
 
         let eval = if t % env.cfg.eval_every == 0 {
             Some(env.trainer.evaluate(&self.global))
@@ -129,21 +149,21 @@ impl Protocol for FedAsync {
             None
         };
 
-        let n_applied = sim.arrivals.len();
+        let n_applied = self.sim.arrivals.len();
         RoundRecord {
             round: t,
             round_len,
             t_dist,
             m_sync,
             n_picked: n_applied,
-            n_crashed: sim.crashed.len() + sim.stragglers.len(),
+            n_crashed: self.sim.crashed.len() + self.sim.stragglers.len(),
             n_committed: n_applied,
             n_undrafted: 0,
             version_variance: env.version_variance(),
             futility_wasted: 0.0,
             futility_total: m as f64,
-            online_time: sim.online_time,
-            offline_time: sim.offline_time,
+            online_time: self.sim.online_time,
+            offline_time: self.sim.offline_time,
             staleness,
             train_loss: if n_applied == 0 {
                 0.0

@@ -10,22 +10,43 @@
 //! accurate estimation and does not take client unreliability into
 //! account" is preserved: crashes still waste the slots.
 
-use super::{aggregate_subset, FedEnv, Protocol};
+use super::{aggregate_updates_into, collect_updates, FedEnv, Protocol};
 use crate::config::ProtocolKind;
 use crate::metrics::RoundRecord;
 use crate::model::ParamVec;
 use crate::net;
+use crate::sim::RoundSim;
 
 /// Candidate pool size factor (resource requests per selection slot).
 const POOL_FACTOR: usize = 2;
 
 pub struct FedCs {
     global: ParamVec,
+    /// Reused per-round buffers (see [`super::FedAvg`]).
+    agg: ParamVec,
+    sel_pool: Vec<usize>,
+    pool: Vec<usize>,
+    selected: Vec<usize>,
+    synced: Vec<bool>,
+    sim: RoundSim,
+    updates: Vec<(usize, ParamVec, f64)>,
+    picked_mask: Vec<bool>,
 }
 
 impl FedCs {
     pub fn new(global: ParamVec) -> FedCs {
-        FedCs { global }
+        let dim = global.dim();
+        FedCs {
+            global,
+            agg: ParamVec::zeros(dim),
+            sel_pool: Vec::new(),
+            pool: Vec::new(),
+            selected: Vec::new(),
+            synced: Vec::new(),
+            sim: RoundSim::default(),
+            updates: Vec::new(),
+            picked_mask: Vec::new(),
+        }
     }
 
     /// Estimated round time for client `k` (perfect information model).
@@ -46,28 +67,38 @@ impl Protocol for FedCs {
     fn run_round(&mut self, t: usize, env: &mut FedEnv) -> RoundRecord {
         let m = env.m();
         let quota = env.cfg.quota();
+        if self.picked_mask.len() != m {
+            self.picked_mask = vec![false; m];
+        }
 
         // Resource-request pool, then keep the fastest-estimated quota
         // clients that fit the deadline.
         let mut sel_rng = env.round_rng(t, 0xfeda);
         let pool_size = (quota * POOL_FACTOR).min(m);
-        let mut pool = sel_rng.sample_indices(m, pool_size);
-        pool.sort_by(|&a, &b| {
+        sel_rng.sample_indices_into(m, pool_size, &mut self.sel_pool, &mut self.pool);
+        // Estimates are continuous draws, so ties are measure-zero; the
+        // id tie-break just makes the in-place (allocation-free) unstable
+        // sort fully deterministic anyway.
+        self.pool.sort_unstable_by(|&a, &b| {
             Self::estimate(env, a)
                 .partial_cmp(&Self::estimate(env, b))
                 .unwrap()
+                .then(a.cmp(&b))
         });
-        let selected: Vec<usize> = pool
-            .into_iter()
-            .filter(|&k| Self::estimate(env, k) <= env.cfg.train.t_lim)
-            .take(quota)
-            .collect();
+        self.selected.clear();
+        self.selected.extend(
+            self.pool
+                .iter()
+                .copied()
+                .filter(|&k| Self::estimate(env, k) <= env.cfg.train.t_lim)
+                .take(quota),
+        );
 
-        let m_sync = selected.len();
+        let m_sync = self.selected.len();
         let t_dist = env.net.t_dist(m_sync);
 
         let mut futility_wasted = 0.0;
-        for &k in &selected {
+        for &k in &self.selected {
             futility_wasted += env.clients[k].pending_partial;
             env.clients[k].pending_partial = 0.0;
             env.clients[k].local_model.copy_from(&self.global);
@@ -75,45 +106,41 @@ impl Protocol for FedCs {
             env.clients[k].base_version = t as i64 - 1;
         }
 
-        let synced = vec![true; selected.len()];
+        self.synced.clear();
+        self.synced.resize(self.selected.len(), true);
         let round_rng = env.round_rng(t, 0xc4a5);
-        let sim = env.simulate_round(t, &selected, &synced, &round_rng);
-        let futility_total = selected.len() as f64;
+        env.simulate_round_into(t, &self.selected, &self.synced, &round_rng, &mut self.sim);
+        let futility_total = self.selected.len() as f64;
 
         // Estimation is accurate, so overtime cannot occur among the
         // selected (they were filtered); the wait ends at the last
         // non-crashed arrival — or the last detected mid-round drop
         // under churn (the shared synchronous close rule).
-        let client_term = super::sync_close_term(&sim, env.cfg.train.t_lim);
+        let client_term = super::sync_close_term(&self.sim, env.cfg.train.t_lim);
         let round_len = net::round_length(t_dist, client_term, env.cfg.train.t_lim);
 
-        let committed: Vec<usize> = sim.committed().collect();
-        let mut updates: Vec<(usize, ParamVec)> = Vec::new();
-        let mut train_loss_sum = 0.0;
-        for &k in &committed {
-            let base = env.clients[k].local_model.clone();
-            let mut rng = env.client_train_rng(t, k);
-            let u = env.trainer.local_update(&base, k, &mut rng);
-            train_loss_sum += u.train_loss;
-            updates.push((k, u.params));
-        }
-        if let Some(agg) = aggregate_subset(env, &committed, &updates) {
-            self.global = agg;
+        collect_updates(env, t, &self.sim.arrivals, &mut self.updates);
+        let train_loss_sum: f64 = self.updates.iter().map(|(_, _, loss)| loss).sum();
+        let n_committed = self.updates.len();
+        if aggregate_updates_into(env, &self.updates, &mut self.agg) {
+            self.global.copy_from(&self.agg);
         }
 
-        for (k, params) in &updates {
+        self.picked_mask.fill(false);
+        for (k, params, _) in &self.updates {
             let c = &mut env.clients[*k];
             c.local_model.copy_from(params);
             c.version = c.base_version + 1;
             c.committed_last = true;
             c.pending_partial = 0.0;
+            self.picked_mask[*k] = true;
         }
-        for &(k, _, partial) in &sim.failures {
+        for &(k, _, partial) in &self.sim.failures {
             env.clients[k].pending_partial += partial;
             env.clients[k].committed_last = false;
         }
         for k in 0..m {
-            env.clients[k].picked_last = committed.contains(&k);
+            env.clients[k].picked_last = self.picked_mask[k];
         }
 
         let eval = if t % env.cfg.eval_every == 0 {
@@ -127,20 +154,20 @@ impl Protocol for FedCs {
             round_len,
             t_dist,
             m_sync,
-            n_picked: committed.len(),
-            n_crashed: sim.failures.len(),
-            n_committed: committed.len(),
+            n_picked: n_committed,
+            n_crashed: self.sim.failures.len(),
+            n_committed,
             n_undrafted: 0,
             version_variance: env.version_variance(),
             futility_wasted,
             futility_total,
-            online_time: sim.online_time,
-            offline_time: sim.offline_time,
-            staleness: vec![0; committed.len()],
-            train_loss: if committed.is_empty() {
+            online_time: self.sim.online_time,
+            offline_time: self.sim.offline_time,
+            staleness: vec![0; n_committed],
+            train_loss: if n_committed == 0 {
                 0.0
             } else {
-                train_loss_sum / committed.len() as f64
+                train_loss_sum / n_committed as f64
             },
             eval,
         }

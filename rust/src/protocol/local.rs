@@ -4,7 +4,7 @@
 //! "the fully local protocol never performs the global aggregation until
 //! the end of the final round").
 
-use super::{FedEnv, Protocol};
+use super::{collect_updates, FedEnv, Protocol};
 use crate::config::ProtocolKind;
 use crate::metrics::RoundRecord;
 use crate::model::ParamVec;
@@ -45,14 +45,13 @@ impl Protocol for FullyLocal {
         let sim = env.simulate_round(t, &participants, &synced, &round_rng);
 
         let mut train_loss_sum = 0.0;
-        let finished: Vec<usize> = sim.committed().collect();
-        for &k in &finished {
-            let base = env.clients[k].local_model.clone();
-            let mut rng = env.client_train_rng(t, k);
-            let u = env.trainer.local_update(&base, k, &mut rng);
-            train_loss_sum += u.train_loss;
-            let c = &mut env.clients[k];
-            c.local_model.copy_from(&u.params);
+        let mut updates = Vec::new();
+        collect_updates(env, t, &sim.arrivals, &mut updates);
+        let n_finished = updates.len();
+        for (k, params, loss) in &updates {
+            train_loss_sum += loss;
+            let c = &mut env.clients[*k];
+            c.local_model.copy_from(params);
             c.version += 1; // local lineage only
         }
 
@@ -72,8 +71,7 @@ impl Protocol for FullyLocal {
             let mut loss = 0.0;
             let mut acc = 0.0;
             for k in ids {
-                let model = env.clients[k].local_model.clone();
-                let e = env.trainer.evaluate(&model);
+                let e = env.trainer.evaluate(&env.clients[k].local_model);
                 loss += e.loss;
                 acc += e.accuracy;
             }
@@ -92,7 +90,7 @@ impl Protocol for FullyLocal {
             m_sync: 0,
             n_picked: 0,
             n_crashed: sim.failures.len(),
-            n_committed: finished.len(),
+            n_committed: n_finished,
             n_undrafted: 0,
             version_variance: env.version_variance(),
             futility_wasted: 0.0,
@@ -100,10 +98,10 @@ impl Protocol for FullyLocal {
             online_time: sim.online_time,
             offline_time: sim.offline_time,
             staleness: Vec::new(),
-            train_loss: if finished.is_empty() {
+            train_loss: if n_finished == 0 {
                 0.0
             } else {
-                train_loss_sum / finished.len() as f64
+                train_loss_sum / n_finished as f64
             },
             eval,
         }

@@ -27,12 +27,26 @@ use crate::data::{partition_gaussian, synth, FedData};
 use crate::engine::{FleetEngine, RoundCtx};
 use crate::error::Result;
 use crate::metrics::RoundRecord;
-use crate::sim::{ContinuationSim, FailReason, RoundSim};
+use crate::sim::{Arrival, ContinuationSim, FailReason, RoundSim};
 use crate::model::{make_trainer, ParamVec, Trainer};
 use crate::net::NetworkModel;
+use crate::util::parallel;
 use crate::util::rng::Pcg64;
-use crate::util::stats;
 use std::sync::Arc;
+
+/// Minimum client updates per worker before [`collect_updates`] fans
+/// out (stateless backends only). An update is at least an RNG split +
+/// a model clone, so even small shares pay once fleets reach hundreds.
+const UPDATE_GRAIN: usize = 16;
+
+/// Per-client grain for fleet-sized parallel passes (sync pushes, cache
+/// refreshes, state transitions): the per-client work is a fixed
+/// bookkeeping cost plus a dim-sized model copy, so the grain shrinks as
+/// the model grows. At dim 1 (Null backend) a worker takes 512 clients;
+/// at CNN scale (431k) every client is already a worker's worth.
+pub(crate) fn fleet_grain(dim: usize) -> usize {
+    (512 / (1 + dim / 128)).max(1)
+}
 
 /// Shared experiment state every protocol operates on.
 pub struct FedEnv {
@@ -47,6 +61,9 @@ pub struct FedEnv {
     /// Aggregation weights n_k / n (Eq. 7).
     pub weights: Vec<f32>,
     root_rng: Pcg64,
+    /// Reused slot buffer for the parallel update fan-out
+    /// ([`collect_updates`]).
+    upd_slots: Vec<Option<(usize, ParamVec, f64)>>,
 }
 
 impl FedEnv {
@@ -98,6 +115,7 @@ impl FedEnv {
             engine,
             weights,
             root_rng,
+            upd_slots: Vec::new(),
         })
     }
 
@@ -126,6 +144,25 @@ impl FedEnv {
         self.engine.run_round(t, ctx, participants, synced, round_rng)
     }
 
+    /// [`FedEnv::simulate_round`] into a caller-owned, buffer-reusing
+    /// record (steady-state rounds stay allocation-free).
+    pub fn simulate_round_into(
+        &mut self,
+        t: usize,
+        participants: &[usize],
+        synced: &[bool],
+        round_rng: &Pcg64,
+        out: &mut RoundSim,
+    ) {
+        let ctx = RoundCtx {
+            cfg: &self.cfg,
+            net: &self.net,
+            clients: &self.clients,
+        };
+        self.engine
+            .run_round_into(t, ctx, participants, synced, round_rng, out)
+    }
+
     /// Run round `t` over in-flight jobs (continuation semantics) on the
     /// fleet engine.
     pub fn simulate_continuation(
@@ -137,6 +174,20 @@ impl FedEnv {
     ) -> ContinuationSim {
         self.engine
             .run_continuation(t, &self.cfg, participants, jobs, round_rng)
+    }
+
+    /// [`FedEnv::simulate_continuation`] into a caller-owned,
+    /// buffer-reusing record.
+    pub fn simulate_continuation_into(
+        &mut self,
+        t: usize,
+        participants: &[usize],
+        jobs: &[f64],
+        round_rng: &Pcg64,
+        out: &mut ContinuationSim,
+    ) {
+        self.engine
+            .run_continuation_into(t, &self.cfg, participants, jobs, round_rng, out)
     }
 
     /// RNG stream for round-level events (crashes, selection shuffles).
@@ -153,14 +204,81 @@ impl FedEnv {
     }
 
     /// Variance of the fleet's local-model versions (Eq. 10's per-round
-    /// term).
+    /// term). Same two-pass formula as `stats::variance`, streamed over
+    /// the clients so no m-sized vector is collected every round.
     pub fn version_variance(&self) -> f64 {
-        let vs: Vec<f64> = self.clients.iter().map(|c| c.version as f64).collect();
-        stats::variance(&vs)
+        let n = self.clients.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let mean = self.clients.iter().map(|c| c.version as f64).sum::<f64>() / n as f64;
+        self.clients
+            .iter()
+            .map(|c| {
+                let x = c.version as f64;
+                (x - mean) * (x - mean)
+            })
+            .sum::<f64>()
+            / n as f64
     }
 
     pub fn m(&self) -> usize {
         self.cfg.env.m
+    }
+}
+
+/// Run the local updates for every arrival, in arrival order, into a
+/// reused output buffer. When the backend is stateless
+/// ([`crate::model::StatelessTrainer`]) the per-client updates fan out
+/// across the scoped pool — each slot is an independent function of its
+/// per-(round, client) RNG stream, so the result is bit-identical to
+/// the serial path at any width. Scratch-carrying backends (the native
+/// CNN) fall back to the serial loop.
+pub(crate) fn collect_updates(
+    env: &mut FedEnv,
+    t: usize,
+    arrivals: &[Arrival],
+    out: &mut Vec<(usize, ParamVec, f64)>,
+) {
+    out.clear();
+    out.reserve(arrivals.len());
+    // Hoist the round-level split (loop-invariant): `base.split(0x7a11 +
+    // k)` below reproduces `client_train_rng(t, k)` stream-for-stream.
+    let base_rng = env.root_rng.split(t as u64);
+    let FedEnv {
+        clients,
+        trainer,
+        upd_slots,
+        ..
+    } = env;
+    let clients: &[ClientState] = clients;
+    // Two `stateless()` calls instead of one `if let`: binding the
+    // returned borrow in an `if let` would extend it into the else
+    // branch (NLL limitation), where `trainer` must be mutable.
+    if trainer.stateless().is_some() {
+        let shared = trainer.stateless().expect("checked stateless");
+        upd_slots.clear();
+        upd_slots.resize(arrivals.len(), None);
+        parallel::for_each_chunk(upd_slots, UPDATE_GRAIN, |off, chunk| {
+            for (i, slot) in chunk.iter_mut().enumerate() {
+                let k = arrivals[off + i].client;
+                let mut rng = base_rng.split(0x7a11 + k as u64);
+                let u = shared.local_update_shared(&clients[k].local_model, k, &mut rng);
+                *slot = Some((k, u.params, u.train_loss));
+            }
+        });
+        out.extend(
+            upd_slots
+                .iter_mut()
+                .map(|s| s.take().expect("update slot filled")),
+        );
+    } else {
+        for a in arrivals {
+            let k = a.client;
+            let mut rng = base_rng.split(0x7a11 + k as u64);
+            let u = trainer.local_update(&clients[k].local_model, k, &mut rng);
+            out.push((k, u.params, u.train_loss));
+        }
     }
 }
 
@@ -241,28 +359,28 @@ pub(crate) fn close_continuation_round(
     crate::net::round_length(t_dist, client_term, t_lim)
 }
 
-/// FedAvg-style weighted aggregation over a committed subset:
-/// w = Σ_{k∈S} n_k·w_k / Σ_{k∈S} n_k. Returns None for an empty set.
-pub(crate) fn aggregate_subset(
+/// FedAvg-style weighted aggregation over committed updates (client ids
+/// taken from the update tuples, which the callers build in committed
+/// order): out = Σ_{k∈S} n_k·w_k / Σ_{k∈S} n_k, written into a reused
+/// buffer. Returns false (out untouched) for an empty set.
+pub(crate) fn aggregate_updates_into(
     env: &FedEnv,
-    subset: &[usize],
-    updates: &[(usize, ParamVec)],
-) -> Option<ParamVec> {
-    if subset.is_empty() {
-        return None;
+    updates: &[(usize, ParamVec, f64)],
+    out: &mut ParamVec,
+) -> bool {
+    if updates.is_empty() {
+        return false;
     }
-    let total: f64 = subset.iter().map(|&k| env.clients[k].n_k as f64).sum();
-    let mut out = ParamVec::zeros(env.trainer.dim());
-    for &k in subset {
-        let w = (env.clients[k].n_k as f64 / total) as f32;
-        let update = updates
-            .iter()
-            .find(|(id, _)| *id == k)
-            .map(|(_, p)| p)
-            .expect("aggregate_subset: missing update");
-        out.axpy(w, update);
+    let total: f64 = updates
+        .iter()
+        .map(|&(k, _, _)| env.clients[k].n_k as f64)
+        .sum();
+    out.clear();
+    for (k, p, _) in updates {
+        let w = (env.clients[*k].n_k as f64 / total) as f32;
+        out.axpy(w, p);
     }
-    Some(out)
+    true
 }
 
 #[cfg(test)]
@@ -305,7 +423,7 @@ mod tests {
     }
 
     #[test]
-    fn aggregate_subset_weighted_mean() {
+    fn aggregate_updates_weighted_mean() {
         let cfg = presets::preset("tiny").unwrap();
         let mut env = FedEnv::new(&cfg).unwrap();
         // Two clients with known sizes.
@@ -313,12 +431,51 @@ mod tests {
         env.clients[1].n_k = 30;
         let dim = env.trainer.dim();
         let updates = vec![
-            (0usize, ParamVec(vec![1.0; dim])),
-            (1usize, ParamVec(vec![2.0; dim])),
+            (0usize, ParamVec(vec![1.0; dim]), 0.0),
+            (1usize, ParamVec(vec![2.0; dim]), 0.0),
         ];
-        let agg = aggregate_subset(&env, &[0, 1], &updates).unwrap();
+        let mut agg = ParamVec::zeros(dim);
+        assert!(aggregate_updates_into(&env, &updates, &mut agg));
         assert!((agg.0[0] - 1.75).abs() < 1e-6);
-        assert!(aggregate_subset(&env, &[], &updates).is_none());
+        assert!(!aggregate_updates_into(&env, &[], &mut agg));
+        // An empty set leaves the buffer untouched.
+        assert!((agg.0[0] - 1.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn collect_updates_matches_serial_rng_streams() {
+        // The fan-out path must reproduce client_train_rng(t, k) exactly
+        // and keep arrival order.
+        let cfg = presets::preset("tiny").unwrap();
+        let mut env = FedEnv::new(&cfg).unwrap();
+        let arrivals: Vec<Arrival> = (0..env.m())
+            .map(|k| Arrival {
+                client: k,
+                time: k as f64,
+            })
+            .collect();
+        let t = 3;
+        // Serial reference built with the public per-client streams.
+        let mut expect = Vec::new();
+        for a in &arrivals {
+            let k = a.client;
+            let mut rng = env.client_train_rng(t, k);
+            let base = env.clients[k].local_model.clone();
+            let u = env.trainer.local_update(&base, k, &mut rng);
+            expect.push((k, u.params, u.train_loss));
+        }
+        for width in [1, 3, 8] {
+            let mut got = Vec::new();
+            parallel::with_thread_count(width, || {
+                collect_updates(&mut env, t, &arrivals, &mut got);
+            });
+            assert_eq!(got.len(), expect.len());
+            for ((ka, pa, la), (kb, pb, lb)) in got.iter().zip(&expect) {
+                assert_eq!(ka, kb, "width {width}: client order");
+                assert_eq!(pa, pb, "width {width}: params");
+                assert_eq!(la.to_bits(), lb.to_bits(), "width {width}: loss");
+            }
+        }
     }
 
     #[test]

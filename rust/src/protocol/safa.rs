@@ -19,10 +19,12 @@
 //!    w(t); undrafted updates enter the cache *after* aggregation (the
 //!    bypass), taking effect next round.
 
-use super::{FedEnv, Protocol};
+use super::{collect_updates, fleet_grain, FedEnv, Protocol};
 use crate::config::ProtocolKind;
 use crate::metrics::RoundRecord;
-use crate::model::ParamVec;
+use crate::model::{weighted_sum_slices_into, ParamVec};
+use crate::sim::ContinuationSim;
+use crate::util::parallel;
 
 /// Ablation switches for the design-choice study (bench
 /// `ablation_safa`): disable the bypass (Eq. 8) or CFCFM's compensatory
@@ -46,6 +48,36 @@ impl Default for SafaOptions {
     }
 }
 
+/// Per-client outcome of the lag-tolerant distribution pass (Eq. 3),
+/// computed in parallel and consolidated serially.
+#[derive(Debug, Clone, Copy, Default)]
+struct SyncOut {
+    synced: bool,
+    deprecated: bool,
+    /// Remaining seconds of the client's (possibly freshly started) job.
+    remaining: f64,
+    /// Progress destroyed by a forced sync (futility accounting).
+    wasted: f64,
+}
+
+/// Reusable per-round buffers (m- or commit-sized) so steady-state SAFA
+/// rounds do not reallocate in the fleet size.
+struct SafaScratch {
+    sync_out: Vec<SyncOut>,
+    participants: Vec<usize>,
+    jobs: Vec<f64>,
+    sim: ContinuationSim,
+    /// (client, update, train_loss) per arrival, in arrival order.
+    updates: Vec<(usize, ParamVec, f64)>,
+    /// client -> index into `updates` (commit lookup without the old
+    /// O(commits) scan per pick).
+    update_of: Vec<Option<usize>>,
+    picked: Vec<usize>,
+    undrafted: Vec<usize>,
+    picked_mask: Vec<bool>,
+    undrafted_mask: Vec<bool>,
+}
+
 pub struct Safa {
     /// Current global model w(t−1).
     global: ParamVec,
@@ -64,6 +96,8 @@ pub struct Safa {
     /// Scratch for the aggregation output (reused every round — avoids a
     /// d-sized allocation on the hot path).
     agg_scratch: ParamVec,
+    /// Pooled per-round buffers.
+    scratch: SafaScratch,
 }
 
 impl Safa {
@@ -73,15 +107,28 @@ impl Safa {
 
     /// Construct with ablation switches (see [`SafaOptions`]).
     pub fn with_options(env: &FedEnv, global: ParamVec, opts: SafaOptions) -> Safa {
-        let cache = vec![global.clone(); env.m()];
+        let m = env.m();
+        let cache = vec![global.clone(); m];
         let dim = global.dim();
         Safa {
             global,
             opts,
             global_version: 0,
             cache,
-            pending_bypass: vec![None; env.m()],
+            pending_bypass: vec![None; m],
             agg_scratch: ParamVec::zeros(dim),
+            scratch: SafaScratch {
+                sync_out: vec![SyncOut::default(); m],
+                participants: (0..m).collect(),
+                jobs: Vec::with_capacity(m),
+                sim: ContinuationSim::default(),
+                updates: Vec::new(),
+                update_of: vec![None; m],
+                picked: Vec::new(),
+                undrafted: Vec::new(),
+                picked_mask: vec![false; m],
+                undrafted_mask: vec![false; m],
+            },
         }
     }
 
@@ -106,125 +153,150 @@ impl Protocol for Safa {
         let tau = env.cfg.protocol.tau as i64;
         let t_i = t as i64;
         debug_assert_eq!(self.global_version, t_i - 1, "round driven out of order");
+        debug_assert_eq!(self.scratch.sync_out.len(), m, "fleet size changed mid-run");
+        let dim = self.global.dim();
+        let grain = fleet_grain(dim);
+        let scratch = &mut self.scratch;
 
         // --- Step 1: lag-tolerant distribution (Eq. 3). ---
-        let mut synced = vec![false; m];
-        let mut deprecated = vec![false; m];
-        let mut futility_wasted = 0.0f64;
-        for k in 0..m {
-            let c = &env.clients[k];
-            let is_deprecated = c.version < t_i - tau;
-            let is_up_to_date = c.committed_last;
-            if is_deprecated || is_up_to_date {
-                synced[k] = true;
-                deprecated[k] = is_deprecated && !is_up_to_date;
-            }
-        }
-        // Apply the downloads and (re)start training jobs. Synced clients
-        // adopt w(t-1); a forced sync of a deprecated client abandons its
-        // in-flight job — that destroyed progress is the futility cost.
-        // Tolerable clients continue their in-flight jobs (SAFA's
-        // continuation semantics: crashes pause, stragglers span rounds).
+        // Classify, apply the downloads and (re)start training jobs, one
+        // independent client at a time — fanned out across the pool.
+        // Synced clients adopt w(t-1); a forced sync of a deprecated
+        // client abandons its in-flight job — that destroyed progress is
+        // the futility cost. Tolerable clients continue their in-flight
+        // jobs (SAFA's continuation semantics: crashes pause, stragglers
+        // span rounds).
         let epochs = env.cfg.train.epochs;
-        for k in 0..m {
-            if synced[k] {
-                if let Some(job) = env.clients[k].job.take() {
-                    futility_wasted += job.progress();
-                }
-                env.clients[k].local_model.copy_from(&self.global);
-                env.clients[k].version = t_i - 1;
-                env.clients[k].base_version = t_i - 1;
-                let total =
-                    env.net.t_down() + env.clients[k].t_train(epochs) + env.net.t_up();
-                env.clients[k].start_job(total, t_i - 1);
-            } else if env.clients[k].job.is_none() {
-                // Tolerable without a job (committed long ago but never
-                // re-synced — possible only via exotic configs): train on
-                // the stale local model without a download.
-                let total = env.clients[k].t_train(epochs) + env.net.t_up();
-                let base = env.clients[k].version;
-                env.clients[k].start_job(total, base);
-            }
+        let (t_down, t_up) = (env.net.t_down(), env.net.t_up());
+        {
+            let global = &self.global;
+            parallel::for_each_chunk2(
+                &mut env.clients,
+                &mut scratch.sync_out,
+                grain,
+                |_, clients, outs| {
+                    for (c, out) in clients.iter_mut().zip(outs.iter_mut()) {
+                        let is_deprecated = c.version < t_i - tau;
+                        let is_up_to_date = c.committed_last;
+                        let synced = is_deprecated || is_up_to_date;
+                        let mut wasted = 0.0;
+                        if synced {
+                            if let Some(job) = c.job.take() {
+                                wasted = job.progress();
+                            }
+                            c.local_model.copy_from(global);
+                            c.version = t_i - 1;
+                            c.base_version = t_i - 1;
+                            let total = t_down + c.t_train(epochs) + t_up;
+                            c.start_job(total, t_i - 1);
+                        } else if c.job.is_none() {
+                            // Tolerable without a job (committed long ago
+                            // but never re-synced — possible only via
+                            // exotic configs): train on the stale local
+                            // model without a download.
+                            let total = c.t_train(epochs) + t_up;
+                            let base = c.version;
+                            c.start_job(total, base);
+                        }
+                        *out = SyncOut {
+                            synced,
+                            deprecated: is_deprecated && !is_up_to_date,
+                            remaining: c.job.map(|j| j.remaining).unwrap_or(f64::INFINITY),
+                            wasted,
+                        };
+                    }
+                },
+            );
         }
-        let m_sync = synced.iter().filter(|&&s| s).count();
+        // Serial consolidation in client order (fixed f64 sum order).
+        let mut futility_wasted = 0.0f64;
+        let mut m_sync = 0usize;
+        scratch.jobs.clear();
+        for s in &scratch.sync_out {
+            futility_wasted += s.wasted;
+            if s.synced {
+                m_sync += 1;
+            }
+            scratch.jobs.push(s.remaining);
+        }
         let t_dist = env.net.t_dist(m_sync);
 
         // --- Step 2: everyone's job advances. ---
-        let participants: Vec<usize> = (0..m).collect();
-        let jobs: Vec<f64> = env
-            .clients
-            .iter()
-            .map(|c| c.job.map(|j| j.remaining).unwrap_or(f64::INFINITY))
-            .collect();
         let round_rng = env.round_rng(t, 0xc4a5);
-        let sim = env.simulate_continuation(t, &participants, &jobs, &round_rng);
+        env.simulate_continuation_into(
+            t,
+            &scratch.participants,
+            &scratch.jobs,
+            &round_rng,
+            &mut scratch.sim,
+        );
         let futility_total = m as f64;
 
         // Run actual local updates only for committed clients (failed
-        // clients' numerics never reach the server this round).
-        let mut updates: Vec<(usize, ParamVec, f64)> = Vec::with_capacity(sim.arrivals.len());
-        for a in &sim.arrivals {
-            let k = a.client;
-            let base = env.clients[k].local_model.clone();
-            let mut rng = env.client_train_rng(t, k);
-            let u = env.trainer.local_update(&base, k, &mut rng);
-            updates.push((k, u.params, u.train_loss));
+        // clients' numerics never reach the server this round); parallel
+        // across clients for stateless backends.
+        collect_updates(env, t, &scratch.sim.arrivals, &mut scratch.updates);
+        scratch.update_of.fill(None);
+        for (idx, (k, _, _)) in scratch.updates.iter().enumerate() {
+            scratch.update_of[*k] = Some(idx);
         }
 
         // --- Step 3: CFCFM selection (Alg. 1). ---
         let quota = env.cfg.quota();
-        let mut picked: Vec<usize> = Vec::with_capacity(quota);
-        let mut undrafted: Vec<usize> = Vec::new();
+        scratch.picked.clear();
+        scratch.undrafted.clear();
         let mut close_time: Option<f64> = None;
-        for a in &sim.arrivals {
+        for a in &scratch.sim.arrivals {
             let k = a.client;
             if close_time.is_none() {
                 if !self.opts.compensatory || !env.clients[k].picked_last {
-                    picked.push(k);
-                    if picked.len() >= quota {
+                    scratch.picked.push(k);
+                    if scratch.picked.len() >= quota {
                         close_time = Some(a.time);
                     }
                 } else {
-                    undrafted.push(k);
+                    scratch.undrafted.push(k);
                 }
             } else {
                 // Round already closed; late arrivals (within T_lim)
                 // still commit to the bypass (Fig. 1's undrafted
                 // clients).
-                undrafted.push(k);
+                scratch.undrafted.push(k);
             }
         }
         // Quota unmet by new arrivals: fill from undrafted in arrival
         // order (Alg. 1's post-deadline block).
-        while picked.len() < quota && !undrafted.is_empty() {
-            picked.push(undrafted.remove(0));
+        let mut fill = 0;
+        while scratch.picked.len() < quota && fill < scratch.undrafted.len() {
+            scratch.picked.push(scratch.undrafted[fill]);
+            fill += 1;
         }
+        scratch.undrafted.drain(..fill);
         // Round close: quota time, else the shared continuation rule
         // (the semi-async server never blocks on in-flight stragglers —
         // their commits simply arrive in a later round). Also advances
         // straggler jobs and clears crashed/straggler up-to-date flags.
-        let round_len = super::close_continuation_round(env, &sim, close_time, t_dist);
+        let round_len = super::close_continuation_round(env, &scratch.sim, close_time, t_dist);
 
         // --- Step 4: three-step discriminative aggregation. ---
         // (6) Pre-aggregation cache update. Picked updates carry the lag
         // of the base model their job trained on (staleness metric).
-        let mut staleness: Vec<u32> = Vec::with_capacity(picked.len());
-        for &k in &picked {
-            let update = updates
-                .iter()
-                .find(|(id, _, _)| *id == k)
-                .map(|(_, p, _)| p)
-                .expect("picked client without update");
-            self.cache[k].copy_from(update);
+        scratch.picked_mask.fill(false);
+        for &k in &scratch.picked {
+            scratch.picked_mask[k] = true;
+        }
+        scratch.undrafted_mask.fill(false);
+        for &k in &scratch.undrafted {
+            scratch.undrafted_mask[k] = true;
+        }
+        let mut staleness: Vec<u32> = Vec::with_capacity(scratch.picked.len());
+        for &k in &scratch.picked {
             self.pending_bypass[k] = None; // bypassed entry overwritten
             let base = env.clients[k].job_base_version();
             staleness.push((t_i - 1 - base).max(0) as u32);
         }
         for k in 0..m {
-            if deprecated[k] && !picked.contains(&k) {
-                // Deprecated entries are replaced by w(t-1) to purge
-                // heavy staleness (Eq. 6 middle case).
-                self.cache[k].copy_from(&self.global);
+            if scratch.sync_out[k].deprecated && !scratch.picked_mask[k] {
                 self.pending_bypass[k] = None;
             }
         }
@@ -235,11 +307,33 @@ impl Protocol for Safa {
                 staleness.push(s + 1);
             }
         }
-        // (7) SAFA aggregation over ALL m cache entries.
-        self.agg_scratch.clear();
-        for k in 0..m {
-            self.agg_scratch.axpy(env.weights[k], &self.cache[k]);
+        // Cache content refresh (picked overwrite + deprecated reset to
+        // w(t-1), Eq. 6), chunked across the pool — each entry is an
+        // independent dim-sized copy.
+        {
+            let sync_out = &scratch.sync_out;
+            let picked_mask = &scratch.picked_mask;
+            let update_of = &scratch.update_of;
+            let updates = &scratch.updates;
+            let global = &self.global;
+            parallel::for_each_chunk(&mut self.cache, grain, |off, chunk| {
+                for (i, entry) in chunk.iter_mut().enumerate() {
+                    let k = off + i;
+                    if picked_mask[k] {
+                        let idx = update_of[k].expect("picked client without update");
+                        entry.copy_from(&updates[idx].1);
+                    } else if sync_out[k].deprecated {
+                        // Deprecated entries are replaced by w(t-1) to
+                        // purge heavy staleness (Eq. 6 middle case).
+                        entry.copy_from(global);
+                    }
+                }
+            });
         }
+        // (7) SAFA aggregation over ALL m cache entries (chunked over the
+        // model dimension, fixed entry order — bit-identical to the
+        // serial axpy loop at any width).
+        weighted_sum_slices_into(&mut self.agg_scratch, &env.weights, &self.cache);
         self.global.copy_from(&self.agg_scratch);
         self.global_version = t_i;
         // (8) Post-aggregation cache update: bypass carries undrafted
@@ -247,33 +341,47 @@ impl Protocol for Safa {
         // no-bypass ablation — undrafted work is then discarded).
         // A bypassed update only reaches the global model at a *later*
         // aggregation (if not overwritten first), so its staleness is
-        // parked here and counted when it actually merges.
-        for &k in undrafted.iter().filter(|_| self.opts.bypass) {
-            let update = updates
-                .iter()
-                .find(|(id, _, _)| *id == k)
-                .map(|(_, p, _)| p)
-                .expect("undrafted client without update");
-            self.cache[k].copy_from(update);
+        // parked here and counted when it actually merges. The parking
+        // must precede the transition pass below, which consumes jobs.
+        for &k in scratch.undrafted.iter().filter(|_| self.opts.bypass) {
             let base = env.clients[k].job_base_version();
             self.pending_bypass[k] = Some((t_i - 1 - base).max(0) as u32);
         }
 
-        // --- Client state transitions (crashed/straggler flags were
-        // cleared by close_continuation_round). ---
-        let committed: Vec<usize> = sim.arrivals.iter().map(|a| a.client).collect();
-        let n_failed = sim.crashed.len() + sim.stragglers.len();
-        let mut train_loss_sum = 0.0;
-        for (k, params, loss) in &updates {
-            let c = &mut env.clients[*k];
-            c.local_model.copy_from(params);
-            c.version = c.job_base_version() + 1;
-            c.committed_last = true;
-            c.job = None; // job complete
-            train_loss_sum += loss;
-        }
-        for k in 0..m {
-            env.clients[k].picked_last = picked.contains(&k);
+        // --- Eq. 8 cache writes + client state transitions, fused into
+        // one parallel pass over (cache, clients). Crashed/straggler
+        // flags were already cleared by close_continuation_round; the
+        // committed set (update_of Some) is disjoint from it. ---
+        let n_committed = scratch.sim.arrivals.len();
+        let n_failed = scratch.sim.crashed.len() + scratch.sim.stragglers.len();
+        let train_loss_sum: f64 = scratch.updates.iter().map(|(_, _, loss)| loss).sum();
+        {
+            let bypass = self.opts.bypass;
+            let update_of = &scratch.update_of;
+            let updates = &scratch.updates;
+            let picked_mask = &scratch.picked_mask;
+            let undrafted_mask = &scratch.undrafted_mask;
+            parallel::for_each_chunk2(
+                &mut self.cache,
+                &mut env.clients,
+                grain,
+                |off, entries, clients| {
+                    for (i, (entry, c)) in entries.iter_mut().zip(clients.iter_mut()).enumerate() {
+                        let k = off + i;
+                        if let Some(idx) = update_of[k] {
+                            let params = &updates[idx].1;
+                            if bypass && undrafted_mask[k] {
+                                entry.copy_from(params); // Eq. 8
+                            }
+                            c.local_model.copy_from(params);
+                            c.version = c.job_base_version() + 1;
+                            c.committed_last = true;
+                            c.job = None; // job complete
+                        }
+                        c.picked_last = picked_mask[k];
+                    }
+                },
+            );
         }
 
         let eval = if t % env.cfg.eval_every == 0 {
@@ -287,20 +395,20 @@ impl Protocol for Safa {
             round_len,
             t_dist,
             m_sync,
-            n_picked: picked.len(),
+            n_picked: scratch.picked.len(),
             n_crashed: n_failed,
-            n_committed: committed.len(),
-            n_undrafted: undrafted.len(),
+            n_committed,
+            n_undrafted: scratch.undrafted.len(),
             version_variance: env.version_variance(),
             futility_wasted,
             futility_total,
-            online_time: sim.online_time,
-            offline_time: sim.offline_time,
+            online_time: scratch.sim.online_time,
+            offline_time: scratch.sim.offline_time,
             staleness,
-            train_loss: if updates.is_empty() {
+            train_loss: if scratch.updates.is_empty() {
                 0.0
             } else {
-                train_loss_sum / updates.len() as f64
+                train_loss_sum / scratch.updates.len() as f64
             },
             eval,
         }

@@ -38,7 +38,11 @@ pub enum FailReason {
 }
 
 /// Outcome of simulating one round's local-training phase.
-#[derive(Debug, Clone)]
+///
+/// `Default` gives an empty record whose buffers the engine's `_into`
+/// entry points clear and refill, so one record can serve a whole run
+/// without reallocating.
+#[derive(Debug, Clone, Default)]
 pub struct RoundSim {
     /// Committed updates ordered by arrival time.
     pub arrivals: Vec<Arrival>,
@@ -104,7 +108,8 @@ pub fn simulate_round(
 }
 
 /// Outcome of simulating one round under SAFA's continuation semantics.
-#[derive(Debug, Clone)]
+/// (`Default` = empty reusable record, as for [`RoundSim`].)
+#[derive(Debug, Clone, Default)]
 pub struct ContinuationSim {
     /// Jobs completing this round (remaining ≤ T_lim), by arrival time.
     pub arrivals: Vec<Arrival>,

@@ -1,10 +1,11 @@
 //! Substrate utilities built from scratch for the offline environment:
-//! RNG + distributions, JSON/TOML codecs, stats, logging, CLI parsing and
-//! a property-testing mini-framework.
+//! RNG + distributions, JSON/TOML codecs, stats, logging, CLI parsing,
+//! a property-testing mini-framework and a scoped fork-join pool.
 
 pub mod cli;
 pub mod json;
 pub mod logging;
+pub mod parallel;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

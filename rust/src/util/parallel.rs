@@ -1,0 +1,243 @@
+//! Zero-dependency fork-join parallelism over slices.
+//!
+//! The offline build has no `rayon`, so this module hand-rolls the one
+//! shape the simulator needs: *static chunking* of one or two equal
+//! slices across a fleet of scoped threads (`std::thread::scope`), with
+//! the caller's thread working the first chunk. There is no work
+//! stealing and no persistent pool — a fork spawns `width - 1` OS
+//! threads and joins them before returning, which keeps the module tiny
+//! and makes every parallel region a strict fork-join (nothing outlives
+//! the call).
+//!
+//! # Width selection
+//!
+//! [`num_threads`] resolves, in priority order:
+//! 1. a scoped [`with_thread_count`] override on the current thread
+//!    (tests and the thread-scaling benches),
+//! 2. the `SAFA_THREADS` environment variable (parsed once),
+//! 3. `std::thread::available_parallelism()`.
+//!
+//! A chunked call additionally degrades to serial when the slice is
+//! shorter than `grain` elements per worker, so tiny inputs (unit-test
+//! fleets, dim-1 Null models) never pay a spawn.
+//!
+//! # Determinism contract
+//!
+//! Every helper here applies `f` to *disjoint, contiguous* chunks whose
+//! element indices are independent of the width: `f(base, chunk)` sees
+//! the same `(index, element)` pairs whether the call ran on 1 thread or
+//! 8. As long as `f` computes each element independently (no cross-chunk
+//! reduction), results are bit-for-bit identical across widths — the
+//! property the engine's determinism tests assert. Reductions must NOT
+//! be accumulated across chunks in completion order; compute per-element
+//! values in parallel and fold them serially in index order instead.
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+/// Hard cap on the fork width (a safety rail for absurd `SAFA_THREADS`
+/// values; spawning is per-fork, so each extra thread costs a spawn).
+pub const MAX_THREADS: usize = 256;
+
+thread_local! {
+    /// 0 = no override active.
+    static WIDTH_OVERRIDE: Cell<usize> = const { Cell::new(0) };
+}
+
+/// `SAFA_THREADS`, else available parallelism (read once per process).
+fn configured_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("SAFA_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n >= 1 {
+                    return n.min(MAX_THREADS);
+                }
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(MAX_THREADS)
+    })
+}
+
+/// The fork width the next parallel call on this thread will use.
+pub fn num_threads() -> usize {
+    let o = WIDTH_OVERRIDE.with(|c| c.get());
+    if o >= 1 {
+        o.min(MAX_THREADS)
+    } else {
+        configured_threads()
+    }
+}
+
+/// Pin the fork width to `n` for the duration of `f` on this thread
+/// (restored on exit, including unwinds). Used by the determinism tests
+/// and `benches/fleet_scale.rs` to sweep widths inside one process.
+pub fn with_thread_count<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            WIDTH_OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let prev = WIDTH_OVERRIDE.with(|c| c.replace(n.clamp(1, MAX_THREADS)));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// Width actually used for `len` elements at `grain` elements minimum
+/// per worker.
+fn width_for(len: usize, grain: usize) -> usize {
+    let by_work = len / grain.max(1);
+    num_threads().min(by_work).max(1)
+}
+
+/// Apply `f(base_index, chunk)` to contiguous chunks of `data` across
+/// the pool. Serial (`f(0, data)`) when the input is shorter than
+/// `2 * grain` or only one thread is configured.
+pub fn for_each_chunk<T, F>(data: &mut [T], grain: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let len = data.len();
+    let width = width_for(len, grain);
+    if width <= 1 {
+        f(0, data);
+        return;
+    }
+    let chunk = len.div_ceil(width);
+    std::thread::scope(|s| {
+        let mut parts = data.chunks_mut(chunk);
+        let first = parts.next().expect("width > 1 implies a first chunk");
+        for (i, part) in parts.enumerate() {
+            let f = &f;
+            // Chunk bodies run with the width pinned to 1 so a nested
+            // parallel call (e.g. `ParamVec::copy_from` inside a
+            // per-client pass) degrades to serial instead of spawning
+            // width² threads. Serial fallbacks above leave the width
+            // untouched, so an un-forked outer loop still lets inner
+            // kernels fork.
+            s.spawn(move || with_thread_count(1, || f((i + 1) * chunk, part)));
+        }
+        // The caller's thread works the first chunk while the spawned
+        // workers run; the scope joins everything before returning.
+        with_thread_count(1, || f(0, first));
+    });
+}
+
+/// Like [`for_each_chunk`] over two equal-length slices chunked at
+/// identical boundaries: `f(base_index, a_chunk, b_chunk)`.
+pub fn for_each_chunk2<A, B, F>(a: &mut [A], b: &mut [B], grain: usize, f: F)
+where
+    A: Send,
+    B: Send,
+    F: Fn(usize, &mut [A], &mut [B]) + Sync,
+{
+    assert_eq!(a.len(), b.len(), "for_each_chunk2: length mismatch");
+    let len = a.len();
+    let width = width_for(len, grain);
+    if width <= 1 {
+        f(0, a, b);
+        return;
+    }
+    let chunk = len.div_ceil(width);
+    std::thread::scope(|s| {
+        let mut pa = a.chunks_mut(chunk);
+        let mut pb = b.chunks_mut(chunk);
+        let fa = pa.next().expect("width > 1 implies a first chunk");
+        let fb = pb.next().expect("width > 1 implies a first chunk");
+        for (i, (ca, cb)) in pa.zip(pb).enumerate() {
+            let f = &f;
+            // Width pinned to 1 inside chunk bodies — see for_each_chunk.
+            s.spawn(move || with_thread_count(1, || f((i + 1) * chunk, ca, cb)));
+        }
+        with_thread_count(1, || f(0, fa, fb));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn covers_every_index_exactly_once() {
+        for width in [1, 2, 3, 8, 17] {
+            with_thread_count(width, || {
+                let mut data = vec![0u32; 1003];
+                for_each_chunk(&mut data, 1, |base, chunk| {
+                    for (i, x) in chunk.iter_mut().enumerate() {
+                        *x += (base + i) as u32 + 1;
+                    }
+                });
+                for (i, &x) in data.iter().enumerate() {
+                    assert_eq!(x, i as u32 + 1, "index {i} at width {width}");
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn chunk2_keeps_slices_aligned() {
+        for width in [1, 3, 8] {
+            with_thread_count(width, || {
+                let mut a: Vec<usize> = (0..517).collect();
+                let mut b = vec![0usize; 517];
+                for_each_chunk2(&mut a, &mut b, 1, |base, ca, cb| {
+                    for (i, (x, y)) in ca.iter_mut().zip(cb.iter_mut()).enumerate() {
+                        assert_eq!(*x, base + i, "misaligned chunk at width {width}");
+                        *y = *x * 2;
+                    }
+                });
+                for (i, &y) in b.iter().enumerate() {
+                    assert_eq!(y, i * 2);
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn grain_forces_serial_on_small_inputs() {
+        with_thread_count(8, || {
+            let calls = AtomicUsize::new(0);
+            let mut data = vec![0u8; 63];
+            for_each_chunk(&mut data, 32, |_, _| {
+                calls.fetch_add(1, Ordering::SeqCst);
+            });
+            // 63 / 32 = 1 worker's worth of work -> one serial call.
+            assert_eq!(calls.load(Ordering::SeqCst), 1);
+        });
+    }
+
+    #[test]
+    fn empty_slice_is_a_single_serial_call() {
+        let calls = AtomicUsize::new(0);
+        let mut data: Vec<u8> = Vec::new();
+        for_each_chunk(&mut data, 1, |base, chunk| {
+            assert_eq!(base, 0);
+            assert!(chunk.is_empty());
+            calls.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn override_nests_and_restores() {
+        with_thread_count(3, || {
+            assert_eq!(num_threads(), 3);
+            with_thread_count(7, || assert_eq!(num_threads(), 7));
+            assert_eq!(num_threads(), 3);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn chunk2_rejects_mismatched_lengths() {
+        let mut a = vec![0u8; 4];
+        let mut b = vec![0u8; 5];
+        for_each_chunk2(&mut a, &mut b, 1, |_, _, _| {});
+    }
+}

@@ -120,15 +120,33 @@ impl Pcg64 {
 
     /// Sample `k` distinct indices from [0, n) (k <= n), uniformly.
     pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut pool = Vec::new();
+        let mut out = Vec::new();
+        self.sample_indices_into(n, k, &mut pool, &mut out);
+        out
+    }
+
+    /// Allocation-free form of [`Pcg64::sample_indices`] (identical
+    /// draws): `pool` is caller-owned scratch rebuilt each call, `out`
+    /// receives the `k` samples. Capacities are reused, so steady-state
+    /// callers (the per-round selection loops) never reallocate.
+    pub fn sample_indices_into(
+        &mut self,
+        n: usize,
+        k: usize,
+        pool: &mut Vec<usize>,
+        out: &mut Vec<usize>,
+    ) {
         assert!(k <= n, "sample_indices: k > n");
-        let mut idx: Vec<usize> = (0..n).collect();
+        pool.clear();
+        pool.extend(0..n);
         // Partial Fisher–Yates: only the first k positions are needed.
         for i in 0..k {
             let j = i + self.index(n - i);
-            idx.swap(i, j);
+            pool.swap(i, j);
         }
-        idx.truncate(k);
-        idx
+        out.clear();
+        out.extend_from_slice(&pool[..k]);
     }
 }
 

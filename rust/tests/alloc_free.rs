@@ -1,0 +1,142 @@
+//! Zero-allocation steady state for the fleet engine (perf satellite).
+//!
+//! A counting global allocator wraps the system allocator; after a
+//! warm-up round has grown every pooled buffer (`RoundScratch`, the
+//! event queue, the reusable output records), further rounds must not
+//! touch the heap at all — for the Bernoulli direct path AND the Markov
+//! event path.
+//!
+//! The fork width is pinned to 1: spawning worker threads allocates by
+//! nature (stacks, join handles), so the allocation-free guarantee is a
+//! property of the serial path; the parallel path adds O(width) per
+//! fork, never O(m). Exactly one #[test] lives in this binary so no
+//! concurrent test pollutes the counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use safa::client::ClientState;
+use safa::config::presets;
+use safa::engine::{AvailabilityModel, FleetEngine, RoundCtx};
+use safa::model::ParamVec;
+use safa::net::NetworkModel;
+use safa::sim::{ContinuationSim, RoundSim};
+use safa::util::parallel::with_thread_count;
+use safa::util::rng::Pcg64;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn fleet(m: usize) -> Vec<ClientState> {
+    let mut rng = Pcg64::new(99);
+    (0..m)
+        .map(|id| ClientState {
+            id,
+            perf: 0.05 + rng.next_f64() * 3.0,
+            batches_per_epoch: 1 + rng.index(40),
+            n_k: 10,
+            local_model: ParamVec::zeros(1),
+            version: 0,
+            base_version: 0,
+            committed_last: true,
+            picked_last: false,
+            pending_partial: 0.0,
+            job: None,
+        })
+        .collect()
+}
+
+/// Drive `rounds` fresh-job + continuation rounds through one engine,
+/// reusing the output records, and return the allocation count observed
+/// after the warm-up rounds.
+fn allocs_in_steady_state(
+    avail: AvailabilityModel,
+    m: usize,
+    warmup: usize,
+    rounds: usize,
+) -> usize {
+    let mut cfg = presets::preset("tiny").unwrap();
+    cfg.env.m = m;
+    cfg.env.crash_prob = 0.2;
+    let net = NetworkModel::new(&cfg.env);
+    let clients = fleet(m);
+    let participants: Vec<usize> = (0..m).collect();
+    let synced: Vec<bool> = (0..m).map(|k| k % 2 == 0).collect();
+    let jobs: Vec<f64> = (0..m).map(|k| 40.0 + 11.0 * k as f64).collect();
+    let mut engine = FleetEngine::new(avail, m);
+    let mut round_out = RoundSim::default();
+    let mut cont_out = ContinuationSim::default();
+
+    let mut run = |engine: &mut FleetEngine,
+                   t: usize,
+                   ro: &mut RoundSim,
+                   co: &mut ContinuationSim| {
+        let rng = Pcg64::new(5).split(t as u64);
+        let ctx = RoundCtx {
+            cfg: &cfg,
+            net: &net,
+            clients: &clients,
+        };
+        engine.run_round_into(t, ctx, &participants, &synced, &rng, ro);
+        let rng2 = Pcg64::new(6).split(t as u64);
+        engine.run_continuation_into(t, &cfg, &participants, &jobs, &rng2, co);
+    };
+
+    for t in 1..=warmup {
+        run(&mut engine, t, &mut round_out, &mut cont_out);
+    }
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for t in warmup + 1..=warmup + rounds {
+        run(&mut engine, t, &mut round_out, &mut cont_out);
+    }
+    ALLOCS.load(Ordering::SeqCst) - before
+}
+
+#[test]
+fn steady_state_rounds_do_not_allocate() {
+    with_thread_count(1, || {
+        let m = 500;
+        let bern = allocs_in_steady_state(
+            AvailabilityModel::BernoulliPerRound { crash_prob: 0.2 },
+            m,
+            3,
+            8,
+        );
+        assert_eq!(bern, 0, "Bernoulli direct path allocated in steady state");
+        let markov = allocs_in_steady_state(
+            AvailabilityModel::Markov {
+                mean_uptime_s: 400.0,
+                mean_downtime_s: 150.0,
+            },
+            m,
+            3,
+            8,
+        );
+        assert_eq!(markov, 0, "Markov event path allocated in steady state");
+    });
+}

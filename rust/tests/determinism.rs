@@ -1,0 +1,235 @@
+//! Thread-count invariance: the parallel runtime must be bit-for-bit
+//! identical to the serial path at every fork width.
+//!
+//! Covers the three parallelized hot paths from the perf tentpole:
+//! * engine window draws + round outcomes (Bernoulli direct path,
+//!   Markov event path with persisted churn state, trace replay),
+//! * Eq. 7 `weighted_sum_into` / `weighted_sum_slices_into`,
+//! * full protocol rounds on the Null backend (SAFA end to end).
+//!
+//! Widths {1, 3, 8} × fleet sizes m ∈ {1, 7, 500}, per the issue's test
+//! matrix. Equality is asserted on raw f64 bits, not tolerances.
+
+use safa::client::ClientState;
+use safa::config::{presets, ChurnModel};
+use safa::engine::{AvailabilityModel, FleetEngine, RoundCtx};
+use safa::model::{weighted_sum_into, weighted_sum_slices_into, ParamVec};
+use safa::net::NetworkModel;
+use safa::protocol::{FedEnv, Protocol, Safa};
+use safa::sim::{ContinuationSim, RoundSim};
+use safa::util::parallel::with_thread_count;
+use safa::util::rng::Pcg64;
+
+const WIDTHS: [usize; 3] = [1, 3, 8];
+const FLEETS: [usize; 3] = [1, 7, 500];
+
+/// A deterministic synthetic fleet (no dataset needed — the engine only
+/// reads timing fields).
+fn fleet(m: usize) -> Vec<ClientState> {
+    let mut rng = Pcg64::new(0xf1ee7 ^ m as u64);
+    (0..m)
+        .map(|id| ClientState {
+            id,
+            perf: 0.05 + rng.next_f64() * 3.0,
+            batches_per_epoch: 1 + rng.index(40),
+            n_k: 10,
+            local_model: ParamVec::zeros(1),
+            version: 0,
+            base_version: 0,
+            committed_last: true,
+            picked_last: false,
+            pending_partial: 0.0,
+            job: None,
+        })
+        .collect()
+}
+
+fn assert_round_bits_eq(a: &RoundSim, b: &RoundSim, ctx: &str) {
+    assert_eq!(a.arrivals.len(), b.arrivals.len(), "{ctx}: arrival count");
+    for (x, y) in a.arrivals.iter().zip(&b.arrivals) {
+        assert_eq!(x.client, y.client, "{ctx}: arrival order");
+        assert_eq!(x.time.to_bits(), y.time.to_bits(), "{ctx}: arrival time");
+    }
+    assert_eq!(a.failures.len(), b.failures.len(), "{ctx}: failure count");
+    for (&(ka, ra, pa), &(kb, rb, pb)) in a.failures.iter().zip(&b.failures) {
+        assert_eq!(ka, kb, "{ctx}: failed client");
+        assert_eq!(ra, rb, "{ctx}: failure reason");
+        assert_eq!(pa.to_bits(), pb.to_bits(), "{ctx}: failure partial");
+    }
+    assert_eq!(
+        a.online_time.to_bits(),
+        b.online_time.to_bits(),
+        "{ctx}: online_time"
+    );
+    assert_eq!(
+        a.offline_time.to_bits(),
+        b.offline_time.to_bits(),
+        "{ctx}: offline_time"
+    );
+    assert_eq!(a.last_drop.to_bits(), b.last_drop.to_bits(), "{ctx}: last_drop");
+}
+
+fn assert_cont_bits_eq(a: &ContinuationSim, b: &ContinuationSim, ctx: &str) {
+    assert_eq!(a.arrivals.len(), b.arrivals.len(), "{ctx}: arrival count");
+    for (x, y) in a.arrivals.iter().zip(&b.arrivals) {
+        assert_eq!(x.client, y.client, "{ctx}: arrival order");
+        assert_eq!(x.time.to_bits(), y.time.to_bits(), "{ctx}: arrival time");
+    }
+    assert_eq!(a.crashed, b.crashed, "{ctx}: crashed set");
+    assert_eq!(a.stragglers, b.stragglers, "{ctx}: stragglers");
+    assert_eq!(
+        a.online_time.to_bits(),
+        b.online_time.to_bits(),
+        "{ctx}: online_time"
+    );
+}
+
+/// Run `rounds` engine rounds (fresh engine per width so Markov state
+/// evolves from the same origin) and return every record.
+fn engine_rounds(
+    avail: &AvailabilityModel,
+    clients: &[ClientState],
+    rounds: usize,
+) -> (Vec<RoundSim>, Vec<ContinuationSim>) {
+    let m = clients.len();
+    let mut cfg = presets::preset("tiny").unwrap();
+    cfg.env.m = m;
+    cfg.env.crash_prob = 0.3;
+    let net = NetworkModel::new(&cfg.env);
+    let mut engine = FleetEngine::new(avail.clone(), m);
+    let participants: Vec<usize> = (0..m).collect();
+    let synced: Vec<bool> = (0..m).map(|k| k % 2 == 0).collect();
+    let jobs: Vec<f64> = (0..m).map(|k| 50.0 + 37.0 * k as f64).collect();
+    let mut round_outs = Vec::new();
+    let mut cont_outs = Vec::new();
+    for t in 1..=rounds {
+        let rng = Pcg64::new(42).split(t as u64);
+        let ctx = RoundCtx {
+            cfg: &cfg,
+            net: &net,
+            clients,
+        };
+        round_outs.push(engine.run_round(t, ctx, &participants, &synced, &rng));
+        let rng2 = Pcg64::new(43).split(t as u64);
+        cont_outs.push(engine.run_continuation(t, &cfg, &participants, &jobs, &rng2));
+    }
+    (round_outs, cont_outs)
+}
+
+/// Satellite: parallel vs sequential window draws are bit-identical
+/// across widths {1, 3, 8} and m ∈ {1, 7, 500} for all three
+/// availability models (Markov included — per-client streams and state
+/// cells make the chunking invisible).
+#[test]
+fn engine_rounds_are_width_invariant() {
+    let models = [
+        AvailabilityModel::BernoulliPerRound { crash_prob: 0.3 },
+        AvailabilityModel::Markov {
+            mean_uptime_s: 400.0,
+            mean_downtime_s: 150.0,
+        },
+        AvailabilityModel::Trace {
+            rounds: vec![
+                vec![true, false, true, true],
+                vec![false, true, true, false],
+            ],
+        },
+    ];
+    for model in &models {
+        for &m in &FLEETS {
+            let clients = fleet(m);
+            let reference = with_thread_count(1, || engine_rounds(model, &clients, 6));
+            for &width in &WIDTHS[1..] {
+                let got = with_thread_count(width, || engine_rounds(model, &clients, 6));
+                for (t, (a, b)) in got.0.iter().zip(&reference.0).enumerate() {
+                    assert_round_bits_eq(a, b, &format!("{model:?} m={m} w={width} t={t}"));
+                }
+                for (t, (a, b)) in got.1.iter().zip(&reference.1).enumerate() {
+                    assert_cont_bits_eq(a, b, &format!("{model:?} m={m} w={width} cont t={t}"));
+                }
+            }
+        }
+    }
+}
+
+/// Satellite: parallel vs serial `weighted_sum_into` is bit-identical
+/// across widths and entry counts (the chunked fold keeps the per-entry
+/// order fixed per coordinate).
+#[test]
+fn weighted_sum_is_width_invariant() {
+    for &m in &FLEETS {
+        // Dim large enough that width 8 genuinely forks (grain 4096).
+        let dim = 40_000;
+        let mut rng = Pcg64::new(7 + m as u64);
+        let entries: Vec<ParamVec> = (0..m)
+            .map(|_| ParamVec((0..dim).map(|_| rng.next_f32() - 0.5).collect()))
+            .collect();
+        let weights: Vec<f32> = (0..m).map(|_| rng.next_f32()).collect();
+        let pairs: Vec<(f32, &ParamVec)> = weights.iter().copied().zip(entries.iter()).collect();
+
+        let mut reference = ParamVec::zeros(dim);
+        with_thread_count(1, || weighted_sum_into(&mut reference, &pairs));
+        for &width in &WIDTHS {
+            let mut got = ParamVec::zeros(dim);
+            with_thread_count(width, || weighted_sum_into(&mut got, &pairs));
+            assert!(got == reference, "weighted_sum_into m={m} width={width}");
+            let mut got2 = ParamVec::zeros(dim);
+            with_thread_count(width, || {
+                weighted_sum_slices_into(&mut got2, &weights, &entries)
+            });
+            assert!(got2 == reference, "weighted_sum_slices m={m} width={width}");
+        }
+    }
+}
+
+/// End-to-end: whole SAFA runs on the Null backend produce bit-identical
+/// global models, round records and client states at every width —
+/// including under Markov churn (the paper's protocol metrics are
+/// therefore width-independent).
+#[test]
+fn safa_rounds_are_width_invariant_end_to_end() {
+    for churn in [
+        ChurnModel::Bernoulli,
+        ChurnModel::Markov {
+            mean_uptime_s: 500.0,
+            mean_downtime_s: 200.0,
+        },
+    ] {
+        let mut cfg = presets::preset("fleet10k").unwrap();
+        cfg.env.m = 500; // keep the test fast; widths still fork
+        cfg.task.n = 5_000;
+        cfg.env.churn = churn.clone();
+        cfg.train.rounds = 4;
+
+        let run = |width: usize| -> Vec<(f64, usize, usize, u64)> {
+            with_thread_count(width, || {
+                let mut env = FedEnv::new(&cfg).unwrap();
+                let mut safa = Safa::new(&env, env.init_global());
+                (1..=cfg.train.rounds)
+                    .map(|t| {
+                        let rec = safa.run_round(t, &mut env);
+                        // Round length, commit split and the global
+                        // model's exact bits.
+                        let g = safa.global().as_slice()[0] as f64;
+                        (rec.round_len, rec.n_picked, rec.n_committed, g.to_bits())
+                    })
+                    .collect()
+            })
+        };
+        let reference = run(1);
+        for &width in &WIDTHS[1..] {
+            let got = run(width);
+            assert_eq!(got.len(), reference.len());
+            for (t, (a, b)) in got.iter().zip(&reference).enumerate() {
+                assert_eq!(
+                    a.0.to_bits(),
+                    b.0.to_bits(),
+                    "{churn:?} width {width} t={t}: round_len"
+                );
+                assert_eq!(a.1, b.1, "{churn:?} width {width} t={t}: n_picked");
+                assert_eq!(a.2, b.2, "{churn:?} width {width} t={t}: n_committed");
+                assert_eq!(a.3, b.3, "{churn:?} width {width} t={t}: global bits");
+            }
+        }
+    }
+}
