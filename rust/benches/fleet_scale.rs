@@ -9,6 +9,22 @@
 //! `results/fleet_scale.json`. `SAFA_BENCH_FAST=1` trims the grid and
 //! the measurement time for CI smoke runs.
 //!
+//! Rounds dispatch through the persistent worker pool by default;
+//! `SAFA_DISPATCH=spawn` replays the identical grid on the legacy
+//! spawn-per-fork dispatcher. Naming convention (matched by the
+//! default output path, the committed repo-root trajectory file and
+//! CI): `BENCH_fleet_scale.json` always holds the **spawn baseline**,
+//! `BENCH_fleet_scale_pooled.json` the pooled post-change grid:
+//!
+//! ```bash
+//! SAFA_DISPATCH=spawn cargo bench --bench fleet_scale   # -> BENCH_fleet_scale.json
+//! cargo bench --bench fleet_scale                       # -> BENCH_fleet_scale_pooled.json
+//! ```
+//!
+//! Bench names inside the JSONs are dispatch-independent, so the two
+//! files compare point-for-point (rounds are bit-identical either way;
+//! only the dispatch overhead differs).
+//!
 //! Each width gets a fresh coordinator and drives the run from round 1,
 //! and round outcomes are bit-identical across widths
 //! (`tests/determinism.rs`) — so every width replays the *same* round
@@ -23,6 +39,7 @@ use safa::util::parallel;
 fn main() {
     safa::util::logging::init();
     let fast = std::env::var("SAFA_BENCH_FAST").as_deref() == Ok("1");
+    println!("fleet_scale dispatch mode: {:?}", parallel::dispatch_mode());
     let mut b = Bencher::new();
     let fleets: &[usize] = if fast {
         &[500, 2_000]
@@ -52,6 +69,12 @@ fn main() {
 
     b.write_json("results/fleet_scale.json")
         .expect("write results");
-    b.write_json(&json_path_from_args("BENCH_fleet_scale.json"))
+    // Default output name encodes the dispatcher (see module docs):
+    // BENCH_fleet_scale.json is reserved for the spawn baseline.
+    let default_json = match parallel::dispatch_mode() {
+        parallel::Dispatch::Spawn => "BENCH_fleet_scale.json",
+        parallel::Dispatch::Pooled => "BENCH_fleet_scale_pooled.json",
+    };
+    b.write_json(&json_path_from_args(default_json))
         .expect("write BENCH json");
 }

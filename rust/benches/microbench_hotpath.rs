@@ -1,4 +1,5 @@
 //! L3 hot-path micro-benchmarks (the §Perf instrumented loop):
+//! dispatch latency (pooled park/wake vs legacy spawn-per-fork),
 //! aggregation (Eq. 7), cache updates, round simulation at m=500, run
 //! setup and the native matmul kernel.
 
@@ -14,6 +15,30 @@ use safa::util::rng::Pcg64;
 fn main() {
     safa::util::logging::init();
     let mut b = Bencher::new();
+
+    // Dispatch latency: an empty-body fork at widths {2, 4, 8} — the
+    // persistent pool's park/wake broadcast vs the legacy
+    // spawn-per-fork scope. The gap is the per-region overhead the
+    // pool removes from every sub-millisecond round (~a thread spawn
+    // per worker per fork, 15–25 µs each, vs one condvar wake).
+    for &width in &[2usize, 4, 8] {
+        b.bench(&format!("dispatch_pooled_fork_w{width}"), || {
+            parallel::with_dispatch(parallel::Dispatch::Pooled, || {
+                parallel::fork(width, |i| {
+                    std::hint::black_box(i);
+                });
+            });
+            width
+        });
+        b.bench(&format!("dispatch_spawn_fork_w{width}"), || {
+            parallel::with_dispatch(parallel::Dispatch::Spawn, || {
+                parallel::fork(width, |i| {
+                    std::hint::black_box(i);
+                });
+            });
+            width
+        });
+    }
 
     // Eq. 7 aggregation at Task-2 paper scale: 100 clients x 431k params
     // — the serial baseline (one axpy at a time, the pre-pool shape)...

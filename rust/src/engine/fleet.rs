@@ -16,16 +16,21 @@
 //! event queue and computes the round as a chunked parallel map over
 //! participants (`util::parallel`), followed by a serial consolidation
 //! in participant order. Markov churn keeps the full event path (its
-//! windows interact through the shared clock), but its per-client window
-//! draws still fan out across the pool — each client owns an independent
-//! `round_rng.split(k)` stream and its own state cell, so the draw order
-//! across clients is immaterial.
+//! windows interact through the shared clock), but everything around
+//! the queue is fleet-chunked across the pool: the per-client window
+//! draws, the per-participant setup precompute ([`RoundSetup`] /
+//! [`ContSetup`]: slot geometry, initial event times, whole-round
+//! failures), the deadline overtime sweep and the pending-outcome
+//! resolution. Only event *scheduling* and the pop loop stay serial, so
+//! the queue's pop order remains authoritative — each client owns an
+//! independent `round_rng.split(k)` stream and its own state cell, so
+//! the parallel passes are invisible to the results.
 //!
 //! All per-round storage lives in a [`RoundScratch`] pool owned by the
 //! engine: steady-state rounds are allocation-free (asserted by
-//! `tests/alloc_free.rs` with a counting allocator; the parallel path
-//! additionally allocates per spawned worker thread, so that test pins
-//! the width to 1).
+//! `tests/alloc_free.rs` with a counting allocator — including with the
+//! persistent worker pool dispatching, whose park/wake broadcast
+//! allocates nothing once its workers are spawned).
 //!
 //! # Equivalence guarantee
 //!
@@ -67,9 +72,15 @@ use crate::util::parallel;
 use crate::util::rng::Pcg64;
 
 /// Minimum per-worker share of the per-client parallel loops (window
-/// draws, direct outcomes). A draw is a few RNG ops, so below ~64 of
-/// them a fork's spawn cost dominates and the engine stays serial.
+/// draws, direct outcomes, setup precompute). A draw is a few RNG ops,
+/// so below ~64 of them the dispatch cost dominates and the engine
+/// stays serial.
 const DRAW_GRAIN: usize = 64;
+
+/// Grain for the trivial branch-and-store sweeps (deadline overtime,
+/// pending-outcome resolution): ~2 ns per element, so only very large
+/// fleets justify even a pooled wake.
+const SWEEP_GRAIN: usize = 4_096;
 
 /// Shared references a [`FleetEngine::run_round`] call needs (bundled to
 /// keep the call site readable and the argument list short).
@@ -89,6 +100,7 @@ enum Phase {
     Failed,
 }
 
+#[derive(Debug, Clone, Copy)]
 struct Slot {
     /// When this participant's job (re)starts (0.0, or the recovery time).
     start: f64,
@@ -97,6 +109,59 @@ struct Slot {
     phase: Phase,
     synced: bool,
 }
+
+/// Per-participant precompute for the event path's fresh-job setup:
+/// everything the serial scheduling pass needs, derived in a
+/// fleet-chunked parallel pass (each entry is a pure function of its
+/// own draw + client, so chunking is invisible to the results — the
+/// event queue's pop order stays authoritative because scheduling
+/// itself remains serial in participant order).
+#[derive(Debug, Clone, Copy)]
+struct RoundSetup {
+    online_secs: f64,
+    slot: Slot,
+    /// Mid-round drop to schedule (`GoOffline`), before the head event.
+    offline_at: Option<f64>,
+    /// First work event of the chain (`DownloadDone` / `TrainDone` /
+    /// `ComeOnline`).
+    head: Option<(f64, EventKind)>,
+    failure: Option<(FailReason, f64)>,
+}
+
+const EMPTY_ROUND_SETUP: RoundSetup = RoundSetup {
+    online_secs: 0.0,
+    slot: Slot {
+        start: 0.0,
+        duration: 0.0,
+        phase: Phase::Failed,
+        synced: false,
+    },
+    offline_at: None,
+    head: None,
+    failure: None,
+};
+
+/// Per-participant precompute for the event path's continuation setup
+/// (same contract as [`RoundSetup`]).
+#[derive(Debug, Clone, Copy)]
+struct ContSetup {
+    online_secs: f64,
+    /// Mid-round drop to schedule, before the upload.
+    offline_at: Option<f64>,
+    /// Resumed upload landing time, when the job is finite and starts.
+    upload_at: Option<f64>,
+    late_start: bool,
+    /// Offline all round: the job pauses.
+    crashed: bool,
+}
+
+const EMPTY_CONT_SETUP: ContSetup = ContSetup {
+    online_secs: 0.0,
+    offline_at: None,
+    upload_at: None,
+    late_start: false,
+    crashed: false,
+};
 
 /// Per-participant outcome of a continuation round (event path).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -147,6 +212,9 @@ struct RoundScratch {
     failures: Vec<Option<(FailReason, f64)>>,
     outcome: Vec<ContState>,
     late_start: Vec<bool>,
+    /// Parallel per-participant precompute (event paths).
+    setup_round: Vec<RoundSetup>,
+    setup_cont: Vec<ContSetup>,
     direct_round: Vec<DirectSlot>,
     direct_cont: Vec<(f64, ContOutcome)>,
     /// (participant position, arrival) pairs, sorted before output.
@@ -423,7 +491,84 @@ impl FleetEngine {
         self.begin_round(t, t_lim, round_rng, participants);
         let p = participants.len();
         let m = self.m;
+        let is_bernoulli = self.avail.is_bernoulli();
         let scratch = &mut self.scratch;
+
+        // Fleet-chunked parallel precompute: each participant's slot,
+        // initial events and whole-round failure derive only from its
+        // own window draw (plus its RNG stream for the legacy
+        // crash-partial draw), so this pass fans out across the pool.
+        // Only the *scheduling* below stays serial.
+        scratch.setup_round.clear();
+        scratch.setup_round.resize(p, EMPTY_ROUND_SETUP);
+        parallel::for_each_chunk2(
+            &mut scratch.setup_round,
+            &mut scratch.draws,
+            DRAW_GRAIN,
+            |base, setups, draws| {
+                for (i, (su, draw)) in setups.iter_mut().zip(draws.iter_mut()).enumerate() {
+                    let pos = base + i;
+                    let k = participants[pos];
+                    let was_synced = synced[pos];
+                    let (w, mut crng) = draw.take().expect("window drawn for participant");
+                    let t_train = ctx.clients[k].t_train(epochs);
+                    let dl_head = if was_synced { ctx.net.t_down() } else { 0.0 };
+                    let duration = dl_head + t_train + ctx.net.t_up();
+                    let online_secs = w.online_seconds(t_lim);
+                    *su = if w.online_at_start {
+                        RoundSetup {
+                            online_secs,
+                            slot: Slot {
+                                start: 0.0,
+                                duration,
+                                phase: Phase::Active,
+                                synced: was_synced,
+                            },
+                            offline_at: w.goes_offline_at,
+                            head: Some(if was_synced {
+                                (ctx.net.t_down(), EventKind::DownloadDone)
+                            } else {
+                                (t_train, EventKind::TrainDone)
+                            }),
+                            failure: None,
+                        }
+                    } else if let Some(on) = w.comes_online_at {
+                        RoundSetup {
+                            online_secs,
+                            slot: Slot {
+                                start: on,
+                                duration,
+                                phase: Phase::Idle,
+                                synced: was_synced,
+                            },
+                            offline_at: None,
+                            head: Some((on, EventKind::ComeOnline)),
+                            failure: None,
+                        }
+                    } else {
+                        // Offline for the whole round. Under Bernoulli
+                        // this is the paper's crash: the device trained
+                        // into the round and dropped uniformly through
+                        // its work (legacy second draw); under churn
+                        // models it never started.
+                        let partial = if is_bernoulli { crng.next_f64() } else { 0.0 };
+                        RoundSetup {
+                            online_secs,
+                            slot: Slot {
+                                start: 0.0,
+                                duration,
+                                phase: Phase::Failed,
+                                synced: was_synced,
+                            },
+                            offline_at: None,
+                            head: None,
+                            failure: Some((FailReason::Crash, partial)),
+                        }
+                    };
+                }
+            },
+        );
+
         scratch.pos_of.clear();
         scratch.pos_of.resize(m, None);
         scratch.slots.clear();
@@ -438,74 +583,29 @@ impl FleetEngine {
         let mut online_time = 0.0;
         let mut last_drop = 0.0f64;
 
-        for (pos, (&k, &was_synced)) in participants.iter().zip(synced).enumerate() {
+        // Serial scheduling in participant order: heap sequence numbers
+        // (tie-breaks) and the online-time fold stay width-invariant.
+        for (pos, &k) in participants.iter().enumerate() {
             assert!(scratch.pos_of[k].is_none(), "duplicate participant {k}");
-            let (w, mut crng) = scratch.draws[pos]
-                .take()
-                .expect("window drawn for participant");
-            online_time += w.online_seconds(t_lim);
             scratch.pos_of[k] = Some(pos);
-            let t_train = ctx.clients[k].t_train(epochs);
-            let head = if was_synced { ctx.net.t_down() } else { 0.0 };
-            let duration = head + t_train + ctx.net.t_up();
-            if w.online_at_start {
-                scratch.slots.push(Slot {
-                    start: 0.0,
-                    duration,
-                    phase: Phase::Active,
-                    synced: was_synced,
-                });
-                // Crash first so an exact drop/upload tie favours the drop.
-                if let Some(off) = w.goes_offline_at {
-                    q.schedule(Event {
-                        time: off,
-                        client: Some(k),
-                        kind: EventKind::GoOffline,
-                    });
-                }
-                let head = if was_synced {
-                    Event {
-                        time: ctx.net.t_down(),
-                        client: Some(k),
-                        kind: EventKind::DownloadDone,
-                    }
-                } else {
-                    Event {
-                        time: t_train,
-                        client: Some(k),
-                        kind: EventKind::TrainDone,
-                    }
-                };
-                q.schedule(head);
-            } else if let Some(on) = w.comes_online_at {
-                scratch.slots.push(Slot {
-                    start: on,
-                    duration,
-                    phase: Phase::Idle,
-                    synced: was_synced,
-                });
+            let su = scratch.setup_round[pos];
+            online_time += su.online_secs;
+            scratch.slots.push(su.slot);
+            scratch.failures[pos] = su.failure;
+            // Crash first so an exact drop/upload tie favours the drop.
+            if let Some(off) = su.offline_at {
                 q.schedule(Event {
-                    time: on,
+                    time: off,
                     client: Some(k),
-                    kind: EventKind::ComeOnline,
+                    kind: EventKind::GoOffline,
                 });
-            } else {
-                // Offline for the whole round. Under Bernoulli this is
-                // the paper's crash: the device trained into the round
-                // and dropped uniformly through its work (legacy second
-                // draw); under churn models it never started.
-                let partial = if self.avail.is_bernoulli() {
-                    crng.next_f64()
-                } else {
-                    0.0
-                };
-                scratch.slots.push(Slot {
-                    start: 0.0,
-                    duration,
-                    phase: Phase::Failed,
-                    synced: was_synced,
+            }
+            if let Some((time, kind)) = su.head {
+                q.schedule(Event {
+                    time,
+                    client: Some(k),
+                    kind,
                 });
-                scratch.failures[pos] = Some((FailReason::Crash, partial));
             }
         }
         q.schedule_deadline(Event {
@@ -589,13 +689,21 @@ impl FleetEngine {
 
         // Deadline: anyone still working goes overtime (the paper counts
         // them as crashed too, §III-B), credited with the fraction of the
-        // job done by T_lim.
-        for (pos, slot) in scratch.slots.iter().enumerate() {
-            if matches!(slot.phase, Phase::Active | Phase::Idle) {
-                let partial = ((t_lim - slot.start) / slot.duration).clamp(0.0, 1.0);
-                scratch.failures[pos] = Some((FailReason::Overtime, partial));
-            }
-        }
+        // job done by T_lim — a fleet-chunked pass (each slot's verdict
+        // is a pure function of that slot).
+        parallel::for_each_chunk2(
+            &mut scratch.slots,
+            &mut scratch.failures,
+            SWEEP_GRAIN,
+            |_, slots, failures| {
+                for (slot, failure) in slots.iter().zip(failures.iter_mut()) {
+                    if matches!(slot.phase, Phase::Active | Phase::Idle) {
+                        let partial = ((t_lim - slot.start) / slot.duration).clamp(0.0, 1.0);
+                        *failure = Some((FailReason::Overtime, partial));
+                    }
+                }
+            },
+        );
 
         sort_arrivals_into(&mut scratch.arrivals, &mut out.arrivals);
         for (pos, &k) in participants.iter().enumerate() {
@@ -731,6 +839,50 @@ impl FleetEngine {
         let p = participants.len();
         let m = self.m;
         let scratch = &mut self.scratch;
+
+        // Fleet-chunked parallel precompute (see run_round_event): each
+        // participant's resumed-upload / drop schedule is a pure
+        // function of its own draw and remaining job.
+        scratch.setup_cont.clear();
+        scratch.setup_cont.resize(p, EMPTY_CONT_SETUP);
+        parallel::for_each_chunk2(
+            &mut scratch.setup_cont,
+            &mut scratch.draws,
+            DRAW_GRAIN,
+            |base, setups, draws| {
+                for (i, (su, draw)) in setups.iter_mut().zip(draws.iter_mut()).enumerate() {
+                    let remaining = jobs[base + i];
+                    let (w, _) = draw.take().expect("window drawn for participant");
+                    let online_secs = w.online_seconds(t_lim);
+                    *su = if w.online_at_start {
+                        ContSetup {
+                            online_secs,
+                            offline_at: w.goes_offline_at,
+                            upload_at: remaining.is_finite().then_some(remaining),
+                            late_start: false,
+                            crashed: false,
+                        }
+                    } else if let Some(on) = w.comes_online_at {
+                        ContSetup {
+                            online_secs,
+                            offline_at: None,
+                            upload_at: remaining.is_finite().then_some(on + remaining),
+                            late_start: true,
+                            crashed: false,
+                        }
+                    } else {
+                        ContSetup {
+                            online_secs,
+                            offline_at: None,
+                            upload_at: None,
+                            late_start: false,
+                            crashed: true,
+                        }
+                    };
+                }
+            },
+        );
+
         scratch.pos_of.clear();
         scratch.pos_of.resize(m, None);
         scratch.outcome.clear();
@@ -744,40 +896,31 @@ impl FleetEngine {
         let q = &mut scratch.queue;
         let mut online_time = 0.0;
 
-        for (pos, (&k, &remaining)) in participants.iter().zip(jobs).enumerate() {
+        // Serial scheduling in participant order (queue pop order stays
+        // authoritative; see run_round_event).
+        for (pos, &k) in participants.iter().enumerate() {
             assert!(scratch.pos_of[k].is_none(), "duplicate participant {k}");
-            let (w, _) = scratch.draws[pos]
-                .take()
-                .expect("window drawn for participant");
-            online_time += w.online_seconds(t_lim);
             scratch.pos_of[k] = Some(pos);
-            if w.online_at_start {
-                // Crash first so an exact drop/upload tie favours the drop.
-                if let Some(off) = w.goes_offline_at {
-                    q.schedule(Event {
-                        time: off,
-                        client: Some(k),
-                        kind: EventKind::GoOffline,
-                    });
-                }
-                if remaining.is_finite() {
-                    q.schedule(Event {
-                        time: remaining,
-                        client: Some(k),
-                        kind: EventKind::UploadDone,
-                    });
-                }
-            } else if let Some(on) = w.comes_online_at {
-                scratch.late_start[pos] = true;
-                if remaining.is_finite() {
-                    q.schedule(Event {
-                        time: on + remaining,
-                        client: Some(k),
-                        kind: EventKind::UploadDone,
-                    });
-                }
-            } else {
+            let su = scratch.setup_cont[pos];
+            online_time += su.online_secs;
+            scratch.late_start[pos] = su.late_start;
+            if su.crashed {
                 scratch.outcome[pos] = ContState::Crashed;
+            }
+            // Crash first so an exact drop/upload tie favours the drop.
+            if let Some(off) = su.offline_at {
+                q.schedule(Event {
+                    time: off,
+                    client: Some(k),
+                    kind: EventKind::GoOffline,
+                });
+            }
+            if let Some(up) = su.upload_at {
+                q.schedule(Event {
+                    time: up,
+                    client: Some(k),
+                    kind: EventKind::UploadDone,
+                });
             }
         }
         q.schedule_deadline(Event {
@@ -815,18 +958,26 @@ impl FleetEngine {
                 _ => {}
             }
         }
-        for (pos, o) in scratch.outcome.iter_mut().enumerate() {
-            if *o == ContState::Pending {
-                // Online through the deadline but the job spans rounds:
-                // a straggler — unless it started late, in which case it
-                // counts as paused for this round.
-                *o = if scratch.late_start[pos] {
-                    ContState::Crashed
-                } else {
-                    ContState::Straggler
-                };
-            }
-        }
+        // Fleet-chunked resolution of still-pending participants.
+        parallel::for_each_chunk2(
+            &mut scratch.outcome,
+            &mut scratch.late_start,
+            SWEEP_GRAIN,
+            |_, outcomes, late| {
+                for (o, &started_late) in outcomes.iter_mut().zip(late.iter()) {
+                    if *o == ContState::Pending {
+                        // Online through the deadline but the job spans
+                        // rounds: a straggler — unless it started late,
+                        // in which case it counts as paused this round.
+                        *o = if started_late {
+                            ContState::Crashed
+                        } else {
+                            ContState::Straggler
+                        };
+                    }
+                }
+            },
+        );
 
         sort_arrivals_into(&mut scratch.arrivals, &mut out.arrivals);
         for (pos, &k) in participants.iter().enumerate() {

@@ -52,22 +52,24 @@ pub trait Trainer {
     /// Loss + accuracy of `params` on the global test set.
     fn evaluate(&mut self, params: &ParamVec) -> EvalResult;
 
-    /// Shared-state view for backends whose `local_update` never touches
-    /// trainer state, letting the server fan client updates out across
-    /// worker threads (`protocol::collect_updates`). `None` (the
-    /// default) keeps the serial path — required for backends that carry
-    /// forward/backward scratch, like the native CNN.
+    /// Shared-state view for backends whose `local_update` can run
+    /// from `&self`, letting the server fan client updates out across
+    /// worker threads (`protocol::collect_updates`). All native
+    /// backends implement it (the CNN via per-worker
+    /// [`crate::util::scratch::WorkerScratch`] slots); `None` (the
+    /// default) keeps the serial path for backends with exclusive
+    /// device state, like the PJRT-backed XLA trainer.
     fn stateless(&self) -> Option<&dyn StatelessTrainer> {
         None
     }
 }
 
-/// A trainer whose client updates are pure functions of `(base, client,
-/// rng)` — no `&mut self` scratch — and therefore safe to run from many
-/// threads at once. Implementations must return bit-identical results
-/// to their `Trainer::local_update` for the same inputs: the parallel
-/// fan-out path relies on that equivalence to stay bit-for-bit equal to
-/// the serial server.
+/// A trainer whose client updates are functions of `(base, client,
+/// rng)` — any scratch is per-worker, not `&mut self` — and therefore
+/// safe to run from many threads at once. Implementations must return
+/// bit-identical results to their `Trainer::local_update` for the same
+/// inputs: the parallel fan-out path relies on that equivalence to stay
+/// bit-for-bit equal to the serial server.
 pub trait StatelessTrainer: Sync {
     fn local_update_shared(&self, base: &ParamVec, client: usize, rng: &mut Pcg64) -> LocalUpdate;
 }

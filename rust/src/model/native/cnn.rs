@@ -6,13 +6,22 @@
 //! the same lowering the Pallas kernel path uses on the Python side (see
 //! DESIGN.md §Hardware-Adaptation) — so the native and XLA backends are
 //! operation-equivalent.
+//!
+//! The forward/backward [`Scratch`] buffers live in a
+//! [`WorkerScratch`] pool rather than behind `&mut self`, so the
+//! trainer implements [`StatelessTrainer`]: `protocol::collect_updates`
+//! fans Task-2 client updates across the worker pool, each worker
+//! training in its own lazily-built scratch. Every kernel zero-fills or
+//! overwrites its output, so slot reuse across clients/workers cannot
+//! leak state — updates stay bit-identical to the serial path.
 
 use super::epoch_order;
 use crate::config::{CnnArch, ExperimentConfig};
 use crate::data::FedData;
 use crate::model::tensor::*;
-use crate::model::{EvalResult, LocalUpdate, ParamVec, Trainer};
+use crate::model::{EvalResult, LocalUpdate, ParamVec, StatelessTrainer, Trainer};
 use crate::util::rng::{Distribution, Normal, Pcg64};
+use crate::util::scratch::WorkerScratch;
 use std::sync::Arc;
 
 const SIDE: usize = 28;
@@ -128,7 +137,10 @@ pub struct CnnTrainer {
     epochs: usize,
     batch: usize,
     lr: f32,
-    scratch: Scratch,
+    max_b: usize,
+    /// Worker-indexed scratch slots, built lazily per claiming worker —
+    /// what makes `local_update_shared` need only `&self`.
+    scratch: WorkerScratch<Scratch>,
 }
 
 impl CnnTrainer {
@@ -142,15 +154,21 @@ impl CnnTrainer {
             epochs: cfg.train.epochs,
             batch: cfg.train.batch_size,
             lr: cfg.train.lr as f32,
-            scratch: Scratch::new(&layout, max_b),
+            max_b,
+            scratch: WorkerScratch::new(),
         }
     }
 
-    /// Forward pass over `b` images already staged in `scratch.xbatch`.
-    /// Fills activations; logits land in `scratch.zo`.
-    fn forward(&mut self, params: &[f32], b: usize) {
+    /// Build one scratch instance sized for this trainer (a
+    /// `WorkerScratch` slot initializer).
+    fn fresh_scratch(&self) -> Scratch {
+        Scratch::new(&self.layout, self.max_b)
+    }
+
+    /// Forward pass over `b` images already staged in `s.xbatch`.
+    /// Fills activations; logits land in `s.zo`.
+    fn forward(&self, s: &mut Scratch, params: &[f32], b: usize) {
         let l = self.layout;
-        let s = &mut self.scratch;
         // conv1 (input is single-channel; NHWC == raw image layout).
         im2col_nhwc(
             &mut s.cols1[..b * H1 * H1 * K * K],
@@ -240,23 +258,17 @@ impl CnnTrainer {
         add_bias(&mut s.zo[..b * CLASSES], &params[l.bo..l.bo + CLASSES]);
     }
 
-    /// Backward pass; fills `scratch.grad`. Must follow `forward` with the
+    /// Backward pass; fills `s.grad`. Must follow `forward` with the
     /// same batch. Returns mean loss.
-    fn backward(&mut self, params: &[f32], b: usize) -> f64 {
+    fn backward(&self, s: &mut Scratch, params: &[f32], b: usize) -> f64 {
         let l = self.layout;
-        // Split scratch borrows field-by-field to satisfy the borrow
-        // checker while keeping buffers reused.
-        let loss = {
-            let s = &mut self.scratch;
-            softmax_xent(
-                &mut s.dzo[..b * CLASSES],
-                &s.zo[..b * CLASSES],
-                &s.ybatch[..b],
-                b,
-                CLASSES,
-            )
-        };
-        let s = &mut self.scratch;
+        let loss = softmax_xent(
+            &mut s.dzo[..b * CLASSES],
+            &s.zo[..b * CLASSES],
+            &s.ybatch[..b],
+            b,
+            CLASSES,
+        );
         s.grad.fill(0.0);
         // output layer.
         matmul_tn(
@@ -365,12 +377,50 @@ impl CnnTrainer {
         loss
     }
 
-    fn stage_batch(&mut self, idx: &[usize]) {
+    fn stage_batch(&self, s: &mut Scratch, idx: &[usize]) {
         let train = &self.data.train;
         for (slot, &i) in idx.iter().enumerate() {
-            self.scratch.xbatch[slot * SIDE * SIDE..(slot + 1) * SIDE * SIDE]
+            s.xbatch[slot * SIDE * SIDE..(slot + 1) * SIDE * SIDE]
                 .copy_from_slice(train.row(i));
-            self.scratch.ybatch[slot] = train.y[i];
+            s.ybatch[slot] = train.y[i];
+        }
+    }
+
+    /// Alg. 2's `client_update` against a caller-provided scratch —
+    /// the shared body under both `Trainer::local_update` and
+    /// `StatelessTrainer::local_update_shared`.
+    fn run_local_update(
+        &self,
+        s: &mut Scratch,
+        base: &ParamVec,
+        client: usize,
+        rng: &mut Pcg64,
+    ) -> LocalUpdate {
+        assert_eq!(base.dim(), self.layout.total, "param dim mismatch");
+        let mut p = base.clone();
+        let shard = self.data.partitions[client].indices.clone();
+        let mut last_epoch_loss = 0.0f64;
+        for _ in 0..self.epochs {
+            let order = epoch_order(&shard, rng);
+            let mut epoch_loss = 0.0f64;
+            let mut batches = 0usize;
+            for chunk in order.chunks(self.batch) {
+                let b = chunk.len();
+                self.stage_batch(s, chunk);
+                self.forward(s, &p.0, b);
+                let loss = self.backward(s, &p.0, b);
+                let lr = self.lr;
+                for (w, g) in p.0.iter_mut().zip(&s.grad) {
+                    *w -= lr * g;
+                }
+                epoch_loss += loss;
+                batches += 1;
+            }
+            last_epoch_loss = epoch_loss / batches.max(1) as f64;
+        }
+        LocalUpdate {
+            params: p,
+            train_loss: last_epoch_loss,
         }
     }
 }
@@ -419,65 +469,57 @@ impl Trainer for CnnTrainer {
     }
 
     fn local_update(&mut self, base: &ParamVec, client: usize, rng: &mut Pcg64) -> LocalUpdate {
-        assert_eq!(base.dim(), self.layout.total, "param dim mismatch");
-        let mut p = base.clone();
-        let shard = self.data.partitions[client].indices.clone();
-        let mut last_epoch_loss = 0.0f64;
-        for _ in 0..self.epochs {
-            let order = epoch_order(&shard, rng);
-            let mut epoch_loss = 0.0f64;
-            let mut batches = 0usize;
-            for chunk in order.chunks(self.batch) {
-                let b = chunk.len();
-                self.stage_batch(chunk);
-                self.forward(&p.0, b);
-                let loss = self.backward(&p.0, b);
-                let lr = self.lr;
-                for (w, g) in p.0.iter_mut().zip(&self.scratch.grad) {
-                    *w -= lr * g;
-                }
-                epoch_loss += loss;
-                batches += 1;
-            }
-            last_epoch_loss = epoch_loss / batches.max(1) as f64;
-        }
-        LocalUpdate {
-            params: p,
-            train_loss: last_epoch_loss,
-        }
+        StatelessTrainer::local_update_shared(self, base, client, rng)
     }
 
     fn evaluate(&mut self, params: &ParamVec) -> EvalResult {
-        let data = Arc::clone(&self.data);
-        let test = &data.test;
-        let max_b = self.scratch.ybatch.len();
-        let mut loss = 0.0f64;
-        let mut acc_weighted = 0.0f64;
-        let idx: Vec<usize> = (0..test.n).collect();
-        for chunk in idx.chunks(max_b) {
-            let b = chunk.len();
-            for (slot, &i) in chunk.iter().enumerate() {
-                self.scratch.xbatch[slot * SIDE * SIDE..(slot + 1) * SIDE * SIDE]
-                    .copy_from_slice(test.row(i));
-                self.scratch.ybatch[slot] = test.y[i];
-            }
-            self.forward(&params.0, b);
-            let s = &mut self.scratch;
-            let batch_loss = softmax_xent(
-                &mut s.dzo[..b * CLASSES],
-                &s.zo[..b * CLASSES],
-                &s.ybatch[..b],
-                b,
-                CLASSES,
-            );
-            let batch_acc = argmax_accuracy(&s.zo[..b * CLASSES], &s.ybatch[..b], b, CLASSES);
-            loss += batch_loss * b as f64;
-            acc_weighted += batch_acc * b as f64;
-        }
-        EvalResult {
-            loss: loss / test.n as f64,
-            accuracy: acc_weighted / test.n as f64,
-        }
+        self.scratch.with(
+            || self.fresh_scratch(),
+            |s| {
+                let test = &self.data.test;
+                let max_b = s.ybatch.len();
+                let mut loss = 0.0f64;
+                let mut acc_weighted = 0.0f64;
+                let idx: Vec<usize> = (0..test.n).collect();
+                for chunk in idx.chunks(max_b) {
+                    let b = chunk.len();
+                    for (slot, &i) in chunk.iter().enumerate() {
+                        s.xbatch[slot * SIDE * SIDE..(slot + 1) * SIDE * SIDE]
+                            .copy_from_slice(test.row(i));
+                        s.ybatch[slot] = test.y[i];
+                    }
+                    self.forward(s, &params.0, b);
+                    let batch_loss = softmax_xent(
+                        &mut s.dzo[..b * CLASSES],
+                        &s.zo[..b * CLASSES],
+                        &s.ybatch[..b],
+                        b,
+                        CLASSES,
+                    );
+                    let batch_acc =
+                        argmax_accuracy(&s.zo[..b * CLASSES], &s.ybatch[..b], b, CLASSES);
+                    loss += batch_loss * b as f64;
+                    acc_weighted += batch_acc * b as f64;
+                }
+                EvalResult {
+                    loss: loss / test.n as f64,
+                    accuracy: acc_weighted / test.n as f64,
+                }
+            },
+        )
+    }
+
+    fn stateless(&self) -> Option<&dyn StatelessTrainer> {
+        Some(self)
+    }
+}
+
+impl StatelessTrainer for CnnTrainer {
+    fn local_update_shared(&self, base: &ParamVec, client: usize, rng: &mut Pcg64) -> LocalUpdate {
+        self.scratch.with(
+            || self.fresh_scratch(),
+            |s| self.run_local_update(s, base, client, rng),
+        )
     }
 }
 
@@ -525,16 +567,17 @@ mod tests {
     fn cnn_gradient_matches_finite_difference() {
         let cfg = small_cfg();
         let data = make_data(&cfg);
-        let mut t = CnnTrainer::new(&cfg, data);
+        let t = CnnTrainer::new(&cfg, data);
         let mut rng = Pcg64::new(11);
         let p = t.init_params(&mut rng);
+        let mut s = t.fresh_scratch();
         // Stage a small fixed batch.
         let idx: Vec<usize> = (0..6).collect();
-        t.stage_batch(&idx);
-        t.forward(&p.0, 6);
-        let base_loss = t.backward(&p.0, 6);
+        t.stage_batch(&mut s, &idx);
+        t.forward(&mut s, &p.0, 6);
+        let base_loss = t.backward(&mut s, &p.0, 6);
         assert!(base_loss > 0.0);
-        let grad = t.scratch.grad.clone();
+        let grad = s.grad.clone();
         // Spot-check coordinates from every parameter block.
         let l = t.layout;
         let coords = [
@@ -551,14 +594,14 @@ mod tests {
         for &ci in &coords {
             let mut pp = p.clone();
             pp.0[ci] += eps;
-            t.stage_batch(&idx);
-            t.forward(&pp.0, 6);
-            let lp = t.backward(&pp.0, 6);
+            t.stage_batch(&mut s, &idx);
+            t.forward(&mut s, &pp.0, 6);
+            let lp = t.backward(&mut s, &pp.0, 6);
             let mut pm = p.clone();
             pm.0[ci] -= eps;
-            t.stage_batch(&idx);
-            t.forward(&pm.0, 6);
-            let lm = t.backward(&pm.0, 6);
+            t.stage_batch(&mut s, &idx);
+            t.forward(&mut s, &pm.0, 6);
+            let lm = t.backward(&mut s, &pm.0, 6);
             let fd = (lp - lm) / (2.0 * eps as f64);
             // f32 activations + ReLU/maxpool kinks make central
             // differences noisy; 6% relative agreement is the realistic
@@ -575,9 +618,9 @@ mod tests {
         for (w, g) in stepped.0.iter_mut().zip(&grad) {
             *w -= 0.02 * g;
         }
-        t.stage_batch(&idx);
-        t.forward(&stepped.0, 6);
-        let new_loss = t.backward(&stepped.0, 6);
+        t.stage_batch(&mut s, &idx);
+        t.forward(&mut s, &stepped.0, 6);
+        let new_loss = t.backward(&mut s, &stepped.0, 6);
         assert!(
             new_loss < base_loss,
             "gradient step increased loss: {base_loss} -> {new_loss}"
@@ -618,5 +661,9 @@ mod tests {
         let u2 = t.local_update(&base, 0, &mut Pcg64::new(19));
         assert_eq!(base, snap);
         assert_eq!(u1.params, u2.params);
+        // The shared (pool fan-out) entry point is the same computation.
+        let u3 = StatelessTrainer::local_update_shared(&t, &base, 0, &mut Pcg64::new(19));
+        assert_eq!(u1.params, u3.params);
+        assert_eq!(u1.train_loss.to_bits(), u3.train_loss.to_bits());
     }
 }

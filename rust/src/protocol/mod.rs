@@ -35,9 +35,19 @@ use crate::util::rng::Pcg64;
 use std::sync::Arc;
 
 /// Minimum client updates per worker before [`collect_updates`] fans
-/// out (stateless backends only). An update is at least an RNG split +
-/// a model clone, so even small shares pay once fleets reach hundreds.
+/// out (stateless backends only, toy-dim models). An update is at
+/// least an RNG split + a model clone, so even small shares pay once
+/// fleets reach hundreds.
 const UPDATE_GRAIN: usize = 16;
+
+/// [`UPDATE_GRAIN`] scaled to the model, mirroring [`fleet_grain`]: one
+/// client update costs O(dim) SGD work per batch, so the per-worker
+/// share shrinks as the model grows — 16 updates/worker at toy dims
+/// down to 1 for CNN-scale models, where a single update dwarfs a
+/// pooled dispatch.
+fn update_grain(dim: usize) -> usize {
+    (UPDATE_GRAIN / (1 + dim / 256)).max(1)
+}
 
 /// Per-client grain for fleet-sized parallel passes (sync pushes, cache
 /// refreshes, state transitions): the per-client work is a fixed
@@ -230,10 +240,11 @@ impl FedEnv {
 /// Run the local updates for every arrival, in arrival order, into a
 /// reused output buffer. When the backend is stateless
 /// ([`crate::model::StatelessTrainer`]) the per-client updates fan out
-/// across the scoped pool — each slot is an independent function of its
+/// across the worker pool — each slot is an independent function of its
 /// per-(round, client) RNG stream, so the result is bit-identical to
-/// the serial path at any width. Scratch-carrying backends (the native
-/// CNN) fall back to the serial loop.
+/// the serial path at any width. All native backends are stateless (the
+/// CNN trains in per-worker scratch slots); only backends with
+/// exclusive device state (the XLA trainer) take the serial loop.
 pub(crate) fn collect_updates(
     env: &mut FedEnv,
     t: usize,
@@ -252,6 +263,8 @@ pub(crate) fn collect_updates(
         ..
     } = env;
     let clients: &[ClientState] = clients;
+    // Heavier models amortize a dispatch over fewer updates.
+    let grain = update_grain(trainer.dim());
     // Two `stateless()` calls instead of one `if let`: binding the
     // returned borrow in an `if let` would extend it into the else
     // branch (NLL limitation), where `trainer` must be mutable.
@@ -259,7 +272,7 @@ pub(crate) fn collect_updates(
         let shared = trainer.stateless().expect("checked stateless");
         upd_slots.clear();
         upd_slots.resize(arrivals.len(), None);
-        parallel::for_each_chunk(upd_slots, UPDATE_GRAIN, |off, chunk| {
+        parallel::for_each_chunk(upd_slots, grain, |off, chunk| {
             for (i, slot) in chunk.iter_mut().enumerate() {
                 let k = arrivals[off + i].client;
                 let mut rng = base_rng.split(0x7a11 + k as u64);

@@ -1,6 +1,7 @@
 //! Substrate utilities built from scratch for the offline environment:
 //! RNG + distributions, JSON/TOML codecs, stats, logging, CLI parsing,
-//! a property-testing mini-framework and a scoped fork-join pool.
+//! a property-testing mini-framework, a persistent parked worker pool
+//! and per-worker scratch slots.
 
 pub mod cli;
 pub mod json;
@@ -8,5 +9,6 @@ pub mod logging;
 pub mod parallel;
 pub mod proptest;
 pub mod rng;
+pub mod scratch;
 pub mod stats;
 pub mod toml;

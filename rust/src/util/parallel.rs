@@ -1,64 +1,139 @@
-//! Zero-dependency fork-join parallelism over slices.
+//! Zero-dependency data parallelism over slices, dispatched to a
+//! **persistent parked worker pool**.
 //!
 //! The offline build has no `rayon`, so this module hand-rolls the one
 //! shape the simulator needs: *static chunking* of one or two equal
-//! slices across a fleet of scoped threads (`std::thread::scope`), with
-//! the caller's thread working the first chunk. There is no work
-//! stealing and no persistent pool — a fork spawns `width - 1` OS
-//! threads and joins them before returning, which keeps the module tiny
-//! and makes every parallel region a strict fork-join (nothing outlives
-//! the call).
+//! slices across worker threads, with the caller's thread working the
+//! first chunk. There is no work stealing; every parallel region is a
+//! strict fork-join (nothing outlives the call).
+//!
+//! # Dispatchers
+//!
+//! Two interchangeable dispatchers drive the same chunk bodies:
+//!
+//! * [`Dispatch::Pooled`] (default) — long-lived workers, spawned
+//!   lazily up to `MAX_THREADS - 1` and *parked on a condvar* between
+//!   regions. A fork is one generation-stamped job broadcast: the
+//!   submitter publishes a stack pointer to the chunk closure, bumps the
+//!   generation, wakes exactly the participating workers (per-worker
+//!   condvars), works chunk 0 itself, and parks on a second condvar
+//!   until every participating worker has finished. No
+//!   threads are spawned and **nothing is allocated** in steady state
+//!   (`tests/alloc_free.rs` asserts this with the pool active), which
+//!   removes the ~15–25 µs/spawn fork tax that bounded speedup on
+//!   sub-millisecond rounds.
+//! * [`Dispatch::Spawn`] — the legacy spawn-per-fork dispatcher
+//!   (`std::thread::scope`), kept as the measurable baseline: select it
+//!   with `SAFA_DISPATCH=spawn` for A/B bench runs, or per call tree
+//!   with [`with_dispatch`]. `benches/microbench_hotpath.rs` quantifies
+//!   the dispatch-latency gap with an empty-body [`fork`].
 //!
 //! # Width selection
 //!
 //! [`num_threads`] resolves, in priority order:
 //! 1. a scoped [`with_thread_count`] override on the current thread
 //!    (tests and the thread-scaling benches),
-//! 2. the `SAFA_THREADS` environment variable (parsed once),
+//! 2. the `SAFA_THREADS` environment variable (parsed once; a value
+//!    that is not a positive integer is rejected with a one-shot
+//!    warning, matching `ChurnModel::from_parts` strictness),
 //! 3. `std::thread::available_parallelism()`.
 //!
 //! A chunked call additionally degrades to serial when the slice is
 //! shorter than `grain` elements per worker, so tiny inputs (unit-test
-//! fleets, dim-1 Null models) never pay a spawn.
+//! fleets, dim-1 Null models) never pay a dispatch.
 //!
 //! # Determinism contract
 //!
 //! Every helper here applies `f` to *disjoint, contiguous* chunks whose
-//! element indices are independent of the width: `f(base, chunk)` sees
-//! the same `(index, element)` pairs whether the call ran on 1 thread or
-//! 8. As long as `f` computes each element independently (no cross-chunk
-//! reduction), results are bit-for-bit identical across widths — the
-//! property the engine's determinism tests assert. Reductions must NOT
-//! be accumulated across chunks in completion order; compute per-element
-//! values in parallel and fold them serially in index order instead.
+//! element indices are independent of the width and of the dispatcher:
+//! `f(base, chunk)` sees the same `(index, element)` pairs whether the
+//! call ran on 1 thread or 8, pooled or spawned. As long as `f` computes
+//! each element independently (no cross-chunk reduction), results are
+//! bit-for-bit identical across widths — the property the engine's
+//! determinism tests assert. Reductions must NOT be accumulated across
+//! chunks in completion order; compute per-element values in parallel
+//! and fold them serially in index order instead.
 
 use std::cell::Cell;
-use std::sync::OnceLock;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Condvar, Mutex, MutexGuard, OnceLock};
 
-/// Hard cap on the fork width (a safety rail for absurd `SAFA_THREADS`
-/// values; spawning is per-fork, so each extra thread costs a spawn).
+/// Hard cap on the fork width — also the worker-slot count of the
+/// persistent pool (workers are spawned lazily, so an absurd
+/// `SAFA_THREADS` costs at most this many parked threads).
 pub const MAX_THREADS: usize = 256;
 
 thread_local! {
     /// 0 = no override active.
     static WIDTH_OVERRIDE: Cell<usize> = const { Cell::new(0) };
+    /// `None` = use the process-wide `SAFA_DISPATCH` mode.
+    static DISPATCH_OVERRIDE: Cell<Option<Dispatch>> = const { Cell::new(None) };
+    /// Pool identity: 0 for ordinary threads, `i + 1` for pool worker `i`.
+    static WORKER_ID: Cell<usize> = const { Cell::new(0) };
+    /// True while this thread is executing a pooled chunk body (the
+    /// submitter's own chunk included). A nested [`fork`] must not
+    /// re-enter [`broadcast`] — the submit lock is already held and the
+    /// parked fleet may be the very threads waiting on us — so it runs
+    /// its chunks in place instead (see `fork`).
+    static IN_POOLED_REGION: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Scoped thread-local override: set `key` to `val` for the duration
+/// of `f`, restoring the prior value on exit (including unwinds). The
+/// one implementation under [`with_thread_count`], [`with_dispatch`]
+/// and [`enter_pooled_region`].
+fn with_tls<T: Copy + 'static, R>(
+    key: &'static std::thread::LocalKey<Cell<T>>,
+    val: T,
+    f: impl FnOnce() -> R,
+) -> R {
+    struct Restore<T: Copy + 'static>(&'static std::thread::LocalKey<Cell<T>>, T);
+    impl<T: Copy + 'static> Drop for Restore<T> {
+        fn drop(&mut self) {
+            self.0.with(|c| c.set(self.1));
+        }
+    }
+    let prev = key.with(|c| c.replace(val));
+    let _restore = Restore(key, prev);
+    f()
+}
+
+/// Mark this thread as inside a pooled chunk body for the duration of
+/// `f` (restored on exit, including unwinds).
+fn enter_pooled_region<R>(f: impl FnOnce() -> R) -> R {
+    with_tls(&IN_POOLED_REGION, true, f)
 }
 
 /// `SAFA_THREADS`, else available parallelism (read once per process).
+/// A set-but-invalid value (`0`, garbage) is rejected loudly — one
+/// warning through the `SAFA_LOG` machinery — instead of silently
+/// falling back.
 fn configured_threads() -> usize {
     static N: OnceLock<usize> = OnceLock::new();
     *N.get_or_init(|| {
-        if let Ok(v) = std::env::var("SAFA_THREADS") {
-            if let Ok(n) = v.trim().parse::<usize>() {
-                if n >= 1 {
-                    return n.min(MAX_THREADS);
-                }
-            }
-        }
-        std::thread::available_parallelism()
+        let fallback = std::thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(1)
-            .min(MAX_THREADS)
+            .min(MAX_THREADS);
+        match std::env::var("SAFA_THREADS") {
+            Ok(v) => match v.trim().parse::<usize>() {
+                Ok(0) | Err(_) => {
+                    crate::log_warn!(
+                        "SAFA_THREADS={v:?} is not a positive integer; \
+                         using available parallelism ({fallback})"
+                    );
+                    fallback
+                }
+                Ok(n) if n > MAX_THREADS => {
+                    crate::log_warn!(
+                        "SAFA_THREADS={n} exceeds the pool cap; clamping to {MAX_THREADS}"
+                    );
+                    MAX_THREADS
+                }
+                Ok(n) => n,
+            },
+            Err(_) => fallback,
+        }
     })
 }
 
@@ -76,16 +151,304 @@ pub fn num_threads() -> usize {
 /// (restored on exit, including unwinds). Used by the determinism tests
 /// and `benches/fleet_scale.rs` to sweep widths inside one process.
 pub fn with_thread_count<R>(n: usize, f: impl FnOnce() -> R) -> R {
-    struct Restore(usize);
-    impl Drop for Restore {
-        fn drop(&mut self) {
-            WIDTH_OVERRIDE.with(|c| c.set(self.0));
+    with_tls(&WIDTH_OVERRIDE, n.clamp(1, MAX_THREADS), f)
+}
+
+/// How parallel regions hand chunks to worker threads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dispatch {
+    /// Persistent parked workers, woken by a generation-stamped job
+    /// broadcast (the default).
+    Pooled,
+    /// Legacy spawn-per-fork over `std::thread::scope` — the measurable
+    /// baseline (`SAFA_DISPATCH=spawn`).
+    Spawn,
+}
+
+/// `SAFA_DISPATCH` (`pooled` | `spawn`), read once per process.
+fn configured_dispatch() -> Dispatch {
+    static D: OnceLock<Dispatch> = OnceLock::new();
+    *D.get_or_init(|| match std::env::var("SAFA_DISPATCH") {
+        Ok(v) if v.eq_ignore_ascii_case("spawn") => Dispatch::Spawn,
+        Ok(v) if v.eq_ignore_ascii_case("pooled") => Dispatch::Pooled,
+        Ok(v) => {
+            crate::log_warn!(
+                "SAFA_DISPATCH={v:?} is neither \"pooled\" nor \"spawn\"; \
+                 using the pooled dispatcher"
+            );
+            Dispatch::Pooled
+        }
+        Err(_) => Dispatch::Pooled,
+    })
+}
+
+/// The dispatcher the next parallel call on this thread will use.
+pub fn dispatch_mode() -> Dispatch {
+    DISPATCH_OVERRIDE
+        .with(|c| c.get())
+        .unwrap_or_else(configured_dispatch)
+}
+
+/// Pin the dispatcher for the duration of `f` on this thread (restored
+/// on exit, including unwinds). Lets one bench process A/B the pooled
+/// and spawn dispatchers.
+pub fn with_dispatch<R>(d: Dispatch, f: impl FnOnce() -> R) -> R {
+    with_tls(&DISPATCH_OVERRIDE, Some(d), f)
+}
+
+/// Stable pool identity of the current thread: 0 for any ordinary
+/// thread (the submitter, which works chunk 0), `i + 1` for pool worker
+/// `i` — i.e. the chunk index this thread runs in a full-width fork.
+/// `util::scratch` uses it to give every worker a preferred scratch
+/// slot so steady-state parallel training reuses warm buffers.
+pub fn worker_id() -> usize {
+    WORKER_ID.with(|c| c.get())
+}
+
+// ---------------------------------------------------------------------------
+// The persistent pool.
+// ---------------------------------------------------------------------------
+
+/// Type-erased pointer to the submitting call's stack-held chunk
+/// closure, plus its monomorphized call shim. Only dereferenced by pool
+/// workers while the submitter blocks in [`broadcast`], so the pointee
+/// is always alive.
+#[derive(Clone, Copy)]
+struct Job {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+}
+
+// SAFETY: see the `Job` docs — the pointee outlives every dereference
+// because the submitter joins the broadcast before returning, and the
+// closure is `Sync` (enforced by `broadcast`'s bound), so shared calls
+// from many workers are sound.
+unsafe impl Send for Job {}
+
+struct PoolState {
+    /// Bumped once per broadcast; workers park until it changes.
+    generation: u64,
+    job: Option<Job>,
+    /// Worker indices `< active` participate in the current generation.
+    active: usize,
+    /// Participating workers that have not finished the current job.
+    remaining: usize,
+    /// First panic payload from a worker's chunk body this generation —
+    /// resume-unwound on the submitter, so the Pooled dispatcher
+    /// propagates the *original* panic exactly like the Spawn one
+    /// (allocates only on the panic path).
+    panic: Option<Box<dyn std::any::Any + Send>>,
+    /// Workers spawned so far (grown on demand, never shrunk).
+    spawned: usize,
+}
+
+struct Pool {
+    state: Mutex<PoolState>,
+    /// Per-worker park spots (one condvar each, all paired with
+    /// `state`): a broadcast wakes exactly the participating workers,
+    /// so narrow forks stay cheap after a wide fork has grown the
+    /// fleet.
+    work: Box<[Condvar]>,
+    /// The submitter parks here until `remaining == 0`.
+    done: Condvar,
+    /// Serializes broadcasts from independent caller threads.
+    submit: Mutex<()>,
+}
+
+/// Ignore mutex poisoning: pool state is only ever written under the
+/// lock by non-panicking sections (worker panics are caught before the
+/// re-lock), so a poisoned guard's data is still consistent.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn wait<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(|e| e.into_inner())
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool {
+        state: Mutex::new(PoolState {
+            generation: 0,
+            job: None,
+            active: 0,
+            remaining: 0,
+            panic: None,
+            spawned: 0,
+        }),
+        work: (0..MAX_THREADS - 1).map(|_| Condvar::new()).collect(),
+        done: Condvar::new(),
+        submit: Mutex::new(()),
+    })
+}
+
+unsafe fn call_shim<F: Fn(usize) + Sync>(data: *const (), chunk: usize) {
+    (*(data as *const F))(chunk)
+}
+
+fn worker_loop(index: usize) {
+    WORKER_ID.with(|c| c.set(index + 1));
+    // A pool worker only ever runs chunk bodies, so it is permanently
+    // "inside a pooled region": a nested fork from its chunk must run
+    // in place, never re-enter the pool.
+    IN_POOLED_REGION.with(|c| c.set(true));
+    let p = pool();
+    let mut seen = 0u64;
+    let mut state = lock(&p.state);
+    loop {
+        while state.generation == seen {
+            state = wait(&p.work[index], state);
+        }
+        seen = state.generation;
+        if index < state.active {
+            let job = state.job.expect("active generation carries a job");
+            drop(state);
+            // Worker `index` owns chunk `index + 1` (the submitter works
+            // chunk 0). catch_unwind keeps a panicking chunk body from
+            // deadlocking the submitter; the payload is re-raised there.
+            let result = catch_unwind(AssertUnwindSafe(|| unsafe {
+                (job.call)(job.data, index + 1);
+            }));
+            state = lock(&p.state);
+            if let Err(payload) = result {
+                // Keep the first payload only.
+                if state.panic.is_none() {
+                    state.panic = Some(payload);
+                }
+            }
+            state.remaining -= 1;
+            if state.remaining == 0 {
+                p.done.notify_one();
+            }
         }
     }
-    let prev = WIDTH_OVERRIDE.with(|c| c.replace(n.clamp(1, MAX_THREADS)));
-    let _restore = Restore(prev);
-    f()
 }
+
+/// Pooled dispatch of `f(0..width)`: one park/wake broadcast, the
+/// calling thread working chunk 0, returning after every chunk
+/// completes. Steady state (workers already spawned) allocates nothing.
+fn broadcast<F: Fn(usize) + Sync>(width: usize, f: &F) {
+    let p = pool();
+    let _submit = lock(&p.submit);
+    let helpers = width - 1;
+    {
+        let mut state = lock(&p.state);
+        // Grow the fleet on demand (one-time warm-up cost per worker).
+        while state.spawned < helpers {
+            let index = state.spawned;
+            std::thread::Builder::new()
+                .name(format!("safa-pool-{index}"))
+                .spawn(move || worker_loop(index))
+                .expect("spawn pool worker");
+            state.spawned += 1;
+        }
+        state.job = Some(Job {
+            data: f as *const F as *const (),
+            call: call_shim::<F>,
+        });
+        state.active = helpers;
+        state.remaining = helpers;
+        state.generation = state.generation.wrapping_add(1);
+        drop(state);
+        // Wake exactly the participants — after releasing the state
+        // lock, so a woken worker never bounces straight back onto a
+        // mutex the submitter still holds. Workers beyond `helpers`
+        // stay parked (they skip this generation entirely — safe,
+        // since only participating workers are counted in
+        // `remaining`), and no wakeup can be lost: the generation was
+        // bumped under the lock, and workers re-check it under the
+        // lock.
+        for cv in &p.work[..helpers] {
+            cv.notify_one();
+        }
+    }
+
+    // Join-on-drop guard: even if the submitter's own chunk panics, the
+    // workers (which borrow the submitter's stack) finish before the
+    // unwind can invalidate what they read.
+    struct Join(&'static Pool);
+    impl Drop for Join {
+        fn drop(&mut self) {
+            let mut state = lock(&self.0.state);
+            while state.remaining != 0 {
+                state = wait(&self.0.done, state);
+            }
+            state.job = None;
+            let panic = state.panic.take();
+            drop(state);
+            if let Some(payload) = panic {
+                // Re-raise the worker's original panic (unless already
+                // unwinding from the submitter's own chunk).
+                if !std::thread::panicking() {
+                    std::panic::resume_unwind(payload);
+                }
+            }
+        }
+    }
+    let join = Join(p);
+    enter_pooled_region(|| f(0));
+    drop(join);
+}
+
+/// Legacy dispatcher: spawn `width - 1` scoped threads per fork.
+fn spawn_broadcast<F: Fn(usize) + Sync>(width: usize, f: &F) {
+    std::thread::scope(|s| {
+        for i in 1..width {
+            s.spawn(move || f(i));
+        }
+        f(0);
+    });
+}
+
+/// Dispatch `f(i)` for `i in 0..width` — `f(0)` on the calling thread —
+/// through the active dispatcher, joining before returning. The raw
+/// fork primitive under [`for_each_chunk`]; public so the dispatch-
+/// latency microbench can time an empty-body fork. A no-op when
+/// `width == 0` (the range is empty), serial when `width == 1`; panics
+/// if `width > MAX_THREADS` (indices must never be silently skipped).
+///
+/// Re-entrancy: a `fork` issued from inside a pooled chunk body runs
+/// its chunks serially in place (same indices, same coverage) instead
+/// of re-entering the pool — the submit lock is held for the enclosing
+/// region and the parked workers may be the very threads waiting on
+/// the caller, so a nested broadcast would deadlock. (The chunked
+/// helpers additionally pin the width to 1 inside bodies, so nested
+/// *chunked* calls degrade before even reaching this point.) The guard
+/// is **thread-local**: do not call a pooled `fork` from a thread you
+/// spawned *inside* a chunk body — that thread cannot know it is
+/// transitively inside the enclosing broadcast, and blocking on the
+/// submit lock from there deadlocks. Chunk bodies should not spawn
+/// threads at all; use nested (serial) forks on the same thread.
+pub fn fork<F: Fn(usize) + Sync>(width: usize, f: F) {
+    assert!(
+        width <= MAX_THREADS,
+        "fork width {width} exceeds MAX_THREADS ({MAX_THREADS})"
+    );
+    if width == 0 {
+        return; // 0..0 is empty: no calls
+    }
+    if width == 1 {
+        f(0);
+        return;
+    }
+    match dispatch_mode() {
+        Dispatch::Pooled => {
+            if IN_POOLED_REGION.with(|c| c.get()) {
+                for i in 0..width {
+                    f(i);
+                }
+            } else {
+                broadcast(width, &f);
+            }
+        }
+        Dispatch::Spawn => spawn_broadcast(width, &f),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Static chunking over slices.
+// ---------------------------------------------------------------------------
 
 /// Width actually used for `len` elements at `grain` elements minimum
 /// per worker.
@@ -93,6 +456,46 @@ fn width_for(len: usize, grain: usize) -> usize {
     let by_work = len / grain.max(1);
     num_threads().min(by_work).max(1)
 }
+
+/// Static chunk geometry shared by [`for_each_chunk`] and
+/// [`for_each_chunk2`]: contiguous chunks of `len.div_ceil(width)`
+/// elements (the last possibly short), with the width shrunk to the
+/// populated chunk count so no worker sees an empty slice. Boundaries
+/// depend only on `(len, width)` — never on which thread runs a chunk —
+/// which is what keeps results bit-for-bit width-invariant.
+#[derive(Debug, Clone, Copy)]
+struct Splitter {
+    len: usize,
+    chunk: usize,
+    width: usize,
+}
+
+impl Splitter {
+    fn new(len: usize, width: usize) -> Splitter {
+        debug_assert!(len >= 1 && width >= 1);
+        let chunk = len.div_ceil(width);
+        // Ceil division can leave trailing chunks empty (len 6 at width
+        // 4 → chunks of 2 → only 3 populated); shrink to match.
+        Splitter {
+            len,
+            chunk,
+            width: len.div_ceil(chunk),
+        }
+    }
+
+    /// Element range of chunk `i`.
+    fn bounds(&self, i: usize) -> (usize, usize) {
+        let start = i * self.chunk;
+        (start, (start + self.chunk).min(self.len))
+    }
+}
+
+/// A `&mut`-slice base pointer that may cross threads. Sound because
+/// every chunk body receives a disjoint index range (see [`Splitter`]),
+/// so no two threads ever alias.
+struct SendPtr<T>(*mut T);
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 /// Apply `f(base_index, chunk)` to contiguous chunks of `data` across
 /// the pool. Serial (`f(0, data)`) when the input is shorter than
@@ -108,23 +511,19 @@ where
         f(0, data);
         return;
     }
-    let chunk = len.div_ceil(width);
-    std::thread::scope(|s| {
-        let mut parts = data.chunks_mut(chunk);
-        let first = parts.next().expect("width > 1 implies a first chunk");
-        for (i, part) in parts.enumerate() {
-            let f = &f;
-            // Chunk bodies run with the width pinned to 1 so a nested
-            // parallel call (e.g. `ParamVec::copy_from` inside a
-            // per-client pass) degrades to serial instead of spawning
-            // width² threads. Serial fallbacks above leave the width
-            // untouched, so an un-forked outer loop still lets inner
-            // kernels fork.
-            s.spawn(move || with_thread_count(1, || f((i + 1) * chunk, part)));
-        }
-        // The caller's thread works the first chunk while the spawned
-        // workers run; the scope joins everything before returning.
-        with_thread_count(1, || f(0, first));
+    let split = Splitter::new(len, width);
+    let ptr = SendPtr(data.as_mut_ptr());
+    fork(split.width, |i| {
+        let (start, end) = split.bounds(i);
+        // SAFETY: chunk ranges are disjoint per index and `data`
+        // outlives the fork (both dispatchers join before returning).
+        let chunk = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(start), end - start) };
+        // Chunk bodies run with the width pinned to 1 so a nested
+        // parallel call (e.g. `ParamVec::copy_from` inside a per-client
+        // pass) degrades to serial instead of re-entering the
+        // dispatcher. Serial fallbacks above leave the width untouched,
+        // so an un-forked outer loop still lets inner kernels fork.
+        with_thread_count(1, || f(start, chunk));
     });
 }
 
@@ -143,18 +542,17 @@ where
         f(0, a, b);
         return;
     }
-    let chunk = len.div_ceil(width);
-    std::thread::scope(|s| {
-        let mut pa = a.chunks_mut(chunk);
-        let mut pb = b.chunks_mut(chunk);
-        let fa = pa.next().expect("width > 1 implies a first chunk");
-        let fb = pb.next().expect("width > 1 implies a first chunk");
-        for (i, (ca, cb)) in pa.zip(pb).enumerate() {
-            let f = &f;
-            // Width pinned to 1 inside chunk bodies — see for_each_chunk.
-            s.spawn(move || with_thread_count(1, || f((i + 1) * chunk, ca, cb)));
-        }
-        with_thread_count(1, || f(0, fa, fb));
+    let split = Splitter::new(len, width);
+    let pa = SendPtr(a.as_mut_ptr());
+    let pb = SendPtr(b.as_mut_ptr());
+    fork(split.width, |i| {
+        let (start, end) = split.bounds(i);
+        // SAFETY: as in `for_each_chunk`; both slices use the same
+        // disjoint ranges.
+        let ca = unsafe { std::slice::from_raw_parts_mut(pa.0.add(start), end - start) };
+        let cb = unsafe { std::slice::from_raw_parts_mut(pb.0.add(start), end - start) };
+        // Width pinned to 1 inside chunk bodies — see for_each_chunk.
+        with_thread_count(1, || f(start, ca, cb));
     });
 }
 
@@ -165,16 +563,20 @@ mod tests {
 
     #[test]
     fn covers_every_index_exactly_once() {
-        for width in [1, 2, 3, 8, 17] {
-            with_thread_count(width, || {
-                let mut data = vec![0u32; 1003];
-                for_each_chunk(&mut data, 1, |base, chunk| {
-                    for (i, x) in chunk.iter_mut().enumerate() {
-                        *x += (base + i) as u32 + 1;
-                    }
-                });
-                for (i, &x) in data.iter().enumerate() {
-                    assert_eq!(x, i as u32 + 1, "index {i} at width {width}");
+        for dispatch in [Dispatch::Pooled, Dispatch::Spawn] {
+            with_dispatch(dispatch, || {
+                for width in [1, 2, 3, 8, 17] {
+                    with_thread_count(width, || {
+                        let mut data = vec![0u32; 1003];
+                        for_each_chunk(&mut data, 1, |base, chunk| {
+                            for (i, x) in chunk.iter_mut().enumerate() {
+                                *x += (base + i) as u32 + 1;
+                            }
+                        });
+                        for (i, &x) in data.iter().enumerate() {
+                            assert_eq!(x, i as u32 + 1, "index {i} at width {width}");
+                        }
+                    });
                 }
             });
         }
@@ -197,6 +599,94 @@ mod tests {
                 }
             });
         }
+    }
+
+    #[test]
+    fn fork_runs_every_chunk_once_on_both_dispatchers() {
+        for dispatch in [Dispatch::Pooled, Dispatch::Spawn] {
+            with_dispatch(dispatch, || {
+                // Many consecutive forks: steady-state pool reuse, not
+                // just the warm-up broadcast.
+                for _ in 0..50 {
+                    let hits: Vec<AtomicUsize> = (0..5).map(|_| AtomicUsize::new(0)).collect();
+                    fork(5, |i| {
+                        hits[i].fetch_add(1, Ordering::SeqCst);
+                    });
+                    for (i, h) in hits.iter().enumerate() {
+                        assert_eq!(
+                            h.load(Ordering::SeqCst),
+                            1,
+                            "{dispatch:?}: chunk {i} run count"
+                        );
+                    }
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn nested_pooled_fork_runs_in_place_without_deadlock() {
+        with_dispatch(Dispatch::Pooled, || {
+            let hits: Vec<AtomicUsize> = (0..12).map(|_| AtomicUsize::new(0)).collect();
+            fork(3, |outer| {
+                // A nested fork inside a pooled chunk body (submitter
+                // chunk 0 and pool workers alike) must not re-enter the
+                // pool; it covers its indices serially in place.
+                fork(4, |inner| {
+                    hits[outer * 4 + inner].fetch_add(1, Ordering::SeqCst);
+                });
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "slot {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_workers_report_stable_ids() {
+        // Chunk i runs on the thread whose worker_id() is i (0 = the
+        // submitting thread), which is what gives WorkerScratch its
+        // per-worker slot affinity.
+        with_dispatch(Dispatch::Pooled, || {
+            let ids: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(usize::MAX)).collect();
+            fork(4, |i| {
+                ids[i].store(worker_id(), Ordering::SeqCst);
+            });
+            for (i, id) in ids.iter().enumerate() {
+                assert_eq!(id.load(Ordering::SeqCst), i, "chunk {i} worker id");
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "boom in chunk 2")]
+    fn worker_panic_propagates_with_its_original_payload() {
+        with_dispatch(Dispatch::Pooled, || {
+            fork(3, |i| {
+                if i == 2 {
+                    panic!("boom in chunk {i}");
+                }
+            });
+        });
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_job() {
+        with_dispatch(Dispatch::Pooled, || {
+            let _ = catch_unwind(AssertUnwindSafe(|| {
+                fork(3, |i| {
+                    if i > 0 {
+                        panic!("boom");
+                    }
+                });
+            }));
+            // The pool must still dispatch correctly afterwards.
+            let hits = AtomicUsize::new(0);
+            fork(3, |_| {
+                hits.fetch_add(1, Ordering::SeqCst);
+            });
+            assert_eq!(hits.load(Ordering::SeqCst), 3);
+        });
     }
 
     #[test]
@@ -231,6 +721,37 @@ mod tests {
             with_thread_count(7, || assert_eq!(num_threads(), 7));
             assert_eq!(num_threads(), 3);
         });
+    }
+
+    #[test]
+    fn dispatch_override_nests_and_restores() {
+        let outer = dispatch_mode();
+        with_dispatch(Dispatch::Spawn, || {
+            assert_eq!(dispatch_mode(), Dispatch::Spawn);
+            with_dispatch(Dispatch::Pooled, || {
+                assert_eq!(dispatch_mode(), Dispatch::Pooled);
+            });
+            assert_eq!(dispatch_mode(), Dispatch::Spawn);
+        });
+        assert_eq!(dispatch_mode(), outer);
+    }
+
+    #[test]
+    fn splitter_covers_len_without_empty_chunks() {
+        for len in [1usize, 2, 5, 6, 7, 64, 1003] {
+            for width in [1usize, 2, 3, 4, 8, 17] {
+                let s = Splitter::new(len, width);
+                assert!(s.width >= 1 && s.width <= width);
+                let mut covered = 0;
+                for i in 0..s.width {
+                    let (a, b) = s.bounds(i);
+                    assert!(a < b, "empty chunk {i} for len {len} width {width}");
+                    assert_eq!(a, covered, "gap before chunk {i}");
+                    covered = b;
+                }
+                assert_eq!(covered, len, "len {len} width {width} not covered");
+            }
+        }
     }
 
     #[test]

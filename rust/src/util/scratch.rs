@@ -1,0 +1,141 @@
+//! Per-worker scratch slots for parallel chunk bodies.
+//!
+//! [`WorkerScratch<T>`] hands each concurrent caller an exclusive,
+//! lazily-built `T` without serializing on one shared instance: slot
+//! `i` is preferred by the thread whose [`parallel::worker_id`] is `i`,
+//! so in steady state every pool worker reuses the scratch it warmed up
+//! — **no allocation after warm-up** — while a try-lock scan keeps
+//! arbitrary extra threads (unit tests, the serial path) correct.
+//!
+//! This is what lets scratch-carrying trainers (the native CNN's
+//! forward/backward buffers) implement
+//! [`crate::model::StatelessTrainer`]: `local_update_shared(&self, ..)`
+//! borrows a worker-local `Scratch` instead of `&mut self`, so
+//! `protocol::collect_updates` can fan client updates across the pool.
+//!
+//! Contents are *scratch*: bodies must fully overwrite whatever they
+//! read (every CNN kernel zero-fills or overwrites its output), because
+//! which slot a call lands on is **not** part of the determinism
+//! contract — only the slot's existence is.
+
+use crate::util::parallel::{self, MAX_THREADS};
+use std::sync::{Mutex, TryLockError};
+
+/// Lazily-built, worker-indexed scratch slots (see module docs).
+pub struct WorkerScratch<T> {
+    slots: Box<[Mutex<Option<T>>]>,
+}
+
+impl<T: Send> WorkerScratch<T> {
+    /// An empty pool: slots are built on first claim by `with`'s `init`.
+    pub fn new() -> WorkerScratch<T> {
+        WorkerScratch {
+            slots: (0..MAX_THREADS).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+
+    /// Run `f` with an exclusive scratch slot, building one with `init`
+    /// if the claimed slot has never been used. The current pool
+    /// worker's preferred slot is claimed when free; otherwise the scan
+    /// wraps to the first free slot, so concurrent non-pool callers
+    /// stay correct (at worst they build one extra slot each).
+    pub fn with<R>(&self, init: impl FnOnce() -> T, f: impl FnOnce(&mut T) -> R) -> R {
+        let n = self.slots.len();
+        let preferred = parallel::worker_id() % n;
+        for probe in 0..n {
+            let idx = (preferred + probe) % n;
+            let mut guard = match self.slots[idx].try_lock() {
+                Ok(g) => g,
+                // A panic mid-use may have left this slot half-written;
+                // drop the contents and rebuild below. Clearing the
+                // poison makes the recovery one-shot — otherwise every
+                // later claim would wipe and rebuild the slot forever.
+                Err(TryLockError::Poisoned(p)) => {
+                    let mut g = p.into_inner();
+                    *g = None;
+                    self.slots[idx].clear_poison();
+                    g
+                }
+                Err(TryLockError::WouldBlock) => continue,
+            };
+            if guard.is_none() {
+                *guard = Some(init());
+            }
+            return f(guard.as_mut().expect("slot just built"));
+        }
+        // More than MAX_THREADS concurrent claimants (unreachable from
+        // the pool, whose width is capped below that): fall back to a
+        // throwaway scratch rather than blocking.
+        let mut tmp = init();
+        f(&mut tmp)
+    }
+
+    /// Number of slots currently built (diagnostics/tests).
+    pub fn built(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| match s.try_lock() {
+                Ok(g) => g.is_some(),
+                Err(_) => true, // in use => built
+            })
+            .count()
+    }
+}
+
+impl<T: Send> Default for WorkerScratch<T> {
+    fn default() -> Self {
+        WorkerScratch::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::parallel::{for_each_chunk, with_thread_count};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn builds_lazily_and_reuses() {
+        let scratch: WorkerScratch<Vec<u8>> = WorkerScratch::new();
+        assert_eq!(scratch.built(), 0);
+        let builds = AtomicUsize::new(0);
+        for _ in 0..5 {
+            scratch.with(
+                || {
+                    builds.fetch_add(1, Ordering::SeqCst);
+                    vec![0u8; 64]
+                },
+                |v| v[0] = 1,
+            );
+        }
+        // Same (serial) caller every time: one build, then reuse.
+        assert_eq!(builds.load(Ordering::SeqCst), 1);
+        assert_eq!(scratch.built(), 1);
+    }
+
+    #[test]
+    fn parallel_claimants_get_disjoint_slots() {
+        let scratch: WorkerScratch<Vec<usize>> = WorkerScratch::new();
+        with_thread_count(4, || {
+            let mut data = vec![0usize; 4];
+            for_each_chunk(&mut data, 1, |base, chunk| {
+                for (i, x) in chunk.iter_mut().enumerate() {
+                    *x = scratch.with(
+                        || vec![0usize; 8],
+                        |v| {
+                            // Exclusive access: concurrent claimants
+                            // writing a shared slot would tear this.
+                            v[0] = base + i;
+                            v[0]
+                        },
+                    );
+                }
+            });
+            for (i, &x) in data.iter().enumerate() {
+                assert_eq!(x, i);
+            }
+        });
+        // At most one slot per concurrent claimant was ever built.
+        assert!(scratch.built() <= 4, "built {}", scratch.built());
+    }
+}

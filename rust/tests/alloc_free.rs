@@ -4,13 +4,16 @@
 //! warm-up round has grown every pooled buffer (`RoundScratch`, the
 //! event queue, the reusable output records), further rounds must not
 //! touch the heap at all — for the Bernoulli direct path AND the Markov
-//! event path.
+//! event path, at width 1 AND under pooled parallel dispatch.
 //!
-//! The fork width is pinned to 1: spawning worker threads allocates by
-//! nature (stacks, join handles), so the allocation-free guarantee is a
-//! property of the serial path; the parallel path adds O(width) per
-//! fork, never O(m). Exactly one #[test] lives in this binary so no
-//! concurrent test pollutes the counter.
+//! The serial case is strict by construction. The pooled case is the
+//! persistent worker pool's contract: warm-up rounds spawn + park the
+//! workers (stacks, join handles — counted, hence warm-up) and build
+//! every per-worker buffer; a steady-state park/wake broadcast then
+//! passes the job by stack pointer and touches no heap. Only the legacy
+//! `SAFA_DISPATCH=spawn` dispatcher still pays per-fork allocations,
+//! which is why the test pins `Dispatch::Pooled`. Exactly one #[test]
+//! lives in this binary so no concurrent test pollutes the counter.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -21,7 +24,7 @@ use safa::engine::{AvailabilityModel, FleetEngine, RoundCtx};
 use safa::model::ParamVec;
 use safa::net::NetworkModel;
 use safa::sim::{ContinuationSim, RoundSim};
-use safa::util::parallel::with_thread_count;
+use safa::util::parallel::{with_dispatch, with_thread_count, Dispatch};
 use safa::util::rng::Pcg64;
 
 struct CountingAlloc;
@@ -119,8 +122,9 @@ fn allocs_in_steady_state(
 
 #[test]
 fn steady_state_rounds_do_not_allocate() {
+    let m = 500;
+    // Serial path: strictly zero heap traffic.
     with_thread_count(1, || {
-        let m = 500;
         let bern = allocs_in_steady_state(
             AvailabilityModel::BernoulliPerRound { crash_prob: 0.2 },
             m,
@@ -138,5 +142,29 @@ fn steady_state_rounds_do_not_allocate() {
             8,
         );
         assert_eq!(markov, 0, "Markov event path allocated in steady state");
+    });
+    // Pooled dispatch at width 4 (m=500 over the 64-client draw grain
+    // genuinely forks): after warm-up spawns and parks the pool's
+    // workers, steady-state parallel rounds allocate nothing either.
+    with_dispatch(Dispatch::Pooled, || {
+        with_thread_count(4, || {
+            let bern = allocs_in_steady_state(
+                AvailabilityModel::BernoulliPerRound { crash_prob: 0.2 },
+                m,
+                3,
+                8,
+            );
+            assert_eq!(bern, 0, "pooled Bernoulli direct path allocated in steady state");
+            let markov = allocs_in_steady_state(
+                AvailabilityModel::Markov {
+                    mean_uptime_s: 400.0,
+                    mean_downtime_s: 150.0,
+                },
+                m,
+                3,
+                8,
+            );
+            assert_eq!(markov, 0, "pooled Markov event path allocated in steady state");
+        });
     });
 }

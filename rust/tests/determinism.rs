@@ -1,17 +1,21 @@
 //! Thread-count invariance: the parallel runtime must be bit-for-bit
 //! identical to the serial path at every fork width.
 //!
-//! Covers the three parallelized hot paths from the perf tentpole:
+//! Covers the parallelized hot paths from the perf tentpoles:
 //! * engine window draws + round outcomes (Bernoulli direct path,
-//!   Markov event path with persisted churn state, trace replay),
+//!   Markov event path with persisted churn state and fleet-chunked
+//!   setup passes, trace replay),
 //! * Eq. 7 `weighted_sum_into` / `weighted_sum_slices_into`,
-//! * full protocol rounds on the Null backend (SAFA end to end).
+//! * full protocol rounds on the Null backend (SAFA end to end),
+//! * full protocol rounds on the native CNN backend (Task 2), whose
+//!   client updates train in per-worker scratch slots on the
+//!   persistent pool.
 //!
 //! Widths {1, 3, 8} × fleet sizes m ∈ {1, 7, 500}, per the issue's test
 //! matrix. Equality is asserted on raw f64 bits, not tolerances.
 
 use safa::client::ClientState;
-use safa::config::{presets, ChurnModel};
+use safa::config::{presets, Backend, ChurnModel, CnnArch};
 use safa::engine::{AvailabilityModel, FleetEngine, RoundCtx};
 use safa::model::{weighted_sum_into, weighted_sum_slices_into, ParamVec};
 use safa::net::NetworkModel;
@@ -178,6 +182,64 @@ fn weighted_sum_is_width_invariant() {
                 weighted_sum_slices_into(&mut got2, &weights, &entries)
             });
             assert!(got2 == reference, "weighted_sum_slices m={m} width={width}");
+        }
+    }
+}
+
+/// Tentpole: Task-2 (native CNN) client updates fan out across the
+/// persistent pool in per-worker scratch slots; whole SAFA runs on the
+/// CNN backend must stay bit-identical at every width — training,
+/// Eq. 7 aggregation and engine rounds included — under both Bernoulli
+/// crashes and Markov churn.
+#[test]
+fn safa_cnn_rounds_are_width_invariant_end_to_end() {
+    for churn in [
+        ChurnModel::Bernoulli,
+        ChurnModel::Markov {
+            mean_uptime_s: 500.0,
+            mean_downtime_s: 200.0,
+        },
+    ] {
+        let mut cfg = presets::preset("task2-scaled").unwrap();
+        cfg.backend = Backend::Native;
+        cfg.env.churn = churn.clone();
+        cfg.env.m = 80; // enough arrivals that widths genuinely fork
+        cfg.env.crash_prob = 0.1;
+        cfg.task.n = 400;
+        cfg.task.n_test = 40;
+        cfg.task.cnn = CnnArch {
+            c1: 2,
+            c2: 2,
+            hidden: 8,
+        };
+        cfg.train.batch_size = 8;
+        cfg.train.epochs = 1;
+        cfg.train.rounds = 2;
+
+        let run = |width: usize| -> Vec<(usize, usize, Vec<u32>)> {
+            with_thread_count(width, || {
+                let mut env = FedEnv::new(&cfg).unwrap();
+                let mut safa = Safa::new(&env, env.init_global());
+                (1..=cfg.train.rounds)
+                    .map(|t| {
+                        let rec = safa.run_round(t, &mut env);
+                        // The global model's exact bits, every coordinate.
+                        let bits: Vec<u32> =
+                            safa.global().as_slice().iter().map(|x| x.to_bits()).collect();
+                        (rec.n_picked, rec.n_committed, bits)
+                    })
+                    .collect()
+            })
+        };
+        let reference = run(1);
+        for &width in &WIDTHS[1..] {
+            let got = run(width);
+            assert_eq!(got.len(), reference.len());
+            for (t, (a, b)) in got.iter().zip(&reference).enumerate() {
+                assert_eq!(a.0, b.0, "{churn:?} cnn width {width} t={t}: n_picked");
+                assert_eq!(a.1, b.1, "{churn:?} cnn width {width} t={t}: n_committed");
+                assert_eq!(a.2, b.2, "{churn:?} cnn width {width} t={t}: global bits");
+            }
         }
     }
 }
