@@ -1,0 +1,31 @@
+//! Profiling-runner bench: the telemetry grid (protocol × churn × m) as
+//! a repeatable artifact. Thin wrapper over
+//! `safa::telemetry::profile::run_spec` — the same harness behind the
+//! `safa profile` CLI subcommand — so CI and local runs quote identical
+//! numbers.
+//!
+//! Emits `BENCH_profile.json` (override with `-- --json <path>`) in the
+//! BENCH schema plus profiling extras (rounds_per_sec, events_per_sec,
+//! bytes_{down,up}_per_round, share_<phase>; documented in
+//! EXPERIMENTS.md). `SAFA_BENCH_FAST=1` trims the grid for CI smoke.
+
+use safa::bench_harness::json_path_from_args;
+use safa::telemetry::profile::{render_table, run_spec, write_json, ProfileSpec};
+
+fn main() {
+    safa::util::logging::init();
+    let fast = std::env::var("SAFA_BENCH_FAST").as_deref() == Ok("1");
+    let mut spec = ProfileSpec::default();
+    if fast {
+        spec.m_values = vec![50];
+        spec.rounds = 8;
+        spec.warmup = 2;
+    } else {
+        spec.m_values = vec![100, 500];
+    }
+    let cells = run_spec(&spec).expect("profile grid");
+    print!("{}", render_table(&cells));
+    let path = json_path_from_args("BENCH_profile.json");
+    write_json(&cells, &path).expect("write BENCH json");
+    println!("wrote {path}");
+}

@@ -46,8 +46,25 @@ impl Coordinator {
     pub fn run(&mut self) -> RunResult {
         let cfg = self.env.cfg.clone();
         let mut rounds: Vec<RoundRecord> = Vec::with_capacity(cfg.train.rounds);
+        // SAFA_TRACE: per-round JSONL lines (round record + telemetry
+        // delta). Snapshotting only when tracing keeps the default path
+        // free of even the cheap shard merge.
+        let tracing = crate::telemetry::trace_active();
         for t in 1..=cfg.train.rounds {
+            let telemetry_before = if tracing {
+                Some(crate::telemetry::snapshot())
+            } else {
+                None
+            };
             let rec = self.protocol.run_round(t, &mut self.env);
+            if let Some(before) = telemetry_before {
+                let delta = crate::telemetry::snapshot().since(&before);
+                let proto = self.protocol.kind().name().to_string();
+                let mut line = rec.to_json();
+                line.set("protocol", crate::util::json::Json::Str(proto));
+                line.set("telemetry", delta.to_json());
+                crate::telemetry::trace_line(&line);
+            }
             crate::log_debug!(
                 "[{}] round {t}/{}: len={:.1}s picked={} committed={} crashed={} loss={:?}",
                 self.protocol.kind().name(),

@@ -130,6 +130,7 @@ impl EventQueue {
     }
 
     fn push(&mut self, event: Event, class: u8) {
+        crate::telemetry::count(crate::telemetry::Counter::EventsScheduled, 1);
         let seq = self.seq;
         self.seq += 1;
         self.heap.push(Scheduled {
@@ -143,6 +144,7 @@ impl EventQueue {
     /// Pop the earliest event and advance the clock to it.
     pub fn pop(&mut self) -> Option<Event> {
         let s = self.heap.pop()?;
+        crate::telemetry::count(crate::telemetry::Counter::EventsPopped, 1);
         self.now = s.time;
         Some(s.event)
     }

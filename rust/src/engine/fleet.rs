@@ -614,6 +614,7 @@ impl FleetEngine {
             kind: EventKind::RoundDeadline,
         });
 
+        let pop_span = crate::telemetry::span(crate::telemetry::Phase::EventPop);
         while let Some(ev) = q.pop() {
             if ev.kind == EventKind::RoundDeadline {
                 break;
@@ -686,6 +687,7 @@ impl FleetEngine {
                 EventKind::RoundDeadline => unreachable!(),
             }
         }
+        drop(pop_span);
 
         // Deadline: anyone still working goes overtime (the paper counts
         // them as crashed too, §III-B), credited with the fraction of the
@@ -929,6 +931,7 @@ impl FleetEngine {
             kind: EventKind::RoundDeadline,
         });
 
+        let pop_span = crate::telemetry::span(crate::telemetry::Phase::EventPop);
         while let Some(ev) = q.pop() {
             if ev.kind == EventKind::RoundDeadline {
                 break;
@@ -958,6 +961,7 @@ impl FleetEngine {
                 _ => {}
             }
         }
+        drop(pop_span);
         // Fleet-chunked resolution of still-pending participants.
         parallel::for_each_chunk2(
             &mut scratch.outcome,

@@ -35,6 +35,7 @@ pub mod net;
 pub mod protocol;
 pub mod runtime;
 pub mod sim;
+pub mod telemetry;
 pub mod util;
 
 pub use error::{Result, SafaError};

@@ -11,6 +11,9 @@
 //! safa sweep   [--preset task1] [--protocols safa,fedavg]
 //!              [--c 0.1,0.3] [--cr 0.1,0.3,0.5,0.7] [--metric round_len]
 //! safa bias    [--cr 0.3] [--rounds 20]         # Fig. 5 closed form
+//! safa profile [--protocols safa,fedavg] [--churn bernoulli,markov]
+//!              [--m 100,500] [--rounds 30] [--warmup 5]
+//!              [--json BENCH_profile.json]       # rounds/sec grid
 //! safa presets                                   # list presets
 //! ```
 
@@ -37,6 +40,7 @@ fn main() {
         "run" => cmd_run(&args),
         "sweep" => cmd_sweep(&args),
         "bias" => cmd_bias(&args),
+        "profile" => cmd_profile(&args),
         "presets" => {
             for name in presets::preset_names() {
                 println!("{name}");
@@ -66,6 +70,8 @@ fn print_help() {
          \x20 run      run one experiment (see --preset/--protocol/--c/--cr/--tau)\n\
          \x20 sweep    run a protocol × C × cr grid and print a paper-style table\n\
          \x20 bias     print the Fig. 5 closed-form bias series\n\
+         \x20 profile  rounds/sec profiling grid (--protocols/--churn/--m/\n\
+         \x20          --rounds/--warmup/--json; telemetry phase shares)\n\
          \x20 presets  list available presets\n\
          \n\
          Protocols: safa, fedavg, fedcs, fedasync (--alpha/--staleness-exp), local\n\
@@ -151,7 +157,7 @@ fn cmd_run(args: &Args) -> CliResult<()> {
         run_experiment(&cfg)?
     };
     println!(
-        "protocol={} rounds={} avg_round_len={:.2}s avg_t_dist={:.2}s SR={:.3} EUR={:.3} VV={:.3} futility={:.3} online={:.3}",
+        "protocol={} rounds={} avg_round_len={:.2}s avg_t_dist={:.2}s SR={:.3} EUR={:.3} VV={:.3} futility={:.3} online={:.3} down_MB/round={:.2} up_MB/round={:.2}",
         result.protocol,
         result.rounds.len(),
         result.avg_round_len(),
@@ -161,6 +167,8 @@ fn cmd_run(args: &Args) -> CliResult<()> {
         result.version_variance(),
         result.futility(),
         result.avg_online_fraction(),
+        result.avg_bytes_down() / 1e6,
+        result.avg_bytes_up() / 1e6,
     );
     let hist = result.staleness_histogram();
     if hist.iter().skip(1).any(|&c| c > 0) {
@@ -258,6 +266,39 @@ fn cmd_sweep(args: &Args) -> CliResult<()> {
         table.add_block(proto.name(), rows);
     }
     table.emit(&format!("sweep_{}_{metric}", base.task.kind.name()));
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> CliResult<()> {
+    use safa::telemetry::profile::{render_table, run_spec, write_json, ProfileChurn, ProfileSpec};
+    let mut spec = ProfileSpec::default();
+    if let Some(list) = args.get("protocols") {
+        spec.protocols = list
+            .split(',')
+            .map(|s| ProtocolKind::parse(s.trim()))
+            .collect::<Result<_, _>>()?;
+    }
+    if let Some(list) = args.get("churn") {
+        spec.churns = list
+            .split(',')
+            .map(|s| {
+                ProfileChurn::parse(s.trim()).ok_or_else(|| {
+                    CliError(format!("--churn: expected bernoulli|markov, got '{s}'"))
+                })
+            })
+            .collect::<Result<_, _>>()?;
+    }
+    if let Some(ms) = args.get_list::<usize>("m")? {
+        spec.m_values = ms;
+    }
+    spec.rounds = args.get_or("rounds", spec.rounds)?;
+    spec.warmup = args.get_or("warmup", spec.warmup)?;
+    let cells = run_spec(&spec)?;
+    print!("{}", render_table(&cells));
+    if let Some(path) = args.get("json") {
+        write_json(&cells, path)?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 

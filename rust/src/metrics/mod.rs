@@ -18,6 +18,11 @@ pub struct RoundRecord {
     pub m_sync: usize,
     /// |P(t)| — picked clients whose updates enter this aggregation.
     pub n_picked: usize,
+    /// Picked clients that crashed before delivering (Eq. 4's `K_c ∩ P`
+    /// term). Structurally 0 for the five current protocols — they all
+    /// select from completed or surviving clients — but recorded so
+    /// selection-ahead-of-training variants feed EUR correctly.
+    pub n_picked_crashed: usize,
     /// Failed participants (crash + overtime).
     pub n_crashed: usize,
     /// Successfully committed updates (picked + undrafted).
@@ -40,6 +45,11 @@ pub struct RoundRecord {
     /// this round: 0 = trained on w(t-1). Sync protocols log zeros;
     /// FedAsync and SAFA log the real lag of what they merged.
     pub staleness: Vec<u32>,
+    /// Downlink bytes the server spent distributing the global model
+    /// this round (m_sync × model size).
+    pub bytes_down: f64,
+    /// Uplink bytes of client updates that reached the server this round.
+    pub bytes_up: f64,
     /// Mean training loss over committed updates (NaN-free; 0 if none).
     pub train_loss: f64,
     /// Global model quality, when evaluated this round.
@@ -49,14 +59,36 @@ pub struct RoundRecord {
 impl RoundRecord {
     /// Effective Update Ratio for this round (Eq. 4): picked minus
     /// picked-and-crashed over all clients. Picked clients that crashed
-    /// can only exist in selection-ahead-of-training protocols.
+    /// can only exist in selection-ahead-of-training protocols, so
+    /// `n_picked_crashed` is 0 for every current protocol.
     pub fn eur(&self, m: usize) -> f64 {
-        self.n_picked as f64 / m as f64
+        self.n_picked.saturating_sub(self.n_picked_crashed) as f64 / m as f64
     }
 
     /// Synchronization ratio for this round.
     pub fn sr(&self, m: usize) -> f64 {
         self.m_sync as f64 / m as f64
+    }
+
+    /// Per-round JSON record (the entries of `RunResult::to_json`'s
+    /// `rounds` array; also the core of the `SAFA_TRACE` JSONL lines).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("round", Json::Num(self.round as f64));
+        j.set("round_len", Json::Num(self.round_len));
+        j.set("t_dist", Json::Num(self.t_dist));
+        j.set("m_sync", Json::Num(self.m_sync as f64));
+        j.set("picked", Json::Num(self.n_picked as f64));
+        j.set("committed", Json::Num(self.n_committed as f64));
+        j.set("crashed", Json::Num(self.n_crashed as f64));
+        j.set("vv", Json::Num(self.version_variance));
+        j.set("bytes_down", Json::Num(self.bytes_down));
+        j.set("bytes_up", Json::Num(self.bytes_up));
+        if let Some(e) = self.eval {
+            j.set("loss", Json::Num(e.loss));
+            j.set("acc", Json::Num(e.accuracy));
+        }
+        j
     }
 }
 
@@ -79,45 +111,37 @@ pub struct RunResult {
 impl RunResult {
     /// Average federated round length (Tables IV/VI/VIII).
     pub fn avg_round_len(&self) -> f64 {
-        stats::mean(&self.rounds.iter().map(|r| r.round_len).collect::<Vec<_>>())
+        stats::mean_iter(self.rounds.iter().map(|r| r.round_len))
     }
 
     /// Average model-distribution overhead (Tables V/VII/IX).
     pub fn avg_t_dist(&self) -> f64 {
-        stats::mean(&self.rounds.iter().map(|r| r.t_dist).collect::<Vec<_>>())
+        stats::mean_iter(self.rounds.iter().map(|r| r.t_dist))
     }
 
     /// Synchronization Ratio over the run (Eq. 9).
     pub fn sync_ratio(&self) -> f64 {
-        stats::mean(
-            &self
-                .rounds
-                .iter()
-                .map(|r| r.sr(self.m))
-                .collect::<Vec<_>>(),
-        )
+        stats::mean_iter(self.rounds.iter().map(|r| r.sr(self.m)))
     }
 
     /// Mean Effective Update Ratio (Eq. 4 averaged over rounds).
     pub fn eur(&self) -> f64 {
-        stats::mean(
-            &self
-                .rounds
-                .iter()
-                .map(|r| r.eur(self.m))
-                .collect::<Vec<_>>(),
-        )
+        stats::mean_iter(self.rounds.iter().map(|r| r.eur(self.m)))
     }
 
     /// Mean Version Variance (Eq. 10).
     pub fn version_variance(&self) -> f64 {
-        stats::mean(
-            &self
-                .rounds
-                .iter()
-                .map(|r| r.version_variance)
-                .collect::<Vec<_>>(),
-        )
+        stats::mean_iter(self.rounds.iter().map(|r| r.version_variance))
+    }
+
+    /// Mean downlink bytes per round (server → clients distribution).
+    pub fn avg_bytes_down(&self) -> f64 {
+        stats::mean_iter(self.rounds.iter().map(|r| r.bytes_down))
+    }
+
+    /// Mean uplink bytes per round (client updates reaching the server).
+    pub fn avg_bytes_up(&self) -> f64 {
+        stats::mean_iter(self.rounds.iter().map(|r| r.bytes_up))
     }
 
     /// Fraction of client-time spent online across the run (1.0 when the
@@ -221,6 +245,8 @@ impl RunResult {
         o.set("sync_ratio", Json::Num(self.sync_ratio()));
         o.set("eur", Json::Num(self.eur()));
         o.set("version_variance", Json::Num(self.version_variance()));
+        o.set("avg_bytes_down", Json::Num(self.avg_bytes_down()));
+        o.set("avg_bytes_up", Json::Num(self.avg_bytes_up()));
         o.set("futility", Json::Num(self.futility()));
         o.set("online_fraction", Json::Num(self.avg_online_fraction()));
         o.set(
@@ -238,25 +264,7 @@ impl RunResult {
         if let Some(a) = self.best_accuracy() {
             o.set("best_accuracy", Json::Num(a));
         }
-        let rounds: Vec<Json> = self
-            .rounds
-            .iter()
-            .map(|r| {
-                let mut j = Json::obj();
-                j.set("round", Json::Num(r.round as f64));
-                j.set("round_len", Json::Num(r.round_len));
-                j.set("t_dist", Json::Num(r.t_dist));
-                j.set("picked", Json::Num(r.n_picked as f64));
-                j.set("committed", Json::Num(r.n_committed as f64));
-                j.set("crashed", Json::Num(r.n_crashed as f64));
-                j.set("vv", Json::Num(r.version_variance));
-                if let Some(e) = r.eval {
-                    j.set("loss", Json::Num(e.loss));
-                    j.set("acc", Json::Num(e.accuracy));
-                }
-                j
-            })
-            .collect();
+        let rounds: Vec<Json> = self.rounds.iter().map(RoundRecord::to_json).collect();
         o.set("rounds", Json::Arr(rounds));
         o
     }
@@ -273,6 +281,7 @@ mod tests {
             t_dist: 1.0,
             m_sync: sync,
             n_picked: picked,
+            n_picked_crashed: 0,
             n_crashed: 0,
             n_committed: picked,
             n_undrafted: 0,
@@ -282,6 +291,8 @@ mod tests {
             online_time: 80.0,
             offline_time: 20.0,
             staleness: vec![0, 2],
+            bytes_down: sync as f64 * 1e7,
+            bytes_up: picked as f64 * 1e7,
             train_loss: 0.0,
             eval: Some(EvalResult {
                 loss: 1.0 / (round + 1) as f64,
@@ -317,6 +328,33 @@ mod tests {
         assert!((r.avg_online_fraction() - 0.8).abs() < 1e-12);
         // Two rounds, each logging staleness [0, 2].
         assert_eq!(r.staleness_histogram(), vec![2, 0, 2]);
+        // Per-round bytes (sync·1e7 down, picked·1e7 up) averaged:
+        // down (9+7)/2 = 8 copies, up (3+4)/2 = 3.5 copies.
+        assert!((r.avg_bytes_down() - 8e7).abs() < 1e-3);
+        assert!((r.avg_bytes_up() - 3.5e7).abs() < 1e-3);
+    }
+
+    #[test]
+    fn eur_subtracts_picked_and_crashed() {
+        // Hand-computed Eq. 4 round: m = 20, 8 picked of which 3 crashed
+        // before delivering => EUR = (8 - 3) / 20 = 0.25.
+        let mut rec = record(0, 100.0, 8, 5);
+        rec.n_picked_crashed = 3;
+        assert!((rec.eur(20) - 0.25).abs() < 1e-12);
+        // No picked-and-crashed clients (every current protocol):
+        // EUR = picked / m.
+        assert!((record(0, 100.0, 8, 5).eur(20) - 0.4).abs() < 1e-12);
+        // Saturates rather than going negative on inconsistent counts.
+        rec.n_picked_crashed = 99;
+        assert_eq!(rec.eur(20), 0.0);
+    }
+
+    #[test]
+    fn round_json_carries_comm_cost() {
+        let j = record(1, 100.0, 3, 9).to_json();
+        assert_eq!(j.get("m_sync").and_then(Json::as_f64), Some(9.0));
+        assert_eq!(j.get("bytes_down").and_then(Json::as_f64), Some(9e7));
+        assert_eq!(j.get("bytes_up").and_then(Json::as_f64), Some(3e7));
     }
 
     #[test]

@@ -22,6 +22,8 @@ pub struct NetworkModel {
     pub t_link: f64,
     /// Seconds to distribute one model copy from the server.
     pub t_per_model: f64,
+    /// Serialized model size in bytes (comm-cost accounting).
+    pub model_bytes: f64,
 }
 
 impl NetworkModel {
@@ -29,6 +31,7 @@ impl NetworkModel {
         NetworkModel {
             t_link: env.model_size_bits / env.client_bw_bps,
             t_per_model: env.model_size_bits / env.server_bw_bps,
+            model_bytes: env.model_size_bits / 8.0,
         }
     }
 
@@ -48,6 +51,19 @@ impl NetworkModel {
     #[inline]
     pub fn t_dist(&self, m_sync: usize) -> f64 {
         m_sync as f64 * self.t_per_model
+    }
+
+    /// Downlink bytes to distribute the global model to `m_sync` clients.
+    #[inline]
+    pub fn bytes_down(&self, m_sync: usize) -> f64 {
+        m_sync as f64 * self.model_bytes
+    }
+
+    /// Uplink bytes for `n_uploads` client model uploads reaching the
+    /// server.
+    #[inline]
+    pub fn bytes_up(&self, n_uploads: usize) -> f64 {
+        n_uploads as f64 * self.model_bytes
     }
 }
 
@@ -90,6 +106,17 @@ mod tests {
         assert!((t - 202.0).abs() < 1.0, "t_dist(500)={t}");
         assert_eq!(net.t_dist(0), 0.0);
         assert!((net.t_dist(10) - 10.0 * net.t_per_model).abs() < 1e-9);
+    }
+
+    #[test]
+    fn comm_bytes_scale_with_model_and_count() {
+        let env = presets::preset("task1").unwrap().env;
+        let net = NetworkModel::new(&env);
+        // 10 MB model => 1e7 bytes per copy.
+        assert!((net.model_bytes - 1e7).abs() < 1e-3);
+        assert_eq!(net.bytes_down(0), 0.0);
+        assert!((net.bytes_down(3) - 3e7).abs() < 1e-3);
+        assert!((net.bytes_up(5) - 5e7).abs() < 1e-3);
     }
 
     #[test]

@@ -75,6 +75,7 @@ impl Protocol for FedAsync {
         // destroyed (futility stays zero by construction).
         let epochs = env.cfg.train.epochs;
         let (t_down, t_up) = (env.net.t_down(), env.net.t_up());
+        let dist_span = crate::telemetry::span(crate::telemetry::Phase::Distribute);
         let mut m_sync = 0;
         for c in env.clients.iter_mut() {
             if c.job.is_none() {
@@ -86,6 +87,7 @@ impl Protocol for FedAsync {
                 m_sync += 1;
             }
         }
+        drop(dist_span);
         let t_dist = env.net.t_dist(m_sync);
 
         // --- 2. Advance the whole fleet on the event engine.
@@ -115,6 +117,7 @@ impl Protocol for FedAsync {
         let alpha = env.cfg.protocol.alpha;
         let a_exp = env.cfg.protocol.staleness_exp;
         collect_updates(env, t, &self.sim.arrivals, &mut self.updates);
+        let agg_span = crate::telemetry::span(crate::telemetry::Phase::Aggregate);
         let mut staleness: Vec<u32> = Vec::with_capacity(self.updates.len());
         let mut train_loss_sum = 0.0;
         for c in env.clients.iter_mut() {
@@ -137,6 +140,7 @@ impl Protocol for FedAsync {
             c.job = None;
         }
         self.global_version = t_i;
+        drop(agg_span);
 
         // --- 4. Round close: never wait (no quota) — the shared
         // continuation rule closes at the last arrival, advances
@@ -156,6 +160,8 @@ impl Protocol for FedAsync {
             t_dist,
             m_sync,
             n_picked: n_applied,
+            // No selection at all: every applied update counts.
+            n_picked_crashed: 0,
             n_crashed: self.sim.crashed.len() + self.sim.stragglers.len(),
             n_committed: n_applied,
             n_undrafted: 0,
@@ -165,6 +171,8 @@ impl Protocol for FedAsync {
             online_time: self.sim.online_time,
             offline_time: self.sim.offline_time,
             staleness,
+            bytes_down: env.net.bytes_down(m_sync),
+            bytes_up: env.net.bytes_up(n_applied),
             train_loss: if n_applied == 0 {
                 0.0
             } else {

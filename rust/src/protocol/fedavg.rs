@@ -66,13 +66,16 @@ impl Protocol for FedAvg {
 
         // Random selection ahead of training (allocation-free form of
         // `sample_indices` — identical draws).
+        let select_span = crate::telemetry::span(crate::telemetry::Phase::Select);
         let mut sel_rng = env.round_rng(t, 0xfeda);
         sel_rng.sample_indices_into(m, quota, &mut self.sel_pool, &mut self.selected);
+        drop(select_span);
         let m_sync = self.selected.len();
         let t_dist = env.net.t_dist(m_sync);
 
         // Forced sync destroys any uncommitted partial work the selected
         // clients carried (futility accounting).
+        let dist_span = crate::telemetry::span(crate::telemetry::Phase::Distribute);
         let mut futility_wasted = 0.0;
         for &k in &self.selected {
             futility_wasted += env.clients[k].pending_partial;
@@ -81,6 +84,7 @@ impl Protocol for FedAvg {
             env.clients[k].version = t as i64 - 1;
             env.clients[k].base_version = t as i64 - 1;
         }
+        drop(dist_span);
 
         self.synced.clear();
         self.synced.resize(self.selected.len(), true);
@@ -102,9 +106,11 @@ impl Protocol for FedAvg {
         let n_committed = self.updates.len();
 
         // Synchronous aggregation over the committed subset.
+        let agg_span = crate::telemetry::span(crate::telemetry::Phase::Aggregate);
         if aggregate_updates_into(env, &self.updates, &mut self.agg) {
             self.global.copy_from(&self.agg);
         }
+        drop(agg_span);
 
         // Client state: committed clients hold their update; crashed
         // selected clients accumulate partial work that the next forced
@@ -138,6 +144,9 @@ impl Protocol for FedAvg {
             t_dist,
             m_sync,
             n_picked: n_committed,
+            // EUR's picked set is the committed subset here (selected
+            // clients that crashed are excluded from n_picked already).
+            n_picked_crashed: 0,
             n_crashed: self.sim.failures.len(),
             n_committed,
             n_undrafted: 0,
@@ -147,6 +156,8 @@ impl Protocol for FedAvg {
             online_time: self.sim.online_time,
             offline_time: self.sim.offline_time,
             staleness: vec![0; n_committed],
+            bytes_down: env.net.bytes_down(m_sync),
+            bytes_up: env.net.bytes_up(n_committed),
             train_loss: if n_committed == 0 {
                 0.0
             } else {

@@ -73,6 +73,7 @@ impl Protocol for FedCs {
 
         // Resource-request pool, then keep the fastest-estimated quota
         // clients that fit the deadline.
+        let select_span = crate::telemetry::span(crate::telemetry::Phase::Select);
         let mut sel_rng = env.round_rng(t, 0xfeda);
         let pool_size = (quota * POOL_FACTOR).min(m);
         sel_rng.sample_indices_into(m, pool_size, &mut self.sel_pool, &mut self.pool);
@@ -93,10 +94,12 @@ impl Protocol for FedCs {
                 .filter(|&k| Self::estimate(env, k) <= env.cfg.train.t_lim)
                 .take(quota),
         );
+        drop(select_span);
 
         let m_sync = self.selected.len();
         let t_dist = env.net.t_dist(m_sync);
 
+        let dist_span = crate::telemetry::span(crate::telemetry::Phase::Distribute);
         let mut futility_wasted = 0.0;
         for &k in &self.selected {
             futility_wasted += env.clients[k].pending_partial;
@@ -105,6 +108,7 @@ impl Protocol for FedCs {
             env.clients[k].version = t as i64 - 1;
             env.clients[k].base_version = t as i64 - 1;
         }
+        drop(dist_span);
 
         self.synced.clear();
         self.synced.resize(self.selected.len(), true);
@@ -122,9 +126,11 @@ impl Protocol for FedCs {
         collect_updates(env, t, &self.sim.arrivals, &mut self.updates);
         let train_loss_sum: f64 = self.updates.iter().map(|(_, _, loss)| loss).sum();
         let n_committed = self.updates.len();
+        let agg_span = crate::telemetry::span(crate::telemetry::Phase::Aggregate);
         if aggregate_updates_into(env, &self.updates, &mut self.agg) {
             self.global.copy_from(&self.agg);
         }
+        drop(agg_span);
 
         self.picked_mask.fill(false);
         for (k, params, _) in &self.updates {
@@ -155,6 +161,8 @@ impl Protocol for FedCs {
             t_dist,
             m_sync,
             n_picked: n_committed,
+            // As in FedAvg: n_picked already excludes crashed selections.
+            n_picked_crashed: 0,
             n_crashed: self.sim.failures.len(),
             n_committed,
             n_undrafted: 0,
@@ -164,6 +172,8 @@ impl Protocol for FedCs {
             online_time: self.sim.online_time,
             offline_time: self.sim.offline_time,
             staleness: vec![0; n_committed],
+            bytes_down: env.net.bytes_down(m_sync),
+            bytes_up: env.net.bytes_up(n_committed),
             train_loss: if n_committed == 0 {
                 0.0
             } else {

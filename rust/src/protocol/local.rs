@@ -89,6 +89,7 @@ impl Protocol for FullyLocal {
             t_dist: 0.0,
             m_sync: 0,
             n_picked: 0,
+            n_picked_crashed: 0,
             n_crashed: sim.failures.len(),
             n_committed: n_finished,
             n_undrafted: 0,
@@ -98,6 +99,9 @@ impl Protocol for FullyLocal {
             online_time: sim.online_time,
             offline_time: sim.offline_time,
             staleness: Vec::new(),
+            // No server traffic until the single end-of-run aggregation.
+            bytes_down: 0.0,
+            bytes_up: 0.0,
             train_loss: if n_finished == 0 {
                 0.0
             } else {
@@ -113,6 +117,7 @@ impl Protocol for FullyLocal {
         }
         self.finalized = true;
         // Single end-of-run aggregation over a random C-fraction.
+        let _span = crate::telemetry::span(crate::telemetry::Phase::Aggregate);
         let quota = env.cfg.quota();
         let mut rng = env.round_rng(env.cfg.train.rounds + 1, 0xf17a);
         let subset = rng.sample_indices(env.m(), quota);

@@ -251,6 +251,7 @@ pub(crate) fn collect_updates(
     arrivals: &[Arrival],
     out: &mut Vec<(usize, ParamVec, f64)>,
 ) {
+    let _span = crate::telemetry::span(crate::telemetry::Phase::LocalUpdate);
     out.clear();
     out.reserve(arrivals.len());
     // Hoist the round-level split (loop-invariant): `base.split(0x7a11 +

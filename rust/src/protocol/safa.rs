@@ -168,6 +168,7 @@ impl Protocol for Safa {
         // span rounds).
         let epochs = env.cfg.train.epochs;
         let (t_down, t_up) = (env.net.t_down(), env.net.t_up());
+        let dist_span = crate::telemetry::span(crate::telemetry::Phase::Distribute);
         {
             let global = &self.global;
             parallel::for_each_chunk2(
@@ -220,6 +221,7 @@ impl Protocol for Safa {
             scratch.jobs.push(s.remaining);
         }
         let t_dist = env.net.t_dist(m_sync);
+        drop(dist_span);
 
         // --- Step 2: everyone's job advances. ---
         let round_rng = env.round_rng(t, 0xc4a5);
@@ -242,6 +244,7 @@ impl Protocol for Safa {
         }
 
         // --- Step 3: CFCFM selection (Alg. 1). ---
+        let select_span = crate::telemetry::span(crate::telemetry::Phase::Select);
         let quota = env.cfg.quota();
         scratch.picked.clear();
         scratch.undrafted.clear();
@@ -272,6 +275,7 @@ impl Protocol for Safa {
             fill += 1;
         }
         scratch.undrafted.drain(..fill);
+        drop(select_span);
         // Round close: quota time, else the shared continuation rule
         // (the semi-async server never blocks on in-flight stragglers —
         // their commits simply arrive in a later round). Also advances
@@ -311,6 +315,7 @@ impl Protocol for Safa {
         // w(t-1), Eq. 6), chunked across the pool — each entry is an
         // independent dim-sized copy.
         {
+            let _span = crate::telemetry::span(crate::telemetry::Phase::CacheRefresh);
             let sync_out = &scratch.sync_out;
             let picked_mask = &scratch.picked_mask;
             let update_of = &scratch.update_of;
@@ -333,6 +338,7 @@ impl Protocol for Safa {
         // (7) SAFA aggregation over ALL m cache entries (chunked over the
         // model dimension, fixed entry order — bit-identical to the
         // serial axpy loop at any width).
+        let agg_span = crate::telemetry::span(crate::telemetry::Phase::Aggregate);
         weighted_sum_slices_into(&mut self.agg_scratch, &env.weights, &self.cache);
         self.global.copy_from(&self.agg_scratch);
         self.global_version = t_i;
@@ -383,6 +389,7 @@ impl Protocol for Safa {
                 },
             );
         }
+        drop(agg_span);
 
         let eval = if t % env.cfg.eval_every == 0 {
             Some(env.trainer.evaluate(&self.global))
@@ -396,6 +403,8 @@ impl Protocol for Safa {
             t_dist,
             m_sync,
             n_picked: scratch.picked.len(),
+            // SAFA selects post-training, so no picked client can crash.
+            n_picked_crashed: 0,
             n_crashed: n_failed,
             n_committed,
             n_undrafted: scratch.undrafted.len(),
@@ -405,6 +414,8 @@ impl Protocol for Safa {
             online_time: scratch.sim.online_time,
             offline_time: scratch.sim.offline_time,
             staleness,
+            bytes_down: env.net.bytes_down(m_sync),
+            bytes_up: env.net.bytes_up(n_committed),
             train_loss: if scratch.updates.is_empty() {
                 0.0
             } else {

@@ -1,0 +1,567 @@
+//! Zero-dependency observability: phase-scoped span timers, fleet
+//! counters, a counting allocator hook and an opt-in JSONL round trace.
+//!
+//! Always compiled, **default-off**. The hot path pays one relaxed
+//! atomic load per instrumentation point while disabled; while enabled
+//! it pays a monotonic-clock read per span plus relaxed atomic adds into
+//! **per-worker shards** (indexed by [`parallel::worker_id`], the same
+//! identity that gives `util::scratch` its slot affinity) — no locks, no
+//! allocation, so steady-state rounds stay alloc-free with telemetry on
+//! (`tests/alloc_free.rs` asserts this). Telemetry never consumes RNG
+//! and never reorders reductions, so results are bit-identical with it
+//! on or off at any width (`tests/determinism.rs` asserts this).
+//!
+//! # Enabling
+//!
+//! * `SAFA_TELEMETRY=1` (or `true`/`on`) turns recording on at startup.
+//! * `SAFA_TRACE=<path>` implies recording and additionally streams one
+//!   JSON object per round (round record + span/counter deltas) to
+//!   `<path>` as JSONL — see the coordinator's round loop.
+//! * [`set_enabled`] overrides both from code (the profile runner and
+//!   tests use it); like `logging::set_max_level` it consumes the
+//!   one-shot environment read so a later [`enabled`] cannot clobber it.
+//!
+//! # What the numbers mean
+//!
+//! Spans are wall-clock nanoseconds between guard creation and drop,
+//! summed per [`Phase`] across all workers. Spans **nest and overlap**
+//! (a `local_update` span contains `fork_dispatch` spans; parallel
+//! workers time concurrently), so phase sums are CPU-style shares that
+//! can exceed the enclosing wall time — compare phases against each
+//! other, not against 100%.
+
+pub mod profile;
+
+use crate::util::json::Json;
+use crate::util::parallel::{self, MAX_THREADS};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Simulator phases a span can be attributed to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Server-side model distribution (sync pushes, Eq. 3 bookkeeping).
+    Distribute,
+    /// Client selection (CFCFM / random / estimate-sorted).
+    Select,
+    /// Local-update computation over arrivals ([`crate::protocol`]'s
+    /// `collect_updates`, all protocols).
+    LocalUpdate,
+    /// Global aggregation (weighted sums, Eq. 6–8 passes, FedAsync
+    /// mixing).
+    Aggregate,
+    /// SAFA cache refresh (Eq. 6 pre-aggregation cache pass).
+    CacheRefresh,
+    /// Discrete-event loop of the fleet engine (queue pops + handlers).
+    EventPop,
+    /// Parallel regions: whole fork-join dispatches of the worker pool.
+    ForkDispatch,
+}
+
+/// Number of [`Phase`] variants (shard slot count).
+pub const NUM_PHASES: usize = 7;
+
+impl Phase {
+    /// Every phase, in shard-slot order.
+    pub const ALL: [Phase; NUM_PHASES] = [
+        Phase::Distribute,
+        Phase::Select,
+        Phase::LocalUpdate,
+        Phase::Aggregate,
+        Phase::CacheRefresh,
+        Phase::EventPop,
+        Phase::ForkDispatch,
+    ];
+
+    /// Shard slot of this phase.
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+
+    /// Stable snake_case name (JSON keys, table headers).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Distribute => "distribute",
+            Phase::Select => "select",
+            Phase::LocalUpdate => "local_update",
+            Phase::Aggregate => "aggregate",
+            Phase::CacheRefresh => "cache_refresh",
+            Phase::EventPop => "event_pop",
+            Phase::ForkDispatch => "fork_dispatch",
+        }
+    }
+}
+
+/// Monotonic fleet counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    /// Events pushed onto the discrete-event queue.
+    EventsScheduled,
+    /// Events popped off the queue (clock advances).
+    EventsPopped,
+    /// Parallel fork-join dispatches (width > 1).
+    Forks,
+    /// Chunks handed to workers across all forks.
+    Chunks,
+}
+
+/// Number of [`Counter`] variants.
+pub const NUM_COUNTERS: usize = 4;
+
+impl Counter {
+    /// Every counter, in shard-slot order.
+    pub const ALL: [Counter; NUM_COUNTERS] = [
+        Counter::EventsScheduled,
+        Counter::EventsPopped,
+        Counter::Forks,
+        Counter::Chunks,
+    ];
+
+    /// Shard slot of this counter.
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+
+    /// Stable snake_case name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::EventsScheduled => "events_scheduled",
+            Counter::EventsPopped => "events_popped",
+            Counter::Forks => "forks",
+            Counter::Chunks => "chunks",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-worker shards.
+// ---------------------------------------------------------------------------
+
+/// One worker's slice of the recording state. Cache-line aligned so two
+/// workers' hot adds never share a line.
+#[repr(align(64))]
+struct Shard {
+    span_ns: [AtomicU64; NUM_PHASES],
+    span_count: [AtomicU64; NUM_PHASES],
+    counts: [AtomicU64; NUM_COUNTERS],
+}
+
+impl Shard {
+    const fn new() -> Shard {
+        Shard {
+            span_ns: [const { AtomicU64::new(0) }; NUM_PHASES],
+            span_count: [const { AtomicU64::new(0) }; NUM_PHASES],
+            counts: [const { AtomicU64::new(0) }; NUM_COUNTERS],
+        }
+    }
+}
+
+/// One shard per pool identity: slot 0 for ordinary threads (the
+/// submitter and anything `Dispatch::Spawn` creates), slot `i + 1` for
+/// pool worker `i` — [`parallel::worker_id`] never exceeds
+/// `MAX_THREADS - 1`, the modulo is a panic-proofing guard only.
+static SHARDS: [Shard; MAX_THREADS] = [const { Shard::new() }; MAX_THREADS];
+
+fn shard() -> &'static Shard {
+    &SHARDS[parallel::worker_id() % MAX_THREADS]
+}
+
+// ---------------------------------------------------------------------------
+// Enable flag (mirrors util::logging's one-shot env pattern).
+// ---------------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ENV_ENABLE: OnceLock<()> = OnceLock::new();
+
+fn enabled_from_env() -> bool {
+    let flag = matches!(
+        std::env::var("SAFA_TELEMETRY").as_deref(),
+        Ok("1") | Ok("true") | Ok("on")
+    );
+    flag || std::env::var_os("SAFA_TRACE").is_some()
+}
+
+/// Is recording currently on? First call reads the environment
+/// (`SAFA_TELEMETRY`, `SAFA_TRACE`); afterwards one relaxed load.
+pub fn enabled() -> bool {
+    ENV_ENABLE.get_or_init(|| ENABLED.store(enabled_from_env(), Relaxed));
+    ENABLED.load(Relaxed)
+}
+
+/// Turn recording on/off from code. Consumes the one-time environment
+/// read so a later [`enabled`] cannot clobber the override.
+pub fn set_enabled(on: bool) {
+    ENV_ENABLE.get_or_init(|| ());
+    ENABLED.store(on, Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Spans and counters.
+// ---------------------------------------------------------------------------
+
+/// RAII span guard: records elapsed wall-clock ns into the dropping
+/// worker's shard. Inert (no clock read) while recording is off.
+#[must_use = "a span records on drop; binding it to _ drops immediately"]
+pub struct Span {
+    active: Option<(Phase, Instant)>,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some((phase, start)) = self.active.take() {
+            record_span(phase, start.elapsed().as_nanos() as u64);
+        }
+    }
+}
+
+/// Open a span for `phase`; it records when dropped.
+pub fn span(phase: Phase) -> Span {
+    Span {
+        active: if enabled() {
+            Some((phase, Instant::now()))
+        } else {
+            None
+        },
+    }
+}
+
+/// Unconditionally credit `ns` to `phase` on this worker's shard
+/// (the gated entry point is [`span`]).
+fn record_span(phase: Phase, ns: u64) {
+    let s = shard();
+    s.span_ns[phase.idx()].fetch_add(ns, Relaxed);
+    s.span_count[phase.idx()].fetch_add(1, Relaxed);
+}
+
+/// Add `n` to counter `c` (no-op while recording is off).
+pub fn count(c: Counter, n: u64) {
+    if enabled() {
+        bump(c, n);
+    }
+}
+
+/// Unconditional counter add (the gated entry point is [`count`]).
+fn bump(c: Counter, n: u64) {
+    shard().counts[c.idx()].fetch_add(n, Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Allocator accounting.
+// ---------------------------------------------------------------------------
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Counting wrapper over the system allocator. Install it per binary —
+/// `#[global_allocator] static A: safa::telemetry::CountingAlloc =
+/// safa::telemetry::CountingAlloc;` — and [`alloc_count`] /
+/// [`Snapshot::allocs`] report heap traffic (`tests/alloc_free.rs` is
+/// the reference user). Deliberately not installed by the library: the
+/// counters read 0 unless a binary opts in.
+///
+/// The counting path touches only two plain atomics — never the
+/// environment, locks or `OnceLock` — so it cannot recurse or allocate.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Heap allocations observed so far (0 unless [`CountingAlloc`] is the
+/// binary's global allocator).
+pub fn alloc_count() -> u64 {
+    ALLOCS.load(Relaxed)
+}
+
+/// Heap bytes requested so far (same caveat as [`alloc_count`]).
+pub fn alloc_bytes() -> u64 {
+    ALLOC_BYTES.load(Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// Snapshots.
+// ---------------------------------------------------------------------------
+
+/// A merged, point-in-time copy of every shard plus the allocator
+/// counters. Fixed-size — taking one allocates nothing, so snapshot
+/// deltas are safe inside alloc-free measurement windows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Snapshot {
+    pub span_ns: [u64; NUM_PHASES],
+    pub span_count: [u64; NUM_PHASES],
+    pub counters: [u64; NUM_COUNTERS],
+    pub allocs: u64,
+    pub alloc_bytes: u64,
+}
+
+impl Snapshot {
+    /// Field-wise `self - earlier` (wrapping, so a concurrent reset
+    /// cannot panic the reader).
+    pub fn since(&self, earlier: &Snapshot) -> Snapshot {
+        let mut d = Snapshot::default();
+        for i in 0..NUM_PHASES {
+            d.span_ns[i] = self.span_ns[i].wrapping_sub(earlier.span_ns[i]);
+            d.span_count[i] = self.span_count[i].wrapping_sub(earlier.span_count[i]);
+        }
+        for i in 0..NUM_COUNTERS {
+            d.counters[i] = self.counters[i].wrapping_sub(earlier.counters[i]);
+        }
+        d.allocs = self.allocs.wrapping_sub(earlier.allocs);
+        d.alloc_bytes = self.alloc_bytes.wrapping_sub(earlier.alloc_bytes);
+        d
+    }
+
+    /// Nanoseconds attributed to `phase`.
+    pub fn phase_ns(&self, phase: Phase) -> u64 {
+        self.span_ns[phase.idx()]
+    }
+
+    /// Current value of counter `c`.
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c.idx()]
+    }
+
+    /// `{spans: {name: {ns, count}}, counters: {name: n}, allocs,
+    /// alloc_bytes}` — the `telemetry` object of the JSONL trace.
+    pub fn to_json(&self) -> Json {
+        let mut spans = Json::obj();
+        for p in Phase::ALL {
+            let mut s = Json::obj();
+            s.set("ns", Json::Num(self.span_ns[p.idx()] as f64));
+            s.set("count", Json::Num(self.span_count[p.idx()] as f64));
+            spans.set(p.name(), s);
+        }
+        let mut counters = Json::obj();
+        for c in Counter::ALL {
+            counters.set(c.name(), Json::Num(self.counters[c.idx()] as f64));
+        }
+        let mut o = Json::obj();
+        o.set("spans", spans);
+        o.set("counters", counters);
+        o.set("allocs", Json::Num(self.allocs as f64));
+        o.set("alloc_bytes", Json::Num(self.alloc_bytes as f64));
+        o
+    }
+}
+
+/// Merge every shard (serial, fixed order) plus the allocator counters.
+pub fn snapshot() -> Snapshot {
+    let mut s = Snapshot::default();
+    for shard in SHARDS.iter() {
+        for i in 0..NUM_PHASES {
+            s.span_ns[i] = s.span_ns[i].wrapping_add(shard.span_ns[i].load(Relaxed));
+            s.span_count[i] = s.span_count[i].wrapping_add(shard.span_count[i].load(Relaxed));
+        }
+        for i in 0..NUM_COUNTERS {
+            s.counters[i] = s.counters[i].wrapping_add(shard.counts[i].load(Relaxed));
+        }
+    }
+    s.allocs = ALLOCS.load(Relaxed);
+    s.alloc_bytes = ALLOC_BYTES.load(Relaxed);
+    s
+}
+
+/// Zero every span/counter shard (allocator counters are monotonic and
+/// stay — diff them via [`Snapshot::since`]). Only call between runs:
+/// a reset concurrent with active workers loses their in-flight adds.
+pub fn reset() {
+    for shard in SHARDS.iter() {
+        for a in shard.span_ns.iter().chain(&shard.span_count) {
+            a.store(0, Relaxed);
+        }
+        for a in shard.counts.iter() {
+            a.store(0, Relaxed);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSONL trace (SAFA_TRACE=<path>).
+// ---------------------------------------------------------------------------
+
+static TRACE: OnceLock<Option<Mutex<BufWriter<File>>>> = OnceLock::new();
+
+fn trace_writer() -> &'static Option<Mutex<BufWriter<File>>> {
+    TRACE.get_or_init(|| {
+        let path = std::env::var_os("SAFA_TRACE")?;
+        match File::create(&path) {
+            Ok(f) => Some(Mutex::new(BufWriter::new(f))),
+            Err(e) => {
+                crate::log_warn!("SAFA_TRACE: cannot create {path:?}: {e}");
+                None
+            }
+        }
+    })
+}
+
+/// Is a JSONL trace destination configured and writable?
+pub fn trace_active() -> bool {
+    trace_writer().is_some()
+}
+
+/// Append one compact JSON object + newline to the trace file, flushed
+/// per line so a killed run keeps every completed round. No-op without
+/// an active trace.
+pub fn trace_line(line: &Json) {
+    if let Some(w) = trace_writer() {
+        let mut g = w.lock().unwrap_or_else(|e| e.into_inner());
+        let _ = writeln!(g, "{}", line.to_string_compact());
+        let _ = g.flush();
+    }
+}
+
+/// Serializes every test that toggles [`set_enabled`] or asserts exact
+/// shard deltas (shards and the enable flag are process-global; lib
+/// tests run concurrently). Shared with `profile`'s tests.
+#[cfg(test)]
+pub(crate) static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    /// Take the process-global telemetry test lock and pin recording
+    /// OFF for the window, so concurrently running lib tests (whose
+    /// gated spans/counts are then no-ops) cannot pollute exact-delta
+    /// assertions. These tests drive the private unconditional
+    /// recorders directly.
+    fn locked() -> std::sync::MutexGuard<'static, ()> {
+        let g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(false);
+        g
+    }
+
+    /// A span that records regardless of the process-global flag.
+    fn forced_span(phase: Phase) -> Span {
+        Span {
+            active: Some((phase, Instant::now())),
+        }
+    }
+
+    #[test]
+    fn disabled_spans_and_counts_record_nothing() {
+        let _g = locked();
+        let before = snapshot();
+        {
+            let _s = span(Phase::Distribute);
+            count(Counter::Forks, 3);
+        }
+        let d = snapshot().since(&before);
+        assert_eq!(d.phase_ns(Phase::Distribute), 0);
+        assert_eq!(d.span_count[Phase::Distribute.idx()], 0);
+        assert_eq!(d.counter(Counter::Forks), 0);
+    }
+
+    #[test]
+    fn nested_spans_credit_outer_at_least_inner() {
+        let _g = locked();
+        let before = snapshot();
+        {
+            let _outer = forced_span(Phase::Distribute);
+            {
+                let _inner = forced_span(Phase::Aggregate);
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let d = snapshot().since(&before);
+        assert_eq!(d.span_count[Phase::Distribute.idx()], 1);
+        assert_eq!(d.span_count[Phase::Aggregate.idx()], 1);
+        assert!(
+            d.phase_ns(Phase::Distribute) >= d.phase_ns(Phase::Aggregate),
+            "outer {} < inner {}",
+            d.phase_ns(Phase::Distribute),
+            d.phase_ns(Phase::Aggregate)
+        );
+        assert!(d.phase_ns(Phase::Aggregate) >= 2_000_000);
+    }
+
+    #[test]
+    fn per_worker_shards_merge_exact_sums() {
+        let _g = locked();
+        let before = snapshot();
+        // Distinct per-chunk values from distinct workers; the fork
+        // width pins chunk i to worker_id i (pooled dispatch), so this
+        // exercises merging across real shards.
+        parallel::with_dispatch(parallel::Dispatch::Pooled, || {
+            parallel::fork(4, |i| {
+                bump(Counter::Chunks, (i as u64 + 1) * 10);
+                record_span(Phase::EventPop, (i as u64 + 1) * 100);
+            });
+        });
+        let d = snapshot().since(&before);
+        assert_eq!(d.counter(Counter::Chunks), 10 + 20 + 30 + 40);
+        assert_eq!(d.phase_ns(Phase::EventPop), 100 + 200 + 300 + 400);
+        assert_eq!(d.span_count[Phase::EventPop.idx()], 4);
+    }
+
+    #[test]
+    fn snapshot_delta_isolates_a_window() {
+        let _g = locked();
+        bump(Counter::EventsScheduled, 7);
+        let t0 = snapshot();
+        bump(Counter::EventsScheduled, 5);
+        bump(Counter::EventsPopped, 2);
+        let d = snapshot().since(&t0);
+        assert_eq!(d.counter(Counter::EventsScheduled), 5);
+        assert_eq!(d.counter(Counter::EventsPopped), 2);
+    }
+
+    #[test]
+    fn json_shape_names_every_phase_and_counter() {
+        let mut s = Snapshot::default();
+        s.span_ns[Phase::Select.idx()] = 42;
+        s.counters[Counter::Forks.idx()] = 9;
+        let j = s.to_json();
+        let spans = j.get("spans").unwrap();
+        for p in Phase::ALL {
+            let e = spans.get(p.name()).unwrap();
+            assert!(e.get("ns").is_some() && e.get("count").is_some());
+        }
+        let counters = j.get("counters").unwrap();
+        for c in Counter::ALL {
+            assert!(counters.get(c.name()).is_some());
+        }
+        assert_eq!(
+            spans.get("select").unwrap().get("ns").unwrap().as_f64(),
+            Some(42.0)
+        );
+        assert_eq!(counters.get("forks").unwrap().as_f64(), Some(9.0));
+        assert!(j.get("allocs").is_some());
+    }
+
+    #[test]
+    fn phase_and_counter_tables_are_consistent() {
+        for (i, p) in Phase::ALL.iter().enumerate() {
+            assert_eq!(p.idx(), i, "{}", p.name());
+        }
+        for (i, c) in Counter::ALL.iter().enumerate() {
+            assert_eq!(c.idx(), i, "{}", c.name());
+        }
+    }
+}

@@ -1,0 +1,329 @@
+//! Rounds/sec profiling runner: the single harness every perf PR quotes
+//! before/after numbers from.
+//!
+//! Sweeps protocol × churn × m over the timing-only Null backend (Task-3
+//! environment shape) and reports, per cell: rounds/sec, events/sec,
+//! per-phase wall-time shares from the telemetry spans, and bytes moved
+//! per round from the comm-cost accounting. Shared by the `safa profile`
+//! CLI subcommand and `benches/profile_runner.rs`; JSON output follows
+//! the established `BENCH_*.json` schema (`{name, mean_ns, stddev_ns,
+//! min_ns, max_ns, iters}` plus profiling extras).
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use super::{set_enabled, snapshot, Counter, Phase, NUM_PHASES};
+use crate::bench_harness::write_results_file;
+use crate::config::{presets, Backend, ChurnModel, ProtocolKind};
+use crate::error::Result;
+use crate::protocol::{make_protocol, FedEnv};
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Churn axis of the profiling grid. `Markov` uses the preset helper's
+/// dwell times (0.6/0.25 × T_lim) so cells match the `*-churn` presets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProfileChurn {
+    Bernoulli,
+    Markov,
+}
+
+impl ProfileChurn {
+    pub const ALL: [ProfileChurn; 2] = [ProfileChurn::Bernoulli, ProfileChurn::Markov];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ProfileChurn::Bernoulli => "bernoulli",
+            ProfileChurn::Markov => "markov",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ProfileChurn> {
+        match s.to_ascii_lowercase().as_str() {
+            "bernoulli" => Some(ProfileChurn::Bernoulli),
+            "markov" => Some(ProfileChurn::Markov),
+            _ => None,
+        }
+    }
+}
+
+/// One profiling sweep: the grid plus per-cell round counts.
+#[derive(Debug, Clone)]
+pub struct ProfileSpec {
+    pub protocols: Vec<ProtocolKind>,
+    pub churns: Vec<ProfileChurn>,
+    pub m_values: Vec<usize>,
+    /// Timed rounds per cell.
+    pub rounds: usize,
+    /// Untimed warm-up rounds per cell (pool spawn, buffer growth).
+    pub warmup: usize,
+}
+
+impl Default for ProfileSpec {
+    fn default() -> Self {
+        ProfileSpec {
+            protocols: ProtocolKind::ALL.to_vec(),
+            churns: ProfileChurn::ALL.to_vec(),
+            m_values: vec![100],
+            rounds: 30,
+            warmup: 5,
+        }
+    }
+}
+
+/// Measured numbers for one (protocol, churn, m) cell.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    /// `profile_<protocol>_<churn>_m<m>` — the BENCH-schema name.
+    pub name: String,
+    pub protocol: ProtocolKind,
+    pub churn: ProfileChurn,
+    pub m: usize,
+    /// Timed rounds (BENCH-schema `iters`).
+    pub rounds: usize,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub rounds_per_sec: f64,
+    /// Fleet-engine events popped per wall second.
+    pub events_per_sec: f64,
+    /// Mean bytes distributed (downlink) per round.
+    pub bytes_down_per_round: f64,
+    /// Mean bytes uploaded per round.
+    pub bytes_up_per_round: f64,
+    /// Per-phase span time over wall time, [`Phase::ALL`] order. The
+    /// `fork_dispatch` share measures wall time spent inside parallel
+    /// dispatches (its workers run concurrently), so shares are CPU-style
+    /// and need not sum to 1.
+    pub share: [f64; NUM_PHASES],
+}
+
+impl CellResult {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", Json::Str(self.name.clone()));
+        o.set("mean_ns", Json::Num(self.mean_ns));
+        o.set("stddev_ns", Json::Num(self.stddev_ns));
+        o.set("min_ns", Json::Num(self.min_ns));
+        o.set("max_ns", Json::Num(self.max_ns));
+        o.set("iters", Json::Num(self.rounds as f64));
+        o.set("protocol", Json::Str(self.protocol.name().to_string()));
+        o.set("churn", Json::Str(self.churn.name().to_string()));
+        o.set("m", Json::Num(self.m as f64));
+        o.set("rounds_per_sec", Json::Num(self.rounds_per_sec));
+        o.set("events_per_sec", Json::Num(self.events_per_sec));
+        o.set("bytes_down_per_round", Json::Num(self.bytes_down_per_round));
+        o.set("bytes_up_per_round", Json::Num(self.bytes_up_per_round));
+        for p in Phase::ALL {
+            o.set(
+                &format!("share_{}", p.name()),
+                Json::Num(self.share[p.idx()]),
+            );
+        }
+        o
+    }
+}
+
+/// Cell config: Task-3 environment shape on the timing-only Null backend
+/// (the profiling grid measures simulator throughput, not numerics), with
+/// `n` scaled to the fleet so the Gaussian partitioner stays meaningful.
+fn cell_config(
+    protocol: ProtocolKind,
+    churn: ProfileChurn,
+    m: usize,
+) -> Result<crate::config::ExperimentConfig> {
+    let mut cfg = presets::preset("task3")?;
+    cfg.name = format!(
+        "profile_{}_{}_m{m}",
+        protocol.name().to_ascii_lowercase(),
+        churn.name()
+    );
+    cfg.protocol.kind = protocol;
+    cfg.env.m = m;
+    cfg.task.n = (10 * m).max(1000);
+    cfg.task.n_test = 100;
+    cfg.backend = Backend::Null;
+    cfg.eval_every = 1_000_000; // throughput study: never evaluate
+    cfg.seed = 1;
+    if churn == ProfileChurn::Markov {
+        cfg.env.churn = ChurnModel::Markov {
+            mean_uptime_s: cfg.train.t_lim * 0.6,
+            mean_downtime_s: cfg.train.t_lim * 0.25,
+        };
+    }
+    Ok(cfg)
+}
+
+/// Run one cell: `warmup` untimed rounds, then `rounds` timed rounds with
+/// telemetry force-enabled (prior enable state restored on exit).
+/// Telemetry never perturbs results — the determinism suite holds the
+/// simulation bit-identical with it on or off — so forcing it here only
+/// costs the clock reads it is measuring.
+pub fn run_cell(
+    protocol: ProtocolKind,
+    churn: ProfileChurn,
+    m: usize,
+    rounds: usize,
+    warmup: usize,
+) -> Result<CellResult> {
+    assert!(rounds > 0, "profile cell needs at least one timed round");
+    let cfg = cell_config(protocol, churn, m)?;
+    let mut env = FedEnv::new(&cfg)?;
+    let mut proto = make_protocol(&env);
+
+    let prior = super::enabled();
+    set_enabled(true);
+    for t in 1..=warmup {
+        proto.run_round(t, &mut env);
+    }
+
+    let before = snapshot();
+    let mut sample_ns: Vec<f64> = Vec::with_capacity(rounds);
+    let mut bytes_down = 0.0;
+    let mut bytes_up = 0.0;
+    for t in warmup + 1..=warmup + rounds {
+        let start = Instant::now();
+        let rec = proto.run_round(t, &mut env);
+        sample_ns.push(start.elapsed().as_nanos() as f64);
+        bytes_down += rec.bytes_down;
+        bytes_up += rec.bytes_up;
+    }
+    let delta = snapshot().since(&before);
+    set_enabled(prior);
+
+    let wall_ns: f64 = sample_ns.iter().sum();
+    let wall_s = wall_ns / 1e9;
+    let mut share = [0.0; NUM_PHASES];
+    for p in Phase::ALL {
+        share[p.idx()] = if wall_ns > 0.0 {
+            delta.phase_ns(p) as f64 / wall_ns
+        } else {
+            0.0
+        };
+    }
+    Ok(CellResult {
+        name: cfg.name.clone(),
+        protocol,
+        churn,
+        m,
+        rounds,
+        mean_ns: stats::mean(&sample_ns),
+        stddev_ns: stats::stddev_sample(&sample_ns),
+        min_ns: stats::min(&sample_ns).unwrap_or(0.0),
+        max_ns: stats::max(&sample_ns).unwrap_or(0.0),
+        rounds_per_sec: if wall_s > 0.0 {
+            rounds as f64 / wall_s
+        } else {
+            0.0
+        },
+        events_per_sec: if wall_s > 0.0 {
+            delta.counter(Counter::EventsPopped) as f64 / wall_s
+        } else {
+            0.0
+        },
+        bytes_down_per_round: bytes_down / rounds as f64,
+        bytes_up_per_round: bytes_up / rounds as f64,
+        share,
+    })
+}
+
+/// Run the full grid, one cell at a time (cells share the process-global
+/// worker pool, so they must not overlap).
+pub fn run_spec(spec: &ProfileSpec) -> Result<Vec<CellResult>> {
+    let mut cells = Vec::new();
+    for &m in &spec.m_values {
+        for &churn in &spec.churns {
+            for &protocol in &spec.protocols {
+                cells.push(run_cell(protocol, churn, m, spec.rounds, spec.warmup)?);
+            }
+        }
+    }
+    Ok(cells)
+}
+
+/// Fixed-width table over the grid: throughput, comm cost, and the
+/// dominant phase shares.
+pub fn render_table(cells: &[CellResult]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<34} {:>10} {:>11} {:>9} {:>9} {:>6} {:>6} {:>6} {:>6} {:>6}",
+        "cell",
+        "rounds/s",
+        "events/s",
+        "KB down",
+        "KB up",
+        "dist%",
+        "sel%",
+        "loc%",
+        "agg%",
+        "pop%"
+    );
+    for c in cells {
+        let pct = |p: Phase| 100.0 * c.share[p.idx()];
+        let _ = writeln!(
+            out,
+            "{:<34} {:>10.1} {:>11.0} {:>9.1} {:>9.1} {:>6.1} {:>6.1} {:>6.1} {:>6.1} {:>6.1}",
+            c.name,
+            c.rounds_per_sec,
+            c.events_per_sec,
+            c.bytes_down_per_round / 1e3,
+            c.bytes_up_per_round / 1e3,
+            pct(Phase::Distribute),
+            pct(Phase::Select),
+            pct(Phase::LocalUpdate),
+            pct(Phase::Aggregate),
+            pct(Phase::EventPop),
+        );
+    }
+    out
+}
+
+/// Persist the grid as a BENCH-schema JSON array.
+pub fn write_json(cells: &[CellResult], path: &str) -> std::io::Result<()> {
+    let arr: Vec<Json> = cells.iter().map(CellResult::to_json).collect();
+    write_results_file(path, &Json::Arr(arr).to_string_pretty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_config_shapes_the_grid() {
+        let cfg = cell_config(ProtocolKind::FedAvg, ProfileChurn::Markov, 40).unwrap();
+        assert_eq!(cfg.protocol.kind, ProtocolKind::FedAvg);
+        assert_eq!(cfg.env.m, 40);
+        assert_eq!(cfg.task.n, 1000); // floor dominates 10*m
+        assert_eq!(cfg.backend, Backend::Null);
+        assert!(matches!(cfg.env.churn, ChurnModel::Markov { .. }));
+        cfg.validate().unwrap();
+        let big = cell_config(ProtocolKind::Safa, ProfileChurn::Bernoulli, 500).unwrap();
+        assert_eq!(big.task.n, 5000);
+        assert_eq!(big.env.churn, ChurnModel::Bernoulli);
+    }
+
+    #[test]
+    fn one_tiny_cell_produces_sane_numbers() {
+        // Serialize against the other telemetry tests: run_cell toggles
+        // the process-global enable flag.
+        let _g = super::super::TEST_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let was = super::super::enabled();
+        let c = run_cell(ProtocolKind::FedAvg, ProfileChurn::Bernoulli, 10, 3, 1).unwrap();
+        assert_eq!(super::super::enabled(), was, "enable state restored");
+        assert_eq!(c.rounds, 3);
+        assert!(c.mean_ns > 0.0);
+        assert!(c.rounds_per_sec > 0.0);
+        // FedAvg distributes to every picked client each round.
+        assert!(c.bytes_down_per_round > 0.0);
+        let j = c.to_json();
+        assert!(j.get("rounds_per_sec").is_some());
+        assert!(j.get("share_distribute").is_some());
+        assert!(j.get("mean_ns").is_some());
+        let table = render_table(std::slice::from_ref(&c));
+        assert!(table.contains("profile_"));
+    }
+}

@@ -432,6 +432,13 @@ pub fn fork<F: Fn(usize) + Sync>(width: usize, f: F) {
         f(0);
         return;
     }
+    // Telemetry (no-ops unless enabled): the span charges the submitter's
+    // wall time across the whole dispatch — workers run concurrently, so
+    // the `fork_dispatch` phase reads as time spent *inside* parallel
+    // regions, not CPU time.
+    let _span = crate::telemetry::span(crate::telemetry::Phase::ForkDispatch);
+    crate::telemetry::count(crate::telemetry::Counter::Forks, 1);
+    crate::telemetry::count(crate::telemetry::Counter::Chunks, width as u64);
     match dispatch_mode() {
         Dispatch::Pooled => {
             if IN_POOLED_REGION.with(|c| c.get()) {

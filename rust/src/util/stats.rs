@@ -20,6 +20,35 @@ pub fn variance(xs: &[f64]) -> f64 {
     xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
 }
 
+/// Arithmetic mean of an iterator without collecting it; 0.0 when empty.
+/// Accumulates a plain running sum — the same FP order as [`mean`] — so
+/// summary methods that switch to this from a collect-then-`mean` pattern
+/// keep bit-identical results.
+pub fn mean_iter<I: IntoIterator<Item = f64>>(xs: I) -> f64 {
+    let mut sum = 0.0;
+    let mut n: u64 = 0;
+    for x in xs {
+        sum += x;
+        n += 1;
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
+}
+
+/// Population variance of an iterator without collecting it (single
+/// Welford pass); 0.0 when empty. FP rounding differs from the two-pass
+/// [`variance`] at the ~1e-12 level.
+pub fn variance_iter<I: IntoIterator<Item = f64>>(xs: I) -> f64 {
+    let mut r = Running::new();
+    for x in xs {
+        r.push(x);
+    }
+    r.variance()
+}
+
 /// Sample standard deviation (divides by n-1); 0.0 when n < 2.
 pub fn stddev_sample(xs: &[f64]) -> f64 {
     if xs.len() < 2 {
@@ -131,6 +160,17 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(variance(&[]), 0.0);
         assert_eq!(variance(&[7.0]), 0.0);
+    }
+
+    #[test]
+    fn iter_variants_match_slice_versions() {
+        let xs = [0.5, 1.5, -2.0, 4.0, 3.25];
+        // mean_iter sums in the same order as mean: bit-identical.
+        assert_eq!(mean_iter(xs.iter().copied()), mean(&xs));
+        assert!((variance_iter(xs.iter().copied()) - variance(&xs)).abs() < 1e-12);
+        assert_eq!(mean_iter(std::iter::empty()), 0.0);
+        assert_eq!(variance_iter(std::iter::empty()), 0.0);
+        assert_eq!(variance_iter([7.0]), 0.0);
     }
 
     #[test]

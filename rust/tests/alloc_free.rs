@@ -1,10 +1,13 @@
 //! Zero-allocation steady state for the fleet engine (perf satellite).
 //!
-//! A counting global allocator wraps the system allocator; after a
-//! warm-up round has grown every pooled buffer (`RoundScratch`, the
-//! event queue, the reusable output records), further rounds must not
-//! touch the heap at all — for the Bernoulli direct path AND the Markov
-//! event path, at width 1 AND under pooled parallel dispatch.
+//! The telemetry layer's counting allocator (`safa::telemetry::
+//! CountingAlloc`) wraps the system allocator; after a warm-up round has
+//! grown every pooled buffer (`RoundScratch`, the event queue, the
+//! reusable output records), further rounds must not touch the heap at
+//! all — for the Bernoulli direct path AND the Markov event path, at
+//! width 1 AND under pooled parallel dispatch, with telemetry recording
+//! OFF and ON (spans + counters live on the hot path are shard-atomic
+//! adds and clock reads, never heap traffic).
 //!
 //! The serial case is strict by construction. The pooled case is the
 //! persistent worker pool's contract: warm-up rounds spawn + park the
@@ -15,45 +18,18 @@
 //! which is why the test pins `Dispatch::Pooled`. Exactly one #[test]
 //! lives in this binary so no concurrent test pollutes the counter.
 
-use std::alloc::{GlobalAlloc, Layout, System};
-use std::sync::atomic::{AtomicUsize, Ordering};
-
 use safa::client::ClientState;
 use safa::config::presets;
 use safa::engine::{AvailabilityModel, FleetEngine, RoundCtx};
 use safa::model::ParamVec;
 use safa::net::NetworkModel;
 use safa::sim::{ContinuationSim, RoundSim};
+use safa::telemetry::{self, Counter};
 use safa::util::parallel::{with_dispatch, with_thread_count, Dispatch};
 use safa::util::rng::Pcg64;
 
-struct CountingAlloc;
-
-static ALLOCS: AtomicUsize = AtomicUsize::new(0);
-
-unsafe impl GlobalAlloc for CountingAlloc {
-    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc(layout)
-    }
-
-    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc_zeroed(layout)
-    }
-
-    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
-    }
-
-    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
-    }
-}
-
 #[global_allocator]
-static GLOBAL: CountingAlloc = CountingAlloc;
+static GLOBAL: telemetry::CountingAlloc = telemetry::CountingAlloc;
 
 fn fleet(m: usize) -> Vec<ClientState> {
     let mut rng = Pcg64::new(99);
@@ -82,7 +58,7 @@ fn allocs_in_steady_state(
     m: usize,
     warmup: usize,
     rounds: usize,
-) -> usize {
+) -> u64 {
     let mut cfg = presets::preset("tiny").unwrap();
     cfg.env.m = m;
     cfg.env.crash_prob = 0.2;
@@ -113,48 +89,36 @@ fn allocs_in_steady_state(
     for t in 1..=warmup {
         run(&mut engine, t, &mut round_out, &mut cont_out);
     }
-    let before = ALLOCS.load(Ordering::SeqCst);
+    let before = telemetry::alloc_count();
     for t in warmup + 1..=warmup + rounds {
         run(&mut engine, t, &mut round_out, &mut cont_out);
     }
-    ALLOCS.load(Ordering::SeqCst) - before
+    telemetry::alloc_count() - before
 }
 
 #[test]
 fn steady_state_rounds_do_not_allocate() {
     let m = 500;
-    // Serial path: strictly zero heap traffic.
-    with_thread_count(1, || {
-        let bern = allocs_in_steady_state(
-            AvailabilityModel::BernoulliPerRound { crash_prob: 0.2 },
-            m,
-            3,
-            8,
-        );
-        assert_eq!(bern, 0, "Bernoulli direct path allocated in steady state");
-        let markov = allocs_in_steady_state(
-            AvailabilityModel::Markov {
-                mean_uptime_s: 400.0,
-                mean_downtime_s: 150.0,
-            },
-            m,
-            3,
-            8,
-        );
-        assert_eq!(markov, 0, "Markov event path allocated in steady state");
-    });
-    // Pooled dispatch at width 4 (m=500 over the 64-client draw grain
-    // genuinely forks): after warm-up spawns and parks the pool's
-    // workers, steady-state parallel rounds allocate nothing either.
-    with_dispatch(Dispatch::Pooled, || {
-        with_thread_count(4, || {
+    // Consume telemetry's one-shot environment read here, outside every
+    // measured window (`env::var` allocates); afterwards the enable flag
+    // is one relaxed atomic.
+    telemetry::set_enabled(false);
+    for telemetry_on in [false, true] {
+        telemetry::set_enabled(telemetry_on);
+        let mode = if telemetry_on {
+            "telemetry on"
+        } else {
+            "telemetry off"
+        };
+        // Serial path: strictly zero heap traffic.
+        with_thread_count(1, || {
             let bern = allocs_in_steady_state(
                 AvailabilityModel::BernoulliPerRound { crash_prob: 0.2 },
                 m,
                 3,
                 8,
             );
-            assert_eq!(bern, 0, "pooled Bernoulli direct path allocated in steady state");
+            assert_eq!(bern, 0, "Bernoulli direct path allocated ({mode})");
             let markov = allocs_in_steady_state(
                 AvailabilityModel::Markov {
                     mean_uptime_s: 400.0,
@@ -164,7 +128,41 @@ fn steady_state_rounds_do_not_allocate() {
                 3,
                 8,
             );
-            assert_eq!(markov, 0, "pooled Markov event path allocated in steady state");
+            assert_eq!(markov, 0, "Markov event path allocated ({mode})");
         });
-    });
+        // Pooled dispatch at width 4 (m=500 over the 64-client draw
+        // grain genuinely forks): after warm-up spawns and parks the
+        // pool's workers, steady-state parallel rounds allocate nothing
+        // either.
+        with_dispatch(Dispatch::Pooled, || {
+            with_thread_count(4, || {
+                let bern = allocs_in_steady_state(
+                    AvailabilityModel::BernoulliPerRound { crash_prob: 0.2 },
+                    m,
+                    3,
+                    8,
+                );
+                assert_eq!(bern, 0, "pooled Bernoulli direct path allocated ({mode})");
+                let markov = allocs_in_steady_state(
+                    AvailabilityModel::Markov {
+                        mean_uptime_s: 400.0,
+                        mean_downtime_s: 150.0,
+                    },
+                    m,
+                    3,
+                    8,
+                );
+                assert_eq!(markov, 0, "pooled Markov event path allocated ({mode})");
+            });
+        });
+    }
+    // The telemetry-on passes must actually have exercised live
+    // instrumentation: the Markov event path pops queue events, so the
+    // cumulative counter cannot still be zero.
+    let snap = telemetry::snapshot();
+    assert!(
+        snap.counter(Counter::EventsPopped) > 0,
+        "telemetry-on rounds recorded no event pops — instrumentation dead?"
+    );
+    telemetry::set_enabled(false);
 }

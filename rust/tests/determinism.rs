@@ -295,3 +295,54 @@ fn safa_rounds_are_width_invariant_end_to_end() {
         }
     }
 }
+
+/// Observability tentpole: recording telemetry (span timers, fleet
+/// counters) must not perturb the simulation — it only reads clocks and
+/// bumps shard atomics, never consumes RNG or reorders reductions. SAFA
+/// runs with telemetry force-enabled are bit-identical to runs with it
+/// off, at every width. (Toggling the process-global flag mid-suite is
+/// safe precisely because of this invariant.)
+#[test]
+fn telemetry_recording_does_not_perturb_results() {
+    let mut cfg = presets::preset("fleet10k").unwrap();
+    cfg.env.m = 200;
+    cfg.task.n = 2_000;
+    cfg.env.churn = ChurnModel::Markov {
+        mean_uptime_s: 500.0,
+        mean_downtime_s: 200.0,
+    };
+    cfg.train.rounds = 3;
+
+    let run = |width: usize, telemetry: bool| -> Vec<(u64, usize, usize, u64)> {
+        let prior = safa::telemetry::enabled();
+        safa::telemetry::set_enabled(telemetry);
+        let out = with_thread_count(width, || {
+            let mut env = FedEnv::new(&cfg).unwrap();
+            let mut proto = Safa::new(&env, env.init_global());
+            (1..=cfg.train.rounds)
+                .map(|t| {
+                    let rec = proto.run_round(t, &mut env);
+                    let g = proto.global().as_slice()[0] as f64;
+                    (
+                        rec.round_len.to_bits(),
+                        rec.n_picked,
+                        rec.n_committed,
+                        g.to_bits(),
+                    )
+                })
+                .collect()
+        });
+        safa::telemetry::set_enabled(prior);
+        out
+    };
+    let reference = run(1, false);
+    for &width in &WIDTHS {
+        for telemetry in [false, true] {
+            let got = run(width, telemetry);
+            assert_eq!(
+                got, reference,
+                "telemetry={telemetry} width={width}: run diverged"
+            );
+        }
+    }
+}
