@@ -1,0 +1,106 @@
+//! Network-fabric bench: full Null-backend rounds across protocol ×
+//! fabric regime, measuring what the event-driven transfer layer costs
+//! relative to the closed-form Eq. 17–19 arithmetic and what update
+//! compression buys back.
+//!
+//! Regimes per protocol (SAFA, FedAvg, FedAsync) at the fleet sizes in
+//! the grid:
+//!
+//! * `off`        — fabric disabled, the legacy closed-form baseline;
+//! * `contended`  — the `contended` preset's fabric (FIFO server link,
+//!   lognormal heterogeneous client links, latency/jitter/loss);
+//! * `contended_topk` / `contended_q8` — same network plus top-k (10%)
+//!   or 8-bit stochastic-quantization update compression.
+//!
+//! Each cell prints the per-round comm volume (down/up/saved MB) next
+//! to the timing line, so the codec's byte savings and its CPU tax land
+//! in the same artifact. Emits `BENCH_net_fabric.json` (override with
+//! `-- --json <path>`; BENCH schema documented in EXPERIMENTS.md).
+//! `SAFA_BENCH_FAST=1` trims the grid for CI smoke runs.
+
+use safa::bench_harness::{json_path_from_args, Bencher};
+use safa::config::{presets, ProtocolKind};
+use safa::coordinator::Coordinator;
+use safa::net::fabric::FabricConfig;
+
+fn regimes() -> Vec<(&'static str, FabricConfig)> {
+    let contended = presets::preset("contended")
+        .expect("contended preset")
+        .env
+        .fabric;
+    let with_codec = |codec: &str, frac: Option<f64>, bits: Option<i64>| {
+        FabricConfig::from_parts(
+            "fifo",
+            None,
+            Some("lognormal"),
+            Some(0.5),
+            Some(0.05),
+            Some(0.02),
+            Some(0.02),
+            None,
+            Some(codec),
+            frac,
+            bits,
+        )
+        .expect("fabric config")
+    };
+    vec![
+        ("off", FabricConfig::default()),
+        ("contended", contended),
+        ("contended_topk", with_codec("topk", Some(0.1), None)),
+        ("contended_q8", with_codec("quantize", None, Some(8))),
+    ]
+}
+
+fn main() {
+    safa::util::logging::init();
+    let fast = std::env::var("SAFA_BENCH_FAST").as_deref() == Ok("1");
+    let mut b = Bencher::new();
+    let fleets: &[usize] = if fast { &[200] } else { &[500, 2_000] };
+    let protocols = [
+        ProtocolKind::Safa,
+        ProtocolKind::FedAvg,
+        ProtocolKind::FedAsync,
+    ];
+
+    for &m in fleets {
+        for proto in protocols {
+            for (regime, fabric) in regimes() {
+                let mut cfg = presets::preset("fleet10k").expect("fleet10k preset");
+                cfg.env.m = m;
+                cfg.protocol.kind = proto;
+                cfg.env.fabric = fabric;
+                // Fresh coordinator per cell: rounds must be driven in
+                // order, and the scratch pools warm up during
+                // calibration so the measured rounds are steady-state.
+                let mut coord = Coordinator::new(&cfg).expect("coordinator");
+                let mut t = 1usize;
+                let mut last = None;
+                let name = format!(
+                    "{}_round_m{m}_fabric_{regime}",
+                    proto.name().to_ascii_lowercase()
+                );
+                b.bench(&name, || {
+                    let rec = coord.protocol.run_round(t, &mut coord.env);
+                    t += 1;
+                    let len = rec.round_len;
+                    last = Some((rec.bytes_down, rec.bytes_up, rec.bytes_saved));
+                    len
+                });
+                if let Some((down, up, saved)) = last {
+                    const MB: f64 = 1024.0 * 1024.0;
+                    println!(
+                        "    comm/round: down {:.2} MB, up {:.2} MB, saved {:.2} MB",
+                        down / MB,
+                        up / MB,
+                        saved / MB
+                    );
+                }
+            }
+        }
+    }
+
+    b.write_json("results/net_fabric.json").expect("write results");
+    b.write_json(&json_path_from_args("BENCH_net_fabric.json"))
+        .expect("write BENCH json");
+}

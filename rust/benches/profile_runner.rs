@@ -1,5 +1,5 @@
-//! Profiling-runner bench: the telemetry grid (protocol × churn × m) as
-//! a repeatable artifact. Thin wrapper over
+//! Profiling-runner bench: the telemetry grid (protocol × churn ×
+//! fabric × m) as a repeatable artifact. Thin wrapper over
 //! `safa::telemetry::profile::run_spec` — the same harness behind the
 //! `safa profile` CLI subcommand — so CI and local runs quote identical
 //! numbers.
@@ -10,12 +10,15 @@
 //! EXPERIMENTS.md). `SAFA_BENCH_FAST=1` trims the grid for CI smoke.
 
 use safa::bench_harness::json_path_from_args;
-use safa::telemetry::profile::{render_table, run_spec, write_json, ProfileSpec};
+use safa::telemetry::profile::{render_table, run_spec, write_json, ProfileFabric, ProfileSpec};
 
 fn main() {
     safa::util::logging::init();
     let fast = std::env::var("SAFA_BENCH_FAST").as_deref() == Ok("1");
     let mut spec = ProfileSpec::default();
+    // Both fabric regimes: the historical closed-form cells (names
+    // unchanged) plus `_contended` cells measuring the event-fabric tax.
+    spec.fabrics = ProfileFabric::ALL.to_vec();
     if fast {
         spec.m_values = vec![50];
         spec.rounds = 8;

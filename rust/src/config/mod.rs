@@ -7,6 +7,7 @@ pub mod presets;
 pub use presets::{preset, preset_names, scaled_preset};
 
 use crate::error::{Result, SafaError};
+use crate::net::fabric::FabricConfig;
 use crate::util::toml::TomlDoc;
 
 /// Which ML task (paper §IV-A, Table II).
@@ -266,6 +267,10 @@ pub struct EnvConfig {
     pub model_size_bits: f64,
     /// Client availability process (default: the paper's Bernoulli).
     pub churn: ChurnModel,
+    /// Network fabric (contention, heterogeneous links, lossy transfers,
+    /// update compression). Default: disabled — the closed-form Eq. 17–19
+    /// arithmetic, untouched.
+    pub fabric: FabricConfig,
 }
 
 /// Federated-optimization parameters.
@@ -392,6 +397,38 @@ impl ExperimentConfig {
         if self.eval_every == 0 {
             return e("eval_every must be >= 1".into());
         }
+        // Network constants divide into every transfer time: a zero,
+        // negative, NaN or infinite value poisons all downstream timings,
+        // so reject it at load time (finiteness first — NaN fails every
+        // comparison) instead of clamping later.
+        if !self.env.client_bw_bps.is_finite() || self.env.client_bw_bps <= 0.0 {
+            return e(format!(
+                "client_bw_bps {} must be positive and finite",
+                self.env.client_bw_bps
+            ));
+        }
+        if !self.env.server_bw_bps.is_finite() || self.env.server_bw_bps <= 0.0 {
+            return e(format!(
+                "server_bw_bps {} must be positive and finite",
+                self.env.server_bw_bps
+            ));
+        }
+        if !self.env.model_size_bits.is_finite() || self.env.model_size_bits <= 0.0 {
+            return e(format!(
+                "model_size_bits {} must be positive and finite",
+                self.env.model_size_bits
+            ));
+        }
+        // Positive perf_lambda (plus build_clients' floor on each draw)
+        // guarantees every client's perf is positive, which is what lets
+        // net::t_train divide without a silent clamp.
+        if !self.env.perf_lambda.is_finite() || self.env.perf_lambda <= 0.0 {
+            return e(format!(
+                "perf_lambda {} must be positive and finite",
+                self.env.perf_lambda
+            ));
+        }
+        self.env.fabric.validate()?;
         Ok(())
     }
 
@@ -430,6 +467,9 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_f64("env.crash_prob") {
             cfg.env.crash_prob = v;
         }
+        // Unit conversions (also documented in `safa --help`): the TOML
+        // keys carry megabits/s and megabytes; EnvConfig stores bits/s
+        // and bits. Positivity is enforced by validate() below.
         if let Some(v) = doc.get_f64("env.client_bw_mbps") {
             cfg.env.client_bw_bps = v * 1e6;
         }
@@ -438,6 +478,35 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_f64("env.model_size_mb") {
             cfg.env.model_size_bits = v * 8e6;
+        }
+        if let Some(v) = doc.get_str("env.fabric") {
+            cfg.env.fabric = FabricConfig::from_parts(
+                v,
+                doc.get_i64("env.fabric_streams"),
+                doc.get_str("env.fabric_link"),
+                doc.get_f64("env.fabric_link_spread"),
+                doc.get_f64("env.fabric_latency_s"),
+                doc.get_f64("env.fabric_jitter_s"),
+                doc.get_f64("env.fabric_loss_prob"),
+                doc.get_i64("env.fabric_max_retries"),
+                doc.get_str("env.fabric_compression"),
+                doc.get_f64("env.fabric_topk_fraction"),
+                doc.get_i64("env.fabric_quantize_bits"),
+            )?;
+        } else if doc.get_i64("env.fabric_streams").is_some()
+            || doc.get_str("env.fabric_link").is_some()
+            || doc.get_f64("env.fabric_link_spread").is_some()
+            || doc.get_f64("env.fabric_latency_s").is_some()
+            || doc.get_f64("env.fabric_jitter_s").is_some()
+            || doc.get_f64("env.fabric_loss_prob").is_some()
+            || doc.get_i64("env.fabric_max_retries").is_some()
+            || doc.get_str("env.fabric_compression").is_some()
+            || doc.get_f64("env.fabric_topk_fraction").is_some()
+            || doc.get_i64("env.fabric_quantize_bits").is_some()
+        {
+            return Err(SafaError::Config(
+                "env.fabric_* keys require env.fabric = \"none\", \"fifo\" or \"fair\"".into(),
+            ));
         }
         if let Some(v) = doc.get_str("env.churn") {
             cfg.env.churn = ChurnModel::from_parts(
@@ -519,6 +588,32 @@ mod tests {
         let mut cfg = preset("task1").unwrap();
         cfg.env.m = cfg.task.n + 1;
         assert!(cfg.validate().is_err());
+    }
+
+    /// Satellite: network constants are rejected at load time instead of
+    /// silently producing NaN/inf timings (or clamped divisions)
+    /// downstream.
+    #[test]
+    fn validation_catches_bad_network_constants() {
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let mut cfg = preset("task1").unwrap();
+            cfg.env.client_bw_bps = bad;
+            assert!(cfg.validate().is_err(), "client_bw_bps {bad} accepted");
+            let mut cfg = preset("task1").unwrap();
+            cfg.env.server_bw_bps = bad;
+            assert!(cfg.validate().is_err(), "server_bw_bps {bad} accepted");
+            let mut cfg = preset("task1").unwrap();
+            cfg.env.model_size_bits = bad;
+            assert!(cfg.validate().is_err(), "model_size_bits {bad} accepted");
+            let mut cfg = preset("task1").unwrap();
+            cfg.env.perf_lambda = bad;
+            assert!(cfg.validate().is_err(), "perf_lambda {bad} accepted");
+        }
+        // Validation delegates to the fabric's own checks.
+        let mut cfg = preset("task1").unwrap();
+        cfg.env.fabric.enabled = true;
+        cfg.env.fabric.loss_prob = 2.0;
+        assert!(cfg.validate().is_err(), "bad fabric accepted");
     }
 
     #[test]
@@ -611,6 +706,43 @@ mod tests {
             }
             other => panic!("expected Markov, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn from_toml_configures_fabric() {
+        use crate::net::fabric::{Compression, Contention, LinkDist};
+        let doc = crate::util::toml::parse(
+            r#"
+            preset = "tiny"
+            [env]
+            fabric = "fifo"
+            fabric_link = "lognormal"
+            fabric_link_spread = 0.6
+            fabric_latency_s = 0.05
+            fabric_compression = "topk"
+            fabric_topk_fraction = 0.2
+            "#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert!(cfg.env.fabric.enabled);
+        assert_eq!(cfg.env.fabric.contention, Contention::Fifo);
+        assert_eq!(cfg.env.fabric.link_dist, LinkDist::LogNormal { sigma: 0.6 });
+        assert_eq!(cfg.env.fabric.latency_s, 0.05);
+        assert_eq!(
+            cfg.env.fabric.compression,
+            Compression::TopK { fraction: 0.2 }
+        );
+        // Orphan fabric parameters without env.fabric are rejected.
+        let doc = crate::util::toml::parse(
+            r#"
+            preset = "tiny"
+            [env]
+            fabric_latency_s = 0.05
+            "#,
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err());
     }
 
     #[test]

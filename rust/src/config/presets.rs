@@ -14,6 +14,7 @@ use super::{
     TaskConfig, TaskKind, TrainConfig,
 };
 use crate::error::{Result, SafaError};
+use crate::net::fabric::{Compression, Contention, FabricConfig, LinkDist};
 
 const MB_BITS: f64 = 8e6;
 
@@ -28,6 +29,11 @@ fn base_env(m: usize) -> EnvConfig {
         server_bw_bps: 198.02e6,
         model_size_bits: 10.0 * MB_BITS,
         churn: ChurnModel::Bernoulli,
+        // Disabled fabric = closed-form Eq. 17–19 arithmetic. The
+        // default FabricConfig is also *neutral*: force-enabling it
+        // without touching any knob reproduces the closed form
+        // bit-for-bit (asserted by tests/net_fabric.rs).
+        fabric: FabricConfig::default(),
     }
 }
 
@@ -224,6 +230,28 @@ pub fn tiny_churn() -> ExperimentConfig {
     with_markov_churn(tiny(), "churn")
 }
 
+/// Contended-fabric variant of Task 1: the server downlink serializes
+/// distribution FIFO, client links are lognormally heterogeneous
+/// (sigma 0.5: ~2/3 of clients within 0.6–1.6× the nominal 1.40 Mbps)
+/// with WAN-ish latency/jitter and mild loss. Everything else — dataset,
+/// T_lim, bandwidth constants — is Task 1's, so fabric-off vs `contended`
+/// isolates the transport's effect on round shape.
+pub fn contended() -> ExperimentConfig {
+    let mut cfg = task1();
+    cfg.name = "contended".into();
+    cfg.env.fabric = FabricConfig {
+        enabled: true,
+        contention: Contention::Fifo,
+        link_dist: LinkDist::LogNormal { sigma: 0.5 },
+        latency_s: 0.05,
+        jitter_s: 0.02,
+        loss_prob: 0.02,
+        max_retries: FabricConfig::DEFAULT_MAX_RETRIES,
+        compression: Compression::None,
+    };
+    cfg
+}
+
 /// Task-1 profile under Markov churn (the `churn_sweep` bench's base).
 pub fn task1_churn() -> ExperimentConfig {
     with_markov_churn(task1(), "churn")
@@ -248,6 +276,7 @@ pub fn preset(name: &str) -> Result<ExperimentConfig> {
         "fleet10k" => Ok(fleet10k()),
         "tiny" => Ok(tiny()),
         "tiny-churn" | "tiny_churn" => Ok(tiny_churn()),
+        "contended" => Ok(contended()),
         other => Err(SafaError::Config(format!("unknown preset '{other}'"))),
     }
 }
@@ -265,6 +294,7 @@ pub fn preset_names() -> &'static [&'static str] {
         "fleet10k",
         "tiny",
         "tiny-churn",
+        "contended",
     ]
 }
 
@@ -354,6 +384,27 @@ mod tests {
         assert!(cfg.task.n >= cfg.env.m);
         // Same environment timing shape as Task 3.
         assert_eq!(cfg.train.t_lim, task3().train.t_lim);
+    }
+
+    #[test]
+    fn contended_preset_enables_the_fabric() {
+        let cfg = preset("contended").unwrap();
+        assert!(cfg.env.fabric.enabled);
+        assert_eq!(cfg.env.fabric.contention, Contention::Fifo);
+        assert!(matches!(
+            cfg.env.fabric.link_dist,
+            LinkDist::LogNormal { .. }
+        ));
+        // Same base environment as Task 1 so A/B runs isolate the fabric.
+        assert_eq!(cfg.env.client_bw_bps, task1().env.client_bw_bps);
+        assert_eq!(cfg.train.t_lim, task1().train.t_lim);
+        // The non-fabric presets all stay off (fabric-off is the default
+        // the bit-for-bit regression suite pins).
+        for name in preset_names() {
+            if *name != "contended" {
+                assert!(!preset(name).unwrap().env.fabric.enabled, "{name}");
+            }
+        }
     }
 
     #[test]

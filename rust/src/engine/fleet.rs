@@ -66,8 +66,10 @@ use super::event::{Event, EventKind, EventQueue};
 use crate::client::ClientState;
 use crate::config::ExperimentConfig;
 use crate::error::Result;
+use crate::net::fabric::FabricRuntime;
 use crate::net::NetworkModel;
 use crate::sim::{Arrival, ContinuationSim, FailReason, RoundSim};
+use crate::telemetry;
 use crate::util::parallel;
 use crate::util::rng::Pcg64;
 
@@ -88,6 +90,10 @@ pub struct RoundCtx<'a> {
     pub cfg: &'a ExperimentConfig,
     pub net: &'a NetworkModel,
     pub clients: &'a [ClientState],
+    /// Network fabric, when enabled: transfer legs are priced per
+    /// (round, client) and synced downloads pick up contention queueing
+    /// delays. `None` = the closed-form `net` arithmetic, bit-for-bit.
+    pub fabric: Option<&'a FabricRuntime>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -219,7 +225,33 @@ struct RoundScratch {
     direct_cont: Vec<(f64, ContOutcome)>,
     /// (participant position, arrival) pairs, sorted before output.
     arrivals: Vec<(usize, Arrival)>,
+    /// Participant-indexed contention queueing delays (fabric rounds with
+    /// an active contention policy only; zero-filled otherwise unused).
+    dist_wait: Vec<f64>,
     queue: EventQueue,
+}
+
+/// Fill `dw` with each participant's contention queueing delay (indexed
+/// like `synced`; non-synced entries stay 0.0 — they download nothing).
+/// Returns false (leaving `dw` untouched) when the fabric is off or the
+/// policy is uncontended, so the hot paths skip the lookup entirely.
+fn fill_dist_waits(dw: &mut Vec<f64>, fabric: Option<&FabricRuntime>, synced: &[bool]) -> bool {
+    let Some(f) = fabric else { return false };
+    if !f.has_dist_wait() {
+        return false;
+    }
+    let _span = telemetry::span(telemetry::Phase::TransferWait);
+    let m_sync = synced.iter().filter(|&&s| s).count();
+    dw.clear();
+    dw.resize(synced.len(), 0.0);
+    let mut idx = 0;
+    for (pos, &s) in synced.iter().enumerate() {
+        if s {
+            dw[pos] = f.dist_wait(idx, m_sync);
+            idx += 1;
+        }
+    }
+    true
 }
 
 /// Discrete-event simulator for a fleet of clients under an availability
@@ -395,8 +427,15 @@ impl FleetEngine {
         let p = participants.len();
         let (t_down, t_up) = (ctx.net.t_down(), ctx.net.t_up());
         let clients = ctx.clients;
+        let fabric = ctx.fabric;
         let avail = &self.avail;
         let scratch = &mut self.scratch;
+        let contended = fill_dist_waits(&mut scratch.dist_wait, fabric, synced);
+        let dw: Option<&[f64]> = if contended {
+            Some(&scratch.dist_wait)
+        } else {
+            None
+        };
         scratch.direct_round.clear();
         scratch.direct_round.resize(p, EMPTY_DIRECT);
         parallel::for_each_chunk(&mut scratch.direct_round, DRAW_GRAIN, |base, chunk| {
@@ -409,9 +448,18 @@ impl FleetEngine {
                 let online_secs = w.online_seconds(t_lim);
                 if w.online_at_start {
                     // Same accumulation order as the event chain:
-                    // ((down + train) + up).
-                    let head = if synced[pos] { t_down } else { 0.0 };
-                    let finish = head + clients[k].t_train(epochs) + t_up;
+                    // ((wait + down) + train) + up. Fabric-off keeps the
+                    // legacy values bitwise (0.0 + x == x exactly).
+                    let (td, tu) = match fabric {
+                        Some(f) => (f.t_down(t, k), f.t_up(t, k)),
+                        None => (t_down, t_up),
+                    };
+                    let head = if synced[pos] {
+                        dw.map_or(0.0, |d| d[pos]) + td
+                    } else {
+                        0.0
+                    };
+                    let finish = head + clients[k].t_train(epochs) + tu;
                     *slot = if finish <= t_lim {
                         DirectSlot {
                             online_secs,
@@ -492,15 +540,23 @@ impl FleetEngine {
         let p = participants.len();
         let m = self.m;
         let is_bernoulli = self.avail.is_bernoulli();
+        let fabric = ctx.fabric;
         let scratch = &mut self.scratch;
+        let contended = fill_dist_waits(&mut scratch.dist_wait, fabric, synced);
 
         // Fleet-chunked parallel precompute: each participant's slot,
         // initial events and whole-round failure derive only from its
         // own window draw (plus its RNG stream for the legacy
         // crash-partial draw), so this pass fans out across the pool.
-        // Only the *scheduling* below stays serial.
+        // Only the *scheduling* below stays serial. (Fabric transfer
+        // times are pure in (round, client), so they fan out too.)
         scratch.setup_round.clear();
         scratch.setup_round.resize(p, EMPTY_ROUND_SETUP);
+        let dw: Option<&[f64]> = if contended {
+            Some(&scratch.dist_wait)
+        } else {
+            None
+        };
         parallel::for_each_chunk2(
             &mut scratch.setup_round,
             &mut scratch.draws,
@@ -512,8 +568,18 @@ impl FleetEngine {
                     let was_synced = synced[pos];
                     let (w, mut crng) = draw.take().expect("window drawn for participant");
                     let t_train = ctx.clients[k].t_train(epochs);
-                    let dl_head = if was_synced { ctx.net.t_down() } else { 0.0 };
-                    let duration = dl_head + t_train + ctx.net.t_up();
+                    let (td, tu) = match fabric {
+                        Some(f) => (f.t_down(t, k), f.t_up(t, k)),
+                        None => (ctx.net.t_down(), ctx.net.t_up()),
+                    };
+                    // Fabric-off keeps legacy values bitwise (0.0 + x
+                    // == x exactly).
+                    let dl_head = if was_synced {
+                        dw.map_or(0.0, |d| d[pos]) + td
+                    } else {
+                        0.0
+                    };
+                    let duration = dl_head + t_train + tu;
                     let online_secs = w.online_seconds(t_lim);
                     *su = if w.online_at_start {
                         RoundSetup {
@@ -526,7 +592,7 @@ impl FleetEngine {
                             },
                             offline_at: w.goes_offline_at,
                             head: Some(if was_synced {
-                                (ctx.net.t_down(), EventKind::DownloadDone)
+                                (dl_head, EventKind::DownloadDone)
                             } else {
                                 (t_train, EventKind::TrainDone)
                             }),
@@ -628,8 +694,14 @@ impl FleetEngine {
                         slot.phase = Phase::Active;
                         let t_train = ctx.clients[k].t_train(epochs);
                         let head = if slot.synced {
+                            // Pure in (t, k): recomputing the transfer
+                            // time here matches the setup pass exactly.
+                            let td = match fabric {
+                                Some(f) => f.t_down(t, k),
+                                None => ctx.net.t_down(),
+                            };
                             Event {
-                                time: ev.time + ctx.net.t_down(),
+                                time: ev.time + (dw.map_or(0.0, |d| d[pos]) + td),
                                 client: Some(k),
                                 kind: EventKind::DownloadDone,
                             }
@@ -654,8 +726,12 @@ impl FleetEngine {
                 }
                 EventKind::TrainDone => {
                     if slot.phase == Phase::Active {
+                        let tu = match fabric {
+                            Some(f) => f.t_up(t, k),
+                            None => ctx.net.t_up(),
+                        };
                         q.schedule(Event {
-                            time: ev.time + ctx.net.t_up(),
+                            time: ev.time + tu,
                             client: Some(k),
                             kind: EventKind::UploadDone,
                         });

@@ -192,6 +192,7 @@ mod tests {
                         cfg: &cfg,
                         net: &env.net,
                         clients: &env.clients,
+                        fabric: None,
                     };
                     engine
                         .run_round(t, ctx, &parts, &synced, &rng)
@@ -225,6 +226,7 @@ mod tests {
                 cfg: &cfg,
                 net: &env.net,
                 clients: &env.clients,
+                fabric: None,
             };
             let sim = engine.run_round(t, ctx, &parts, &synced, &rng);
             for &(_, reason, partial) in &sim.failures {
@@ -255,6 +257,7 @@ mod tests {
                 cfg: &cfg,
                 net: &env.net,
                 clients: &env.clients,
+                fabric: None,
             };
             let sim = engine.run_round(t, ctx, &parts, &synced, &rng);
             let mid_round_crash = sim
@@ -291,6 +294,7 @@ mod tests {
                 cfg: &cfg,
                 net: &env.net,
                 clients: &env.clients,
+                fabric: None,
             };
             let sim = engine.run_round(t, ctx, &parts, &synced, &rng);
             offline_per_round.push(

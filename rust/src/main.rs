@@ -6,14 +6,22 @@
 //!              [--alpha 0.6] [--staleness-exp 0.5]
 //!              [--churn bernoulli|markov|trace] [--churn-uptime 2000]
 //!              [--churn-downtime 500] [--churn-trace file.txt]
+//!              [--bw 10] [--server-bw 100] [--model-size 10]
+//!              [--fabric off|none|fifo|fair] [--fabric-streams 4]
+//!              [--fabric-link fixed|uniform|lognormal]
+//!              [--fabric-link-spread 0.5] [--fabric-latency 0.05]
+//!              [--fabric-jitter 0.02] [--fabric-loss 0.02]
+//!              [--fabric-retries 3]
+//!              [--fabric-compression none|topk|quantize]
+//!              [--fabric-topk 0.1] [--fabric-bits 8]
 //!              [--backend native|xla|null] [--config file.toml]
 //!              [--out results/run.json]
 //! safa sweep   [--preset task1] [--protocols safa,fedavg]
 //!              [--c 0.1,0.3] [--cr 0.1,0.3,0.5,0.7] [--metric round_len]
 //! safa bias    [--cr 0.3] [--rounds 20]         # Fig. 5 closed form
 //! safa profile [--protocols safa,fedavg] [--churn bernoulli,markov]
-//!              [--m 100,500] [--rounds 30] [--warmup 5]
-//!              [--json BENCH_profile.json]       # rounds/sec grid
+//!              [--fabric off,contended] [--m 100,500] [--rounds 30]
+//!              [--warmup 5] [--json BENCH_profile.json] # rounds/sec grid
 //! safa presets                                   # list presets
 //! ```
 
@@ -76,7 +84,16 @@ fn print_help() {
          \n\
          Protocols: safa, fedavg, fedcs, fedasync (--alpha/--staleness-exp), local\n\
          Churn:     --churn bernoulli|markov|trace, with --churn-uptime /\n\
-         \x20          --churn-downtime (seconds, markov) or --churn-trace <file>\n"
+         \x20          --churn-downtime (seconds, markov) or --churn-trace <file>\n\
+         Network:   --bw <Mbps> per-client link, --server-bw <Mbps> server link,\n\
+         \x20          --model-size <MB> model payload (all must be positive)\n\
+         Fabric:    --fabric off|none|fifo|fair enables the event-driven network\n\
+         \x20          fabric; refine with --fabric-streams (fair), --fabric-link\n\
+         \x20          fixed|uniform|lognormal + --fabric-link-spread,\n\
+         \x20          --fabric-latency/--fabric-jitter (seconds), --fabric-loss\n\
+         \x20          (probability), --fabric-retries, and update compression via\n\
+         \x20          --fabric-compression topk|quantize with --fabric-topk\n\
+         \x20          (fraction) or --fabric-bits (1..=32)\n"
     );
 }
 
@@ -120,6 +137,71 @@ fn build_config(args: &Args) -> CliResult<ExperimentConfig> {
     {
         return Err(CliError(
             "--churn-uptime/--churn-downtime/--churn-trace require --churn <model>".into(),
+        )
+        .into());
+    }
+    // Network constants: CLI units are human-scale (Mbps / MB); the
+    // config stores bits and bits/sec. Rejected here (not just by
+    // cfg.validate) so the error names the flag and its unit.
+    if let Some(bw) = args.get_parsed::<f64>("bw")? {
+        if !bw.is_finite() || bw <= 0.0 {
+            return Err(
+                CliError(format!("--bw {bw}: client bandwidth in Mbps must be > 0")).into(),
+            );
+        }
+        cfg.env.client_bw_bps = bw * 1e6;
+    }
+    if let Some(bw) = args.get_parsed::<f64>("server-bw")? {
+        if !bw.is_finite() || bw <= 0.0 {
+            return Err(
+                CliError(format!("--server-bw {bw}: server bandwidth in Mbps must be > 0"))
+                    .into(),
+            );
+        }
+        cfg.env.server_bw_bps = bw * 1e6;
+    }
+    if let Some(mb) = args.get_parsed::<f64>("model-size")? {
+        if !mb.is_finite() || mb <= 0.0 {
+            return Err(
+                CliError(format!("--model-size {mb}: model size in MB must be > 0")).into(),
+            );
+        }
+        cfg.env.model_size_bits = mb * 8e6;
+    }
+    // Event-driven network fabric (mirrors the churn flags: a mode
+    // selects the model, satellite flags refine it and are rejected
+    // without it).
+    if let Some(mode) = args.get_choice("fabric", &["off", "none", "fifo", "fair"])? {
+        cfg.env.fabric = safa::net::fabric::FabricConfig::from_parts(
+            &mode,
+            args.get_parsed::<i64>("fabric-streams")?,
+            args.get("fabric-link"),
+            args.get_parsed::<f64>("fabric-link-spread")?,
+            args.get_parsed::<f64>("fabric-latency")?,
+            args.get_parsed::<f64>("fabric-jitter")?,
+            args.get_parsed::<f64>("fabric-loss")?,
+            args.get_parsed::<i64>("fabric-retries")?,
+            args.get("fabric-compression"),
+            args.get_parsed::<f64>("fabric-topk")?,
+            args.get_parsed::<i64>("fabric-bits")?,
+        )?;
+    } else if [
+        "fabric-streams",
+        "fabric-link",
+        "fabric-link-spread",
+        "fabric-latency",
+        "fabric-jitter",
+        "fabric-loss",
+        "fabric-retries",
+        "fabric-compression",
+        "fabric-topk",
+        "fabric-bits",
+    ]
+    .iter()
+    .any(|f| args.get(f).is_some())
+    {
+        return Err(CliError(
+            "--fabric-* flags require --fabric none|fifo|fair".into(),
         )
         .into());
     }
@@ -170,6 +252,12 @@ fn cmd_run(args: &Args) -> CliResult<()> {
         result.avg_bytes_down() / 1e6,
         result.avg_bytes_up() / 1e6,
     );
+    if result.avg_bytes_saved() > 0.0 {
+        println!(
+            "compression_saved_MB/round={:.2}",
+            result.avg_bytes_saved() / 1e6
+        );
+    }
     let hist = result.staleness_histogram();
     if hist.iter().skip(1).any(|&c| c > 0) {
         println!("staleness_histogram={hist:?}");
@@ -270,7 +358,9 @@ fn cmd_sweep(args: &Args) -> CliResult<()> {
 }
 
 fn cmd_profile(args: &Args) -> CliResult<()> {
-    use safa::telemetry::profile::{render_table, run_spec, write_json, ProfileChurn, ProfileSpec};
+    use safa::telemetry::profile::{
+        render_table, run_spec, write_json, ProfileChurn, ProfileFabric, ProfileSpec,
+    };
     let mut spec = ProfileSpec::default();
     if let Some(list) = args.get("protocols") {
         spec.protocols = list
@@ -284,6 +374,16 @@ fn cmd_profile(args: &Args) -> CliResult<()> {
             .map(|s| {
                 ProfileChurn::parse(s.trim()).ok_or_else(|| {
                     CliError(format!("--churn: expected bernoulli|markov, got '{s}'"))
+                })
+            })
+            .collect::<Result<_, _>>()?;
+    }
+    if let Some(list) = args.get("fabric") {
+        spec.fabrics = list
+            .split(',')
+            .map(|s| {
+                ProfileFabric::parse(s.trim()).ok_or_else(|| {
+                    CliError(format!("--fabric: expected off|contended, got '{s}'"))
                 })
             })
             .collect::<Result<_, _>>()?;

@@ -50,6 +50,9 @@ pub struct RoundRecord {
     pub bytes_down: f64,
     /// Uplink bytes of client updates that reached the server this round.
     pub bytes_up: f64,
+    /// Bytes the network fabric's update compression saved this round
+    /// relative to uncompressed transfers (0 without a fabric codec).
+    pub bytes_saved: f64,
     /// Mean training loss over committed updates (NaN-free; 0 if none).
     pub train_loss: f64,
     /// Global model quality, when evaluated this round.
@@ -84,6 +87,7 @@ impl RoundRecord {
         j.set("vv", Json::Num(self.version_variance));
         j.set("bytes_down", Json::Num(self.bytes_down));
         j.set("bytes_up", Json::Num(self.bytes_up));
+        j.set("bytes_saved", Json::Num(self.bytes_saved));
         if let Some(e) = self.eval {
             j.set("loss", Json::Num(e.loss));
             j.set("acc", Json::Num(e.accuracy));
@@ -142,6 +146,11 @@ impl RunResult {
     /// Mean uplink bytes per round (client updates reaching the server).
     pub fn avg_bytes_up(&self) -> f64 {
         stats::mean_iter(self.rounds.iter().map(|r| r.bytes_up))
+    }
+
+    /// Mean bytes per round saved by fabric update compression.
+    pub fn avg_bytes_saved(&self) -> f64 {
+        stats::mean_iter(self.rounds.iter().map(|r| r.bytes_saved))
     }
 
     /// Fraction of client-time spent online across the run (1.0 when the
@@ -247,6 +256,7 @@ impl RunResult {
         o.set("version_variance", Json::Num(self.version_variance()));
         o.set("avg_bytes_down", Json::Num(self.avg_bytes_down()));
         o.set("avg_bytes_up", Json::Num(self.avg_bytes_up()));
+        o.set("avg_bytes_saved", Json::Num(self.avg_bytes_saved()));
         o.set("futility", Json::Num(self.futility()));
         o.set("online_fraction", Json::Num(self.avg_online_fraction()));
         o.set(
@@ -293,6 +303,7 @@ mod tests {
             staleness: vec![0, 2],
             bytes_down: sync as f64 * 1e7,
             bytes_up: picked as f64 * 1e7,
+            bytes_saved: 0.0,
             train_loss: 0.0,
             eval: Some(EvalResult {
                 loss: 1.0 / (round + 1) as f64,
@@ -355,6 +366,7 @@ mod tests {
         assert_eq!(j.get("m_sync").and_then(Json::as_f64), Some(9.0));
         assert_eq!(j.get("bytes_down").and_then(Json::as_f64), Some(9e7));
         assert_eq!(j.get("bytes_up").and_then(Json::as_f64), Some(3e7));
+        assert_eq!(j.get("bytes_saved").and_then(Json::as_f64), Some(0.0));
     }
 
     #[test]

@@ -1,0 +1,236 @@
+//! Model-update compression codecs.
+//!
+//! Both codecs operate on the *delta* a client uploads — the difference
+//! between its trained parameters and the base model it trained from
+//! (which the server already holds, so only the delta crosses the wire).
+//! [`apply`] compresses that delta losslessly in shape: the
+//! reconstructed parameters overwrite the input in place, exactly as the
+//! server would decode them, so every downstream consumer (aggregation,
+//! the distribution cache, lag-tolerant bypass) sees the same values the
+//! wire carried.
+//!
+//! Payload-size accounting lives in [`Compression::ratio`]; the fabric
+//! scales transfer seconds and byte counters by it. The ratios are the
+//! standard idealized ones: top-k ships `k` (value, index) pairs — two
+//! words per survivor — and `bits`-bit quantization ships `bits/32` of
+//! the raw payload (scale metadata is O(1) and ignored).
+
+use crate::model::ParamVec;
+use crate::util::rng::Pcg64;
+
+/// Update compression strategy (part of
+/// [`super::FabricConfig`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Compression {
+    /// Ship the full-precision delta.
+    None,
+    /// Keep only the `fraction · dim` largest-magnitude delta
+    /// coordinates (ties broken by lower index); the rest revert to the
+    /// base value. Deterministic — no RNG draws.
+    TopK { fraction: f64 },
+    /// Unbiased stochastic uniform quantization of each delta coordinate
+    /// to `bits`-bit levels spanning `[-max|delta|, +max|delta|]`. One
+    /// draw per coordinate from the caller's per-(round, client) stream.
+    Quantize { bits: u32 },
+}
+
+impl Compression {
+    /// Fraction of the uncompressed payload that crosses the wire.
+    pub fn ratio(self) -> f64 {
+        match self {
+            Compression::None => 1.0,
+            // k (value, index) pairs = 2 words per kept coordinate.
+            Compression::TopK { fraction } => (2.0 * fraction).min(1.0),
+            Compression::Quantize { bits } => bits as f64 / 32.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Compression::None => "none",
+            Compression::TopK { .. } => "topk",
+            Compression::Quantize { .. } => "quantize",
+        }
+    }
+}
+
+/// Compress `params`' delta against `base` in place (encode + decode in
+/// one step — see module docs). `rng` must be a stream dedicated to this
+/// (round, client) update so draw counts cannot shift any other stream.
+pub fn apply(codec: Compression, base: &ParamVec, params: &mut ParamVec, rng: &mut Pcg64) {
+    debug_assert_eq!(base.dim(), params.dim());
+    match codec {
+        Compression::None => {}
+        Compression::TopK { fraction } => top_k(fraction, base, params),
+        Compression::Quantize { bits } => quantize(bits, base, params, rng),
+    }
+}
+
+fn top_k(fraction: f64, base: &ParamVec, params: &mut ParamVec) {
+    let dim = params.dim();
+    if dim == 0 {
+        return;
+    }
+    let keep = ((fraction * dim as f64).ceil() as usize).clamp(1, dim);
+    if keep == dim {
+        return;
+    }
+    // Rank coordinates by |delta| descending, index ascending on ties —
+    // a total order, so the survivor set is unique and deterministic.
+    let mut order: Vec<(f32, u32)> = params
+        .0
+        .iter()
+        .zip(&base.0)
+        .enumerate()
+        .map(|(i, (&p, &b))| ((p - b).abs(), i as u32))
+        .collect();
+    order.select_nth_unstable_by(keep - 1, |a, b| {
+        b.0.total_cmp(&a.0).then(a.1.cmp(&b.1))
+    });
+    // Everything past the pivot was dropped from the payload: the server
+    // reconstructs those coordinates as "no change".
+    for &(_, i) in &order[keep..] {
+        params.0[i as usize] = base.0[i as usize];
+    }
+}
+
+fn quantize(bits: u32, base: &ParamVec, params: &mut ParamVec, rng: &mut Pcg64) {
+    debug_assert!((1..=32).contains(&bits));
+    // 2^bits - 1 intervals between the lowest and highest level.
+    let levels = ((1u64 << bits.min(63)) - 1) as f64;
+    let max_abs = params
+        .0
+        .iter()
+        .zip(&base.0)
+        .map(|(&p, &b)| (p - b).abs())
+        .fold(0.0f32, f32::max);
+    if max_abs == 0.0 {
+        return;
+    }
+    let step = 2.0 * max_abs as f64 / levels;
+    for (p, &b) in params.0.iter_mut().zip(&base.0) {
+        let delta = (*p - b) as f64;
+        // Position on the level grid, in [0, levels].
+        let pos = (delta + max_abs as f64) / step;
+        let lo = pos.floor();
+        // Stochastic rounding: round up with probability equal to the
+        // fractional part, so E[quantized] == delta (unbiased).
+        let level = if rng.next_f64() < pos - lo { lo + 1.0 } else { lo };
+        *p = b + (level * step - max_abs as f64) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn delta_vec(base: &ParamVec, params: &ParamVec) -> Vec<f32> {
+        params
+            .0
+            .iter()
+            .zip(&base.0)
+            .map(|(&p, &b)| p - b)
+            .collect()
+    }
+
+    #[test]
+    fn ratios() {
+        assert_eq!(Compression::None.ratio(), 1.0);
+        assert_eq!(Compression::TopK { fraction: 0.1 }.ratio(), 0.2);
+        // Dense top-k never claims to beat shipping the raw vector.
+        assert_eq!(Compression::TopK { fraction: 0.9 }.ratio(), 1.0);
+        assert_eq!(Compression::Quantize { bits: 8 }.ratio(), 0.25);
+        assert_eq!(Compression::Quantize { bits: 32 }.ratio(), 1.0);
+    }
+
+    #[test]
+    fn none_is_identity() {
+        let base = ParamVec(vec![1.0, -2.0, 3.0]);
+        let mut p = ParamVec(vec![0.5, 0.0, 9.0]);
+        let orig = p.clone();
+        let mut rng = Pcg64::new(1);
+        apply(Compression::None, &base, &mut p, &mut rng);
+        assert_eq!(p, orig);
+    }
+
+    #[test]
+    fn top_k_keeps_largest_magnitudes_and_reverts_rest() {
+        let base = ParamVec::zeros(5);
+        let mut p = ParamVec(vec![0.1, -5.0, 0.2, 4.0, -0.3]);
+        let mut rng = Pcg64::new(1);
+        apply(Compression::TopK { fraction: 0.4 }, &base, &mut p, &mut rng);
+        // ceil(0.4 * 5) = 2 survivors: the ±5.0 and ±4.0 coordinates.
+        assert_eq!(p.0, vec![0.0, -5.0, 0.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn top_k_breaks_ties_by_lower_index() {
+        let base = ParamVec::zeros(4);
+        let mut p = ParamVec(vec![1.0, -1.0, 1.0, 1.0]);
+        let mut rng = Pcg64::new(1);
+        apply(Compression::TopK { fraction: 0.5 }, &base, &mut p, &mut rng);
+        assert_eq!(p.0, vec![1.0, -1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn top_k_full_fraction_is_identity() {
+        let base = ParamVec(vec![1.0, 2.0]);
+        let mut p = ParamVec(vec![3.0, -4.0]);
+        let orig = p.clone();
+        let mut rng = Pcg64::new(1);
+        apply(Compression::TopK { fraction: 1.0 }, &base, &mut p, &mut rng);
+        assert_eq!(p, orig);
+    }
+
+    #[test]
+    fn quantize_is_bounded_and_roughly_unbiased() {
+        let dim = 400;
+        let base = ParamVec::zeros(dim);
+        let raw: Vec<f32> = (0..dim).map(|i| ((i as f32) * 0.37).sin()).collect();
+        let mut p = ParamVec(raw.clone());
+        let mut rng = Pcg64::new(7);
+        apply(Compression::Quantize { bits: 4 }, &base, &mut p, &mut rng);
+        let max_abs = raw.iter().map(|d| d.abs()).fold(0.0f32, f32::max);
+        let step = 2.0 * max_abs / 15.0;
+        let mut bias = 0.0f64;
+        for (q, d) in delta_vec(&base, &p).iter().zip(&raw) {
+            assert!((q - d).abs() <= step + 1e-6, "level jump > one step");
+            bias += (q - d) as f64;
+        }
+        // Stochastic rounding: the mean error shrinks with dim.
+        assert!(
+            (bias / dim as f64).abs() < step as f64 / 4.0,
+            "quantization bias {bias} too large"
+        );
+    }
+
+    #[test]
+    fn quantize_zero_delta_is_identity() {
+        let base = ParamVec(vec![1.0, -2.0]);
+        let mut p = base.clone();
+        let mut rng = Pcg64::new(3);
+        apply(Compression::Quantize { bits: 2 }, &base, &mut p, &mut rng);
+        assert_eq!(p, base);
+    }
+
+    #[test]
+    fn quantize_is_deterministic_per_stream() {
+        let base = ParamVec::zeros(64);
+        let raw: Vec<f32> = (0..64).map(|i| (i as f32 * 0.11).cos()).collect();
+        let mut a = ParamVec(raw.clone());
+        let mut b = ParamVec(raw);
+        apply(
+            Compression::Quantize { bits: 6 },
+            &base,
+            &mut a,
+            &mut Pcg64::new(11),
+        );
+        apply(
+            Compression::Quantize { bits: 6 },
+            &base,
+            &mut b,
+            &mut Pcg64::new(11),
+        );
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,867 @@
+//! Event-driven network fabric: contended distribution, heterogeneous
+//! client links, lossy transfers and update compression.
+//!
+//! The base [`crate::net::NetworkModel`] prices communication with the
+//! paper's closed-form arithmetic (Eqs. 17–19) over dedicated, identical
+//! links. This module generalizes that into a first-class experimental
+//! axis:
+//!
+//! * **Contention** ([`Contention`]) — the server's downlink is a shared
+//!   resource. Distribution of `m_sync` copies becomes `m_sync` transfer
+//!   slots scheduled FIFO (fully serialized) or fair-share (waves of `g`
+//!   concurrent streams); each synced client picks up a queueing delay
+//!   ([`FabricRuntime::dist_wait`]) before its own download starts.
+//! * **Heterogeneous links** ([`LinkDist`]) — per-client link speed
+//!   factors drawn once per experiment from a fixed / uniform / lognormal
+//!   distribution on a dedicated RNG stream, so the same fleet sees the
+//!   same links at any thread width.
+//! * **Lossy transport** — per-transfer latency, uniform jitter and
+//!   Bernoulli loss with bounded retransmit. The transport is eventually
+//!   reliable: the final attempt always delivers, so loss inflates
+//!   transfer *time* without destroying updates (arrival/failure sets
+//!   keep their structure; the deadline still reaps stragglers).
+//! * **Compression** ([`Compression`], [`compress`]) — top-k
+//!   sparsification or stochastic quantization of model deltas shrinks
+//!   every payload (bytes *and* transfer seconds) and perturbs the
+//!   uploaded updates, opening the accuracy-vs-bandwidth tradeoff.
+//!
+//! Determinism contract: the fabric adds **no draws** to the engine's
+//! existing availability/crash streams. The link table uses its own
+//! `Pcg64::with_stream(seed, …)` stream; per-transfer perturbation and
+//! quantization draws come from pure functions of (round, client,
+//! direction), so fabric-on runs are bit-identical at any thread width.
+//! With the neutral config (no contention, fixed links, zero
+//! latency/jitter/loss, no compression) every produced number is
+//! bit-for-bit the closed-form value, which `tests/net_fabric.rs` locks
+//! in as a regression test.
+
+pub mod compress;
+
+pub use compress::Compression;
+
+use crate::config::EnvConfig;
+use crate::error::{Result, SafaError};
+use crate::telemetry::{self, Counter};
+use crate::util::rng::{Distribution, Normal, Pcg64};
+
+/// Dedicated stream id for the static per-client link table.
+const LINK_TABLE_STREAM: u64 = 0xfab_11c;
+/// Dedicated stream id for per-transfer perturbation draws.
+const TRANSFER_STREAM: u64 = 0xfab_71c;
+/// Per-(round, client) sub-stream salts by payload direction / purpose.
+/// Client ids stay far below these offsets, so streams cannot collide.
+const SALT_DOWN: u64 = 0x1000_0000;
+const SALT_UP: u64 = 0x2000_0000;
+const SALT_CODEC: u64 = 0x3000_0000;
+
+/// How the shared server downlink schedules the `m_sync` copies of one
+/// round's distribution phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Contention {
+    /// Dedicated capacity per copy (the paper's implicit model): every
+    /// synced client's download starts immediately. Zero queueing delay.
+    None,
+    /// Fully serialized: copy `i` starts only after copies `0..i` have
+    /// been pushed, so sync position `i` waits `i · t_per_model`.
+    Fifo,
+    /// Wave-batched fair sharing: the server serves `streams` copies
+    /// concurrently; wave `w` starts once the previous waves' copies have
+    /// drained the shared pipe (`w · streams · t_per_model`). With
+    /// `streams = 1` this degenerates to FIFO.
+    FairShare { streams: usize },
+}
+
+impl Contention {
+    pub fn name(self) -> &'static str {
+        match self {
+            Contention::None => "none",
+            Contention::Fifo => "fifo",
+            Contention::FairShare { .. } => "fair",
+        }
+    }
+}
+
+/// Distribution of the static per-client link speed factor (multiplies
+/// `client_bw_bps`; 1.0 = the homogeneous baseline).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LinkDist {
+    /// Every client gets exactly `client_bw_bps` (the paper's model).
+    Fixed,
+    /// Speed factor uniform on `[1 - spread, 1 + spread]`, `spread < 1`.
+    Uniform { spread: f64 },
+    /// Speed factor `exp(sigma · N(0,1))` (median 1, right-skewed — a few
+    /// clients on much faster links, a long tail of slow ones).
+    LogNormal { sigma: f64 },
+}
+
+impl LinkDist {
+    pub fn name(self) -> &'static str {
+        match self {
+            LinkDist::Fixed => "fixed",
+            LinkDist::Uniform { .. } => "uniform",
+            LinkDist::LogNormal { .. } => "lognormal",
+        }
+    }
+
+    /// Draw one client's speed factor. `Fixed` consumes no randomness.
+    fn sample(self, rng: &mut Pcg64) -> f64 {
+        match self {
+            LinkDist::Fixed => 1.0,
+            LinkDist::Uniform { spread } => 1.0 - spread + 2.0 * spread * rng.next_f64(),
+            LinkDist::LogNormal { sigma } => {
+                (sigma * Normal::new(0.0, 1.0).sample(rng)).exp()
+            }
+        }
+    }
+}
+
+/// Complete fabric description (part of [`EnvConfig`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricConfig {
+    /// Master switch. Off = every protocol uses the closed-form
+    /// `NetworkModel` arithmetic untouched.
+    pub enabled: bool,
+    pub contention: Contention,
+    pub link_dist: LinkDist,
+    /// Fixed per-attempt propagation latency (seconds).
+    pub latency_s: f64,
+    /// Uniform per-attempt jitter amplitude (seconds): each attempt adds
+    /// `U[0, jitter_s)`.
+    pub jitter_s: f64,
+    /// Per-attempt Bernoulli loss probability. A lost attempt is
+    /// retransmitted (bounded by `max_retries`); the final attempt always
+    /// delivers, so loss only stretches transfer time.
+    pub loss_prob: f64,
+    /// Retransmission budget per transfer (attempts = retries + 1).
+    pub max_retries: u32,
+    pub compression: Compression,
+}
+
+impl FabricConfig {
+    /// Default fair-share concurrency when `fabric = "fair"` gives none.
+    pub const DEFAULT_FAIR_STREAMS: usize = 4;
+    /// Default retransmission budget.
+    pub const DEFAULT_MAX_RETRIES: u32 = 3;
+
+    /// Build a config from parsed front-end parts (shared by the TOML and
+    /// CLI parsers so they cannot drift, mirroring
+    /// [`crate::config::ChurnModel::from_parts`]). `mode` selects the
+    /// fabric: `off` (disabled — every other part must be absent),
+    /// `none` (enabled, uncontended), `fifo` or `fair`. Parameters that
+    /// do not apply to the chosen mode/codec are rejected — silently
+    /// ignoring them would hide a misconfigured run.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        mode: &str,
+        streams: Option<i64>,
+        link: Option<&str>,
+        link_spread: Option<f64>,
+        latency_s: Option<f64>,
+        jitter_s: Option<f64>,
+        loss_prob: Option<f64>,
+        max_retries: Option<i64>,
+        compression: Option<&str>,
+        topk_fraction: Option<f64>,
+        quantize_bits: Option<i64>,
+    ) -> Result<FabricConfig> {
+        let err = |msg: String| Err(SafaError::Config(msg));
+        let contention = match mode.to_ascii_lowercase().as_str() {
+            "off" => {
+                let any = streams.is_some()
+                    || link.is_some()
+                    || link_spread.is_some()
+                    || latency_s.is_some()
+                    || jitter_s.is_some()
+                    || loss_prob.is_some()
+                    || max_retries.is_some()
+                    || compression.is_some()
+                    || topk_fraction.is_some()
+                    || quantize_bits.is_some();
+                if any {
+                    return err(
+                        "fabric parameters require fabric = \"none\", \"fifo\" or \"fair\" \
+                         (fabric = \"off\" disables the fabric entirely)"
+                            .into(),
+                    );
+                }
+                return Ok(FabricConfig::default());
+            }
+            "none" => {
+                if streams.is_some() {
+                    return err(
+                        "fabric_streams only applies to fabric = \"fair\" \
+                         (did you mean fabric = \"fair\"?)"
+                            .into(),
+                    );
+                }
+                Contention::None
+            }
+            "fifo" => {
+                if streams.is_some() {
+                    return err(
+                        "fifo contention is fully serialized and takes no stream count \
+                         (did you mean fabric = \"fair\"?)"
+                            .into(),
+                    );
+                }
+                Contention::Fifo
+            }
+            "fair" => Contention::FairShare {
+                streams: match streams {
+                    Some(s) if s >= 1 => s as usize,
+                    Some(s) => return err(format!("fabric_streams {s} must be >= 1")),
+                    None => Self::DEFAULT_FAIR_STREAMS,
+                },
+            },
+            other => {
+                return err(format!(
+                    "unknown fabric mode '{other}' (expected off|none|fifo|fair)"
+                ))
+            }
+        };
+        let link_dist = match link.map(str::to_ascii_lowercase).as_deref() {
+            None | Some("fixed") => {
+                if link_spread.is_some() {
+                    return err(
+                        "fabric_link_spread only applies to uniform or lognormal links \
+                         (did you mean fabric_link = \"uniform\"?)"
+                            .into(),
+                    );
+                }
+                LinkDist::Fixed
+            }
+            Some("uniform") => LinkDist::Uniform {
+                spread: link_spread.unwrap_or(0.5),
+            },
+            Some("lognormal") => LinkDist::LogNormal {
+                sigma: link_spread.unwrap_or(0.5),
+            },
+            Some(other) => {
+                return err(format!(
+                    "unknown fabric link distribution '{other}' \
+                     (expected fixed|uniform|lognormal)"
+                ))
+            }
+        };
+        let compression = match compression.map(str::to_ascii_lowercase).as_deref() {
+            None | Some("none") => {
+                if topk_fraction.is_some() || quantize_bits.is_some() {
+                    return err(
+                        "fabric_topk_fraction / fabric_quantize_bits require \
+                         fabric_compression = \"topk\" or \"quantize\""
+                            .into(),
+                    );
+                }
+                Compression::None
+            }
+            Some("topk") => {
+                if quantize_bits.is_some() {
+                    return err(
+                        "fabric_quantize_bits only applies to fabric_compression = \"quantize\""
+                            .into(),
+                    );
+                }
+                Compression::TopK {
+                    fraction: topk_fraction.unwrap_or(0.1),
+                }
+            }
+            Some("quantize") => {
+                if topk_fraction.is_some() {
+                    return err(
+                        "fabric_topk_fraction only applies to fabric_compression = \"topk\""
+                            .into(),
+                    );
+                }
+                Compression::Quantize {
+                    bits: match quantize_bits {
+                        Some(b) if (1..=32).contains(&b) => b as u32,
+                        Some(b) => {
+                            return err(format!("fabric_quantize_bits {b} outside 1..=32"))
+                        }
+                        None => 8,
+                    },
+                }
+            }
+            Some(other) => {
+                return err(format!(
+                    "unknown compression '{other}' (expected none|topk|quantize)"
+                ))
+            }
+        };
+        let cfg = FabricConfig {
+            enabled: true,
+            contention,
+            link_dist,
+            latency_s: latency_s.unwrap_or(0.0),
+            jitter_s: jitter_s.unwrap_or(0.0),
+            loss_prob: loss_prob.unwrap_or(0.0),
+            max_retries: match max_retries {
+                Some(r) if r >= 0 => r as u32,
+                Some(r) => return err(format!("fabric_max_retries {r} must be >= 0")),
+                None => Self::DEFAULT_MAX_RETRIES,
+            },
+            compression,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Validate field invariants (called by
+    /// [`crate::config::ExperimentConfig::validate`], finiteness first so
+    /// NaN cannot slip past the range checks).
+    pub fn validate(&self) -> Result<()> {
+        let e = |msg: String| Err(SafaError::Config(msg));
+        if !self.enabled {
+            return Ok(());
+        }
+        if let Contention::FairShare { streams } = self.contention {
+            if streams == 0 {
+                return e("fair-share fabric needs streams >= 1".into());
+            }
+        }
+        match self.link_dist {
+            LinkDist::Fixed => {}
+            LinkDist::Uniform { spread } => {
+                if !spread.is_finite() || !(0.0..1.0).contains(&spread) {
+                    return e(format!(
+                        "uniform link spread {spread} outside [0,1) (a spread of 1 \
+                         would allow zero-speed links)"
+                    ));
+                }
+            }
+            LinkDist::LogNormal { sigma } => {
+                if !sigma.is_finite() || sigma <= 0.0 {
+                    return e(format!("lognormal link sigma {sigma} must be positive and finite"));
+                }
+            }
+        }
+        if !self.latency_s.is_finite() || self.latency_s < 0.0 {
+            return e(format!(
+                "fabric latency {} must be >= 0 and finite",
+                self.latency_s
+            ));
+        }
+        if !self.jitter_s.is_finite() || self.jitter_s < 0.0 {
+            return e(format!(
+                "fabric jitter {} must be >= 0 and finite",
+                self.jitter_s
+            ));
+        }
+        if !self.loss_prob.is_finite() || !(0.0..1.0).contains(&self.loss_prob) {
+            return e(format!(
+                "fabric loss probability {} outside [0,1)",
+                self.loss_prob
+            ));
+        }
+        match self.compression {
+            Compression::None => {}
+            Compression::TopK { fraction } => {
+                if !fraction.is_finite() || !(0.0..=1.0).contains(&fraction) || fraction == 0.0 {
+                    return e(format!("top-k fraction {fraction} outside (0,1]"));
+                }
+            }
+            Compression::Quantize { bits } => {
+                if bits == 0 || bits > 32 {
+                    return e(format!("quantization bits {bits} outside 1..=32"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Default for FabricConfig {
+    /// Disabled, and neutral even if force-enabled: no contention,
+    /// homogeneous fixed links, zero latency/jitter/loss, no compression
+    /// — the configuration calibrated to reproduce Eqs. 17–19 bit-for-bit.
+    fn default() -> FabricConfig {
+        FabricConfig {
+            enabled: false,
+            contention: Contention::None,
+            link_dist: LinkDist::Fixed,
+            latency_s: 0.0,
+            jitter_s: 0.0,
+            loss_prob: 0.0,
+            max_retries: Self::DEFAULT_MAX_RETRIES,
+            compression: Compression::None,
+        }
+    }
+}
+
+/// Instantiated fabric for one experiment: the static link table plus
+/// everything needed to price a transfer as a pure function of
+/// (round, client, direction).
+#[derive(Debug, Clone)]
+pub struct FabricRuntime {
+    cfg: FabricConfig,
+    /// Per-client one-direction link transfer seconds for one (possibly
+    /// compressed) payload. With fixed links and no compression this is
+    /// exactly `NetworkModel::t_link` for every client.
+    link_s: Vec<f64>,
+    /// Server-side seconds per distributed copy (compression-scaled
+    /// `NetworkModel::t_per_model`).
+    per_copy: f64,
+    /// Bytes per payload actually crossing a link (compression-scaled).
+    payload_bytes: f64,
+    /// Uncompressed serialized model bytes (bytes-saved accounting).
+    model_bytes: f64,
+    /// Any per-transfer randomness at all? False for the common
+    /// latency = jitter = loss = 0 case, where transfers are priced
+    /// straight from the link table with no RNG construction.
+    perturb: bool,
+    /// Base generator for per-(round, client, direction) transfer streams.
+    stream: Pcg64,
+}
+
+impl FabricRuntime {
+    /// Build the runtime from the experiment environment. The link table
+    /// and all transfer streams hang off `seed` via dedicated stream ids,
+    /// so the fabric never consumes a draw from any pre-existing stream.
+    pub fn new(env: &EnvConfig, seed: u64) -> FabricRuntime {
+        let cfg = env.fabric.clone();
+        let ratio = cfg.compression.ratio();
+        // `ratio == 1.0` multiplications are exact, so the neutral fabric
+        // reproduces the closed-form times bit-for-bit.
+        let payload_bits = env.model_size_bits * ratio;
+        let table_rng = Pcg64::with_stream(seed, LINK_TABLE_STREAM);
+        let link_s = (0..env.m)
+            .map(|k| {
+                let factor = cfg.link_dist.sample(&mut table_rng.split(k as u64));
+                payload_bits / (env.client_bw_bps * factor)
+            })
+            .collect();
+        FabricRuntime {
+            link_s,
+            per_copy: (env.model_size_bits / env.server_bw_bps) * ratio,
+            payload_bytes: (env.model_size_bits / 8.0) * ratio,
+            model_bytes: env.model_size_bits / 8.0,
+            perturb: cfg.latency_s > 0.0 || cfg.jitter_s > 0.0 || cfg.loss_prob > 0.0,
+            stream: Pcg64::with_stream(seed, TRANSFER_STREAM),
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &FabricConfig {
+        &self.cfg
+    }
+
+    /// Download seconds for client `k` in round `t` (queueing delay not
+    /// included — see [`FabricRuntime::dist_wait`]). Pure in (t, k).
+    pub fn t_down(&self, t: usize, k: usize) -> f64 {
+        self.transfer_time(t, k, SALT_DOWN)
+    }
+
+    /// Upload seconds for client `k` in round `t`. Pure in (t, k).
+    pub fn t_up(&self, t: usize, k: usize) -> f64 {
+        self.transfer_time(t, k, SALT_UP)
+    }
+
+    fn transfer_time(&self, t: usize, k: usize, salt: u64) -> f64 {
+        telemetry::count(Counter::Transfers, 1);
+        let base = self.link_s[k];
+        if !self.perturb {
+            return base;
+        }
+        let mut rng = self.stream.split(t as u64).split(salt + k as u64);
+        let mut total = 0.0;
+        let mut attempts = 0u64;
+        loop {
+            let jitter = if self.cfg.jitter_s > 0.0 {
+                self.cfg.jitter_s * rng.next_f64()
+            } else {
+                0.0
+            };
+            total += self.cfg.latency_s + jitter + base;
+            // The final attempt always delivers (eventually-reliable
+            // transport): loss inflates time, never drops the update.
+            let lost = self.cfg.loss_prob > 0.0
+                && attempts < self.cfg.max_retries as u64
+                && rng.next_f64() < self.cfg.loss_prob;
+            if !lost {
+                break;
+            }
+            attempts += 1;
+        }
+        if attempts > 0 {
+            telemetry::count(Counter::Retransmits, attempts);
+        }
+        total
+    }
+
+    /// Does the configured contention policy produce nonzero queueing
+    /// delays? (Engine/protocols skip the serial wait pass when not.)
+    pub fn has_dist_wait(&self) -> bool {
+        !matches!(self.cfg.contention, Contention::None)
+    }
+
+    /// Queueing delay before the server starts pushing sync copy `i`
+    /// (0-based position in the round's sync order) of `m_sync` total.
+    pub fn dist_wait(&self, i: usize, m_sync: usize) -> f64 {
+        debug_assert!(i < m_sync.max(1));
+        match self.cfg.contention {
+            Contention::None => 0.0,
+            Contention::Fifo => i as f64 * self.per_copy,
+            Contention::FairShare { streams } => {
+                let wave = i / streams.max(1);
+                (wave * streams.max(1)) as f64 * self.per_copy
+            }
+        }
+    }
+
+    /// Server-side distribution overhead (Eq. 19 over the compressed
+    /// payload; bit-identical to `NetworkModel::t_dist` when
+    /// uncompressed — the copies are uniform, so both FIFO and fair-share
+    /// drain the pipe at the same total).
+    pub fn t_dist(&self, m_sync: usize) -> f64 {
+        m_sync as f64 * self.per_copy
+    }
+
+    /// Downlink bytes actually sent for `m_sync` distributed copies.
+    pub fn bytes_down(&self, m_sync: usize) -> f64 {
+        m_sync as f64 * self.payload_bytes
+    }
+
+    /// Uplink bytes actually sent for `n_uploads` arrived updates.
+    pub fn bytes_up(&self, n_uploads: usize) -> f64 {
+        n_uploads as f64 * self.payload_bytes
+    }
+
+    /// Bytes compression saved this round versus uncompressed transfers.
+    pub fn bytes_saved(&self, m_sync: usize, n_uploads: usize) -> f64 {
+        (m_sync + n_uploads) as f64 * (self.model_bytes - self.payload_bytes)
+    }
+
+    /// Is a lossy codec configured (i.e. does `compress_update` do
+    /// anything)?
+    pub fn compresses_updates(&self) -> bool {
+        self.cfg.compression != Compression::None
+    }
+
+    /// Apply the configured codec to client `k`'s round-`t` uploaded
+    /// update in place: the delta against `base` (the model the client
+    /// trained from, which the server knows) is compressed and the
+    /// reconstruction written back. Pure in (t, k) — safe to run from
+    /// parallel per-update workers.
+    pub fn compress_update(
+        &self,
+        t: usize,
+        k: usize,
+        base: &crate::model::ParamVec,
+        params: &mut crate::model::ParamVec,
+    ) {
+        if !self.compresses_updates() {
+            return;
+        }
+        let mut rng = self.stream.split(t as u64).split(SALT_CODEC + k as u64);
+        compress::apply(self.cfg.compression, base, params, &mut rng);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn env_with(fabric: FabricConfig) -> EnvConfig {
+        let mut env = presets::preset("tiny").unwrap().env;
+        env.fabric = fabric;
+        env
+    }
+
+    fn enabled_neutral() -> FabricConfig {
+        FabricConfig {
+            enabled: true,
+            ..FabricConfig::default()
+        }
+    }
+
+    #[test]
+    fn neutral_fabric_reproduces_closed_form_times_bitwise() {
+        let env = env_with(enabled_neutral());
+        let net = crate::net::NetworkModel::new(&env);
+        let fab = FabricRuntime::new(&env, 42);
+        for k in 0..env.m {
+            assert_eq!(fab.t_down(3, k), net.t_down());
+            assert_eq!(fab.t_up(3, k), net.t_up());
+        }
+        for m_sync in [0, 1, 3, env.m] {
+            assert_eq!(fab.t_dist(m_sync), net.t_dist(m_sync));
+            assert_eq!(fab.bytes_down(m_sync), net.bytes_down(m_sync));
+            assert_eq!(fab.bytes_up(m_sync), net.bytes_up(m_sync));
+            assert_eq!(fab.bytes_saved(m_sync, m_sync), 0.0);
+        }
+        assert!(!fab.has_dist_wait());
+        assert_eq!(fab.dist_wait(0, 4), 0.0);
+    }
+
+    #[test]
+    fn contention_schedules_match_the_policy() {
+        let mut cfg = enabled_neutral();
+        cfg.contention = Contention::Fifo;
+        let env = env_with(cfg);
+        let fab = FabricRuntime::new(&env, 1);
+        let per = fab.per_copy;
+        assert!(fab.has_dist_wait());
+        for i in 0..4 {
+            assert_eq!(fab.dist_wait(i, 4), i as f64 * per);
+        }
+
+        let mut cfg = enabled_neutral();
+        cfg.contention = Contention::FairShare { streams: 2 };
+        let env = env_with(cfg);
+        let fab = FabricRuntime::new(&env, 1);
+        // Waves of 2: positions 0,1 start at 0; 2,3 after 2 copies; ...
+        assert_eq!(fab.dist_wait(0, 5), 0.0);
+        assert_eq!(fab.dist_wait(1, 5), 0.0);
+        assert_eq!(fab.dist_wait(2, 5), 2.0 * per);
+        assert_eq!(fab.dist_wait(3, 5), 2.0 * per);
+        assert_eq!(fab.dist_wait(4, 5), 4.0 * per);
+    }
+
+    #[test]
+    fn heterogeneous_links_are_deterministic_and_spread() {
+        let mut cfg = enabled_neutral();
+        cfg.link_dist = LinkDist::LogNormal { sigma: 0.6 };
+        let env = env_with(cfg);
+        let a = FabricRuntime::new(&env, 7);
+        let b = FabricRuntime::new(&env, 7);
+        assert_eq!(a.link_s, b.link_s, "same seed, same link table");
+        let c = FabricRuntime::new(&env, 8);
+        assert_ne!(a.link_s, c.link_s, "different seed, different links");
+        let min = a.link_s.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = a.link_s.iter().cloned().fold(0.0, f64::max);
+        assert!(min > 0.0 && max > min, "links spread: [{min}, {max}]");
+    }
+
+    #[test]
+    fn perturbed_transfers_are_pure_in_round_and_client() {
+        let mut cfg = enabled_neutral();
+        cfg.latency_s = 0.05;
+        cfg.jitter_s = 0.02;
+        cfg.loss_prob = 0.3;
+        let env = env_with(cfg);
+        let fab = FabricRuntime::new(&env, 3);
+        let base = fab.link_s[0];
+        // Same (t, k) -> same time, regardless of call order/count.
+        assert_eq!(fab.t_down(5, 0), fab.t_down(5, 0));
+        assert_eq!(fab.t_up(5, 0), fab.t_up(5, 0));
+        // Down and up use distinct streams.
+        assert!(fab.t_down(5, 0) >= base + 0.05);
+        // At 30% loss some (t, k) must retransmit within a small scan.
+        let mut saw_retx = false;
+        for t in 1..40 {
+            if fab.t_down(t, 0) > 2.0 * base {
+                saw_retx = true;
+                break;
+            }
+        }
+        assert!(saw_retx, "no retransmit observed at loss 0.3");
+    }
+
+    #[test]
+    fn retransmits_are_bounded_by_budget() {
+        let mut cfg = enabled_neutral();
+        cfg.loss_prob = 0.999;
+        cfg.max_retries = 2;
+        let env = env_with(cfg);
+        let fab = FabricRuntime::new(&env, 3);
+        let base = fab.link_s[0];
+        for t in 1..20 {
+            let t_dl = fab.t_down(t, 0);
+            // At most retries+1 = 3 attempts, and always delivers.
+            assert!(t_dl <= 3.0 * base + 1e-9, "t_dl={t_dl} base={base}");
+            assert!(t_dl.is_finite());
+        }
+    }
+
+    #[test]
+    fn compression_scales_bytes_and_times() {
+        let mut cfg = enabled_neutral();
+        cfg.compression = Compression::Quantize { bits: 8 };
+        let env = env_with(cfg);
+        let net = crate::net::NetworkModel::new(&env);
+        let fab = FabricRuntime::new(&env, 1);
+        // 8/32 bits -> quarter payload in bytes and seconds.
+        assert!((fab.bytes_down(4) - net.bytes_down(4) * 0.25).abs() < 1e-6);
+        assert!((fab.t_dist(4) - net.t_dist(4) * 0.25).abs() < 1e-12);
+        assert!((fab.t_down(1, 0) - net.t_down() * 0.25).abs() < 1e-12);
+        assert!((fab.bytes_saved(4, 2) - 6.0 * net.model_bytes * 0.75).abs() < 1e-3);
+    }
+
+    #[test]
+    fn from_parts_mirrors_churn_strictness() {
+        // "off" with any parameter is an error; bare "off" is the default.
+        assert_eq!(
+            FabricConfig::from_parts(
+                "off", None, None, None, None, None, None, None, None, None, None
+            )
+            .unwrap(),
+            FabricConfig::default()
+        );
+        assert!(FabricConfig::from_parts(
+            "off",
+            None,
+            Some("uniform"),
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None
+        )
+        .is_err());
+        // Streams only apply to fair.
+        assert!(FabricConfig::from_parts(
+            "fifo",
+            Some(2),
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None
+        )
+        .is_err());
+        let fair = FabricConfig::from_parts(
+            "fair", None, None, None, None, None, None, None, None, None, None,
+        )
+        .unwrap();
+        assert_eq!(
+            fair.contention,
+            Contention::FairShare {
+                streams: FabricConfig::DEFAULT_FAIR_STREAMS
+            }
+        );
+        // Spread requires a spread-bearing link distribution.
+        assert!(FabricConfig::from_parts(
+            "none",
+            None,
+            Some("fixed"),
+            Some(0.3),
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None
+        )
+        .is_err());
+        // Codec parameters must match the codec.
+        assert!(FabricConfig::from_parts(
+            "none",
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            Some("topk"),
+            None,
+            Some(8)
+        )
+        .is_err());
+        assert!(FabricConfig::from_parts(
+            "none",
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            Some(0.1),
+            None
+        )
+        .is_err());
+        let full = FabricConfig::from_parts(
+            "fifo",
+            None,
+            Some("lognormal"),
+            Some(0.6),
+            Some(0.05),
+            Some(0.02),
+            Some(0.02),
+            Some(3),
+            Some("topk"),
+            Some(0.25),
+            None,
+        )
+        .unwrap();
+        assert!(full.enabled);
+        assert_eq!(full.contention, Contention::Fifo);
+        assert_eq!(full.link_dist, LinkDist::LogNormal { sigma: 0.6 });
+        assert_eq!(full.compression, Compression::TopK { fraction: 0.25 });
+        // Unknown modes fail.
+        assert!(FabricConfig::from_parts(
+            "token-ring",
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_fields() {
+        let cases: Vec<FabricConfig> = vec![
+            FabricConfig {
+                contention: Contention::FairShare { streams: 0 },
+                ..enabled_neutral()
+            },
+            FabricConfig {
+                link_dist: LinkDist::Uniform { spread: 1.0 },
+                ..enabled_neutral()
+            },
+            FabricConfig {
+                link_dist: LinkDist::LogNormal { sigma: f64::NAN },
+                ..enabled_neutral()
+            },
+            FabricConfig {
+                latency_s: -1.0,
+                ..enabled_neutral()
+            },
+            FabricConfig {
+                jitter_s: f64::INFINITY,
+                ..enabled_neutral()
+            },
+            FabricConfig {
+                loss_prob: 1.0,
+                ..enabled_neutral()
+            },
+            FabricConfig {
+                compression: Compression::TopK { fraction: 0.0 },
+                ..enabled_neutral()
+            },
+            FabricConfig {
+                compression: Compression::Quantize { bits: 33 },
+                ..enabled_neutral()
+            },
+        ];
+        for bad in cases {
+            assert!(bad.validate().is_err(), "accepted {bad:?}");
+        }
+        assert!(enabled_neutral().validate().is_ok());
+        // A disabled fabric skips field validation entirely.
+        let disabled = FabricConfig {
+            enabled: false,
+            loss_prob: 1.0,
+            ..FabricConfig::default()
+        };
+        assert!(disabled.validate().is_ok());
+    }
+}

@@ -13,6 +13,8 @@
 //!   We implement that form; see EXPERIMENTS.md §Notes on the Eq. 17
 //!   discrepancy.
 
+pub mod fabric;
+
 use crate::config::EnvConfig;
 
 /// Precomputed network timing for one experiment.
@@ -68,10 +70,14 @@ impl NetworkModel {
 }
 
 /// Local training time (Eq. 18): `batches_per_epoch · E / perf` where
-/// `perf` is the client's speed in batches/second.
+/// `perf` is the client's speed in batches/second. Positive `perf` is a
+/// load-time invariant (`EnvConfig` validation rejects non-positive
+/// `perf_lambda` and `client::build_clients` floors each draw), so this
+/// divides directly — no silent clamp hiding a misconfigured fleet.
 #[inline]
 pub fn t_train(batches_per_epoch: usize, epochs: usize, perf: f64) -> f64 {
-    (batches_per_epoch * epochs) as f64 / perf.max(1e-12)
+    debug_assert!(perf > 0.0, "non-positive client perf {perf} reached t_train");
+    (batches_per_epoch * epochs) as f64 / perf
 }
 
 /// Round length (Eq. 17 as realized in the paper's tables):
@@ -123,8 +129,9 @@ mod tests {
     fn t_train_formula() {
         // 20 batches/epoch, 5 epochs, 2 batches/s => 50 s.
         assert!((t_train(20, 5, 2.0) - 50.0).abs() < 1e-12);
-        // Zero-speed clients do not divide by zero.
-        assert!(t_train(1, 1, 0.0).is_finite());
+        // Slow-but-valid clients stay finite; non-positive perf is
+        // rejected at config load, not clamped here.
+        assert!(t_train(1, 1, 1e-4).is_finite());
     }
 
     #[test]

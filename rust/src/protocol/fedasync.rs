@@ -40,6 +40,9 @@ pub struct FedAsync {
     jobs: Vec<f64>,
     sim: ContinuationSim,
     updates: Vec<(usize, ParamVec, f64)>,
+    /// Clients that pulled a fresh global this round, in client order
+    /// (the download queue order under a contended fabric).
+    fresh: Vec<usize>,
 }
 
 impl FedAsync {
@@ -51,6 +54,7 @@ impl FedAsync {
             jobs: Vec::new(),
             sim: ContinuationSim::default(),
             updates: Vec::new(),
+            fresh: Vec::new(),
         }
     }
 }
@@ -75,20 +79,40 @@ impl Protocol for FedAsync {
         // destroyed (futility stays zero by construction).
         let epochs = env.cfg.train.epochs;
         let (t_down, t_up) = (env.net.t_down(), env.net.t_up());
+        let fabric = env.fabric.as_ref();
         let dist_span = crate::telemetry::span(crate::telemetry::Phase::Distribute);
-        let mut m_sync = 0;
+        self.fresh.clear();
         for c in env.clients.iter_mut() {
             if c.job.is_none() {
                 c.local_model.copy_from(&self.global);
                 c.version = t_i - 1;
                 c.base_version = t_i - 1;
-                let total = t_down + c.t_train(epochs) + t_up;
+                let (td, tu) = match fabric {
+                    Some(f) => (f.t_down(t, c.id), f.t_up(t, c.id)),
+                    None => (t_down, t_up),
+                };
+                let total = td + c.t_train(epochs) + tu;
                 c.start_job(total, t_i - 1);
-                m_sync += 1;
+                self.fresh.push(c.id);
+            }
+        }
+        let m_sync = self.fresh.len();
+        // Contended fabric: fresh pulls queue on the shared server link
+        // in client order; the scheduled wait stretches each new job.
+        if let Some(f) = fabric.filter(|f| f.has_dist_wait()) {
+            let _span = crate::telemetry::span(crate::telemetry::Phase::TransferWait);
+            for (i, &k) in self.fresh.iter().enumerate() {
+                let wait = f.dist_wait(i, m_sync);
+                if wait > 0.0 {
+                    if let Some(job) = env.clients[k].job.as_mut() {
+                        job.remaining += wait;
+                        job.total += wait;
+                    }
+                }
             }
         }
         drop(dist_span);
-        let t_dist = env.net.t_dist(m_sync);
+        let t_dist = env.t_dist(m_sync);
 
         // --- 2. Advance the whole fleet on the event engine.
         if self.participants.len() != m {
@@ -171,8 +195,9 @@ impl Protocol for FedAsync {
             online_time: self.sim.online_time,
             offline_time: self.sim.offline_time,
             staleness,
-            bytes_down: env.net.bytes_down(m_sync),
-            bytes_up: env.net.bytes_up(n_applied),
+            bytes_down: env.bytes_down(m_sync),
+            bytes_up: env.bytes_up(n_applied),
+            bytes_saved: env.bytes_saved(m_sync, n_applied),
             train_loss: if n_applied == 0 {
                 0.0
             } else {

@@ -71,7 +71,7 @@ impl Protocol for FedAvg {
         sel_rng.sample_indices_into(m, quota, &mut self.sel_pool, &mut self.selected);
         drop(select_span);
         let m_sync = self.selected.len();
-        let t_dist = env.net.t_dist(m_sync);
+        let t_dist = env.t_dist(m_sync);
 
         // Forced sync destroys any uncommitted partial work the selected
         // clients carried (futility accounting).
@@ -156,8 +156,9 @@ impl Protocol for FedAvg {
             online_time: self.sim.online_time,
             offline_time: self.sim.offline_time,
             staleness: vec![0; n_committed],
-            bytes_down: env.net.bytes_down(m_sync),
-            bytes_up: env.net.bytes_up(n_committed),
+            bytes_down: env.bytes_down(m_sync),
+            bytes_up: env.bytes_up(n_committed),
+            bytes_saved: env.bytes_saved(m_sync, n_committed),
             train_loss: if n_committed == 0 {
                 0.0
             } else {

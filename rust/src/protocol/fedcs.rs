@@ -31,6 +31,10 @@ pub struct FedCs {
     sim: RoundSim,
     updates: Vec<(usize, ParamVec, f64)>,
     picked_mask: Vec<bool>,
+    /// Per-client round-time estimates for the current pool (cached so
+    /// each candidate is probed exactly once per round — under the
+    /// fabric an estimate is a per-(round, client) transfer probe).
+    estimates: Vec<f64>,
 }
 
 impl FedCs {
@@ -46,12 +50,8 @@ impl FedCs {
             sim: RoundSim::default(),
             updates: Vec::new(),
             picked_mask: Vec::new(),
+            estimates: Vec::new(),
         }
-    }
-
-    /// Estimated round time for client `k` (perfect information model).
-    fn estimate(env: &FedEnv, k: usize) -> f64 {
-        env.net.t_down() + env.clients[k].t_train(env.cfg.train.epochs) + env.net.t_up()
     }
 }
 
@@ -77,12 +77,26 @@ impl Protocol for FedCs {
         let mut sel_rng = env.round_rng(t, 0xfeda);
         let pool_size = (quota * POOL_FACTOR).min(m);
         sel_rng.sample_indices_into(m, pool_size, &mut self.sel_pool, &mut self.pool);
+        // Estimated round time per candidate (perfect information
+        // model). Under the fabric the estimate is the client's actual
+        // per-(round, client) transfer times plus training; with the
+        // fabric off it is the closed-form constant, bit-identical to
+        // the seed expression.
+        if self.estimates.len() != m {
+            self.estimates = vec![0.0; m];
+        }
+        for &k in &self.pool {
+            self.estimates[k] = env.t_down_k(t, k)
+                + env.clients[k].t_train(env.cfg.train.epochs)
+                + env.t_up_k(t, k);
+        }
         // Estimates are continuous draws, so ties are measure-zero; the
         // id tie-break just makes the in-place (allocation-free) unstable
         // sort fully deterministic anyway.
+        let estimates = &self.estimates;
         self.pool.sort_unstable_by(|&a, &b| {
-            Self::estimate(env, a)
-                .partial_cmp(&Self::estimate(env, b))
+            estimates[a]
+                .partial_cmp(&estimates[b])
                 .unwrap()
                 .then(a.cmp(&b))
         });
@@ -91,13 +105,13 @@ impl Protocol for FedCs {
             self.pool
                 .iter()
                 .copied()
-                .filter(|&k| Self::estimate(env, k) <= env.cfg.train.t_lim)
+                .filter(|&k| estimates[k] <= env.cfg.train.t_lim)
                 .take(quota),
         );
         drop(select_span);
 
         let m_sync = self.selected.len();
-        let t_dist = env.net.t_dist(m_sync);
+        let t_dist = env.t_dist(m_sync);
 
         let dist_span = crate::telemetry::span(crate::telemetry::Phase::Distribute);
         let mut futility_wasted = 0.0;
@@ -172,8 +186,9 @@ impl Protocol for FedCs {
             online_time: self.sim.online_time,
             offline_time: self.sim.offline_time,
             staleness: vec![0; n_committed],
-            bytes_down: env.net.bytes_down(m_sync),
-            bytes_up: env.net.bytes_up(n_committed),
+            bytes_down: env.bytes_down(m_sync),
+            bytes_up: env.bytes_up(n_committed),
+            bytes_saved: env.bytes_saved(m_sync, n_committed),
             train_loss: if n_committed == 0 {
                 0.0
             } else {

@@ -102,6 +102,7 @@ impl Protocol for FullyLocal {
             // No server traffic until the single end-of-run aggregation.
             bytes_down: 0.0,
             bytes_up: 0.0,
+            bytes_saved: 0.0,
             train_loss: if n_finished == 0 {
                 0.0
             } else {

@@ -29,6 +29,7 @@ use crate::error::Result;
 use crate::metrics::RoundRecord;
 use crate::sim::{Arrival, ContinuationSim, FailReason, RoundSim};
 use crate::model::{make_trainer, ParamVec, Trainer};
+use crate::net::fabric::FabricRuntime;
 use crate::net::NetworkModel;
 use crate::util::parallel;
 use crate::util::rng::Pcg64;
@@ -65,6 +66,11 @@ pub struct FedEnv {
     pub clients: Vec<ClientState>,
     pub trainer: Box<dyn Trainer>,
     pub net: NetworkModel,
+    /// Network fabric runtime, when `cfg.env.fabric.enabled`: transfer
+    /// pricing, contention waits and update compression. `None` keeps
+    /// the closed-form `net` arithmetic bit-for-bit (the `t_dist` /
+    /// `bytes_*` / `t_down_k` helpers below dispatch on this).
+    pub fabric: Option<FabricRuntime>,
     /// Discrete-event round executor (availability model from
     /// `cfg.env.churn`; Markov churn state persists across rounds here).
     pub engine: FleetEngine,
@@ -115,6 +121,11 @@ impl FedEnv {
         let total: f64 = clients.iter().map(|c| c.n_k as f64).sum();
         let weights = clients.iter().map(|c| (c.n_k as f64 / total) as f32).collect();
         let net = NetworkModel::new(&cfg.env);
+        let fabric = cfg
+            .env
+            .fabric
+            .enabled
+            .then(|| FabricRuntime::new(&cfg.env, cfg.seed));
         let engine = FleetEngine::from_config(cfg)?;
         Ok(FedEnv {
             cfg: cfg.clone(),
@@ -122,6 +133,7 @@ impl FedEnv {
             clients,
             trainer,
             net,
+            fabric,
             engine,
             weights,
             root_rng,
@@ -150,6 +162,7 @@ impl FedEnv {
             cfg: &self.cfg,
             net: &self.net,
             clients: &self.clients,
+            fabric: self.fabric.as_ref(),
         };
         self.engine.run_round(t, ctx, participants, synced, round_rng)
     }
@@ -168,6 +181,7 @@ impl FedEnv {
             cfg: &self.cfg,
             net: &self.net,
             clients: &self.clients,
+            fabric: self.fabric.as_ref(),
         };
         self.engine
             .run_round_into(t, ctx, participants, synced, round_rng, out)
@@ -198,6 +212,66 @@ impl FedEnv {
     ) {
         self.engine
             .run_continuation_into(t, &self.cfg, participants, jobs, round_rng, out)
+    }
+
+    /// Download seconds for client `k` in round `t` (fabric-aware; falls
+    /// back to the closed-form link time, bit-for-bit, with no fabric).
+    pub fn t_down_k(&self, t: usize, k: usize) -> f64 {
+        match &self.fabric {
+            Some(f) => f.t_down(t, k),
+            None => self.net.t_down(),
+        }
+    }
+
+    /// Upload seconds for client `k` in round `t` (see [`FedEnv::t_down_k`]).
+    pub fn t_up_k(&self, t: usize, k: usize) -> f64 {
+        match &self.fabric {
+            Some(f) => f.t_up(t, k),
+            None => self.net.t_up(),
+        }
+    }
+
+    /// Contention queueing delay before sync copy `sync_idx` of `m_sync`
+    /// starts downloading (0.0 without a fabric or under an uncontended
+    /// policy).
+    pub fn dist_wait(&self, sync_idx: usize, m_sync: usize) -> f64 {
+        match &self.fabric {
+            Some(f) => f.dist_wait(sync_idx, m_sync),
+            None => 0.0,
+        }
+    }
+
+    /// Server-side distribution overhead (Eq. 19; compression-scaled
+    /// under a fabric).
+    pub fn t_dist(&self, m_sync: usize) -> f64 {
+        match &self.fabric {
+            Some(f) => f.t_dist(m_sync),
+            None => self.net.t_dist(m_sync),
+        }
+    }
+
+    /// Downlink bytes actually sent for `m_sync` distributed copies.
+    pub fn bytes_down(&self, m_sync: usize) -> f64 {
+        match &self.fabric {
+            Some(f) => f.bytes_down(m_sync),
+            None => self.net.bytes_down(m_sync),
+        }
+    }
+
+    /// Uplink bytes actually sent for `n_uploads` arrived updates.
+    pub fn bytes_up(&self, n_uploads: usize) -> f64 {
+        match &self.fabric {
+            Some(f) => f.bytes_up(n_uploads),
+            None => self.net.bytes_up(n_uploads),
+        }
+    }
+
+    /// Bytes compression saved this round versus uncompressed transfers.
+    pub fn bytes_saved(&self, m_sync: usize, n_uploads: usize) -> f64 {
+        match &self.fabric {
+            Some(f) => f.bytes_saved(m_sync, n_uploads),
+            None => 0.0,
+        }
     }
 
     /// RNG stream for round-level events (crashes, selection shuffles).
@@ -261,9 +335,17 @@ pub(crate) fn collect_updates(
         clients,
         trainer,
         upd_slots,
+        fabric,
         ..
     } = env;
     let clients: &[ClientState] = clients;
+    // Update compression (fabric codecs) applies to every protocol's
+    // uploads in one place: the delta against the model the client
+    // trained from (`local_model`, which the server knows) is compressed
+    // and its reconstruction stored, so aggregation, caches and bypass
+    // all see exactly what crossed the wire. Pure in (t, k) — safe in
+    // the parallel fan-out below.
+    let fabric: Option<&FabricRuntime> = fabric.as_ref().filter(|f| f.compresses_updates());
     // Heavier models amortize a dispatch over fewer updates.
     let grain = update_grain(trainer.dim());
     // Two `stateless()` calls instead of one `if let`: binding the
@@ -277,7 +359,10 @@ pub(crate) fn collect_updates(
             for (i, slot) in chunk.iter_mut().enumerate() {
                 let k = arrivals[off + i].client;
                 let mut rng = base_rng.split(0x7a11 + k as u64);
-                let u = shared.local_update_shared(&clients[k].local_model, k, &mut rng);
+                let mut u = shared.local_update_shared(&clients[k].local_model, k, &mut rng);
+                if let Some(f) = fabric {
+                    f.compress_update(t, k, &clients[k].local_model, &mut u.params);
+                }
                 *slot = Some((k, u.params, u.train_loss));
             }
         });
@@ -290,7 +375,10 @@ pub(crate) fn collect_updates(
         for a in arrivals {
             let k = a.client;
             let mut rng = base_rng.split(0x7a11 + k as u64);
-            let u = trainer.local_update(&clients[k].local_model, k, &mut rng);
+            let mut u = trainer.local_update(&clients[k].local_model, k, &mut rng);
+            if let Some(f) = fabric {
+                f.compress_update(t, k, &clients[k].local_model, &mut u.params);
+            }
             out.push((k, u.params, u.train_loss));
         }
     }

@@ -168,6 +168,11 @@ impl Protocol for Safa {
         // span rounds).
         let epochs = env.cfg.train.epochs;
         let (t_down, t_up) = (env.net.t_down(), env.net.t_up());
+        // Per-(round, client) fabric times are pure functions of (t, k),
+        // so they are safe to evaluate inside the parallel fan-out; with
+        // the fabric off the closed-form constants reproduce the seed
+        // expression bit-for-bit.
+        let fabric = env.fabric.as_ref();
         let dist_span = crate::telemetry::span(crate::telemetry::Phase::Distribute);
         {
             let global = &self.global;
@@ -188,14 +193,22 @@ impl Protocol for Safa {
                             c.local_model.copy_from(global);
                             c.version = t_i - 1;
                             c.base_version = t_i - 1;
-                            let total = t_down + c.t_train(epochs) + t_up;
+                            let (td, tu) = match fabric {
+                                Some(f) => (f.t_down(t, c.id), f.t_up(t, c.id)),
+                                None => (t_down, t_up),
+                            };
+                            let total = td + c.t_train(epochs) + tu;
                             c.start_job(total, t_i - 1);
                         } else if c.job.is_none() {
                             // Tolerable without a job (committed long ago
                             // but never re-synced — possible only via
                             // exotic configs): train on the stale local
                             // model without a download.
-                            let total = c.t_train(epochs) + t_up;
+                            let tu = match fabric {
+                                Some(f) => f.t_up(t, c.id),
+                                None => t_up,
+                            };
+                            let total = c.t_train(epochs) + tu;
                             let base = c.version;
                             c.start_job(total, base);
                         }
@@ -220,7 +233,28 @@ impl Protocol for Safa {
             }
             scratch.jobs.push(s.remaining);
         }
-        let t_dist = env.net.t_dist(m_sync);
+        // Under a contended fabric, downloads queue on the shared server
+        // link: the i-th synced client (client order) waits its scheduled
+        // head-of-line delay before its copy starts. The wait stretches
+        // the in-flight job on both sides of the books.
+        if let Some(f) = fabric.filter(|f| f.has_dist_wait()) {
+            let _span = crate::telemetry::span(crate::telemetry::Phase::TransferWait);
+            let mut idx = 0usize;
+            for (k, s) in scratch.sync_out.iter().enumerate() {
+                if s.synced {
+                    let wait = f.dist_wait(idx, m_sync);
+                    idx += 1;
+                    if wait > 0.0 {
+                        if let Some(job) = env.clients[k].job.as_mut() {
+                            job.remaining += wait;
+                            job.total += wait;
+                        }
+                        scratch.jobs[k] += wait;
+                    }
+                }
+            }
+        }
+        let t_dist = env.t_dist(m_sync);
         drop(dist_span);
 
         // --- Step 2: everyone's job advances. ---
@@ -414,8 +448,9 @@ impl Protocol for Safa {
             online_time: scratch.sim.online_time,
             offline_time: scratch.sim.offline_time,
             staleness,
-            bytes_down: env.net.bytes_down(m_sync),
-            bytes_up: env.net.bytes_up(n_committed),
+            bytes_down: env.bytes_down(m_sync),
+            bytes_up: env.bytes_up(n_committed),
+            bytes_saved: env.bytes_saved(m_sync, n_committed),
             train_loss: if scratch.updates.is_empty() {
                 0.0
             } else {

@@ -104,7 +104,18 @@ pub fn simulate_round(
         },
         clients.len(),
     );
-    engine.run_round(0, RoundCtx { cfg, net, clients }, participants, synced, round_rng)
+    engine.run_round(
+        0,
+        RoundCtx {
+            cfg,
+            net,
+            clients,
+            fabric: None,
+        },
+        participants,
+        synced,
+        round_rng,
+    )
 }
 
 /// Outcome of simulating one round under SAFA's continuation semantics.

@@ -60,10 +60,13 @@ pub enum Phase {
     EventPop,
     /// Parallel regions: whole fork-join dispatches of the worker pool.
     ForkDispatch,
+    /// Network-fabric queueing: applying contention waits to synced
+    /// clients' transfers ([`crate::net::fabric`]).
+    TransferWait,
 }
 
 /// Number of [`Phase`] variants (shard slot count).
-pub const NUM_PHASES: usize = 7;
+pub const NUM_PHASES: usize = 8;
 
 impl Phase {
     /// Every phase, in shard-slot order.
@@ -75,6 +78,7 @@ impl Phase {
         Phase::CacheRefresh,
         Phase::EventPop,
         Phase::ForkDispatch,
+        Phase::TransferWait,
     ];
 
     /// Shard slot of this phase.
@@ -92,6 +96,7 @@ impl Phase {
             Phase::CacheRefresh => "cache_refresh",
             Phase::EventPop => "event_pop",
             Phase::ForkDispatch => "fork_dispatch",
+            Phase::TransferWait => "transfer_wait",
         }
     }
 }
@@ -107,10 +112,14 @@ pub enum Counter {
     Forks,
     /// Chunks handed to workers across all forks.
     Chunks,
+    /// Network-fabric transfers priced (one per download/upload leg).
+    Transfers,
+    /// Fabric retransmissions (lost attempts that were retried).
+    Retransmits,
 }
 
 /// Number of [`Counter`] variants.
-pub const NUM_COUNTERS: usize = 4;
+pub const NUM_COUNTERS: usize = 6;
 
 impl Counter {
     /// Every counter, in shard-slot order.
@@ -119,6 +128,8 @@ impl Counter {
         Counter::EventsPopped,
         Counter::Forks,
         Counter::Chunks,
+        Counter::Transfers,
+        Counter::Retransmits,
     ];
 
     /// Shard slot of this counter.
@@ -133,6 +144,8 @@ impl Counter {
             Counter::EventsPopped => "events_popped",
             Counter::Forks => "forks",
             Counter::Chunks => "chunks",
+            Counter::Transfers => "transfers",
+            Counter::Retransmits => "retransmits",
         }
     }
 }

@@ -47,11 +47,41 @@ impl ProfileChurn {
     }
 }
 
+/// Network-fabric axis of the profiling grid. `Off` is the closed-form
+/// Eq. 19 network (the historical cells, names unchanged); `Contended`
+/// applies the `contended` preset's fabric (FIFO server link, lognormal
+/// client links, latency/jitter/loss) to measure the event-fabric tax.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProfileFabric {
+    Off,
+    Contended,
+}
+
+impl ProfileFabric {
+    pub const ALL: [ProfileFabric; 2] = [ProfileFabric::Off, ProfileFabric::Contended];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ProfileFabric::Off => "off",
+            ProfileFabric::Contended => "contended",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ProfileFabric> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" => Some(ProfileFabric::Off),
+            "contended" => Some(ProfileFabric::Contended),
+            _ => None,
+        }
+    }
+}
+
 /// One profiling sweep: the grid plus per-cell round counts.
 #[derive(Debug, Clone)]
 pub struct ProfileSpec {
     pub protocols: Vec<ProtocolKind>,
     pub churns: Vec<ProfileChurn>,
+    pub fabrics: Vec<ProfileFabric>,
     pub m_values: Vec<usize>,
     /// Timed rounds per cell.
     pub rounds: usize,
@@ -64,6 +94,9 @@ impl Default for ProfileSpec {
         ProfileSpec {
             protocols: ProtocolKind::ALL.to_vec(),
             churns: ProfileChurn::ALL.to_vec(),
+            // Fabric off by default: the historical grid (and its cell
+            // names) stays comparable across bench revisions.
+            fabrics: vec![ProfileFabric::Off],
             m_values: vec![100],
             rounds: 30,
             warmup: 5,
@@ -78,6 +111,7 @@ pub struct CellResult {
     pub name: String,
     pub protocol: ProtocolKind,
     pub churn: ProfileChurn,
+    pub fabric: ProfileFabric,
     pub m: usize,
     /// Timed rounds (BENCH-schema `iters`).
     pub rounds: usize,
@@ -110,6 +144,7 @@ impl CellResult {
         o.set("iters", Json::Num(self.rounds as f64));
         o.set("protocol", Json::Str(self.protocol.name().to_string()));
         o.set("churn", Json::Str(self.churn.name().to_string()));
+        o.set("fabric", Json::Str(self.fabric.name().to_string()));
         o.set("m", Json::Num(self.m as f64));
         o.set("rounds_per_sec", Json::Num(self.rounds_per_sec));
         o.set("events_per_sec", Json::Num(self.events_per_sec));
@@ -131,11 +166,18 @@ impl CellResult {
 fn cell_config(
     protocol: ProtocolKind,
     churn: ProfileChurn,
+    fabric: ProfileFabric,
     m: usize,
 ) -> Result<crate::config::ExperimentConfig> {
     let mut cfg = presets::preset("task3")?;
+    // Fabric-off cells keep their historical names so bench series stay
+    // comparable; contended cells get an explicit suffix.
+    let fabric_suffix = match fabric {
+        ProfileFabric::Off => String::new(),
+        ProfileFabric::Contended => format!("_{}", fabric.name()),
+    };
     cfg.name = format!(
-        "profile_{}_{}_m{m}",
+        "profile_{}_{}{fabric_suffix}_m{m}",
         protocol.name().to_ascii_lowercase(),
         churn.name()
     );
@@ -152,6 +194,11 @@ fn cell_config(
             mean_downtime_s: cfg.train.t_lim * 0.25,
         };
     }
+    if fabric == ProfileFabric::Contended {
+        // Same fabric shape as the `contended` preset, so the profile
+        // cell and the preset stay one definition.
+        cfg.env.fabric = presets::preset("contended")?.env.fabric;
+    }
     Ok(cfg)
 }
 
@@ -163,12 +210,13 @@ fn cell_config(
 pub fn run_cell(
     protocol: ProtocolKind,
     churn: ProfileChurn,
+    fabric: ProfileFabric,
     m: usize,
     rounds: usize,
     warmup: usize,
 ) -> Result<CellResult> {
     assert!(rounds > 0, "profile cell needs at least one timed round");
-    let cfg = cell_config(protocol, churn, m)?;
+    let cfg = cell_config(protocol, churn, fabric, m)?;
     let mut env = FedEnv::new(&cfg)?;
     let mut proto = make_protocol(&env);
 
@@ -206,6 +254,7 @@ pub fn run_cell(
         name: cfg.name.clone(),
         protocol,
         churn,
+        fabric,
         m,
         rounds,
         mean_ns: stats::mean(&sample_ns),
@@ -233,9 +282,11 @@ pub fn run_cell(
 pub fn run_spec(spec: &ProfileSpec) -> Result<Vec<CellResult>> {
     let mut cells = Vec::new();
     for &m in &spec.m_values {
-        for &churn in &spec.churns {
-            for &protocol in &spec.protocols {
-                cells.push(run_cell(protocol, churn, m, spec.rounds, spec.warmup)?);
+        for &fabric in &spec.fabrics {
+            for &churn in &spec.churns {
+                for &protocol in &spec.protocols {
+                    cells.push(run_cell(protocol, churn, fabric, m, spec.rounds, spec.warmup)?);
+                }
             }
         }
     }
@@ -292,16 +343,32 @@ mod tests {
 
     #[test]
     fn cell_config_shapes_the_grid() {
-        let cfg = cell_config(ProtocolKind::FedAvg, ProfileChurn::Markov, 40).unwrap();
+        let cfg =
+            cell_config(ProtocolKind::FedAvg, ProfileChurn::Markov, ProfileFabric::Off, 40)
+                .unwrap();
         assert_eq!(cfg.protocol.kind, ProtocolKind::FedAvg);
         assert_eq!(cfg.env.m, 40);
         assert_eq!(cfg.task.n, 1000); // floor dominates 10*m
         assert_eq!(cfg.backend, Backend::Null);
         assert!(matches!(cfg.env.churn, ChurnModel::Markov { .. }));
+        assert!(!cfg.env.fabric.enabled);
+        assert_eq!(cfg.name, "profile_fedavg_markov_m40");
         cfg.validate().unwrap();
-        let big = cell_config(ProtocolKind::Safa, ProfileChurn::Bernoulli, 500).unwrap();
+        let big =
+            cell_config(ProtocolKind::Safa, ProfileChurn::Bernoulli, ProfileFabric::Off, 500)
+                .unwrap();
         assert_eq!(big.task.n, 5000);
         assert_eq!(big.env.churn, ChurnModel::Bernoulli);
+        let contended = cell_config(
+            ProtocolKind::Safa,
+            ProfileChurn::Bernoulli,
+            ProfileFabric::Contended,
+            20,
+        )
+        .unwrap();
+        assert!(contended.env.fabric.enabled);
+        assert_eq!(contended.name, "profile_safa_bernoulli_contended_m20");
+        contended.validate().unwrap();
     }
 
     #[test]
@@ -312,7 +379,15 @@ mod tests {
             .lock()
             .unwrap_or_else(|e| e.into_inner());
         let was = super::super::enabled();
-        let c = run_cell(ProtocolKind::FedAvg, ProfileChurn::Bernoulli, 10, 3, 1).unwrap();
+        let c = run_cell(
+            ProtocolKind::FedAvg,
+            ProfileChurn::Bernoulli,
+            ProfileFabric::Off,
+            10,
+            3,
+            1,
+        )
+        .unwrap();
         assert_eq!(super::super::enabled(), was, "enable state restored");
         assert_eq!(c.rounds, 3);
         assert!(c.mean_ns > 0.0);
@@ -325,5 +400,22 @@ mod tests {
         assert!(j.get("mean_ns").is_some());
         let table = render_table(std::slice::from_ref(&c));
         assert!(table.contains("profile_"));
+        // Contended smoke cell: the fabric-on grid runs end to end and
+        // labels itself in the JSON.
+        let f = run_cell(
+            ProtocolKind::Safa,
+            ProfileChurn::Bernoulli,
+            ProfileFabric::Contended,
+            8,
+            2,
+            1,
+        )
+        .unwrap();
+        assert!(f.name.contains("_contended_"));
+        assert!(f.rounds_per_sec > 0.0);
+        assert_eq!(
+            f.to_json().get("fabric").and_then(Json::as_str),
+            Some("contended")
+        );
     }
 }

@@ -7,7 +7,10 @@
 //! all — for the Bernoulli direct path AND the Markov event path, at
 //! width 1 AND under pooled parallel dispatch, with telemetry recording
 //! OFF and ON (spans + counters live on the hot path are shard-atomic
-//! adds and clock reads, never heap traffic).
+//! adds and clock reads, never heap traffic), and with the network
+//! fabric off AND fully on (contended + heterogeneous + perturbed
+//! transfers draw from stack-constructed per-transfer streams; the
+//! download-wait table is pooled in `RoundScratch`).
 //!
 //! The serial case is strict by construction. The pooled case is the
 //! persistent worker pool's contract: warm-up rounds spawn + park the
@@ -22,6 +25,7 @@ use safa::client::ClientState;
 use safa::config::presets;
 use safa::engine::{AvailabilityModel, FleetEngine, RoundCtx};
 use safa::model::ParamVec;
+use safa::net::fabric::{FabricConfig, FabricRuntime};
 use safa::net::NetworkModel;
 use safa::sim::{ContinuationSim, RoundSim};
 use safa::telemetry::{self, Counter};
@@ -58,10 +62,32 @@ fn allocs_in_steady_state(
     m: usize,
     warmup: usize,
     rounds: usize,
+    fabric_on: bool,
 ) -> u64 {
     let mut cfg = presets::preset("tiny").unwrap();
     cfg.env.m = m;
     cfg.env.crash_prob = 0.2;
+    if fabric_on {
+        // Contended + heterogeneous + perturbed: every fabric code path
+        // that can run inside the engine is on the measured hot path.
+        cfg.env.fabric = FabricConfig::from_parts(
+            "fifo",
+            None,
+            Some("lognormal"),
+            Some(0.5),
+            Some(0.05),
+            Some(0.02),
+            Some(0.02),
+            None,
+            None,
+            None,
+            None,
+        )
+        .unwrap();
+    }
+    // Built outside the measured window (the link table is one Vec);
+    // per-transfer draws construct no heap state.
+    let fabric = cfg.env.fabric.enabled.then(|| FabricRuntime::new(&cfg.env, 7));
     let net = NetworkModel::new(&cfg.env);
     let clients = fleet(m);
     let participants: Vec<usize> = (0..m).collect();
@@ -80,6 +106,7 @@ fn allocs_in_steady_state(
             cfg: &cfg,
             net: &net,
             clients: &clients,
+            fabric: fabric.as_ref(),
         };
         engine.run_round_into(t, ctx, &participants, &synced, &rng, ro);
         let rng2 = Pcg64::new(6).split(t as u64);
@@ -117,6 +144,7 @@ fn steady_state_rounds_do_not_allocate() {
                 m,
                 3,
                 8,
+                false,
             );
             assert_eq!(bern, 0, "Bernoulli direct path allocated ({mode})");
             let markov = allocs_in_steady_state(
@@ -127,8 +155,28 @@ fn steady_state_rounds_do_not_allocate() {
                 m,
                 3,
                 8,
+                false,
             );
             assert_eq!(markov, 0, "Markov event path allocated ({mode})");
+            let fab_bern = allocs_in_steady_state(
+                AvailabilityModel::BernoulliPerRound { crash_prob: 0.2 },
+                m,
+                3,
+                8,
+                true,
+            );
+            assert_eq!(fab_bern, 0, "fabric Bernoulli path allocated ({mode})");
+            let fab_markov = allocs_in_steady_state(
+                AvailabilityModel::Markov {
+                    mean_uptime_s: 400.0,
+                    mean_downtime_s: 150.0,
+                },
+                m,
+                3,
+                8,
+                true,
+            );
+            assert_eq!(fab_markov, 0, "fabric Markov event path allocated ({mode})");
         });
         // Pooled dispatch at width 4 (m=500 over the 64-client draw
         // grain genuinely forks): after warm-up spawns and parks the
@@ -141,6 +189,7 @@ fn steady_state_rounds_do_not_allocate() {
                     m,
                     3,
                     8,
+                    false,
                 );
                 assert_eq!(bern, 0, "pooled Bernoulli direct path allocated ({mode})");
                 let markov = allocs_in_steady_state(
@@ -151,8 +200,23 @@ fn steady_state_rounds_do_not_allocate() {
                     m,
                     3,
                     8,
+                    false,
                 );
                 assert_eq!(markov, 0, "pooled Markov event path allocated ({mode})");
+                let fab_markov = allocs_in_steady_state(
+                    AvailabilityModel::Markov {
+                        mean_uptime_s: 400.0,
+                        mean_downtime_s: 150.0,
+                    },
+                    m,
+                    3,
+                    8,
+                    true,
+                );
+                assert_eq!(
+                    fab_markov, 0,
+                    "pooled fabric Markov event path allocated ({mode})"
+                );
             });
         });
     }

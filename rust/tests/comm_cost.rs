@@ -1,0 +1,134 @@
+//! Communication-cost accounting invariants (fabric satellite).
+//!
+//! The comm books must track what the simulated network actually moved,
+//! independent of protocol and churn model:
+//!
+//! * downlink: exactly one (possibly compressed) model copy per synced /
+//!   freshly-pulled client — `bytes_down == m_sync × payload_bytes`;
+//! * uplink: uploads are counted only for updates that actually arrived
+//!   at the server this round — `bytes_up == n_committed ×
+//!   payload_bytes` — never for picked-but-crashed clients;
+//! * with no codec, `payload_bytes == model_bytes` and `bytes_saved ==
+//!   0`; with a codec, the identity `bytes_moved + bytes_saved ==
+//!   uncompressed bytes_moved` holds per round.
+//!
+//! Checked for SAFA, FedAvg, and FedAsync under Bernoulli crashes and
+//! Markov churn, with the fabric off and with a quantizing fabric on.
+
+use safa::config::{presets, ChurnModel, ExperimentConfig, ProtocolKind};
+use safa::net::fabric::FabricConfig;
+use safa::protocol::{make_protocol, FedEnv};
+
+const PROTOS: [ProtocolKind; 3] = [
+    ProtocolKind::Safa,
+    ProtocolKind::FedAvg,
+    ProtocolKind::FedAsync,
+];
+
+fn churns() -> [ChurnModel; 2] {
+    [
+        ChurnModel::Bernoulli,
+        ChurnModel::Markov {
+            mean_uptime_s: 300.0,
+            mean_downtime_s: 200.0,
+        },
+    ]
+}
+
+fn cfg_for(kind: ProtocolKind, churn: ChurnModel) -> ExperimentConfig {
+    let mut cfg = presets::preset("tiny").unwrap();
+    cfg.protocol.kind = kind;
+    cfg.env.crash_prob = 0.3; // plenty of picked-but-crashed clients
+    cfg.env.churn = churn;
+    cfg.seed = 23;
+    cfg
+}
+
+/// Drive `rounds` rounds asserting the byte invariants with the given
+/// payload ratio (1.0 when no codec is configured).
+fn assert_books(cfg: &ExperimentConfig, ratio: f64, rounds: usize) {
+    let mut env = FedEnv::new(cfg).unwrap();
+    let model_bytes = env.net.model_bytes;
+    let payload = model_bytes * ratio;
+    let mut proto = make_protocol(&env);
+    let mut saw_crash = false;
+    for t in 1..=rounds {
+        let rec = proto.run_round(t, &mut env);
+        let label = format!("{}/{:?} t={t}", cfg.protocol.kind.name(), cfg.env.churn);
+        assert!(
+            (rec.bytes_down - rec.m_sync as f64 * payload).abs() < 1e-6,
+            "{label}: bytes_down {} != m_sync {} × payload {payload}",
+            rec.bytes_down,
+            rec.m_sync
+        );
+        assert!(
+            (rec.bytes_up - rec.n_committed as f64 * payload).abs() < 1e-6,
+            "{label}: bytes_up {} != n_committed {} × payload {payload}",
+            rec.bytes_up,
+            rec.n_committed
+        );
+        // Uploads only for arrivals: crashed/offline clients moved no
+        // uplink bytes this round (SAFA counts every arrival — picked
+        // plus undrafted bypass — as an upload; FedAvg only the picked
+        // clients that survived to completion).
+        if rec.n_crashed > 0 {
+            saw_crash = true;
+        }
+        let uncompressed = (rec.m_sync + rec.n_committed) as f64 * model_bytes;
+        assert!(
+            (rec.bytes_down + rec.bytes_up + rec.bytes_saved - uncompressed).abs() < 1e-6,
+            "{label}: moved + saved != uncompressed total"
+        );
+        if ratio >= 1.0 {
+            assert_eq!(
+                rec.bytes_saved.to_bits(),
+                0.0f64.to_bits(),
+                "{label}: bytes_saved nonzero without a codec"
+            );
+        }
+    }
+    // The invariant is only interesting if some client actually dropped
+    // out: demand the crash/offline branch was exercised at least once.
+    assert!(
+        saw_crash,
+        "{}/{:?}: no client ever crashed over {rounds} rounds — \
+         the uploads-only-for-arrivals branch went unexercised",
+        cfg.protocol.kind.name(),
+        cfg.env.churn
+    );
+}
+
+#[test]
+fn books_match_traffic_without_codec() {
+    for kind in PROTOS {
+        for churn in churns() {
+            assert_books(&cfg_for(kind, churn), 1.0, 8);
+        }
+    }
+}
+
+#[test]
+fn books_match_traffic_with_quantizing_codec() {
+    // 8-bit stochastic quantization of f32 payloads: ratio 8/32.
+    let fabric = FabricConfig::from_parts(
+        "none",
+        None,
+        None,
+        None,
+        None,
+        None,
+        None,
+        None,
+        Some("quantize"),
+        None,
+        Some(8),
+    )
+    .unwrap();
+    for kind in PROTOS {
+        for churn in churns() {
+            let mut cfg = cfg_for(kind, churn);
+            cfg.env.fabric = fabric.clone();
+            assert_books(&cfg, 8.0 / 32.0, 8);
+        }
+    }
+}

@@ -112,6 +112,7 @@ fn engine_rounds(
             cfg: &cfg,
             net: &net,
             clients,
+            fabric: None,
         };
         round_outs.push(engine.run_round(t, ctx, &participants, &synced, &rng));
         let rng2 = Pcg64::new(43).split(t as u64);
@@ -292,6 +293,71 @@ fn safa_rounds_are_width_invariant_end_to_end() {
                 assert_eq!(a.2, b.2, "{churn:?} width {width} t={t}: n_committed");
                 assert_eq!(a.3, b.3, "{churn:?} width {width} t={t}: global bits");
             }
+        }
+    }
+}
+
+/// Network-fabric tentpole: with the event fabric fully on — FIFO
+/// server-link contention, heterogeneous lognormal client links,
+/// latency + jitter + loss with retransmits, and top-k update
+/// compression — whole SAFA runs stay bit-identical at every width,
+/// under Bernoulli crashes and Markov churn. Per-transfer times and the
+/// codec draw from dedicated per-(round, client) streams, so the
+/// parallel fan-out cannot reorder them.
+#[test]
+fn safa_fabric_rounds_are_width_invariant_end_to_end() {
+    for churn in [
+        ChurnModel::Bernoulli,
+        ChurnModel::Markov {
+            mean_uptime_s: 500.0,
+            mean_downtime_s: 200.0,
+        },
+    ] {
+        let mut cfg = presets::preset("fleet10k").unwrap();
+        cfg.env.m = 300; // keep the test fast; widths still fork
+        cfg.task.n = 3_000;
+        cfg.env.churn = churn.clone();
+        cfg.train.rounds = 4;
+        cfg.env.fabric = safa::net::fabric::FabricConfig::from_parts(
+            "fifo",
+            None,
+            Some("lognormal"),
+            Some(0.5),
+            Some(0.05),
+            Some(0.02),
+            Some(0.02),
+            None,
+            Some("topk"),
+            Some(0.25),
+            None,
+        )
+        .unwrap();
+
+        let run = |width: usize| -> Vec<(u64, usize, usize, u64)> {
+            with_thread_count(width, || {
+                let mut env = FedEnv::new(&cfg).unwrap();
+                let mut safa = Safa::new(&env, env.init_global());
+                (1..=cfg.train.rounds)
+                    .map(|t| {
+                        let rec = safa.run_round(t, &mut env);
+                        let g = safa.global().as_slice()[0] as f64;
+                        (
+                            rec.round_len.to_bits(),
+                            rec.n_picked,
+                            rec.n_committed,
+                            g.to_bits(),
+                        )
+                    })
+                    .collect()
+            })
+        };
+        let reference = run(1);
+        for &width in &WIDTHS[1..] {
+            let got = run(width);
+            assert_eq!(
+                got, reference,
+                "{churn:?} fabric width {width}: run diverged"
+            );
         }
     }
 }

@@ -1,0 +1,243 @@
+//! Event-driven network fabric: integration acceptance tests.
+//!
+//! The tentpole contract has two halves:
+//! * **Off = seed.** With `fabric = "off"` (the default) every protocol
+//!   runs the closed-form Eqs. 17–19 arithmetic — literally the legacy
+//!   code path, checked here against the closed form bit-for-bit.
+//! * **Neutral = off.** Enabling the fabric with an uncontended, fixed,
+//!   loss-free, uncompressed config must reproduce the fabric-off run
+//!   bit-for-bit: the event fabric generalizes the closed form, it does
+//!   not replace it with something merely close.
+//!
+//! On top of that, contention only ever stretches rounds, and update
+//! compression scales the comm-cost books by the codec ratio.
+
+use safa::config::{presets, ChurnModel, ExperimentConfig, ProtocolKind};
+use safa::net::fabric::FabricConfig;
+use safa::protocol::{make_protocol, FedEnv};
+
+/// Per-round fingerprint: every timing/accounting output bit-compared.
+#[derive(Debug, PartialEq)]
+struct Fingerprint {
+    round_len: u64,
+    t_dist: u64,
+    m_sync: usize,
+    n_picked: usize,
+    n_committed: usize,
+    bytes_down: u64,
+    bytes_up: u64,
+    global: Vec<u32>,
+}
+
+fn run_rounds(cfg: &ExperimentConfig, rounds: usize) -> Vec<Fingerprint> {
+    let mut env = FedEnv::new(cfg).unwrap();
+    let mut proto = make_protocol(&env);
+    (1..=rounds)
+        .map(|t| {
+            let rec = proto.run_round(t, &mut env);
+            Fingerprint {
+                round_len: rec.round_len.to_bits(),
+                t_dist: rec.t_dist.to_bits(),
+                m_sync: rec.m_sync,
+                n_picked: rec.n_picked,
+                n_committed: rec.n_committed,
+                bytes_down: rec.bytes_down.to_bits(),
+                bytes_up: rec.bytes_up.to_bits(),
+                global: proto
+                    .global()
+                    .as_slice()
+                    .iter()
+                    .map(|x| x.to_bits())
+                    .collect(),
+            }
+        })
+        .collect()
+}
+
+fn base_cfg(kind: ProtocolKind, churn: ChurnModel) -> ExperimentConfig {
+    let mut cfg = presets::preset("tiny").unwrap();
+    cfg.protocol.kind = kind;
+    cfg.env.crash_prob = 0.2;
+    cfg.env.churn = churn;
+    cfg.seed = 11;
+    cfg
+}
+
+/// A fabric that is enabled but models exactly the closed-form network:
+/// no contention, fixed links, no latency/jitter/loss, no compression.
+fn neutral_fabric() -> FabricConfig {
+    FabricConfig::from_parts(
+        "none", None, None, None, None, None, None, None, None, None, None,
+    )
+    .unwrap()
+}
+
+/// Acceptance: the neutral-enabled fabric reproduces the fabric-off run
+/// bit-for-bit — for every protocol, under Bernoulli crashes and Markov
+/// churn (direct and event engine paths, fresh-job and continuation
+/// protocol paths).
+#[test]
+fn neutral_fabric_is_bit_identical_to_fabric_off() {
+    let churns = [
+        ChurnModel::Bernoulli,
+        ChurnModel::Markov {
+            mean_uptime_s: 400.0,
+            mean_downtime_s: 150.0,
+        },
+    ];
+    for churn in &churns {
+        for kind in ProtocolKind::ALL {
+            let off = base_cfg(kind, churn.clone());
+            let mut neutral = off.clone();
+            neutral.env.fabric = neutral_fabric();
+            assert!(neutral.env.fabric.enabled);
+            let a = run_rounds(&off, 5);
+            let b = run_rounds(&neutral, 5);
+            assert_eq!(
+                a,
+                b,
+                "{}/{churn:?}: neutral fabric diverged from fabric-off",
+                kind.name()
+            );
+        }
+    }
+}
+
+/// Regression: with the fabric off, per-round outputs satisfy the
+/// closed-form Eqs. 17–19 arithmetic exactly (bitwise, not within a
+/// tolerance): `T_dist = m_sync · t_per_model` and the comm-cost books
+/// are whole model copies.
+#[test]
+fn fabric_off_reproduces_closed_form_arithmetic() {
+    for kind in [ProtocolKind::Safa, ProtocolKind::FedAvg, ProtocolKind::FedAsync] {
+        let cfg = base_cfg(kind, ChurnModel::Bernoulli);
+        let env = FedEnv::new(&cfg).unwrap();
+        let (t_per_model, model_bytes) = (env.net.t_per_model, env.net.model_bytes);
+        drop(env);
+        for (t, f) in run_rounds(&cfg, 5).iter().enumerate() {
+            assert_eq!(
+                f.t_dist,
+                (f.m_sync as f64 * t_per_model).to_bits(),
+                "{} t={t}: T_dist != Eq. 19",
+                kind.name()
+            );
+            assert_eq!(
+                f.bytes_down,
+                (f.m_sync as f64 * model_bytes).to_bits(),
+                "{} t={t}: downlink bytes",
+                kind.name()
+            );
+            assert_eq!(
+                f.bytes_up,
+                (f.n_committed as f64 * model_bytes).to_bits(),
+                "{} t={t}: uplink bytes",
+                kind.name()
+            );
+        }
+    }
+}
+
+/// FIFO contention adds nonnegative head-of-line waits and changes
+/// nothing else in a neutral fabric. FedAvg with crash-free rounds and
+/// an uncapped deadline makes that comparable round by round (its
+/// timing carries no state between rounds, unlike SAFA's continuation
+/// jobs): every arrival is delayed pointwise, so every round is at
+/// least as long, the total T_dist calibration is unchanged, and with
+/// a slow server link the queue tail dominates — rounds get strictly
+/// longer.
+#[test]
+fn fifo_contention_only_stretches_rounds() {
+    let mut base = base_cfg(ProtocolKind::FedAvg, ChurnModel::Bernoulli);
+    base.env.m = 12;
+    base.protocol.c_fraction = 1.0;
+    base.env.crash_prob = 0.0;
+    base.train.t_lim = 1e9;
+    // Slow server link: one copy-time dwarfs any training-time spread,
+    // so the back of the FIFO queue provably determines the round.
+    base.env.server_bw_bps = 1e3;
+    let mut neutral = base.clone();
+    neutral.env.fabric = neutral_fabric();
+    let mut fifo = base.clone();
+    fifo.env.fabric = FabricConfig::from_parts(
+        "fifo", None, None, None, None, None, None, None, None, None, None,
+    )
+    .unwrap();
+    let a = run_rounds(&neutral, 3);
+    let b = run_rounds(&fifo, 3);
+    for (t, (n, f)) in a.iter().zip(&b).enumerate() {
+        let (ln, lf) = (f64::from_bits(n.round_len), f64::from_bits(f.round_len));
+        assert!(
+            lf > ln,
+            "t={t}: FIFO round {lf} not longer than uncontended {ln}"
+        );
+        // Queueing reshuffles who waits, not the total distribution
+        // cost: T_dist = m_sync · t_per_model under every policy.
+        assert_eq!(n.t_dist, f.t_dist, "t={t}: contention changed T_dist");
+        assert_eq!(n.m_sync, f.m_sync, "t={t}: contention changed the sync set");
+    }
+}
+
+/// Top-k compression scales both directions of the comm-cost books by
+/// the codec ratio (value+index pairs: ratio = 2·fraction) and reports
+/// the savings.
+#[test]
+fn compression_scales_the_comm_cost_books() {
+    let mut cfg = base_cfg(ProtocolKind::FedAvg, ChurnModel::Bernoulli);
+    cfg.env.fabric = FabricConfig::from_parts(
+        "none",
+        None,
+        None,
+        None,
+        None,
+        None,
+        None,
+        None,
+        Some("topk"),
+        Some(0.25),
+        None,
+    )
+    .unwrap();
+    let env = FedEnv::new(&cfg).unwrap();
+    let model_bytes = env.net.model_bytes;
+    drop(env);
+    let mut env = FedEnv::new(&cfg).unwrap();
+    let mut proto = make_protocol(&env);
+    let ratio = 0.5; // 2 × 0.25
+    for t in 1..=4 {
+        let rec = proto.run_round(t, &mut env);
+        assert!(
+            (rec.bytes_down - rec.m_sync as f64 * model_bytes * ratio).abs() < 1e-6,
+            "t={t}: downlink not ratio-scaled"
+        );
+        assert!(
+            (rec.bytes_up - rec.n_committed as f64 * model_bytes * ratio).abs() < 1e-6,
+            "t={t}: uplink not ratio-scaled"
+        );
+        let expected_saved =
+            (rec.m_sync + rec.n_committed) as f64 * model_bytes * (1.0 - ratio);
+        assert!(
+            (rec.bytes_saved - expected_saved).abs() < 1e-6,
+            "t={t}: bytes_saved {} != {expected_saved}",
+            rec.bytes_saved
+        );
+    }
+}
+
+/// The `contended` preset drives every protocol end to end (lognormal
+/// heterogeneous links, FIFO contention, latency/jitter/loss): smoke for
+/// the full fabric configuration space reachable from a preset name.
+#[test]
+fn contended_preset_runs_every_protocol() {
+    for kind in ProtocolKind::ALL {
+        let mut cfg = presets::preset("contended").unwrap();
+        cfg.protocol.kind = kind;
+        cfg.env.m = 8;
+        cfg.task.n = 200;
+        cfg.task.n_test = 20;
+        let prints = run_rounds(&cfg, 3);
+        assert_eq!(prints.len(), 3, "{}: contended run truncated", kind.name());
+        for f in &prints {
+            assert!(f64::from_bits(f.round_len).is_finite());
+        }
+    }
+}
