@@ -1,0 +1,74 @@
+//! Bench regression differ: compare a fresh `BENCH_profile.json` (or any
+//! BENCH-schema file) against a committed baseline and print a
+//! regression table.
+//!
+//! ```text
+//! cargo bench --bench bench_diff -- \
+//!     --baseline ../BENCH_profile.json --fresh BENCH_profile.json \
+//!     [--tolerance 0.25] [--json BENCH_profile_diff.json]
+//! ```
+//!
+//! A cell regresses when its `mean_ns` grows (or `rounds_per_sec`
+//! shrinks) by more than the relative tolerance. Cells present on only
+//! one side are reported but never fail the diff, so the unmeasured
+//! placeholder baseline (`{"results": []}`) diffs clean. Exit code 1 on
+//! regressions — CI runs this step warn-only (`continue-on-error`) and
+//! uploads the JSON diff in the `bench-json` artifact.
+
+use safa::bench_harness::{diff_bench_cells, diff_to_json, render_diff, write_results_file};
+use safa::util::json::Json;
+
+fn arg_value(name: &str) -> Option<String> {
+    let mut args = std::env::args().skip(1);
+    let eq_prefix = format!("{name}=");
+    while let Some(a) = args.next() {
+        if a == name {
+            return args.next();
+        }
+        if let Some(v) = a.strip_prefix(&eq_prefix) {
+            return Some(v.to_string());
+        }
+    }
+    None
+}
+
+fn load(path: &str) -> Json {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("bench_diff: cannot read {path}: {e}"));
+    Json::parse(&text).unwrap_or_else(|e| panic!("bench_diff: {path} is not valid JSON: {e}"))
+}
+
+fn main() {
+    safa::util::logging::init();
+    let baseline_path =
+        arg_value("--baseline").unwrap_or_else(|| "../BENCH_profile.json".to_string());
+    let fresh_path = arg_value("--fresh").unwrap_or_else(|| "BENCH_profile.json".to_string());
+    let tolerance: f64 = arg_value("--tolerance")
+        .map(|t| t.parse().expect("--tolerance expects a number"))
+        .unwrap_or(0.25);
+
+    let baseline = load(&baseline_path);
+    let fresh = load(&fresh_path);
+    let diffs = diff_bench_cells(&baseline, &fresh, tolerance);
+    println!("baseline: {baseline_path}");
+    println!("fresh:    {fresh_path}");
+    print!("{}", render_diff(&diffs, tolerance));
+
+    if let Some(out) = arg_value("--json") {
+        write_results_file(&out, &diff_to_json(&diffs, tolerance).to_string_pretty())
+            .expect("write diff json");
+        println!("wrote {out}");
+    }
+
+    let regressions = diffs
+        .iter()
+        .filter(|d| d.status == safa::bench_harness::DiffStatus::Regressed)
+        .count();
+    if regressions > 0 {
+        eprintln!(
+            "bench_diff: {regressions} cell(s) regressed beyond {:.0}% tolerance",
+            tolerance * 100.0
+        );
+        std::process::exit(1);
+    }
+}

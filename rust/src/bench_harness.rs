@@ -350,6 +350,215 @@ impl Series {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Bench regression diff (benches/bench_diff.rs).
+// ---------------------------------------------------------------------------
+
+/// Outcome of comparing one cell between a baseline and a fresh run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DiffStatus {
+    /// Within tolerance (or improved).
+    Ok,
+    /// Slower than baseline beyond the relative tolerance.
+    Regressed,
+    /// Present in only one of the two files.
+    Unmatched,
+}
+
+impl DiffStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            DiffStatus::Ok => "ok",
+            DiffStatus::Regressed => "REGRESSED",
+            DiffStatus::Unmatched => "unmatched",
+        }
+    }
+}
+
+/// One cell's comparison: relative deltas are `(fresh - base) / base`.
+#[derive(Debug, Clone)]
+pub struct CellDiff {
+    pub name: String,
+    pub base_mean_ns: Option<f64>,
+    pub fresh_mean_ns: Option<f64>,
+    /// Relative mean_ns change (positive = slower).
+    pub mean_delta: Option<f64>,
+    /// Relative rounds_per_sec change (negative = slower), when both
+    /// sides carry the profiling extra.
+    pub rps_delta: Option<f64>,
+    pub status: DiffStatus,
+}
+
+/// Extract the BENCH cell array from either supported file shape: a bare
+/// array of cells, or the placeholder object form `{"results": [...]}`.
+pub fn bench_cells(doc: &Json) -> &[Json] {
+    match doc {
+        Json::Arr(a) => a,
+        _ => doc
+            .get("results")
+            .and_then(Json::as_arr)
+            .unwrap_or_default(),
+    }
+}
+
+fn cell_num(cell: &Json, key: &str) -> Option<f64> {
+    cell.get(key).and_then(Json::as_f64).filter(|v| *v > 0.0)
+}
+
+/// Compare fresh BENCH cells against a committed baseline by `name`,
+/// flagging cells whose `mean_ns` grew (or `rounds_per_sec` shrank) by
+/// more than `tolerance` (relative, e.g. 0.25 = 25%). Cells present in
+/// only one file are reported as unmatched, never as regressions — an
+/// empty placeholder baseline diffs clean by construction.
+pub fn diff_bench_cells(baseline: &Json, fresh: &Json, tolerance: f64) -> Vec<CellDiff> {
+    let base_cells = bench_cells(baseline);
+    let fresh_cells = bench_cells(fresh);
+    let name_of = |c: &Json| {
+        c.get("name")
+            .and_then(Json::as_str)
+            .unwrap_or("?")
+            .to_string()
+    };
+    let mut out: Vec<CellDiff> = Vec::new();
+    for f in fresh_cells {
+        let name = name_of(f);
+        let base = base_cells.iter().find(|b| name_of(b) == name);
+        let fresh_mean = cell_num(f, "mean_ns");
+        match base {
+            None => out.push(CellDiff {
+                name,
+                base_mean_ns: None,
+                fresh_mean_ns: fresh_mean,
+                mean_delta: None,
+                rps_delta: None,
+                status: DiffStatus::Unmatched,
+            }),
+            Some(b) => {
+                let base_mean = cell_num(b, "mean_ns");
+                let mean_delta = match (base_mean, fresh_mean) {
+                    (Some(bm), Some(fm)) => Some((fm - bm) / bm),
+                    _ => None,
+                };
+                let rps_delta = match (cell_num(b, "rounds_per_sec"), cell_num(f, "rounds_per_sec"))
+                {
+                    (Some(br), Some(fr)) => Some((fr - br) / br),
+                    _ => None,
+                };
+                let regressed = mean_delta.is_some_and(|d| d > tolerance)
+                    || rps_delta.is_some_and(|d| d < -tolerance);
+                out.push(CellDiff {
+                    name,
+                    base_mean_ns: base_mean,
+                    fresh_mean_ns: fresh_mean,
+                    mean_delta,
+                    rps_delta,
+                    status: if regressed {
+                        DiffStatus::Regressed
+                    } else {
+                        DiffStatus::Ok
+                    },
+                });
+            }
+        }
+    }
+    for b in base_cells {
+        let name = name_of(b);
+        if !fresh_cells.iter().any(|f| name_of(f) == name) {
+            out.push(CellDiff {
+                name,
+                base_mean_ns: cell_num(b, "mean_ns"),
+                fresh_mean_ns: None,
+                mean_delta: None,
+                rps_delta: None,
+                status: DiffStatus::Unmatched,
+            });
+        }
+    }
+    out
+}
+
+/// Fixed-width regression table over a diff.
+pub fn render_diff(diffs: &[CellDiff], tolerance: f64) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "== bench diff (relative tolerance {:.0}%) ==",
+        tolerance * 100.0
+    );
+    let _ = writeln!(
+        out,
+        "{:<40} {:>12} {:>12} {:>9} {:>9} {:<10}",
+        "cell", "base ms", "fresh ms", "mean Δ%", "r/s Δ%", "status"
+    );
+    let fmt_ms = |v: Option<f64>| match v {
+        Some(ns) => format!("{:.2}", ns / 1e6),
+        None => "-".to_string(),
+    };
+    let fmt_pct = |v: Option<f64>| match v {
+        Some(d) => format!("{:+.1}", d * 100.0),
+        None => "-".to_string(),
+    };
+    for d in diffs {
+        let _ = writeln!(
+            out,
+            "{:<40} {:>12} {:>12} {:>9} {:>9} {:<10}",
+            d.name,
+            fmt_ms(d.base_mean_ns),
+            fmt_ms(d.fresh_mean_ns),
+            fmt_pct(d.mean_delta),
+            fmt_pct(d.rps_delta),
+            d.status.name(),
+        );
+    }
+    let regressions = diffs
+        .iter()
+        .filter(|d| d.status == DiffStatus::Regressed)
+        .count();
+    let _ = writeln!(
+        out,
+        "{} cell(s) compared, {} regression(s)",
+        diffs.len(),
+        regressions
+    );
+    out
+}
+
+/// Serialize a diff for the CI artifact.
+pub fn diff_to_json(diffs: &[CellDiff], tolerance: f64) -> Json {
+    let mut o = Json::obj();
+    o.set("tolerance", Json::Num(tolerance));
+    o.set(
+        "regressions",
+        Json::Num(
+            diffs
+                .iter()
+                .filter(|d| d.status == DiffStatus::Regressed)
+                .count() as f64,
+        ),
+    );
+    let mut arr = Vec::new();
+    for d in diffs {
+        let mut c = Json::obj();
+        c.set("name", Json::Str(d.name.clone()));
+        c.set("status", Json::Str(d.status.name().to_string()));
+        if let Some(v) = d.base_mean_ns {
+            c.set("base_mean_ns", Json::Num(v));
+        }
+        if let Some(v) = d.fresh_mean_ns {
+            c.set("fresh_mean_ns", Json::Num(v));
+        }
+        if let Some(v) = d.mean_delta {
+            c.set("mean_delta", Json::Num(v));
+        }
+        if let Some(v) = d.rps_delta {
+            c.set("rps_delta", Json::Num(v));
+        }
+        arr.push(c);
+    }
+    o.set("cells", Json::Arr(arr));
+    o
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -389,6 +598,62 @@ mod tests {
     fn table_shape_checked() {
         let mut t = Table::new("demo", &[0.1, 0.3], &[0.1]);
         t.add_block("X", vec![vec![1.0]]);
+    }
+
+    fn cell(name: &str, mean_ns: f64, rps: Option<f64>) -> Json {
+        let mut c = Json::obj();
+        c.set("name", Json::Str(name.to_string()));
+        c.set("mean_ns", Json::Num(mean_ns));
+        if let Some(r) = rps {
+            c.set("rounds_per_sec", Json::Num(r));
+        }
+        c
+    }
+
+    #[test]
+    fn diff_flags_only_out_of_tolerance_cells() {
+        let baseline = Json::Arr(vec![
+            cell("a", 100.0, Some(50.0)),
+            cell("b", 100.0, Some(50.0)),
+            cell("gone", 100.0, None),
+        ]);
+        let fresh = Json::Arr(vec![
+            cell("a", 110.0, Some(48.0)), // within 25%
+            cell("b", 200.0, Some(20.0)), // 2x slower
+            cell("new", 100.0, None),
+        ]);
+        let diffs = diff_bench_cells(&baseline, &fresh, 0.25);
+        let by_name = |n: &str| diffs.iter().find(|d| d.name == n).unwrap();
+        assert_eq!(by_name("a").status, DiffStatus::Ok);
+        assert_eq!(by_name("b").status, DiffStatus::Regressed);
+        assert_eq!(by_name("new").status, DiffStatus::Unmatched);
+        assert_eq!(by_name("gone").status, DiffStatus::Unmatched);
+        assert!((by_name("b").mean_delta.unwrap() - 1.0).abs() < 1e-12);
+        let table = render_diff(&diffs, 0.25);
+        assert!(table.contains("REGRESSED"), "{table}");
+        assert!(table.contains("1 regression(s)"), "{table}");
+        let j = diff_to_json(&diffs, 0.25);
+        assert_eq!(j.get("regressions").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.get("cells").and_then(Json::as_arr).unwrap().len(), 4);
+    }
+
+    #[test]
+    fn diff_accepts_placeholder_object_baseline() {
+        // The committed BENCH_profile.json placeholder is an object with
+        // an empty `results` array — it must diff clean, not crash.
+        let mut placeholder = Json::obj();
+        placeholder.set("status", Json::Str("unmeasured placeholder".into()));
+        placeholder.set("results", Json::Arr(Vec::new()));
+        let fresh = Json::Arr(vec![cell("a", 100.0, Some(50.0))]);
+        let diffs = diff_bench_cells(&placeholder, &fresh, 0.25);
+        assert_eq!(diffs.len(), 1);
+        assert_eq!(diffs[0].status, DiffStatus::Unmatched);
+        assert!(diffs.iter().all(|d| d.status != DiffStatus::Regressed));
+        // Object form on the fresh side too.
+        let mut fresh_obj = Json::obj();
+        fresh_obj.set("results", Json::Arr(vec![cell("a", 100.0, None)]));
+        let d2 = diff_bench_cells(&fresh, &fresh_obj, 0.25);
+        assert_eq!(d2[0].status, DiffStatus::Ok);
     }
 
     #[test]

@@ -50,6 +50,26 @@ impl Coordinator {
         // delta). Snapshotting only when tracing keeps the default path
         // free of even the cheap shard merge.
         let tracing = crate::telemetry::trace_active();
+        if tracing {
+            // SAFA_TRACE v2 header: one meta line so `safa report` (and
+            // external tooling) can label the run without side-channel
+            // state.
+            use crate::util::json::Json;
+            let mut meta = Json::obj();
+            meta.set("type", Json::Str("meta".into()));
+            meta.set("v", Json::Num(2.0));
+            meta.set("schema", Json::Str("safa-trace".into()));
+            meta.set("protocol", Json::Str(self.protocol.kind().name().into()));
+            meta.set("task", Json::Str(cfg.task.kind.name().into()));
+            meta.set("m", Json::Num(cfg.env.m as f64));
+            meta.set("rounds", Json::Num(cfg.train.rounds as f64));
+            meta.set("seed", Json::Num(cfg.seed as f64));
+            meta.set(
+                "sample",
+                Json::Num(crate::telemetry::lifecycle::sample_stride() as f64),
+            );
+            crate::telemetry::trace_line(&meta);
+        }
         for t in 1..=cfg.train.rounds {
             let telemetry_before = if tracing {
                 Some(crate::telemetry::snapshot())
@@ -61,6 +81,8 @@ impl Coordinator {
                 let delta = crate::telemetry::snapshot().since(&before);
                 let proto = self.protocol.kind().name().to_string();
                 let mut line = rec.to_json();
+                line.set("type", crate::util::json::Json::Str("round".into()));
+                line.set("v", crate::util::json::Json::Num(2.0));
                 line.set("protocol", crate::util::json::Json::Str(proto));
                 line.set("telemetry", delta.to_json());
                 crate::telemetry::trace_line(&line);
@@ -78,6 +100,15 @@ impl Coordinator {
             rounds.push(rec);
         }
         self.protocol.finalize(&mut self.env);
+        if tracing {
+            let dropped = crate::telemetry::trace_dropped();
+            if dropped > 0 {
+                crate::log_warn!(
+                    "SAFA_TRACE: {dropped} trace line(s) failed to write (disk full or \
+                     closed sink?); the trace file is incomplete"
+                );
+            }
+        }
         let final_eval = Some(self.env.trainer.evaluate(self.protocol.global()));
         RunResult {
             protocol: self.protocol.kind().name().to_string(),

@@ -70,6 +70,8 @@ use crate::net::fabric::FabricRuntime;
 use crate::net::NetworkModel;
 use crate::sim::{Arrival, ContinuationSim, FailReason, RoundSim};
 use crate::telemetry;
+use crate::telemetry::hist::{self, HistMetric};
+use crate::telemetry::lifecycle::{self, ClientEvent, Event as LcEvent};
 use crate::util::parallel;
 use crate::util::rng::Pcg64;
 
@@ -184,14 +186,27 @@ struct DirectSlot {
     online_secs: f64,
     /// Arrival time when committed (unset while failed).
     finish: f64,
+    /// Training span endpoints when committed (lifecycle trace only).
+    train_start: f64,
+    train_end: f64,
     failure: Option<(FailReason, f64)>,
 }
 
 const EMPTY_DIRECT: DirectSlot = DirectSlot {
     online_secs: 0.0,
     finish: f64::NAN,
+    train_start: f64::NAN,
+    train_end: f64::NAN,
     failure: None,
 };
+
+/// Stable lifecycle `reason` string for a failure.
+fn fail_reason_name(r: FailReason) -> &'static str {
+    match r {
+        FailReason::Crash => "crash",
+        FailReason::Overtime => "overtime",
+    }
+}
 
 /// Per-participant outcome of an event-free continuation round.
 #[derive(Debug, Clone, Copy)]
@@ -248,6 +263,7 @@ fn fill_dist_waits(dw: &mut Vec<f64>, fabric: Option<&FabricRuntime>, synced: &[
     for (pos, &s) in synced.iter().enumerate() {
         if s {
             dw[pos] = f.dist_wait(idx, m_sync);
+            hist::record_secs_as_ms(HistMetric::TransferWaitMs, dw[pos]);
             idx += 1;
         }
     }
@@ -459,21 +475,24 @@ impl FleetEngine {
                     } else {
                         0.0
                     };
-                    let finish = head + clients[k].t_train(epochs) + tu;
+                    let train_end = head + clients[k].t_train(epochs);
+                    let finish = train_end + tu;
                     *slot = if finish <= t_lim {
                         DirectSlot {
                             online_secs,
                             finish,
+                            train_start: head,
+                            train_end,
                             failure: None,
                         }
                     } else {
                         DirectSlot {
                             online_secs,
-                            finish: f64::NAN,
                             failure: Some((
                                 FailReason::Overtime,
                                 (t_lim / finish).clamp(0.0, 1.0),
                             )),
+                            ..EMPTY_DIRECT
                         }
                     };
                 } else {
@@ -489,8 +508,8 @@ impl FleetEngine {
                     };
                     *slot = DirectSlot {
                         online_secs,
-                        finish: f64::NAN,
                         failure: Some((FailReason::Crash, partial)),
+                        ..EMPTY_DIRECT
                     };
                 }
             }
@@ -500,21 +519,43 @@ impl FleetEngine {
         scratch.pos_of.resize(self.m, None);
         scratch.arrivals.clear();
         scratch.arrivals.reserve(p);
+        let lc = lifecycle::active();
         let mut online_time = 0.0;
         for (pos, &k) in participants.iter().enumerate() {
             assert!(scratch.pos_of[k].is_none(), "duplicate participant {k}");
             scratch.pos_of[k] = Some(pos);
             let slot = scratch.direct_round[pos];
             online_time += slot.online_secs;
+            hist::record_secs_as_ms(HistMetric::ClientDwellMs, slot.online_secs);
             match slot.failure {
-                Some((reason, partial)) => out.failures.push((k, reason, partial)),
-                None => scratch.arrivals.push((
-                    pos,
-                    Arrival {
-                        client: k,
-                        time: slot.finish,
-                    },
-                )),
+                Some((reason, partial)) => {
+                    if lc {
+                        lifecycle::emit(
+                            ClientEvent::new(t, k, LcEvent::Crashed, t_lim)
+                                .reason(fail_reason_name(reason)),
+                        );
+                    }
+                    out.failures.push((k, reason, partial))
+                }
+                None => {
+                    if lc {
+                        lifecycle::emit(ClientEvent::new(
+                            t,
+                            k,
+                            LcEvent::TrainStart,
+                            slot.train_start,
+                        ));
+                        lifecycle::emit(ClientEvent::new(t, k, LcEvent::TrainEnd, slot.train_end));
+                        lifecycle::emit(ClientEvent::new(t, k, LcEvent::Upload, slot.finish));
+                    }
+                    scratch.arrivals.push((
+                        pos,
+                        Arrival {
+                            client: k,
+                            time: slot.finish,
+                        },
+                    ))
+                }
             }
         }
         sort_arrivals_into(&mut scratch.arrivals, &mut out.arrivals);
@@ -651,11 +692,13 @@ impl FleetEngine {
 
         // Serial scheduling in participant order: heap sequence numbers
         // (tie-breaks) and the online-time fold stay width-invariant.
+        let lc = lifecycle::active();
         for (pos, &k) in participants.iter().enumerate() {
             assert!(scratch.pos_of[k].is_none(), "duplicate participant {k}");
             scratch.pos_of[k] = Some(pos);
             let su = scratch.setup_round[pos];
             online_time += su.online_secs;
+            hist::record_secs_as_ms(HistMetric::ClientDwellMs, su.online_secs);
             scratch.slots.push(su.slot);
             scratch.failures[pos] = su.failure;
             // Crash first so an exact drop/upload tie favours the drop.
@@ -667,6 +710,11 @@ impl FleetEngine {
                 });
             }
             if let Some((time, kind)) = su.head {
+                // A TrainDone head means training began at round start
+                // (non-synced client, no download leg).
+                if lc && kind == EventKind::TrainDone {
+                    lifecycle::emit(ClientEvent::new(t, k, LcEvent::TrainStart, 0.0));
+                }
                 q.schedule(Event {
                     time,
                     client: Some(k),
@@ -706,6 +754,15 @@ impl FleetEngine {
                                 kind: EventKind::DownloadDone,
                             }
                         } else {
+                            // Training begins at the recovery instant.
+                            if lc {
+                                lifecycle::emit(ClientEvent::new(
+                                    t,
+                                    k,
+                                    LcEvent::TrainStart,
+                                    ev.time,
+                                ));
+                            }
                             Event {
                                 time: ev.time + t_train,
                                 client: Some(k),
@@ -717,6 +774,9 @@ impl FleetEngine {
                 }
                 EventKind::DownloadDone => {
                     if slot.phase == Phase::Active {
+                        if lc {
+                            lifecycle::emit(ClientEvent::new(t, k, LcEvent::TrainStart, ev.time));
+                        }
                         q.schedule(Event {
                             time: ev.time + ctx.clients[k].t_train(epochs),
                             client: Some(k),
@@ -726,6 +786,9 @@ impl FleetEngine {
                 }
                 EventKind::TrainDone => {
                     if slot.phase == Phase::Active {
+                        if lc {
+                            lifecycle::emit(ClientEvent::new(t, k, LcEvent::TrainEnd, ev.time));
+                        }
                         let tu = match fabric {
                             Some(f) => f.t_up(t, k),
                             None => ctx.net.t_up(),
@@ -740,6 +803,9 @@ impl FleetEngine {
                 EventKind::UploadDone => {
                     if slot.phase == Phase::Active {
                         slot.phase = Phase::Done;
+                        if lc {
+                            lifecycle::emit(ClientEvent::new(t, k, LcEvent::Upload, ev.time));
+                        }
                         scratch.arrivals.push((
                             pos,
                             Arrival {
@@ -786,6 +852,12 @@ impl FleetEngine {
         sort_arrivals_into(&mut scratch.arrivals, &mut out.arrivals);
         for (pos, &k) in participants.iter().enumerate() {
             if let Some((reason, partial)) = scratch.failures[pos] {
+                if lc {
+                    lifecycle::emit(
+                        ClientEvent::new(t, k, LcEvent::Crashed, t_lim)
+                            .reason(fail_reason_name(reason)),
+                    );
+                }
                 out.failures.push((k, reason, partial));
             }
         }
@@ -883,17 +955,29 @@ impl FleetEngine {
         scratch.pos_of.resize(self.m, None);
         scratch.arrivals.clear();
         scratch.arrivals.reserve(p);
+        let lc = lifecycle::active();
         let mut online_time = 0.0;
         for (pos, &k) in participants.iter().enumerate() {
             assert!(scratch.pos_of[k].is_none(), "duplicate participant {k}");
             scratch.pos_of[k] = Some(pos);
             let (secs, outcome) = scratch.direct_cont[pos];
             online_time += secs;
+            hist::record_secs_as_ms(HistMetric::ClientDwellMs, secs);
             match outcome {
                 ContOutcome::Arrived(time) => {
+                    if lc {
+                        lifecycle::emit(ClientEvent::new(t, k, LcEvent::Upload, time));
+                    }
                     scratch.arrivals.push((pos, Arrival { client: k, time }))
                 }
-                ContOutcome::Crashed => out.crashed.push(k),
+                ContOutcome::Crashed => {
+                    if lc {
+                        lifecycle::emit(
+                            ClientEvent::new(t, k, LcEvent::Crashed, t_lim).reason("crash"),
+                        );
+                    }
+                    out.crashed.push(k)
+                }
                 ContOutcome::Straggler => out.stragglers.push(k),
             }
         }
@@ -976,11 +1060,13 @@ impl FleetEngine {
 
         // Serial scheduling in participant order (queue pop order stays
         // authoritative; see run_round_event).
+        let lc = lifecycle::active();
         for (pos, &k) in participants.iter().enumerate() {
             assert!(scratch.pos_of[k].is_none(), "duplicate participant {k}");
             scratch.pos_of[k] = Some(pos);
             let su = scratch.setup_cont[pos];
             online_time += su.online_secs;
+            hist::record_secs_as_ms(HistMetric::ClientDwellMs, su.online_secs);
             scratch.late_start[pos] = su.late_start;
             if su.crashed {
                 scratch.outcome[pos] = ContState::Crashed;
@@ -1018,6 +1104,9 @@ impl FleetEngine {
                 EventKind::UploadDone => {
                     if scratch.outcome[pos] == ContState::Pending {
                         scratch.outcome[pos] = ContState::Arrived;
+                        if lc {
+                            lifecycle::emit(ClientEvent::new(t, k, LcEvent::Upload, ev.time));
+                        }
                         scratch.arrivals.push((
                             pos,
                             Arrival {
@@ -1062,7 +1151,14 @@ impl FleetEngine {
         sort_arrivals_into(&mut scratch.arrivals, &mut out.arrivals);
         for (pos, &k) in participants.iter().enumerate() {
             match scratch.outcome[pos] {
-                ContState::Crashed => out.crashed.push(k),
+                ContState::Crashed => {
+                    if lc {
+                        lifecycle::emit(
+                            ClientEvent::new(t, k, LcEvent::Crashed, t_lim).reason("crash"),
+                        );
+                    }
+                    out.crashed.push(k)
+                }
                 ContState::Straggler => out.stragglers.push(k),
                 _ => {}
             }

@@ -33,6 +33,7 @@ pub mod metrics;
 pub mod model;
 pub mod net;
 pub mod protocol;
+pub mod report;
 pub mod runtime;
 pub mod sim;
 pub mod telemetry;

@@ -22,6 +22,8 @@
 //! safa profile [--protocols safa,fedavg] [--churn bernoulli,markov]
 //!              [--fabric off,contended] [--m 100,500] [--rounds 30]
 //!              [--warmup 5] [--json BENCH_profile.json] # rounds/sec grid
+//! safa report  <trace.jsonl> [--client K] [--json report.json]
+//!                                                # analyze a SAFA_TRACE v2 file
 //! safa presets                                   # list presets
 //! ```
 
@@ -49,6 +51,7 @@ fn main() {
         "sweep" => cmd_sweep(&args),
         "bias" => cmd_bias(&args),
         "profile" => cmd_profile(&args),
+        "report" => cmd_report(&args),
         "presets" => {
             for name in presets::preset_names() {
                 println!("{name}");
@@ -80,6 +83,9 @@ fn print_help() {
          \x20 bias     print the Fig. 5 closed-form bias series\n\
          \x20 profile  rounds/sec profiling grid (--protocols/--churn/--m/\n\
          \x20          --rounds/--warmup/--json; telemetry phase shares)\n\
+         \x20 report   analyze a SAFA_TRACE v2 JSONL file: round-duration\n\
+         \x20          percentiles, staleness CDF, EUR/wasted-work per\n\
+         \x20          protocol (--client K timeline, --json out.json)\n\
          \x20 presets  list available presets\n\
          \n\
          Protocols: safa, fedavg, fedcs, fedasync (--alpha/--staleness-exp), local\n\
@@ -398,6 +404,28 @@ fn cmd_profile(args: &Args) -> CliResult<()> {
     if let Some(path) = args.get("json") {
         write_json(&cells, path)?;
         println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> CliResult<()> {
+    use safa::report::{parse_trace, render_report, render_timeline, report_json};
+    let path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| {
+            CliError("usage: safa report <trace.jsonl> [--client K] [--json out.json]".into())
+        })?;
+    let text = std::fs::read_to_string(path)?;
+    let trace = parse_trace(&text)?;
+    print!("{}", render_report(&trace));
+    if let Some(client) = args.get_parsed::<usize>("client")? {
+        println!();
+        print!("{}", render_timeline(&trace, client));
+    }
+    if let Some(out) = args.get("json") {
+        write_results_file(out, &report_json(&trace).to_string_pretty())?;
+        println!("wrote {out}");
     }
     Ok(())
 }

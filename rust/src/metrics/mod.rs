@@ -82,9 +82,24 @@ impl RoundRecord {
         j.set("t_dist", Json::Num(self.t_dist));
         j.set("m_sync", Json::Num(self.m_sync as f64));
         j.set("picked", Json::Num(self.n_picked as f64));
+        j.set("picked_crashed", Json::Num(self.n_picked_crashed as f64));
         j.set("committed", Json::Num(self.n_committed as f64));
         j.set("crashed", Json::Num(self.n_crashed as f64));
+        j.set("undrafted", Json::Num(self.n_undrafted as f64));
         j.set("vv", Json::Num(self.version_variance));
+        j.set("futility_wasted", Json::Num(self.futility_wasted));
+        j.set("futility_total", Json::Num(self.futility_total));
+        j.set("online_time", Json::Num(self.online_time));
+        j.set("offline_time", Json::Num(self.offline_time));
+        j.set(
+            "staleness",
+            Json::Arr(
+                self.staleness
+                    .iter()
+                    .map(|&s| Json::Num(s as f64))
+                    .collect(),
+            ),
+        );
         j.set("bytes_down", Json::Num(self.bytes_down));
         j.set("bytes_up", Json::Num(self.bytes_up));
         j.set("bytes_saved", Json::Num(self.bytes_saved));

@@ -29,6 +29,7 @@ use crate::config::ProtocolKind;
 use crate::metrics::RoundRecord;
 use crate::model::ParamVec;
 use crate::sim::ContinuationSim;
+use crate::telemetry::lifecycle::{self, ClientEvent, Event as LcEvent};
 
 pub struct FedAsync {
     /// Current global model.
@@ -81,9 +82,18 @@ impl Protocol for FedAsync {
         let (t_down, t_up) = (env.net.t_down(), env.net.t_up());
         let fabric = env.fabric.as_ref();
         let dist_span = crate::telemetry::span(crate::telemetry::Phase::Distribute);
+        let lc = lifecycle::active();
         self.fresh.clear();
         for c in env.clients.iter_mut() {
             if c.job.is_none() {
+                if lc {
+                    // No selection stage: an idle client's pull IS its
+                    // entry into the round.
+                    lifecycle::emit(
+                        ClientEvent::new(t, c.id, LcEvent::Distributed, 0.0)
+                            .version((t_i - 1).max(0) as usize),
+                    );
+                }
                 c.local_model.copy_from(&self.global);
                 c.version = t_i - 1;
                 c.base_version = t_i - 1;
@@ -147,10 +157,19 @@ impl Protocol for FedAsync {
         for c in env.clients.iter_mut() {
             c.picked_last = false;
         }
-        for (k, params, loss) in &self.updates {
+        for (i, (k, params, loss)) in self.updates.iter().enumerate() {
             let k = *k;
             let base_version = env.clients[k].job_base_version();
             let s = (t_i - 1 - base_version).max(0) as u32;
+            if lc {
+                // Applied the moment it arrives: merge time == arrival
+                // time (collect_updates preserves arrival order).
+                lifecycle::emit(
+                    ClientEvent::new(t, k, LcEvent::Merged, self.sim.arrivals[i].time)
+                        .version(base_version.max(0) as usize)
+                        .staleness(s),
+                );
+            }
             let alpha_s = (alpha / (1.0 + s as f64).powf(a_exp)) as f32;
             self.global.scale(1.0 - alpha_s);
             self.global.axpy(alpha_s, params);
@@ -178,7 +197,7 @@ impl Protocol for FedAsync {
         };
 
         let n_applied = self.sim.arrivals.len();
-        RoundRecord {
+        let rec = RoundRecord {
             round: t,
             round_len,
             t_dist,
@@ -204,7 +223,9 @@ impl Protocol for FedAsync {
                 train_loss_sum / n_applied as f64
             },
             eval,
-        }
+        };
+        super::observe_round(&rec);
+        rec
     }
 }
 

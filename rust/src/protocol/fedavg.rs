@@ -17,6 +17,7 @@ use crate::metrics::RoundRecord;
 use crate::model::ParamVec;
 use crate::net;
 use crate::sim::RoundSim;
+use crate::telemetry::lifecycle::{self, ClientEvent, Event as LcEvent};
 
 pub struct FedAvg {
     global: ParamVec,
@@ -76,8 +77,17 @@ impl Protocol for FedAvg {
         // Forced sync destroys any uncommitted partial work the selected
         // clients carried (futility accounting).
         let dist_span = crate::telemetry::span(crate::telemetry::Phase::Distribute);
+        let lc = lifecycle::active();
         let mut futility_wasted = 0.0;
         for &k in &self.selected {
+            if lc {
+                // Selection-ahead-of-training: pick and push happen
+                // together at round start.
+                lifecycle::emit(ClientEvent::new(t, k, LcEvent::Picked, 0.0));
+                lifecycle::emit(
+                    ClientEvent::new(t, k, LcEvent::Distributed, 0.0).version(t.saturating_sub(1)),
+                );
+            }
             futility_wasted += env.clients[k].pending_partial;
             env.clients[k].pending_partial = 0.0;
             env.clients[k].local_model.copy_from(&self.global);
@@ -118,6 +128,13 @@ impl Protocol for FedAvg {
         self.picked_mask.fill(false);
         for (k, params, _) in &self.updates {
             let c = &mut env.clients[*k];
+            if lc {
+                lifecycle::emit(
+                    ClientEvent::new(t, *k, LcEvent::Merged, round_len)
+                        .version(c.base_version.max(0) as usize)
+                        .staleness(0),
+                );
+            }
             c.local_model.copy_from(params);
             c.version = c.base_version + 1;
             c.committed_last = true;
@@ -138,7 +155,7 @@ impl Protocol for FedAvg {
             None
         };
 
-        RoundRecord {
+        let rec = RoundRecord {
             round: t,
             round_len,
             t_dist,
@@ -165,7 +182,9 @@ impl Protocol for FedAvg {
                 train_loss_sum / n_committed as f64
             },
             eval,
-        }
+        };
+        super::observe_round(&rec);
+        rec
     }
 }
 

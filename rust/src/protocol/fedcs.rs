@@ -16,6 +16,7 @@ use crate::metrics::RoundRecord;
 use crate::model::ParamVec;
 use crate::net;
 use crate::sim::RoundSim;
+use crate::telemetry::lifecycle::{self, ClientEvent, Event as LcEvent};
 
 /// Candidate pool size factor (resource requests per selection slot).
 const POOL_FACTOR: usize = 2;
@@ -114,8 +115,17 @@ impl Protocol for FedCs {
         let t_dist = env.t_dist(m_sync);
 
         let dist_span = crate::telemetry::span(crate::telemetry::Phase::Distribute);
+        let lc = lifecycle::active();
         let mut futility_wasted = 0.0;
         for &k in &self.selected {
+            if lc {
+                // Estimate-sorted pick and sync push both happen at
+                // round start (selection ahead of training).
+                lifecycle::emit(ClientEvent::new(t, k, LcEvent::Picked, 0.0));
+                lifecycle::emit(
+                    ClientEvent::new(t, k, LcEvent::Distributed, 0.0).version(t.saturating_sub(1)),
+                );
+            }
             futility_wasted += env.clients[k].pending_partial;
             env.clients[k].pending_partial = 0.0;
             env.clients[k].local_model.copy_from(&self.global);
@@ -149,6 +159,13 @@ impl Protocol for FedCs {
         self.picked_mask.fill(false);
         for (k, params, _) in &self.updates {
             let c = &mut env.clients[*k];
+            if lc {
+                lifecycle::emit(
+                    ClientEvent::new(t, *k, LcEvent::Merged, round_len)
+                        .version(c.base_version.max(0) as usize)
+                        .staleness(0),
+                );
+            }
             c.local_model.copy_from(params);
             c.version = c.base_version + 1;
             c.committed_last = true;
@@ -169,7 +186,7 @@ impl Protocol for FedCs {
             None
         };
 
-        RoundRecord {
+        let rec = RoundRecord {
             round: t,
             round_len,
             t_dist,
@@ -195,7 +212,9 @@ impl Protocol for FedCs {
                 train_loss_sum / n_committed as f64
             },
             eval,
-        }
+        };
+        super::observe_round(&rec);
+        rec
     }
 }
 

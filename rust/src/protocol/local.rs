@@ -83,7 +83,7 @@ impl Protocol for FullyLocal {
             None
         };
 
-        RoundRecord {
+        let rec = RoundRecord {
             round: t,
             round_len,
             t_dist: 0.0,
@@ -109,7 +109,9 @@ impl Protocol for FullyLocal {
                 train_loss_sum / n_finished as f64
             },
             eval,
-        }
+        };
+        super::observe_round(&rec);
+        rec
     }
 
     fn finalize(&mut self, env: &mut FedEnv) {

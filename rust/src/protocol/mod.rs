@@ -461,6 +461,21 @@ pub(crate) fn close_continuation_round(
     crate::net::round_length(t_dist, client_term, t_lim)
 }
 
+/// Record a finished round's sim-time distributions — round duration and
+/// every applied staleness — into the telemetry histograms. Called by
+/// each protocol server from its serial tail, just before the
+/// `RoundRecord` is returned, so recording order is deterministic.
+pub(crate) fn observe_round(rec: &RoundRecord) {
+    use crate::telemetry::hist::{self, HistMetric};
+    if !crate::telemetry::enabled() {
+        return;
+    }
+    hist::record_secs_as_ms(HistMetric::RoundDurationMs, rec.round_len);
+    for &s in &rec.staleness {
+        hist::record(HistMetric::StalenessRounds, s as u64);
+    }
+}
+
 /// FedAvg-style weighted aggregation over committed updates (client ids
 /// taken from the update tuples, which the callers build in committed
 /// order): out = Σ_{k∈S} n_k·w_k / Σ_{k∈S} n_k, written into a reused

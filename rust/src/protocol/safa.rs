@@ -24,6 +24,7 @@ use crate::config::ProtocolKind;
 use crate::metrics::RoundRecord;
 use crate::model::{weighted_sum_slices_into, ParamVec};
 use crate::sim::ContinuationSim;
+use crate::telemetry::lifecycle::{self, ClientEvent, Event as LcEvent};
 use crate::util::parallel;
 
 /// Ablation switches for the design-choice study (bench
@@ -223,13 +224,20 @@ impl Protocol for Safa {
             );
         }
         // Serial consolidation in client order (fixed f64 sum order).
+        let lc = lifecycle::active();
         let mut futility_wasted = 0.0f64;
         let mut m_sync = 0usize;
         scratch.jobs.clear();
-        for s in &scratch.sync_out {
+        for (k, s) in scratch.sync_out.iter().enumerate() {
             futility_wasted += s.wasted;
             if s.synced {
                 m_sync += 1;
+                if lc {
+                    lifecycle::emit(
+                        ClientEvent::new(t, k, LcEvent::Distributed, 0.0)
+                            .version((t_i - 1).max(0) as usize),
+                    );
+                }
             }
             scratch.jobs.push(s.remaining);
         }
@@ -288,24 +296,38 @@ impl Protocol for Safa {
             if close_time.is_none() {
                 if !self.opts.compensatory || !env.clients[k].picked_last {
                     scratch.picked.push(k);
+                    if lc {
+                        lifecycle::emit(ClientEvent::new(t, k, LcEvent::Picked, a.time));
+                    }
                     if scratch.picked.len() >= quota {
                         close_time = Some(a.time);
                     }
                 } else {
                     scratch.undrafted.push(k);
+                    if lc {
+                        lifecycle::emit(ClientEvent::new(t, k, LcEvent::Undrafted, a.time));
+                    }
                 }
             } else {
                 // Round already closed; late arrivals (within T_lim)
                 // still commit to the bypass (Fig. 1's undrafted
                 // clients).
                 scratch.undrafted.push(k);
+                if lc {
+                    lifecycle::emit(ClientEvent::new(t, k, LcEvent::Undrafted, a.time));
+                }
             }
         }
         // Quota unmet by new arrivals: fill from undrafted in arrival
-        // order (Alg. 1's post-deadline block).
+        // order (Alg. 1's post-deadline block). A filled client was
+        // traced undrafted first, then picked — exactly Alg. 1's order.
         let mut fill = 0;
         while scratch.picked.len() < quota && fill < scratch.undrafted.len() {
-            scratch.picked.push(scratch.undrafted[fill]);
+            let k = scratch.undrafted[fill];
+            scratch.picked.push(k);
+            if lc {
+                lifecycle::emit(ClientEvent::new(t, k, LcEvent::Picked, env.cfg.train.t_lim));
+            }
             fill += 1;
         }
         scratch.undrafted.drain(..fill);
@@ -331,7 +353,15 @@ impl Protocol for Safa {
         for &k in &scratch.picked {
             self.pending_bypass[k] = None; // bypassed entry overwritten
             let base = env.clients[k].job_base_version();
-            staleness.push((t_i - 1 - base).max(0) as u32);
+            let s = (t_i - 1 - base).max(0) as u32;
+            if lc {
+                lifecycle::emit(
+                    ClientEvent::new(t, k, LcEvent::Merged, round_len)
+                        .version(base.max(0) as usize)
+                        .staleness(s),
+                );
+            }
+            staleness.push(s);
         }
         for k in 0..m {
             if scratch.sync_out[k].deprecated && !scratch.picked_mask[k] {
@@ -342,6 +372,11 @@ impl Protocol for Safa {
         // one round later (and one round staler) than they committed.
         for k in 0..m {
             if let Some(s) = self.pending_bypass[k].take() {
+                if lc {
+                    lifecycle::emit(
+                        ClientEvent::new(t, k, LcEvent::Merged, round_len).staleness(s + 1),
+                    );
+                }
                 staleness.push(s + 1);
             }
         }
@@ -385,7 +420,15 @@ impl Protocol for Safa {
         // must precede the transition pass below, which consumes jobs.
         for &k in scratch.undrafted.iter().filter(|_| self.opts.bypass) {
             let base = env.clients[k].job_base_version();
-            self.pending_bypass[k] = Some((t_i - 1 - base).max(0) as u32);
+            let s = (t_i - 1 - base).max(0) as u32;
+            if lc {
+                lifecycle::emit(
+                    ClientEvent::new(t, k, LcEvent::Bypassed, round_len)
+                        .version(base.max(0) as usize)
+                        .staleness(s),
+                );
+            }
+            self.pending_bypass[k] = Some(s);
         }
 
         // --- Eq. 8 cache writes + client state transitions, fused into
@@ -431,7 +474,7 @@ impl Protocol for Safa {
             None
         };
 
-        RoundRecord {
+        let rec = RoundRecord {
             round: t,
             round_len,
             t_dist,
@@ -457,7 +500,9 @@ impl Protocol for Safa {
                 train_loss_sum / scratch.updates.len() as f64
             },
             eval,
-        }
+        };
+        super::observe_round(&rec);
+        rec
     }
 }
 

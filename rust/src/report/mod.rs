@@ -1,0 +1,623 @@
+//! `safa report` — offline analyzer for SAFA_TRACE v2 JSONL files.
+//!
+//! Parses a trace produced by `SAFA_TRACE=<path> safa run ...` (one JSON
+//! object per line: a `meta` header, per-round `round` records, and
+//! sampled per-client `client` lifecycle events) and renders the paper's
+//! observability axes (Figs. 9–13): round-duration percentiles, the
+//! applied-staleness CDF, an EUR / wasted-work breakdown per protocol,
+//! and per-client timelines — as fixed-width tables and as JSON.
+//!
+//! This module is strictly offline: it never touches the live telemetry
+//! statics, so it can analyze traces from other runs (or machines)
+//! without interference.
+
+use crate::error::{Result, SafaError};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One parsed `{"type":"round",...}` line.
+#[derive(Debug, Clone)]
+pub struct RoundLine {
+    pub protocol: String,
+    pub round: usize,
+    pub round_len: f64,
+    pub m_sync: f64,
+    pub picked: f64,
+    pub picked_crashed: f64,
+    pub committed: f64,
+    pub crashed: f64,
+    pub undrafted: f64,
+    pub futility_wasted: f64,
+    pub futility_total: f64,
+    pub staleness: Vec<u32>,
+}
+
+/// One parsed `{"type":"client",...}` lifecycle line.
+#[derive(Debug, Clone)]
+pub struct ClientLine {
+    pub round: usize,
+    pub client: usize,
+    pub event: String,
+    /// Simulated time within the round (None when the trace logged null).
+    pub t: Option<f64>,
+    pub version: Option<usize>,
+    pub staleness: Option<u32>,
+    pub reason: Option<String>,
+}
+
+/// A fully parsed trace file.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    /// Fleet size from the meta header (EUR's denominator).
+    pub m: Option<usize>,
+    /// Protocol named in the meta header (rounds may still carry their
+    /// own protocol tag — grouping always uses the per-round tag).
+    pub protocol: Option<String>,
+    pub task: Option<String>,
+    pub seed: Option<u64>,
+    /// Lifecycle sampling stride the run was recorded with.
+    pub sample: Option<u64>,
+    pub rounds: Vec<RoundLine>,
+    pub clients: Vec<ClientLine>,
+    /// Lines that were valid JSON but not a recognized v2 record (e.g.
+    /// v1 traces without a `type` key).
+    pub skipped: usize,
+}
+
+fn num(j: &Json, key: &str) -> f64 {
+    j.get(key).and_then(Json::as_f64).unwrap_or(0.0)
+}
+
+/// Parse a whole trace file's text. Malformed JSON is an error (a
+/// truncated trace is worth surfacing loudly); well-formed lines of
+/// unknown type are counted in [`Trace::skipped`].
+pub fn parse_trace(text: &str) -> Result<Trace> {
+    let mut trace = Trace::default();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| {
+            SafaError::Data(format!("trace line {}: invalid JSON ({e})", i + 1))
+        })?;
+        match j.get("type").and_then(Json::as_str) {
+            Some("meta") => {
+                trace.m = j.get("m").and_then(Json::as_usize);
+                trace.protocol = j.get("protocol").and_then(Json::as_str).map(str::to_string);
+                trace.task = j.get("task").and_then(Json::as_str).map(str::to_string);
+                trace.seed = j.get("seed").and_then(Json::as_f64).map(|s| s as u64);
+                trace.sample = j.get("sample").and_then(Json::as_f64).map(|s| s as u64);
+            }
+            Some("round") => {
+                let staleness = j
+                    .get("staleness")
+                    .and_then(Json::as_arr)
+                    .map(|a| {
+                        a.iter()
+                            .filter_map(Json::as_f64)
+                            .map(|s| s as u32)
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                trace.rounds.push(RoundLine {
+                    protocol: j
+                        .get("protocol")
+                        .and_then(Json::as_str)
+                        .unwrap_or("?")
+                        .to_string(),
+                    round: num(&j, "round") as usize,
+                    round_len: num(&j, "round_len"),
+                    m_sync: num(&j, "m_sync"),
+                    picked: num(&j, "picked"),
+                    picked_crashed: num(&j, "picked_crashed"),
+                    committed: num(&j, "committed"),
+                    crashed: num(&j, "crashed"),
+                    undrafted: num(&j, "undrafted"),
+                    futility_wasted: num(&j, "futility_wasted"),
+                    futility_total: num(&j, "futility_total"),
+                    staleness,
+                });
+            }
+            Some("client") => {
+                trace.clients.push(ClientLine {
+                    round: num(&j, "round") as usize,
+                    client: num(&j, "client") as usize,
+                    event: j
+                        .get("event")
+                        .and_then(Json::as_str)
+                        .unwrap_or("?")
+                        .to_string(),
+                    t: j.get("t").and_then(Json::as_f64),
+                    version: j.get("version").and_then(Json::as_usize),
+                    staleness: j.get("staleness").and_then(Json::as_f64).map(|s| s as u32),
+                    reason: j.get("reason").and_then(Json::as_str).map(str::to_string),
+                });
+            }
+            _ => trace.skipped += 1,
+        }
+    }
+    Ok(trace)
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice (exact — unlike
+/// the live log2-bucket histograms this analyzer holds every value).
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((q.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize).max(1);
+    sorted[rank.min(sorted.len()) - 1]
+}
+
+/// Per-protocol aggregates computed from the round lines.
+#[derive(Debug, Clone)]
+pub struct ProtocolSummary {
+    pub protocol: String,
+    pub rounds: usize,
+    pub round_len_sorted: Vec<f64>,
+    pub picked: f64,
+    pub picked_crashed: f64,
+    pub committed: f64,
+    pub crashed: f64,
+    pub undrafted: f64,
+    pub futility_wasted: f64,
+    pub futility_total: f64,
+    /// Applied-staleness histogram: index s counts merges s rounds stale.
+    pub staleness_hist: Vec<usize>,
+}
+
+impl ProtocolSummary {
+    /// Mean per-round EUR (Eq. 4) given the fleet size.
+    pub fn eur(&self, m: usize) -> f64 {
+        if self.rounds == 0 || m == 0 {
+            return 0.0;
+        }
+        (self.picked - self.picked_crashed) / (self.rounds * m) as f64
+    }
+
+    /// Wasted / attempted local work over the trace (futility, Eq. 11).
+    pub fn futility(&self) -> f64 {
+        if self.futility_total > 0.0 {
+            self.futility_wasted / self.futility_total
+        } else {
+            0.0
+        }
+    }
+
+    pub fn mean_round_len(&self) -> f64 {
+        if self.round_len_sorted.is_empty() {
+            return 0.0;
+        }
+        self.round_len_sorted.iter().sum::<f64>() / self.round_len_sorted.len() as f64
+    }
+
+    /// Staleness CDF: fraction of merges with staleness <= s, for each
+    /// s up to the maximum seen.
+    pub fn staleness_cdf(&self) -> Vec<f64> {
+        let total: usize = self.staleness_hist.iter().sum();
+        if total == 0 {
+            return Vec::new();
+        }
+        let mut acc = 0usize;
+        self.staleness_hist
+            .iter()
+            .map(|&c| {
+                acc += c;
+                acc as f64 / total as f64
+            })
+            .collect()
+    }
+}
+
+/// Group the trace's round lines by protocol (insertion order = first
+/// appearance, so single-protocol traces stay single-row).
+pub fn summarize(trace: &Trace) -> Vec<ProtocolSummary> {
+    let mut order: Vec<String> = Vec::new();
+    let mut by_proto: BTreeMap<String, ProtocolSummary> = BTreeMap::new();
+    for r in &trace.rounds {
+        let s = by_proto.entry(r.protocol.clone()).or_insert_with(|| {
+            order.push(r.protocol.clone());
+            ProtocolSummary {
+                protocol: r.protocol.clone(),
+                rounds: 0,
+                round_len_sorted: Vec::new(),
+                picked: 0.0,
+                picked_crashed: 0.0,
+                committed: 0.0,
+                crashed: 0.0,
+                undrafted: 0.0,
+                futility_wasted: 0.0,
+                futility_total: 0.0,
+                staleness_hist: Vec::new(),
+            }
+        });
+        s.rounds += 1;
+        s.round_len_sorted.push(r.round_len);
+        s.picked += r.picked;
+        s.picked_crashed += r.picked_crashed;
+        s.committed += r.committed;
+        s.crashed += r.crashed;
+        s.undrafted += r.undrafted;
+        s.futility_wasted += r.futility_wasted;
+        s.futility_total += r.futility_total;
+        for &st in &r.staleness {
+            let st = st as usize;
+            if s.staleness_hist.len() <= st {
+                s.staleness_hist.resize(st + 1, 0);
+            }
+            s.staleness_hist[st] += 1;
+        }
+    }
+    let mut out: Vec<ProtocolSummary> = Vec::with_capacity(order.len());
+    for name in order {
+        let mut s = by_proto.remove(&name).unwrap();
+        s.round_len_sorted
+            .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        out.push(s);
+    }
+    out
+}
+
+/// The fleet size to use for EUR: the meta header when present, else the
+/// largest per-round participant count (committed + crashed) as a lower
+/// bound — reported traces always carry meta, this is for hand-built
+/// fixtures.
+pub fn fleet_size(trace: &Trace) -> usize {
+    trace.m.unwrap_or_else(|| {
+        trace
+            .rounds
+            .iter()
+            .map(|r| (r.committed + r.crashed) as usize)
+            .max()
+            .unwrap_or(0)
+    })
+}
+
+/// Round-duration percentile table (Fig. 9's axis).
+pub fn render_durations(summaries: &[ProtocolSummary]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "== round duration (sim-seconds) ==");
+    let _ = writeln!(
+        out,
+        "{:<10} {:>7} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "protocol", "rounds", "mean", "p50", "p90", "p99", "max"
+    );
+    for s in summaries {
+        let v = &s.round_len_sorted;
+        let _ = writeln!(
+            out,
+            "{:<10} {:>7} {:>10.2} {:>10.2} {:>10.2} {:>10.2} {:>10.2}",
+            s.protocol,
+            s.rounds,
+            s.mean_round_len(),
+            percentile(v, 0.50),
+            percentile(v, 0.90),
+            percentile(v, 0.99),
+            v.last().copied().unwrap_or(0.0),
+        );
+    }
+    out
+}
+
+/// EUR / wasted-work breakdown per protocol (Figs. 10–13's axes).
+pub fn render_effectiveness(summaries: &[ProtocolSummary], m: usize) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "== effectiveness (m = {m}) ==");
+    let _ = writeln!(
+        out,
+        "{:<10} {:>8} {:>10} {:>10} {:>10} {:>12} {:>12} {:>10}",
+        "protocol", "eur", "committed", "crashed", "undrafted", "wasted", "attempted", "futility"
+    );
+    for s in summaries {
+        let _ = writeln!(
+            out,
+            "{:<10} {:>8.3} {:>10} {:>10} {:>10} {:>12.2} {:>12.2} {:>9.1}%",
+            s.protocol,
+            s.eur(m),
+            s.committed as u64,
+            s.crashed as u64,
+            s.undrafted as u64,
+            s.futility_wasted,
+            s.futility_total,
+            s.futility() * 100.0,
+        );
+    }
+    out
+}
+
+/// Staleness CDF table: one row per staleness value, one column per
+/// protocol that merged at least one update.
+pub fn render_staleness_cdf(summaries: &[ProtocolSummary]) -> String {
+    let cdfs: Vec<(&str, Vec<f64>)> = summaries
+        .iter()
+        .map(|s| (s.protocol.as_str(), s.staleness_cdf()))
+        .filter(|(_, c)| !c.is_empty())
+        .collect();
+    let mut out = String::new();
+    let _ = writeln!(out, "== applied-staleness CDF  P(s <= x) ==");
+    if cdfs.is_empty() {
+        let _ = writeln!(out, "(no merged updates in trace)");
+        return out;
+    }
+    let mut header = format!("{:<10}", "s");
+    for (name, _) in &cdfs {
+        let _ = write!(header, " {name:>10}");
+    }
+    let _ = writeln!(out, "{header}");
+    let depth = cdfs.iter().map(|(_, c)| c.len()).max().unwrap_or(0);
+    for s in 0..depth {
+        let mut row = format!("{s:<10}");
+        for (_, cdf) in &cdfs {
+            // A CDF saturates at 1 past its last bucket.
+            let v = cdf.get(s).copied().unwrap_or(1.0);
+            let _ = write!(row, " {v:>10.3}");
+        }
+        let _ = writeln!(out, "{row}");
+    }
+    out
+}
+
+/// Per-client timeline: every lifecycle event for one client, in trace
+/// order (which is round order, then within-round emission order).
+pub fn render_timeline(trace: &Trace, client: usize) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "== client {client} timeline ==");
+    let _ = writeln!(
+        out,
+        "{:<7} {:<12} {:>10} {:>8} {:>9} {:<10}",
+        "round", "event", "t", "version", "stale", "reason"
+    );
+    let mut n = 0;
+    for c in trace.clients.iter().filter(|c| c.client == client) {
+        n += 1;
+        let t = c
+            .t
+            .map(|t| format!("{t:.2}"))
+            .unwrap_or_else(|| "-".to_string());
+        let v = c
+            .version
+            .map(|v| v.to_string())
+            .unwrap_or_else(|| "-".to_string());
+        let s = c
+            .staleness
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| "-".to_string());
+        let _ = writeln!(
+            out,
+            "{:<7} {:<12} {:>10} {:>8} {:>9} {:<10}",
+            c.round,
+            c.event,
+            t,
+            v,
+            s,
+            c.reason.as_deref().unwrap_or("-"),
+        );
+    }
+    if n == 0 {
+        let _ = writeln!(
+            out,
+            "(no events for client {client} — check SAFA_TRACE_SAMPLE stride)"
+        );
+    }
+    out
+}
+
+/// Lifecycle event counts across all sampled clients.
+pub fn render_event_counts(trace: &Trace) -> String {
+    let mut counts: BTreeMap<&str, usize> = BTreeMap::new();
+    for c in &trace.clients {
+        *counts.entry(c.event.as_str()).or_insert(0) += 1;
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "== lifecycle events ==");
+    if counts.is_empty() {
+        let _ = writeln!(out, "(no client lines in trace)");
+        return out;
+    }
+    let _ = writeln!(out, "{:<14} {:>10}", "event", "count");
+    for (event, count) in counts {
+        let _ = writeln!(out, "{event:<14} {count:>10}");
+    }
+    out
+}
+
+/// The whole report as one JSON document (`--json` output).
+pub fn report_json(trace: &Trace) -> Json {
+    let m = fleet_size(trace);
+    let summaries = summarize(trace);
+    let mut o = Json::obj();
+    let mut meta = Json::obj();
+    meta.set("m", Json::Num(m as f64));
+    if let Some(p) = &trace.protocol {
+        meta.set("protocol", Json::Str(p.clone()));
+    }
+    if let Some(t) = &trace.task {
+        meta.set("task", Json::Str(t.clone()));
+    }
+    if let Some(s) = trace.seed {
+        meta.set("seed", Json::Num(s as f64));
+    }
+    if let Some(s) = trace.sample {
+        meta.set("sample", Json::Num(s as f64));
+    }
+    meta.set("round_lines", Json::Num(trace.rounds.len() as f64));
+    meta.set("client_lines", Json::Num(trace.clients.len() as f64));
+    meta.set("skipped_lines", Json::Num(trace.skipped as f64));
+    o.set("meta", meta);
+    let mut protos = Vec::new();
+    for s in &summaries {
+        let mut p = Json::obj();
+        p.set("protocol", Json::Str(s.protocol.clone()));
+        p.set("rounds", Json::Num(s.rounds as f64));
+        let v = &s.round_len_sorted;
+        let mut dur = Json::obj();
+        dur.set("mean", Json::Num(s.mean_round_len()));
+        dur.set("p50", Json::Num(percentile(v, 0.50)));
+        dur.set("p90", Json::Num(percentile(v, 0.90)));
+        dur.set("p99", Json::Num(percentile(v, 0.99)));
+        dur.set("max", Json::Num(v.last().copied().unwrap_or(0.0)));
+        p.set("round_duration", dur);
+        p.set("eur", Json::Num(s.eur(m)));
+        p.set("committed", Json::Num(s.committed));
+        p.set("crashed", Json::Num(s.crashed));
+        p.set("undrafted", Json::Num(s.undrafted));
+        p.set("futility_wasted", Json::Num(s.futility_wasted));
+        p.set("futility_total", Json::Num(s.futility_total));
+        p.set("futility", Json::Num(s.futility()));
+        p.set(
+            "staleness_cdf",
+            Json::Arr(s.staleness_cdf().into_iter().map(Json::Num).collect()),
+        );
+        protos.push(p);
+    }
+    o.set("protocols", Json::Arr(protos));
+    let mut counts: BTreeMap<String, usize> = BTreeMap::new();
+    for c in &trace.clients {
+        *counts.entry(c.event.clone()).or_insert(0) += 1;
+    }
+    let mut ev = Json::obj();
+    for (event, count) in counts {
+        ev.set(&event, Json::Num(count as f64));
+    }
+    o.set("events", ev);
+    o
+}
+
+/// The full fixed-width report (everything except per-client timelines,
+/// which are opt-in via `--client`).
+pub fn render_report(trace: &Trace) -> String {
+    let m = fleet_size(trace);
+    let summaries = summarize(trace);
+    let mut out = String::new();
+    if let (Some(p), Some(t)) = (&trace.protocol, &trace.task) {
+        let _ = writeln!(
+            out,
+            "trace: protocol={p} task={t} m={m} rounds={} client_lines={} (sample stride {})",
+            trace.rounds.len(),
+            trace.clients.len(),
+            trace.sample.unwrap_or(1),
+        );
+    }
+    if trace.skipped > 0 {
+        let _ = writeln!(out, "note: {} unrecognized line(s) skipped", trace.skipped);
+    }
+    let _ = writeln!(out);
+    out.push_str(&render_durations(&summaries));
+    let _ = writeln!(out);
+    out.push_str(&render_effectiveness(&summaries, m));
+    let _ = writeln!(out);
+    out.push_str(&render_staleness_cdf(&summaries));
+    let _ = writeln!(out);
+    out.push_str(&render_event_counts(trace));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FIXTURE: &str = concat!(
+        "{\"type\":\"meta\",\"v\":2,\"schema\":\"safa-trace\",\"protocol\":\"SAFA\",",
+        "\"task\":\"regression\",\"m\":4,\"rounds\":2,\"seed\":1,\"sample\":1}\n",
+        "{\"type\":\"round\",\"v\":2,\"protocol\":\"SAFA\",\"round\":1,\"round_len\":10.0,",
+        "\"m_sync\":4,\"picked\":3,\"picked_crashed\":0,\"committed\":3,\"crashed\":1,",
+        "\"undrafted\":0,\"futility_wasted\":0.0,\"futility_total\":4.0,\"staleness\":[0,0,1]}\n",
+        "{\"type\":\"round\",\"v\":2,\"protocol\":\"SAFA\",\"round\":2,\"round_len\":30.0,",
+        "\"m_sync\":2,\"picked\":2,\"picked_crashed\":0,\"committed\":2,\"crashed\":2,",
+        "\"undrafted\":1,\"futility_wasted\":1.0,\"futility_total\":4.0,\"staleness\":[0,2]}\n",
+        "{\"type\":\"client\",\"v\":2,\"round\":1,\"client\":0,\"event\":\"picked\",\"t\":4.5}\n",
+        "{\"type\":\"client\",\"v\":2,\"round\":1,\"client\":0,\"event\":\"merged\",\"t\":10.0,",
+        "\"version\":0,\"staleness\":0}\n",
+        "{\"type\":\"client\",\"v\":2,\"round\":2,\"client\":1,\"event\":\"crashed\",\"t\":null,",
+        "\"reason\":\"crash\"}\n",
+    );
+
+    #[test]
+    fn parses_all_line_types() {
+        let trace = parse_trace(FIXTURE).unwrap();
+        assert_eq!(trace.m, Some(4));
+        assert_eq!(trace.protocol.as_deref(), Some("SAFA"));
+        assert_eq!(trace.rounds.len(), 2);
+        assert_eq!(trace.clients.len(), 3);
+        assert_eq!(trace.skipped, 0);
+        assert_eq!(trace.clients[2].t, None);
+        assert_eq!(trace.clients[2].reason.as_deref(), Some("crash"));
+    }
+
+    #[test]
+    fn unknown_lines_are_skipped_not_fatal() {
+        let trace = parse_trace("{\"round\":1}\n{\"type\":\"future\"}\n").unwrap();
+        assert_eq!(trace.skipped, 2);
+        assert!(parse_trace("not json\n").is_err());
+    }
+
+    #[test]
+    fn summary_matches_hand_computation() {
+        let trace = parse_trace(FIXTURE).unwrap();
+        let s = summarize(&trace);
+        assert_eq!(s.len(), 1);
+        let s = &s[0];
+        assert_eq!(s.rounds, 2);
+        // EUR = (3 + 2) / (2 rounds * m=4) = 0.625.
+        assert!((s.eur(4) - 0.625).abs() < 1e-12);
+        // Futility = 1.0 wasted / 8.0 attempted.
+        assert!((s.futility() - 0.125).abs() < 1e-12);
+        assert_eq!(s.staleness_hist, vec![3, 1, 1]);
+        let cdf = s.staleness_cdf();
+        assert!((cdf[0] - 0.6).abs() < 1e-12);
+        assert!((cdf[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_are_nearest_rank() {
+        let v = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0];
+        assert_eq!(percentile(&v, 0.50), 5.0);
+        assert_eq!(percentile(&v, 0.90), 9.0);
+        assert_eq!(percentile(&v, 0.99), 10.0);
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn tables_render_expected_cells() {
+        let trace = parse_trace(FIXTURE).unwrap();
+        let s = summarize(&trace);
+        let dur = render_durations(&s);
+        assert!(dur.contains("SAFA"), "{dur}");
+        assert!(dur.contains("20.00"), "mean of 10 and 30:\n{dur}");
+        let eff = render_effectiveness(&s, fleet_size(&trace));
+        assert!(eff.contains("0.625"), "{eff}");
+        assert!(eff.contains("12.5%"), "{eff}");
+        let cdf = render_staleness_cdf(&s);
+        assert!(cdf.contains("0.600"), "{cdf}");
+        let tl = render_timeline(&trace, 0);
+        assert!(tl.contains("picked"), "{tl}");
+        assert!(tl.contains("merged"), "{tl}");
+        let missing = render_timeline(&trace, 3);
+        assert!(missing.contains("no events"), "{missing}");
+    }
+
+    #[test]
+    fn json_report_has_all_sections() {
+        let trace = parse_trace(FIXTURE).unwrap();
+        let j = report_json(&trace);
+        assert_eq!(
+            j.get("meta").and_then(|m| m.get("m")).and_then(Json::as_f64),
+            Some(4.0)
+        );
+        let protos = j.get("protocols").and_then(Json::as_arr).unwrap();
+        assert_eq!(protos.len(), 1);
+        assert!(protos[0].get("round_duration").is_some());
+        assert!(protos[0].get("staleness_cdf").is_some());
+        assert_eq!(
+            j.get("events")
+                .and_then(|e| e.get("picked"))
+                .and_then(Json::as_f64),
+            Some(1.0)
+        );
+        // Round-trips through the serializer.
+        assert!(Json::parse(&j.to_string_compact()).is_ok());
+    }
+}

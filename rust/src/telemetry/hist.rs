@@ -1,0 +1,358 @@
+//! Zero-dependency log2-bucket histograms, per-worker sharded like the
+//! span shards in the parent module.
+//!
+//! Every recorded value lands in bucket `floor(log2(v))` (values ≤ 1 in
+//! bucket 0), so 48 buckets cover the full `u64` range a nanosecond span
+//! or millisecond sim-time quantity can take. Recording is one gated
+//! relaxed-atomic add — no locks, no allocation — and merging happens
+//! only in serial snapshot code, so histograms inherit the telemetry
+//! layer's contract: alloc-free at steady state and bit-for-bit neutral
+//! to simulation results at any thread width.
+//!
+//! Percentiles are read from the merged buckets using the bucket
+//! midpoint (`1.5 · 2^i`) as the representative value: a p99 is exact to
+//! within its power-of-two bucket, which is the right fidelity for
+//! latency tails and costs nothing to maintain.
+
+use super::Phase;
+use crate::util::json::Json;
+use crate::util::parallel::{self, MAX_THREADS};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+/// log2 buckets per histogram: bucket `i` holds values in
+/// `[2^i, 2^(i+1))`, bucket 0 additionally holds 0 and 1.
+pub const NUM_BUCKETS: usize = 48;
+
+/// Number of [`HistMetric`] variants (shard slot count).
+pub const NUM_HISTS: usize = 12;
+
+/// Quantities tracked as distributions. The first eight mirror
+/// [`Phase::ALL`] (span durations in wall-clock ns, fed automatically by
+/// the span recorder); the rest are sim-time quantities recorded at
+/// their serial emission points.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HistMetric {
+    /// Span durations (ns) for [`Phase::Distribute`].
+    DistributeNs,
+    /// Span durations (ns) for [`Phase::Select`].
+    SelectNs,
+    /// Span durations (ns) for [`Phase::LocalUpdate`].
+    LocalUpdateNs,
+    /// Span durations (ns) for [`Phase::Aggregate`].
+    AggregateNs,
+    /// Span durations (ns) for [`Phase::CacheRefresh`].
+    CacheRefreshNs,
+    /// Span durations (ns) for [`Phase::EventPop`].
+    EventPopNs,
+    /// Span durations (ns) for [`Phase::ForkDispatch`].
+    ForkDispatchNs,
+    /// Span durations (ns) for [`Phase::TransferWait`].
+    TransferWaitNs,
+    /// Simulated round length (ms) — one sample per completed round.
+    RoundDurationMs,
+    /// Applied staleness (rounds) — one sample per merged update.
+    StalenessRounds,
+    /// Per-client online dwell inside a round window (sim ms).
+    ClientDwellMs,
+    /// Per-transfer network-fabric distribution wait (sim ms).
+    TransferWaitMs,
+}
+
+impl HistMetric {
+    /// Every metric, in shard-slot order (first eight = [`Phase::ALL`]).
+    pub const ALL: [HistMetric; NUM_HISTS] = [
+        HistMetric::DistributeNs,
+        HistMetric::SelectNs,
+        HistMetric::LocalUpdateNs,
+        HistMetric::AggregateNs,
+        HistMetric::CacheRefreshNs,
+        HistMetric::EventPopNs,
+        HistMetric::ForkDispatchNs,
+        HistMetric::TransferWaitNs,
+        HistMetric::RoundDurationMs,
+        HistMetric::StalenessRounds,
+        HistMetric::ClientDwellMs,
+        HistMetric::TransferWaitMs,
+    ];
+
+    /// Shard slot of this metric.
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+
+    /// The span-duration metric for `phase`.
+    pub fn from_phase(phase: Phase) -> HistMetric {
+        HistMetric::ALL[phase.idx()]
+    }
+
+    /// Stable snake_case name (JSON keys, table headers).
+    pub fn name(self) -> &'static str {
+        match self {
+            HistMetric::DistributeNs => "distribute_ns",
+            HistMetric::SelectNs => "select_ns",
+            HistMetric::LocalUpdateNs => "local_update_ns",
+            HistMetric::AggregateNs => "aggregate_ns",
+            HistMetric::CacheRefreshNs => "cache_refresh_ns",
+            HistMetric::EventPopNs => "event_pop_ns",
+            HistMetric::ForkDispatchNs => "fork_dispatch_ns",
+            HistMetric::TransferWaitNs => "transfer_wait_ns",
+            HistMetric::RoundDurationMs => "round_duration_ms",
+            HistMetric::StalenessRounds => "staleness_rounds",
+            HistMetric::ClientDwellMs => "client_dwell_ms",
+            HistMetric::TransferWaitMs => "transfer_wait_ms",
+        }
+    }
+}
+
+/// Bucket index for `v`: 0 for `v ≤ 1`, else `floor(log2(v))` clamped to
+/// the last bucket.
+pub fn bucket_of(v: u64) -> usize {
+    if v <= 1 {
+        0
+    } else {
+        ((63 - v.leading_zeros()) as usize).min(NUM_BUCKETS - 1)
+    }
+}
+
+/// Representative value of bucket `i` (its midpoint, `1.5 · 2^i`;
+/// bucket 0 reports 1).
+pub fn bucket_mid(i: usize) -> u64 {
+    if i == 0 {
+        1
+    } else {
+        (1u64 << i) + (1u64 << (i - 1))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-worker shards.
+// ---------------------------------------------------------------------------
+
+/// One worker's histogram buckets, cache-line aligned like the span
+/// shards so concurrent recorders never share a line boundary.
+#[repr(align(64))]
+struct HistShard {
+    buckets: [[AtomicU64; NUM_BUCKETS]; NUM_HISTS],
+}
+
+impl HistShard {
+    const fn new() -> HistShard {
+        HistShard {
+            buckets: [const { [const { AtomicU64::new(0) }; NUM_BUCKETS] }; NUM_HISTS],
+        }
+    }
+}
+
+static HIST_SHARDS: [HistShard; MAX_THREADS] = [const { HistShard::new() }; MAX_THREADS];
+
+fn shard() -> &'static HistShard {
+    &HIST_SHARDS[parallel::worker_id() % MAX_THREADS]
+}
+
+/// Record one sample (no-op while recording is off).
+pub fn record(metric: HistMetric, value: u64) {
+    if super::enabled() {
+        bump(metric, value);
+    }
+}
+
+/// Record a sim-time quantity given in seconds, bucketed in integer
+/// milliseconds. Non-finite and negative values land in bucket 0.
+pub fn record_secs_as_ms(metric: HistMetric, secs: f64) {
+    if super::enabled() {
+        let ms = if secs.is_finite() && secs > 0.0 {
+            (secs * 1e3) as u64
+        } else {
+            0
+        };
+        bump(metric, ms);
+    }
+}
+
+/// Unconditional sample add (the gated entry points are [`record`] and
+/// [`record_secs_as_ms`]).
+pub(crate) fn bump(metric: HistMetric, value: u64) {
+    shard().buckets[metric.idx()][bucket_of(value)].fetch_add(1, Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Merged histograms (carried inside `telemetry::Snapshot`).
+// ---------------------------------------------------------------------------
+
+/// A merged, point-in-time copy of every histogram shard. Fixed-size and
+/// `Copy`, so snapshot deltas stay safe inside alloc-free windows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Hists {
+    pub buckets: [[u64; NUM_BUCKETS]; NUM_HISTS],
+}
+
+impl Default for Hists {
+    fn default() -> Self {
+        Hists {
+            buckets: [[0; NUM_BUCKETS]; NUM_HISTS],
+        }
+    }
+}
+
+impl Hists {
+    /// Field-wise `self - earlier` (wrapping, matching `Snapshot::since`).
+    pub fn since(&self, earlier: &Hists) -> Hists {
+        let mut d = Hists::default();
+        for h in 0..NUM_HISTS {
+            for b in 0..NUM_BUCKETS {
+                d.buckets[h][b] = self.buckets[h][b].wrapping_sub(earlier.buckets[h][b]);
+            }
+        }
+        d
+    }
+
+    /// Total samples recorded for `metric`.
+    pub fn count(&self, metric: HistMetric) -> u64 {
+        self.buckets[metric.idx()].iter().sum()
+    }
+
+    /// Bucket-midpoint percentile for `metric` at quantile `q` in
+    /// `[0, 1]`; 0 when the histogram is empty.
+    pub fn percentile(&self, metric: HistMetric, q: f64) -> u64 {
+        let row = &self.buckets[metric.idx()];
+        let total: u64 = row.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in row.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return bucket_mid(i);
+            }
+        }
+        bucket_mid(NUM_BUCKETS - 1)
+    }
+
+    /// `{metric: {count, p50, p90, p99}}` for every metric — the
+    /// `hists` object of the JSONL trace.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        for m in HistMetric::ALL {
+            let mut e = Json::obj();
+            e.set("count", Json::Num(self.count(m) as f64));
+            e.set("p50", Json::Num(self.percentile(m, 0.50) as f64));
+            e.set("p90", Json::Num(self.percentile(m, 0.90) as f64));
+            e.set("p99", Json::Num(self.percentile(m, 0.99) as f64));
+            o.set(m.name(), e);
+        }
+        o
+    }
+}
+
+/// Merge every shard (serial, fixed order).
+pub(crate) fn merged() -> Hists {
+    let mut out = Hists::default();
+    for shard in HIST_SHARDS.iter() {
+        for h in 0..NUM_HISTS {
+            for b in 0..NUM_BUCKETS {
+                out.buckets[h][b] =
+                    out.buckets[h][b].wrapping_add(shard.buckets[h][b].load(Relaxed));
+            }
+        }
+    }
+    out
+}
+
+/// Zero every histogram shard (called from `telemetry::reset`).
+pub(crate) fn reset() {
+    for shard in HIST_SHARDS.iter() {
+        for row in shard.buckets.iter() {
+            for a in row.iter() {
+                a.store(0, Relaxed);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_mapping_is_log2() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(1023), 9);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(u64::MAX), NUM_BUCKETS - 1);
+        assert_eq!(bucket_mid(0), 1);
+        assert_eq!(bucket_mid(1), 3);
+        assert_eq!(bucket_mid(10), 1536);
+    }
+
+    #[test]
+    fn metric_table_is_consistent_and_mirrors_phases() {
+        for (i, m) in HistMetric::ALL.iter().enumerate() {
+            assert_eq!(m.idx(), i, "{}", m.name());
+        }
+        for p in Phase::ALL {
+            let m = HistMetric::from_phase(p);
+            assert!(
+                m.name().starts_with(p.name()),
+                "{} !~ {}",
+                m.name(),
+                p.name()
+            );
+        }
+    }
+
+    #[test]
+    fn percentiles_walk_the_buckets() {
+        let mut h = Hists::default();
+        // 90 samples at value 1, 9 at ~2^10, 1 at ~2^20.
+        h.buckets[HistMetric::RoundDurationMs.idx()][0] = 90;
+        h.buckets[HistMetric::RoundDurationMs.idx()][10] = 9;
+        h.buckets[HistMetric::RoundDurationMs.idx()][20] = 1;
+        assert_eq!(h.count(HistMetric::RoundDurationMs), 100);
+        assert_eq!(h.percentile(HistMetric::RoundDurationMs, 0.50), 1);
+        assert_eq!(h.percentile(HistMetric::RoundDurationMs, 0.95), bucket_mid(10));
+        assert_eq!(h.percentile(HistMetric::RoundDurationMs, 0.999), bucket_mid(20));
+        // Empty metric reports 0 everywhere.
+        assert_eq!(h.percentile(HistMetric::ClientDwellMs, 0.99), 0);
+        assert_eq!(h.count(HistMetric::ClientDwellMs), 0);
+    }
+
+    #[test]
+    fn since_subtracts_bucketwise() {
+        let mut a = Hists::default();
+        let mut b = Hists::default();
+        a.buckets[0][0] = 3;
+        b.buckets[0][0] = 10;
+        b.buckets[2][5] = 4;
+        let d = b.since(&a);
+        assert_eq!(d.buckets[0][0], 7);
+        assert_eq!(d.buckets[2][5], 4);
+    }
+
+    #[test]
+    fn json_names_every_metric() {
+        let mut h = Hists::default();
+        h.buckets[HistMetric::StalenessRounds.idx()][2] = 5;
+        let j = h.to_json();
+        for m in HistMetric::ALL {
+            let e = j.get(m.name()).unwrap();
+            assert!(e.get("count").is_some());
+            assert!(e.get("p50").is_some());
+            assert!(e.get("p90").is_some());
+            assert!(e.get("p99").is_some());
+        }
+        assert_eq!(
+            j.get("staleness_rounds")
+                .unwrap()
+                .get("p99")
+                .unwrap()
+                .as_f64(),
+            Some(bucket_mid(2) as f64)
+        );
+    }
+}

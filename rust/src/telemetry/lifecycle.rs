@@ -1,0 +1,276 @@
+//! Per-client lifecycle event stream: typed `{"type":"client",...}`
+//! lines in the SAFA_TRACE v2 JSONL schema.
+//!
+//! Each event tags one client with the round, the event kind, the
+//! simulated time it happened at, and (where meaningful) the model
+//! version it acted on, the applied staleness, or a failure reason.
+//! Events are emitted **only from serial sections** of the engine and
+//! the protocol servers — never from parallel workers — so line order
+//! is deterministic and emission can never perturb reductions or RNG.
+//!
+//! The stream shares the trace destination and failure accounting with
+//! [`super::trace_line`], but formats directly into the locked
+//! `BufWriter` with `core::fmt` (stack buffers only): with a trace
+//! active, per-client events still allocate nothing, which keeps
+//! `tests/alloc_free.rs` green with lifecycle recording ON.
+//!
+//! `SAFA_TRACE_SAMPLE=k` keeps m = 10k+ traces bounded: only clients
+//! with `id % k == 0` emit lifecycle events (round lines are never
+//! sampled away). Strict-env convention: garbage values warn once and
+//! fall back to 1 (every client).
+
+use std::io::Write;
+use std::sync::OnceLock;
+
+/// Lifecycle event kinds, in protocol order of a client's round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    /// Selected by the server (CFCFM pick, random draw, estimate sort).
+    Picked,
+    /// Received the global model (sync push under the lag-tolerant Eq. 3).
+    Distributed,
+    /// Began local training (fresh-job engine paths).
+    TrainStart,
+    /// Finished local training.
+    TrainEnd,
+    /// Update arrived at the server.
+    Upload,
+    /// Update merged into the global model (with its applied staleness).
+    Merged,
+    /// Update parked in the bypass set (SAFA three-step aggregation).
+    Bypassed,
+    /// Crashed / went offline before completing the round.
+    Crashed,
+    /// Arrived but not drafted this round (SAFA CFCFM overflow).
+    Undrafted,
+}
+
+impl Event {
+    /// Stable snake_case name (the `event` key of a client line).
+    pub fn name(self) -> &'static str {
+        match self {
+            Event::Picked => "picked",
+            Event::Distributed => "distributed",
+            Event::TrainStart => "train_start",
+            Event::TrainEnd => "train_end",
+            Event::Upload => "upload",
+            Event::Merged => "merged",
+            Event::Bypassed => "bypassed",
+            Event::Crashed => "crashed",
+            Event::Undrafted => "undrafted",
+        }
+    }
+}
+
+/// One lifecycle event, builder-style so call sites only name the
+/// fields that apply.
+#[derive(Debug, Clone, Copy)]
+pub struct ClientEvent {
+    pub round: usize,
+    pub client: usize,
+    pub event: Event,
+    /// Simulated time (seconds within the round window).
+    pub t: f64,
+    pub version: Option<usize>,
+    pub staleness: Option<u32>,
+    pub reason: Option<&'static str>,
+}
+
+impl ClientEvent {
+    pub fn new(round: usize, client: usize, event: Event, t: f64) -> ClientEvent {
+        ClientEvent {
+            round,
+            client,
+            event,
+            t,
+            version: None,
+            staleness: None,
+            reason: None,
+        }
+    }
+
+    pub fn version(mut self, v: usize) -> ClientEvent {
+        self.version = Some(v);
+        self
+    }
+
+    pub fn staleness(mut self, s: u32) -> ClientEvent {
+        self.staleness = Some(s);
+        self
+    }
+
+    pub fn reason(mut self, r: &'static str) -> ClientEvent {
+        self.reason = Some(r);
+        self
+    }
+}
+
+/// Is lifecycle emission live? Call sites check this once per serial
+/// section and skip event construction entirely when no trace is
+/// configured.
+pub fn active() -> bool {
+    super::trace_active()
+}
+
+// ---------------------------------------------------------------------------
+// Sampling (SAFA_TRACE_SAMPLE=k).
+// ---------------------------------------------------------------------------
+
+static SAMPLE: OnceLock<u64> = OnceLock::new();
+
+/// The sampling stride: only clients with `id % k == 0` emit. First
+/// read consumes `SAFA_TRACE_SAMPLE`; afterwards it is pinned.
+pub fn sample_stride() -> u64 {
+    *SAMPLE.get_or_init(|| match std::env::var("SAFA_TRACE_SAMPLE") {
+        Err(_) => 1,
+        Ok(v) => match parse_stride(&v) {
+            Some(k) => k,
+            None => {
+                crate::log_warn!(
+                    "SAFA_TRACE_SAMPLE={v:?}: expected a positive integer stride; \
+                     sampling every client"
+                );
+                1
+            }
+        },
+    })
+}
+
+/// Pin the sampling stride from code, consuming the one-shot
+/// environment read (first call wins, like [`super::set_enabled`]).
+pub fn set_sample_stride(k: u64) {
+    SAMPLE.get_or_init(|| k.max(1));
+}
+
+fn parse_stride(v: &str) -> Option<u64> {
+    match v.trim().parse::<u64>() {
+        Ok(k) if k >= 1 => Some(k),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Emission.
+// ---------------------------------------------------------------------------
+
+/// Emit one client line to the trace (no-op without an active trace or
+/// for clients filtered out by the sampling stride). Allocation-free:
+/// formats with `core::fmt` straight into the locked buffered writer.
+/// Failed writes are counted in [`super::trace_dropped`].
+pub fn emit(ev: ClientEvent) {
+    let Some(w) = super::trace_writer() else {
+        return;
+    };
+    if ev.client as u64 % sample_stride() != 0 {
+        return;
+    }
+    let mut g = w.lock().unwrap_or_else(|e| e.into_inner());
+    let ok = write_event(&mut *g, &ev).is_ok() && g.flush().is_ok();
+    if !ok {
+        super::note_trace_dropped();
+    }
+}
+
+/// Serialize one client line. Split from [`emit`] so tests can format
+/// into a buffer without owning the process-global trace destination.
+pub(crate) fn write_event<W: Write>(out: &mut W, ev: &ClientEvent) -> std::io::Result<()> {
+    write!(
+        out,
+        "{{\"type\":\"client\",\"v\":2,\"round\":{},\"client\":{},\"event\":\"{}\",\"t\":",
+        ev.round,
+        ev.client,
+        ev.event.name()
+    )?;
+    // JSON has no NaN/Inf; mirror Json::write_num's null fallback.
+    if ev.t.is_finite() {
+        write!(out, "{}", ev.t)?;
+    } else {
+        write!(out, "null")?;
+    }
+    if let Some(v) = ev.version {
+        write!(out, ",\"version\":{v}")?;
+    }
+    if let Some(s) = ev.staleness {
+        write!(out, ",\"staleness\":{s}")?;
+    }
+    if let Some(r) = ev.reason {
+        write!(out, ",\"reason\":\"{r}\"")?;
+    }
+    writeln!(out, "}}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn render(ev: ClientEvent) -> Json {
+        let mut buf = Vec::new();
+        write_event(&mut buf, &ev).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.ends_with('\n'));
+        Json::parse(text.trim_end()).unwrap()
+    }
+
+    #[test]
+    fn minimal_event_is_valid_v2_json() {
+        let j = render(ClientEvent::new(3, 17, Event::Upload, 41.25));
+        assert_eq!(j.get("type").and_then(Json::as_str), Some("client"));
+        assert_eq!(j.get("v").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(j.get("round").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(j.get("client").and_then(Json::as_f64), Some(17.0));
+        assert_eq!(j.get("event").and_then(Json::as_str), Some("upload"));
+        assert_eq!(j.get("t").and_then(Json::as_f64), Some(41.25));
+        assert!(j.get("version").is_none());
+        assert!(j.get("staleness").is_none());
+        assert!(j.get("reason").is_none());
+    }
+
+    #[test]
+    fn optional_fields_round_trip() {
+        let j = render(
+            ClientEvent::new(9, 4, Event::Merged, 12.0)
+                .version(7)
+                .staleness(2)
+                .reason("crash"),
+        );
+        assert_eq!(j.get("version").and_then(Json::as_f64), Some(7.0));
+        assert_eq!(j.get("staleness").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(j.get("reason").and_then(Json::as_str), Some("crash"));
+        assert_eq!(j.get("event").and_then(Json::as_str), Some("merged"));
+    }
+
+    #[test]
+    fn non_finite_time_becomes_null() {
+        let j = render(ClientEvent::new(1, 0, Event::Crashed, f64::NAN));
+        assert_eq!(j.get("t"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn stride_parse_is_strict() {
+        assert_eq!(parse_stride("1"), Some(1));
+        assert_eq!(parse_stride(" 25 "), Some(25));
+        assert_eq!(parse_stride("0"), None);
+        assert_eq!(parse_stride("-3"), None);
+        assert_eq!(parse_stride("yes"), None);
+        assert_eq!(parse_stride(""), None);
+    }
+
+    #[test]
+    fn event_names_are_stable() {
+        let all = [
+            (Event::Picked, "picked"),
+            (Event::Distributed, "distributed"),
+            (Event::TrainStart, "train_start"),
+            (Event::TrainEnd, "train_end"),
+            (Event::Upload, "upload"),
+            (Event::Merged, "merged"),
+            (Event::Bypassed, "bypassed"),
+            (Event::Crashed, "crashed"),
+            (Event::Undrafted, "undrafted"),
+        ];
+        for (e, name) in all {
+            assert_eq!(e.name(), name);
+        }
+    }
+}

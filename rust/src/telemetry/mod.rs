@@ -30,6 +30,8 @@
 //! can exceed the enclosing wall time — compare phases against each
 //! other, not against 100%.
 
+pub mod hist;
+pub mod lifecycle;
 pub mod profile;
 
 use crate::util::json::Json;
@@ -191,10 +193,19 @@ static ENABLED: AtomicBool = AtomicBool::new(false);
 static ENV_ENABLE: OnceLock<()> = OnceLock::new();
 
 fn enabled_from_env() -> bool {
-    let flag = matches!(
-        std::env::var("SAFA_TELEMETRY").as_deref(),
-        Ok("1") | Ok("true") | Ok("on")
-    );
+    // Strict-env convention (matches SAFA_THREADS): an unrecognized
+    // value warns once instead of silently disabling recording.
+    let flag = match std::env::var("SAFA_TELEMETRY").as_deref() {
+        Ok("1") | Ok("true") | Ok("on") => true,
+        Ok("") | Ok("0") | Ok("false") | Ok("off") | Err(_) => false,
+        Ok(other) => {
+            crate::log_warn!(
+                "SAFA_TELEMETRY={other:?}: expected 1|true|on or 0|false|off; \
+                 recording stays off"
+            );
+            false
+        }
+    };
     flag || std::env::var_os("SAFA_TRACE").is_some()
 }
 
@@ -243,11 +254,13 @@ pub fn span(phase: Phase) -> Span {
 }
 
 /// Unconditionally credit `ns` to `phase` on this worker's shard
-/// (the gated entry point is [`span`]).
+/// (the gated entry point is [`span`]). Every span also feeds the
+/// matching duration histogram, so tail latency comes for free.
 fn record_span(phase: Phase, ns: u64) {
     let s = shard();
     s.span_ns[phase.idx()].fetch_add(ns, Relaxed);
     s.span_count[phase.idx()].fetch_add(1, Relaxed);
+    hist::bump(hist::HistMetric::from_phase(phase), ns);
 }
 
 /// Add `n` to counter `c` (no-op while recording is off).
@@ -329,6 +342,7 @@ pub struct Snapshot {
     pub counters: [u64; NUM_COUNTERS],
     pub allocs: u64,
     pub alloc_bytes: u64,
+    pub hists: hist::Hists,
 }
 
 impl Snapshot {
@@ -345,6 +359,7 @@ impl Snapshot {
         }
         d.allocs = self.allocs.wrapping_sub(earlier.allocs);
         d.alloc_bytes = self.alloc_bytes.wrapping_sub(earlier.alloc_bytes);
+        d.hists = self.hists.since(&earlier.hists);
         d
     }
 
@@ -359,7 +374,8 @@ impl Snapshot {
     }
 
     /// `{spans: {name: {ns, count}}, counters: {name: n}, allocs,
-    /// alloc_bytes}` — the `telemetry` object of the JSONL trace.
+    /// alloc_bytes, hists: {name: {count, p50, p90, p99}}}` — the
+    /// `telemetry` object of the JSONL trace.
     pub fn to_json(&self) -> Json {
         let mut spans = Json::obj();
         for p in Phase::ALL {
@@ -377,6 +393,7 @@ impl Snapshot {
         o.set("counters", counters);
         o.set("allocs", Json::Num(self.allocs as f64));
         o.set("alloc_bytes", Json::Num(self.alloc_bytes as f64));
+        o.set("hists", self.hists.to_json());
         o
     }
 }
@@ -395,6 +412,7 @@ pub fn snapshot() -> Snapshot {
     }
     s.allocs = ALLOCS.load(Relaxed);
     s.alloc_bytes = ALLOC_BYTES.load(Relaxed);
+    s.hists = hist::merged();
     s
 }
 
@@ -410,6 +428,7 @@ pub fn reset() {
             a.store(0, Relaxed);
         }
     }
+    hist::reset();
 }
 
 // ---------------------------------------------------------------------------
@@ -418,7 +437,12 @@ pub fn reset() {
 
 static TRACE: OnceLock<Option<Mutex<BufWriter<File>>>> = OnceLock::new();
 
-fn trace_writer() -> &'static Option<Mutex<BufWriter<File>>> {
+/// Trace lines lost to write/flush errors (full disk, revoked fd): a
+/// truncated trace no longer silently passes for a complete one — the
+/// coordinator reports this count at end of run.
+static TRACE_DROPPED: AtomicU64 = AtomicU64::new(0);
+
+pub(crate) fn trace_writer() -> &'static Option<Mutex<BufWriter<File>>> {
     TRACE.get_or_init(|| {
         let path = std::env::var_os("SAFA_TRACE")?;
         match File::create(&path) {
@@ -431,19 +455,45 @@ fn trace_writer() -> &'static Option<Mutex<BufWriter<File>>> {
     })
 }
 
+/// Point the JSONL trace at `path` from code, consuming the one-shot
+/// `SAFA_TRACE` environment read (first call wins, like [`set_enabled`]).
+/// Returns whether a trace is active afterwards. Test binaries use this;
+/// a process that already opened a trace keeps the original destination.
+pub fn set_trace(path: &str) -> bool {
+    TRACE.get_or_init(|| match File::create(path) {
+        Ok(f) => Some(Mutex::new(BufWriter::new(f))),
+        Err(e) => {
+            crate::log_warn!("set_trace: cannot create {path:?}: {e}");
+            None
+        }
+    });
+    trace_active()
+}
+
 /// Is a JSONL trace destination configured and writable?
 pub fn trace_active() -> bool {
     trace_writer().is_some()
 }
 
+/// Trace lines dropped so far because a write or flush failed.
+pub fn trace_dropped() -> u64 {
+    TRACE_DROPPED.load(Relaxed)
+}
+
+pub(crate) fn note_trace_dropped() {
+    TRACE_DROPPED.fetch_add(1, Relaxed);
+}
+
 /// Append one compact JSON object + newline to the trace file, flushed
 /// per line so a killed run keeps every completed round. No-op without
-/// an active trace.
+/// an active trace; failed writes are counted in [`trace_dropped`].
 pub fn trace_line(line: &Json) {
     if let Some(w) = trace_writer() {
         let mut g = w.lock().unwrap_or_else(|e| e.into_inner());
-        let _ = writeln!(g, "{}", line.to_string_compact());
-        let _ = g.flush();
+        let ok = writeln!(g, "{}", line.to_string_compact()).is_ok() && g.flush().is_ok();
+        if !ok {
+            note_trace_dropped();
+        }
     }
 }
 

@@ -12,6 +12,7 @@
 use std::fmt::Write as _;
 use std::time::Instant;
 
+use super::hist::HistMetric;
 use super::{set_enabled, snapshot, Counter, Phase, NUM_PHASES};
 use crate::bench_harness::write_results_file;
 use crate::config::{presets, Backend, ChurnModel, ProtocolKind};
@@ -131,6 +132,11 @@ pub struct CellResult {
     /// dispatches (its workers run concurrently), so shares are CPU-style
     /// and need not sum to 1.
     pub share: [f64; NUM_PHASES],
+    /// Simulated round-duration percentiles (ms, log2-bucket midpoint)
+    /// over the timed rounds.
+    pub round_ms_p50: u64,
+    pub round_ms_p90: u64,
+    pub round_ms_p99: u64,
 }
 
 impl CellResult {
@@ -156,6 +162,9 @@ impl CellResult {
                 Json::Num(self.share[p.idx()]),
             );
         }
+        o.set("round_ms_p50", Json::Num(self.round_ms_p50 as f64));
+        o.set("round_ms_p90", Json::Num(self.round_ms_p90 as f64));
+        o.set("round_ms_p99", Json::Num(self.round_ms_p99 as f64));
         o
     }
 }
@@ -274,6 +283,9 @@ pub fn run_cell(
         bytes_down_per_round: bytes_down / rounds as f64,
         bytes_up_per_round: bytes_up / rounds as f64,
         share,
+        round_ms_p50: delta.hists.percentile(HistMetric::RoundDurationMs, 0.50),
+        round_ms_p90: delta.hists.percentile(HistMetric::RoundDurationMs, 0.90),
+        round_ms_p99: delta.hists.percentile(HistMetric::RoundDurationMs, 0.99),
     })
 }
 
@@ -299,12 +311,15 @@ pub fn render_table(cells: &[CellResult]) -> String {
     let mut out = String::new();
     let _ = writeln!(
         out,
-        "{:<34} {:>10} {:>11} {:>9} {:>9} {:>6} {:>6} {:>6} {:>6} {:>6}",
+        "{:<34} {:>10} {:>11} {:>9} {:>9} {:>8} {:>8} {:>8} {:>6} {:>6} {:>6} {:>6} {:>6}",
         "cell",
         "rounds/s",
         "events/s",
         "KB down",
         "KB up",
+        "simp50ms",
+        "simp90ms",
+        "simp99ms",
         "dist%",
         "sel%",
         "loc%",
@@ -315,12 +330,15 @@ pub fn render_table(cells: &[CellResult]) -> String {
         let pct = |p: Phase| 100.0 * c.share[p.idx()];
         let _ = writeln!(
             out,
-            "{:<34} {:>10.1} {:>11.0} {:>9.1} {:>9.1} {:>6.1} {:>6.1} {:>6.1} {:>6.1} {:>6.1}",
+            "{:<34} {:>10.1} {:>11.0} {:>9.1} {:>9.1} {:>8} {:>8} {:>8} {:>6.1} {:>6.1} {:>6.1} {:>6.1} {:>6.1}",
             c.name,
             c.rounds_per_sec,
             c.events_per_sec,
             c.bytes_down_per_round / 1e3,
             c.bytes_up_per_round / 1e3,
+            c.round_ms_p50,
+            c.round_ms_p90,
+            c.round_ms_p99,
             pct(Phase::Distribute),
             pct(Phase::Select),
             pct(Phase::LocalUpdate),
@@ -398,6 +416,9 @@ mod tests {
         assert!(j.get("rounds_per_sec").is_some());
         assert!(j.get("share_distribute").is_some());
         assert!(j.get("mean_ns").is_some());
+        assert!(j.get("round_ms_p99").is_some());
+        // Every round records one sim-duration sample while enabled.
+        assert!(c.round_ms_p50 > 0, "round-duration histogram populated");
         let table = render_table(std::slice::from_ref(&c));
         assert!(table.contains("profile_"));
         // Contended smoke cell: the fabric-on grid runs end to end and

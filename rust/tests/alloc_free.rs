@@ -20,6 +20,14 @@
 //! `SAFA_DISPATCH=spawn` dispatcher still pays per-fork allocations,
 //! which is why the test pins `Dispatch::Pooled`. Exactly one #[test]
 //! lives in this binary so no concurrent test pollutes the counter.
+//!
+//! The test also points `SAFA_TRACE` at a scratch file before the first
+//! engine call, so every measured pass runs with the client-lifecycle
+//! stream LIVE: each picked/trained/uploaded/crashed client formats a
+//! JSONL line straight into the trace writer's pre-grown `BufWriter`
+//! via `core::fmt` (stack buffers only) and flushes (a syscall, not an
+//! allocation). Zero steady-state allocations must hold with the trace
+//! on — that is the observability tentpole's perf contract.
 
 use safa::client::ClientState;
 use safa::config::presets;
@@ -130,6 +138,19 @@ fn steady_state_rounds_do_not_allocate() {
     // measured window (`env::var` allocates); afterwards the enable flag
     // is one relaxed atomic.
     telemetry::set_enabled(false);
+    // Arm the lifecycle trace BEFORE any engine call: the TRACE OnceLock
+    // is first-call-wins, and the engine's own `lifecycle::active()`
+    // probe would otherwise pin it to None for the whole process. With
+    // the trace live, every measured round below also writes client
+    // lifecycle lines — emission must be allocation-free too.
+    telemetry::lifecycle::set_sample_stride(1);
+    let trace_path =
+        std::env::temp_dir().join(format!("safa_alloc_free_trace_{}.jsonl", std::process::id()));
+    let trace_str = trace_path.to_string_lossy().into_owned();
+    assert!(
+        telemetry::set_trace(&trace_str),
+        "cannot open lifecycle trace destination {trace_str}"
+    );
     for telemetry_on in [false, true] {
         telemetry::set_enabled(telemetry_on);
         let mode = if telemetry_on {
@@ -228,5 +249,18 @@ fn steady_state_rounds_do_not_allocate() {
         snap.counter(Counter::EventsPopped) > 0,
         "telemetry-on rounds recorded no event pops — instrumentation dead?"
     );
+    // And the lifecycle stream must actually have been live throughout:
+    // client lines landed in the trace file and none were dropped.
+    assert_eq!(
+        telemetry::trace_dropped(),
+        0,
+        "lifecycle trace writes were dropped"
+    );
+    let trace = std::fs::read_to_string(&trace_path).expect("read lifecycle trace");
+    assert!(
+        trace.lines().any(|l| l.contains("\"type\":\"client\"")),
+        "no client lifecycle lines in trace — emission dead?"
+    );
+    let _ = std::fs::remove_file(&trace_path);
     telemetry::set_enabled(false);
 }

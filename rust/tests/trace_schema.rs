@@ -1,0 +1,261 @@
+//! SAFA_TRACE v2 golden-schema pin + trace determinism across thread
+//! widths.
+//!
+//! This binary intentionally holds exactly ONE #[test]: the trace
+//! destination (`telemetry::set_trace`) and the lifecycle sample stride
+//! are process-global, first-call-wins OnceLocks, so a second test in
+//! the same binary could not choose its own trace file.
+//!
+//! What is pinned:
+//! * every line of the trace parses as JSON and carries `v: 2`;
+//! * per record type (`meta` / `round` / `client`), the key set matches
+//!   `tests/golden/trace_v2_schema.txt` exactly — a new key, a dropped
+//!   key, or a new client event name fails here until the golden file
+//!   (and the schema version) is updated deliberately;
+//! * `SAFA_TRACE_SAMPLE` stride: only clients with `id % stride == 0`
+//!   appear;
+//! * the trace is deterministic at any thread width: modulo the
+//!   wall-clock `telemetry` span object on round lines, the byte
+//!   stream at widths {1, 3, 8} is identical;
+//! * `safa report`'s parser and renderers consume the trace end to end.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use safa::config::{presets, ExperimentConfig, ProtocolKind};
+use safa::coordinator::run_experiment;
+use safa::report::{self, parse_trace};
+use safa::telemetry;
+use safa::util::json::Json;
+use safa::util::parallel::with_thread_count;
+
+const WIDTHS: [usize; 3] = [1, 3, 8];
+const KINDS: [ProtocolKind; 3] = [
+    ProtocolKind::Safa,
+    ProtocolKind::FedAvg,
+    ProtocolKind::FedAsync,
+];
+const STRIDE: u64 = 7;
+const M: usize = 60;
+const ROUNDS: usize = 4;
+
+fn cfg_for(kind: ProtocolKind) -> ExperimentConfig {
+    let mut cfg = presets::preset("tiny").expect("tiny preset");
+    cfg.protocol.kind = kind;
+    cfg.env.m = M;
+    cfg.task.n = 600;
+    cfg.task.n_test = 60;
+    cfg.env.crash_prob = 0.3;
+    cfg.protocol.c_fraction = 0.5;
+    cfg.train.rounds = ROUNDS;
+    cfg
+}
+
+/// Key sets from tests/golden/trace_v2_schema.txt.
+struct GoldenSchema {
+    required: BTreeMap<String, BTreeSet<String>>,
+    optional: BTreeMap<String, BTreeSet<String>>,
+    events: BTreeSet<String>,
+}
+
+fn load_golden() -> GoldenSchema {
+    let text = include_str!("golden/trace_v2_schema.txt");
+    let mut schema = GoldenSchema {
+        required: BTreeMap::new(),
+        optional: BTreeMap::new(),
+        events: BTreeSet::new(),
+    };
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (head, rest) = line.split_once(':').expect("golden line missing ':'");
+        let words: BTreeSet<String> = rest.split_whitespace().map(str::to_string).collect();
+        match head.trim() {
+            "events" => schema.events = words,
+            head => {
+                let (ty, class) = head.split_once(' ').expect("golden head: `<type> <class>`");
+                match class {
+                    "required" => {
+                        schema.required.insert(ty.to_string(), words);
+                    }
+                    "optional" => {
+                        schema.optional.insert(ty.to_string(), words);
+                    }
+                    other => panic!("golden class must be required/optional, got {other}"),
+                }
+            }
+        }
+    }
+    assert!(
+        !schema.required.is_empty() && !schema.events.is_empty(),
+        "golden schema file parsed empty"
+    );
+    schema
+}
+
+#[test]
+fn trace_v2_schema_and_width_determinism() {
+    // Process-global telemetry setup must precede every engine call:
+    // the TRACE OnceLock is first-call-wins and any `trace_active()`
+    // probe would otherwise pin it to None for the whole process.
+    telemetry::set_enabled(true);
+    telemetry::lifecycle::set_sample_stride(STRIDE);
+    let path = std::env::temp_dir().join(format!("safa_trace_schema_{}.jsonl", std::process::id()));
+    let path_str = path.to_string_lossy().into_owned();
+    assert!(
+        telemetry::set_trace(&path_str),
+        "cannot open trace destination {path_str}"
+    );
+
+    // 3 protocols × 3 widths, all appending to one trace file; each run
+    // opens its own segment with a meta line.
+    let mut results = Vec::new();
+    for &width in &WIDTHS {
+        for kind in KINDS {
+            let cfg = cfg_for(kind);
+            results.push(with_thread_count(width, || {
+                run_experiment(&cfg).expect("run_experiment")
+            }));
+        }
+    }
+    assert_eq!(telemetry::trace_dropped(), 0, "trace writes were dropped");
+
+    // (1) Simulation results are bit-identical across widths with the
+    // trace recording live the whole time.
+    for w in 1..WIDTHS.len() {
+        for i in 0..KINDS.len() {
+            let a = &results[i];
+            let b = &results[w * KINDS.len() + i];
+            let ctx = format!("{} at width {}", KINDS[i].name(), WIDTHS[w]);
+            assert_eq!(a.rounds.len(), b.rounds.len(), "{ctx}: round count");
+            for (x, y) in a.rounds.iter().zip(&b.rounds) {
+                assert_eq!(
+                    x.round_len.to_bits(),
+                    y.round_len.to_bits(),
+                    "{ctx}: round_len diverged at round {}",
+                    x.round
+                );
+                assert_eq!(x.n_picked, y.n_picked, "{ctx}: n_picked");
+                assert_eq!(x.n_committed, y.n_committed, "{ctx}: n_committed");
+                assert_eq!(x.staleness, y.staleness, "{ctx}: staleness");
+            }
+        }
+    }
+
+    // (2) Line-by-line schema pin + canonicalized segment comparison.
+    // Round lines carry a wall-clock `telemetry` span object; it is
+    // stripped before the cross-width byte comparison (sim-time fields
+    // must match exactly, wall-clock never can).
+    let text = std::fs::read_to_string(&path).expect("read trace file");
+    let golden = load_golden();
+    let mut segments: Vec<Vec<String>> = Vec::new();
+    let mut events_seen: BTreeSet<String> = BTreeSet::new();
+    for (idx, line) in text.lines().enumerate() {
+        let n = idx + 1;
+        let mut j = Json::parse(line).unwrap_or_else(|e| panic!("trace line {n}: bad JSON: {e}"));
+        let ty = j
+            .get("type")
+            .and_then(Json::as_str)
+            .unwrap_or_else(|| panic!("trace line {n}: missing type"))
+            .to_string();
+        assert_eq!(
+            j.get("v").and_then(Json::as_f64),
+            Some(2.0),
+            "trace line {n}: schema version"
+        );
+        let keys: BTreeSet<String> = match &j {
+            Json::Obj(m) => m.keys().cloned().collect(),
+            _ => panic!("trace line {n}: not an object"),
+        };
+        let required = golden
+            .required
+            .get(&ty)
+            .unwrap_or_else(|| panic!("trace line {n}: unpinned record type {ty}"));
+        let optional = golden.optional.get(&ty).cloned().unwrap_or_default();
+        for k in required {
+            assert!(keys.contains(k), "trace line {n}: {ty} line missing key {k}");
+        }
+        for k in &keys {
+            assert!(
+                required.contains(k) || optional.contains(k),
+                "trace line {n}: {ty} line has key {k} not pinned in \
+                 tests/golden/trace_v2_schema.txt"
+            );
+        }
+        if ty == "client" {
+            let event = j
+                .get("event")
+                .and_then(Json::as_str)
+                .unwrap_or_else(|| panic!("trace line {n}: client event not a string"))
+                .to_string();
+            assert!(
+                golden.events.contains(&event),
+                "trace line {n}: event {event} not pinned in golden events list"
+            );
+            let client = j
+                .get("client")
+                .and_then(Json::as_usize)
+                .unwrap_or_else(|| panic!("trace line {n}: client id"));
+            assert_eq!(
+                client as u64 % STRIDE,
+                0,
+                "trace line {n}: client {client} violates sample stride {STRIDE}"
+            );
+            events_seen.insert(event);
+        }
+        if ty == "meta" {
+            segments.push(Vec::new());
+        }
+        let segment = segments
+            .last_mut()
+            .unwrap_or_else(|| panic!("trace line {n}: trace does not open with a meta line"));
+        if ty == "round" {
+            if let Json::Obj(m) = &mut j {
+                m.remove("telemetry");
+            }
+            segment.push(j.to_string_compact());
+        } else {
+            segment.push(line.to_string());
+        }
+    }
+    assert_eq!(
+        segments.len(),
+        WIDTHS.len() * KINDS.len(),
+        "one meta-opened segment per run"
+    );
+    for w in 1..WIDTHS.len() {
+        for i in 0..KINDS.len() {
+            assert_eq!(
+                segments[i],
+                segments[w * KINDS.len() + i],
+                "{} trace at width {} diverged from width {}",
+                KINDS[i].name(),
+                WIDTHS[w],
+                WIDTHS[0]
+            );
+        }
+    }
+    // The fixed-seed runs exercise the core of the lifecycle alphabet.
+    for event in ["picked", "distributed", "upload", "merged"] {
+        assert!(events_seen.contains(event), "no {event} events in trace");
+    }
+
+    // (3) `safa report` machinery consumes the trace end to end.
+    let trace = parse_trace(&text).expect("parse_trace");
+    assert_eq!(trace.m, Some(M));
+    assert_eq!(trace.sample, Some(STRIDE));
+    assert_eq!(trace.rounds.len(), WIDTHS.len() * KINDS.len() * ROUNDS);
+    assert_eq!(trace.skipped, 0, "parse_trace skipped lines");
+    assert!(!trace.clients.is_empty(), "no client lines parsed");
+    let summaries = report::summarize(&trace);
+    assert_eq!(summaries.len(), KINDS.len(), "one summary per protocol");
+    let rendered = report::render_report(&trace);
+    for needle in ["SAFA", "FedAvg", "FedAsync", "round duration", "staleness"] {
+        assert!(rendered.contains(needle), "report missing {needle}:\n{rendered}");
+    }
+    let as_json = report::report_json(&trace).to_string_compact();
+    assert!(Json::parse(&as_json).is_ok(), "report_json round-trips");
+
+    let _ = std::fs::remove_file(&path);
+}
