@@ -1,0 +1,79 @@
+//! Chaos sweep bench: what the fault-injection engine costs and what it
+//! does to round outcomes, A/B'd against the identical contended fabric
+//! with the injectors off.
+//!
+//! Regimes per protocol (SAFA, FedAvg, FedAsync) at the fleet sizes in
+//! the grid — both run the `contended` transport (FIFO server link,
+//! lognormal client links, latency/jitter/loss):
+//!
+//! * `baseline` — faults disabled: the legacy event/fabric paths;
+//! * `chaos`    — the `chaos` preset's full injector battery (crash
+//!   hazard, flapping, correlated regional outages, link degradation)
+//!   under the default retry/partial-credit policies.
+//!
+//! Each cell prints the survival outcome (crashed vs committed client
+//! counts over the measured rounds) next to the timing line, so the
+//! injectors' scheduling tax and their behavioral footprint land in the
+//! same artifact. Emits `BENCH_chaos.json` (override with `-- --json
+//! <path>`; BENCH schema documented in EXPERIMENTS.md).
+//! `SAFA_BENCH_FAST=1` trims the grid for CI smoke runs.
+
+use safa::bench_harness::{json_path_from_args, Bencher};
+use safa::config::{presets, ProtocolKind};
+use safa::coordinator::Coordinator;
+
+fn main() {
+    safa::util::logging::init();
+    let fast = std::env::var("SAFA_BENCH_FAST").as_deref() == Ok("1");
+    let mut b = Bencher::new();
+    let fleets: &[usize] = if fast { &[200] } else { &[500, 2_000] };
+    let protocols = [
+        ProtocolKind::Safa,
+        ProtocolKind::FedAvg,
+        ProtocolKind::FedAsync,
+    ];
+    let chaos = presets::preset("chaos").expect("chaos preset");
+
+    for &m in fleets {
+        for proto in protocols {
+            for regime in ["baseline", "chaos"] {
+                let mut cfg = presets::preset("fleet10k").expect("fleet10k preset");
+                cfg.env.m = m;
+                cfg.protocol.kind = proto;
+                // Same transport in both regimes: the A/B isolates the
+                // injectors, not the fabric.
+                cfg.env.fabric = chaos.env.fabric.clone();
+                if regime == "chaos" {
+                    cfg.env.faults = chaos.env.faults.clone();
+                }
+                // Fresh coordinator per cell: rounds must be driven in
+                // order, and the scratch pools warm up during
+                // calibration so the measured rounds are steady-state.
+                let mut coord = Coordinator::new(&cfg).expect("coordinator");
+                let mut t = 1usize;
+                let mut crashed = 0usize;
+                let mut committed = 0usize;
+                let name = format!(
+                    "{}_round_m{m}_{regime}",
+                    proto.name().to_ascii_lowercase()
+                );
+                b.bench(&name, || {
+                    let rec = coord.protocol.run_round(t, &mut coord.env);
+                    t += 1;
+                    crashed += rec.n_crashed;
+                    committed += rec.n_committed;
+                    rec.round_len
+                });
+                println!(
+                    "    outcome: {crashed} crashed / {committed} committed \
+                     client-rounds over {} rounds",
+                    t - 1
+                );
+            }
+        }
+    }
+
+    b.write_json("results/chaos_sweep.json").expect("write results");
+    b.write_json(&json_path_from_args("BENCH_chaos.json"))
+        .expect("write BENCH json");
+}

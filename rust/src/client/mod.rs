@@ -29,6 +29,10 @@ pub struct Job {
     pub total: f64,
     /// Global version of the base model this job trains on.
     pub base_version: i64,
+    /// Seconds of trailing *upload* leg inside `total` (0.0 when the
+    /// job has no modelled upload tail). The fault engine uses this to
+    /// classify a mid-job cut as an upload-leg crash vs a training cut.
+    pub tail_up: f64,
 }
 
 impl Job {
@@ -92,6 +96,7 @@ impl ClientState {
             remaining: total,
             total,
             base_version,
+            tail_up: 0.0,
         });
     }
 

@@ -7,6 +7,7 @@ pub mod presets;
 pub use presets::{preset, preset_names, scaled_preset};
 
 use crate::error::{Result, SafaError};
+use crate::faults::FaultPlan;
 use crate::net::fabric::FabricConfig;
 use crate::util::toml::TomlDoc;
 
@@ -271,6 +272,10 @@ pub struct EnvConfig {
     /// update compression). Default: disabled — the closed-form Eq. 17–19
     /// arithmetic, untouched.
     pub fabric: FabricConfig,
+    /// Fault-injection plan (crash hazards, flapping, regional outages,
+    /// link degradation, retry/partial-credit policies). Default:
+    /// disabled — the engine's legacy paths, bit-for-bit.
+    pub faults: FaultPlan,
 }
 
 /// Federated-optimization parameters.
@@ -429,6 +434,7 @@ impl ExperimentConfig {
             ));
         }
         self.env.fabric.validate()?;
+        self.env.faults.validate()?;
         Ok(())
     }
 
@@ -506,6 +512,39 @@ impl ExperimentConfig {
         {
             return Err(SafaError::Config(
                 "env.fabric_* keys require env.fabric = \"none\", \"fifo\" or \"fair\"".into(),
+            ));
+        }
+        if let Some(v) = doc.get_str("env.faults") {
+            cfg.env.faults = FaultPlan::from_parts(
+                v,
+                doc.get_f64("env.faults_crash_hazard"),
+                doc.get_f64("env.faults_flap_prob"),
+                doc.get_f64("env.faults_flap_downtime_s"),
+                doc.get_i64("env.faults_regions"),
+                doc.get_f64("env.faults_outage_prob"),
+                doc.get_f64("env.faults_outage_len_s"),
+                doc.get_f64("env.faults_degrade_prob"),
+                doc.get_f64("env.faults_degrade_factor"),
+                doc.get_i64("env.faults_retry_max"),
+                doc.get_f64("env.faults_retry_backoff_s"),
+                doc.get_f64("env.faults_retry_backoff_cap_s"),
+                doc.get_bool("env.faults_partial_credit"),
+            )?;
+        } else if doc.get_f64("env.faults_crash_hazard").is_some()
+            || doc.get_f64("env.faults_flap_prob").is_some()
+            || doc.get_f64("env.faults_flap_downtime_s").is_some()
+            || doc.get_i64("env.faults_regions").is_some()
+            || doc.get_f64("env.faults_outage_prob").is_some()
+            || doc.get_f64("env.faults_outage_len_s").is_some()
+            || doc.get_f64("env.faults_degrade_prob").is_some()
+            || doc.get_f64("env.faults_degrade_factor").is_some()
+            || doc.get_i64("env.faults_retry_max").is_some()
+            || doc.get_f64("env.faults_retry_backoff_s").is_some()
+            || doc.get_f64("env.faults_retry_backoff_cap_s").is_some()
+            || doc.get_bool("env.faults_partial_credit").is_some()
+        {
+            return Err(SafaError::Config(
+                "env.faults_* keys require env.faults = \"off\" or \"on\"".into(),
             ));
         }
         if let Some(v) = doc.get_str("env.churn") {
@@ -739,6 +778,54 @@ mod tests {
             preset = "tiny"
             [env]
             fabric_latency_s = 0.05
+            "#,
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn from_toml_configures_faults() {
+        let doc = crate::util::toml::parse(
+            r#"
+            preset = "tiny"
+            [env]
+            faults = "on"
+            faults_crash_hazard = 0.1
+            faults_regions = 3
+            faults_outage_prob = 0.05
+            faults_retry_max = 4
+            faults_partial_credit = false
+            "#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        let f = &cfg.env.faults;
+        assert!(f.enabled && f.any_injector());
+        assert_eq!(f.crash_hazard, 0.1);
+        assert_eq!(f.regions, 3);
+        assert_eq!(f.outage_prob, 0.05);
+        assert_eq!(f.retry_max, 4);
+        assert!(!f.partial_credit);
+        // Unset parameters keep the enabled-plan defaults.
+        assert_eq!(f.retry_backoff_s, FaultPlan::default().retry_backoff_s);
+        // Orphan fault parameters without env.faults are rejected.
+        let doc = crate::util::toml::parse(
+            r#"
+            preset = "tiny"
+            [env]
+            faults_crash_hazard = 0.1
+            "#,
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err());
+        // As are parameters under an explicit "off".
+        let doc = crate::util::toml::parse(
+            r#"
+            preset = "tiny"
+            [env]
+            faults = "off"
+            faults_retry_max = 4
             "#,
         )
         .unwrap();

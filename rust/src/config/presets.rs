@@ -14,6 +14,7 @@ use super::{
     TaskConfig, TaskKind, TrainConfig,
 };
 use crate::error::{Result, SafaError};
+use crate::faults::FaultPlan;
 use crate::net::fabric::{Compression, Contention, FabricConfig, LinkDist};
 
 const MB_BITS: f64 = 8e6;
@@ -34,6 +35,8 @@ fn base_env(m: usize) -> EnvConfig {
         // without touching any knob reproduces the closed form
         // bit-for-bit (asserted by tests/net_fabric.rs).
         fabric: FabricConfig::default(),
+        // Disabled faults = the engine's legacy paths, bit-for-bit.
+        faults: FaultPlan::default(),
     }
 }
 
@@ -252,6 +255,29 @@ pub fn contended() -> ExperimentConfig {
     cfg
 }
 
+/// Chaos preset: the contended fabric plus every fault injector live —
+/// crash hazard, flapping, correlated regional outages and link
+/// degradation — under the default retry/partial-credit policies. The
+/// CI robustness smoke and the `chaos_sweep` bench drive this profile;
+/// A/B against `contended` isolates the injectors' effect.
+pub fn chaos() -> ExperimentConfig {
+    let mut cfg = contended();
+    cfg.name = "chaos".into();
+    cfg.env.faults = FaultPlan {
+        enabled: true,
+        crash_hazard: 0.15,
+        flap_prob: 0.5,
+        flap_downtime_s: 60.0,
+        regions: 2,
+        outage_prob: 0.1,
+        outage_len_s: 120.0,
+        degrade_prob: 0.2,
+        degrade_factor: 2.0,
+        ..FaultPlan::default()
+    };
+    cfg
+}
+
 /// Task-1 profile under Markov churn (the `churn_sweep` bench's base).
 pub fn task1_churn() -> ExperimentConfig {
     with_markov_churn(task1(), "churn")
@@ -277,6 +303,7 @@ pub fn preset(name: &str) -> Result<ExperimentConfig> {
         "tiny" => Ok(tiny()),
         "tiny-churn" | "tiny_churn" => Ok(tiny_churn()),
         "contended" => Ok(contended()),
+        "chaos" => Ok(chaos()),
         other => Err(SafaError::Config(format!("unknown preset '{other}'"))),
     }
 }
@@ -295,6 +322,7 @@ pub fn preset_names() -> &'static [&'static str] {
         "tiny",
         "tiny-churn",
         "contended",
+        "chaos",
     ]
 }
 
@@ -399,10 +427,31 @@ mod tests {
         assert_eq!(cfg.env.client_bw_bps, task1().env.client_bw_bps);
         assert_eq!(cfg.train.t_lim, task1().train.t_lim);
         // The non-fabric presets all stay off (fabric-off is the default
-        // the bit-for-bit regression suite pins).
+        // the bit-for-bit regression suite pins). `chaos` rides on the
+        // contended fabric, so it is the other exception.
         for name in preset_names() {
-            if *name != "contended" {
+            if *name != "contended" && *name != "chaos" {
                 assert!(!preset(name).unwrap().env.fabric.enabled, "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn chaos_preset_arms_every_injector() {
+        let cfg = preset("chaos").unwrap();
+        assert!(cfg.env.fabric.enabled, "chaos builds on the contended fabric");
+        let f = &cfg.env.faults;
+        assert!(f.enabled && f.any_injector());
+        assert!(f.crash_hazard > 0.0);
+        assert!(f.flap_prob > 0.0);
+        assert!(f.regions >= 2 && f.outage_prob > 0.0);
+        assert!(f.degrade_prob > 0.0 && f.degrade_factor > 1.0);
+        f.validate().unwrap();
+        // Every other preset keeps faults off — the injectors-off
+        // bit-for-bit guarantee rests on this default.
+        for name in preset_names() {
+            if *name != "chaos" {
+                assert!(!preset(name).unwrap().env.faults.enabled, "{name}");
             }
         }
     }

@@ -24,6 +24,12 @@ pub enum EventKind {
     ComeOnline,
     /// The round deadline `T_lim` fired.
     RoundDeadline,
+    /// A fault injector cut a client off mid-round (crash / flap /
+    /// regional outage); cancels whatever leg is in flight.
+    ClientCrash,
+    /// A time-varying link condition window opened for a client
+    /// (fault-injected degradation scaling its transfer legs).
+    NetworkCondition,
 }
 
 /// One scheduled occurrence.

@@ -66,6 +66,7 @@ use super::event::{Event, EventKind, EventQueue};
 use crate::client::ClientState;
 use crate::config::ExperimentConfig;
 use crate::error::Result;
+use crate::faults::FaultRuntime;
 use crate::net::fabric::FabricRuntime;
 use crate::net::NetworkModel;
 use crate::sim::{Arrival, ContinuationSim, FailReason, RoundSim};
@@ -96,6 +97,12 @@ pub struct RoundCtx<'a> {
     /// (round, client) and synced downloads pick up contention queueing
     /// delays. `None` = the closed-form `net` arithmetic, bit-for-bit.
     pub fabric: Option<&'a FabricRuntime>,
+    /// Fault injector, when enabled with at least one live injector:
+    /// transfers become cancellable event-queue legs, crash / flap /
+    /// outage / degradation injectors fire, and the server's bounded
+    /// retry-with-backoff policy applies. `None` (or a neutral plan)
+    /// keeps the legacy paths, bit-for-bit.
+    pub faults: Option<&'a FaultRuntime>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -216,6 +223,153 @@ enum ContOutcome {
     Straggler,
 }
 
+/// Which leg of a fresh-job chain is in flight (faults path): the leg a
+/// mid-round cut cancels, and the lifecycle `phase` tag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FaultLeg {
+    Download,
+    Train,
+    Upload,
+}
+
+impl FaultLeg {
+    fn name(self) -> &'static str {
+        match self {
+            FaultLeg::Download => "download",
+            FaultLeg::Train => "train",
+            FaultLeg::Upload => "upload",
+        }
+    }
+}
+
+/// Per-participant precompute for the faults event path: degraded leg
+/// times, the churn window, and the injector cut — all pure in
+/// `(round, participant)`, so the pass fans out like [`RoundSetup`].
+#[derive(Debug, Clone, Copy)]
+struct FaultSetup {
+    online_secs: f64,
+    /// When the client's chain starts (0.0, or its churn recovery).
+    start: f64,
+    /// Churn drop (always hard); `INFINITY` when none.
+    offline_at: f64,
+    /// Injector cut at/after `start`; `INFINITY` when none fires.
+    fault_at: f64,
+    /// Injector recovery time; `NAN` for a hard interruption.
+    fault_resume: f64,
+    /// Transfer legs with link degradation applied (queueing wait is
+    /// added serially by the contention pass).
+    td: f64,
+    tu: f64,
+    t_train: f64,
+    /// Link degradation fired this round (`NetworkCondition` marker).
+    degraded: bool,
+    /// Churn late start: the chain begins at a `ComeOnline` head.
+    late: bool,
+    /// Offline for the whole round (legacy whole-round failure).
+    failure: Option<(FailReason, f64)>,
+}
+
+const EMPTY_FAULT_SETUP: FaultSetup = FaultSetup {
+    online_secs: 0.0,
+    start: 0.0,
+    offline_at: f64::INFINITY,
+    fault_at: f64::INFINITY,
+    fault_resume: f64::NAN,
+    td: 0.0,
+    tu: 0.0,
+    t_train: 0.0,
+    degraded: false,
+    late: false,
+    failure: None,
+};
+
+/// Mutable pop-loop state for one faults-path participant.
+#[derive(Debug, Clone, Copy)]
+struct FaultSlot {
+    start: f64,
+    /// Full chain duration from `start` (wait + down + train + up).
+    duration: f64,
+    phase: Phase,
+    synced: bool,
+    /// Leg currently in flight (what a cut cancels).
+    leg: FaultLeg,
+    /// Timestamp of this client's one live completion event. A popped
+    /// completion with any other timestamp is a cancelled leg's stale
+    /// event and is ignored (exact f64 equality: resumed legs are
+    /// rescheduled at strictly later times, so stale events never
+    /// collide with a live expectation).
+    expect: f64,
+    /// Remaining train seconds at a mid-train cut (training resumes
+    /// where it stopped; transfers restart instead).
+    train_left: f64,
+    /// The injector cut has fired (a later `ComeOnline` is a fault
+    /// recovery, not a churn late start).
+    cut_hit: bool,
+    /// A fault cut ended this client's round (tags the lifecycle
+    /// `crashed` line with the cancelled leg's phase).
+    cut_failed: bool,
+}
+
+/// Per-participant precompute for the faults continuation path.
+#[derive(Debug, Clone, Copy)]
+struct ContFaultSetup {
+    online_secs: f64,
+    /// 0.0, or the churn recovery time (late start).
+    start: f64,
+    /// When the job's resumed upload lands; `INFINITY` = infinite job.
+    upload_at: f64,
+    /// Churn drop (pauses the job, hard); `INFINITY` when none.
+    offline_at: f64,
+    /// Injector cut at/after `start`; `INFINITY` when none fires.
+    fault_at: f64,
+    /// Injector recovery time; `NAN` for a hard interruption.
+    fault_resume: f64,
+    /// Upload-leg seconds at the job's end (classifies a cut as
+    /// mid-upload vs mid-train and prices an upload retry).
+    tail: f64,
+    late: bool,
+    /// Offline all round: the job pauses (legacy crashed).
+    offline_all: bool,
+}
+
+const EMPTY_CONT_FAULT_SETUP: ContFaultSetup = ContFaultSetup {
+    online_secs: 0.0,
+    start: 0.0,
+    upload_at: f64::INFINITY,
+    offline_at: f64::INFINITY,
+    fault_at: f64::INFINITY,
+    fault_resume: f64::NAN,
+    tail: 0.0,
+    late: false,
+    offline_all: false,
+};
+
+/// Mutable pop-loop state for one faults-path continuation job.
+#[derive(Debug, Clone, Copy)]
+struct ContFaultSlot {
+    /// Live completion timestamp (stale-event guard, see [`FaultSlot`]).
+    expect: f64,
+    /// When the injector cut the job (`NAN` until it happens).
+    cut_at: f64,
+    /// Seconds of this round's work completed at the cut (the
+    /// partial-progress credit reported via `crash_info`).
+    done_at_cut: f64,
+    /// The cut cancelled the job's upload leg (vs local training).
+    upload_leg: bool,
+    /// Cut happened and the client is waiting out the downtime.
+    waiting: bool,
+    was_cut: bool,
+}
+
+const EMPTY_CONT_FAULT_SLOT: ContFaultSlot = ContFaultSlot {
+    expect: f64::NAN,
+    cut_at: f64::NAN,
+    done_at_cut: 0.0,
+    upload_leg: false,
+    waiting: false,
+    was_cut: false,
+};
+
 /// Reusable per-round storage: cleared and refilled every round instead
 /// of reallocated, so steady-state rounds cost zero heap traffic no
 /// matter how large the fleet is.
@@ -238,6 +392,13 @@ struct RoundScratch {
     setup_cont: Vec<ContSetup>,
     direct_round: Vec<DirectSlot>,
     direct_cont: Vec<(f64, ContOutcome)>,
+    /// Faults event path: per-participant precompute and pop-loop state.
+    setup_faults: Vec<FaultSetup>,
+    fslots: Vec<FaultSlot>,
+    setup_cfaults: Vec<ContFaultSetup>,
+    cfslots: Vec<ContFaultSlot>,
+    /// Per-stream next-free times for the cancellable contention pass.
+    stream_free: Vec<f64>,
     /// (participant position, arrival) pairs, sorted before output.
     arrivals: Vec<(usize, Arrival)>,
     /// Participant-indexed contention queueing delays (fabric rounds with
@@ -417,7 +578,17 @@ impl FleetEngine {
         out.arrivals.reserve(p);
         out.failures.clear();
         out.failures.reserve(p);
-        if self.avail.is_event_free() {
+        out.retx_bytes_down = 0.0;
+        out.retx_bytes_up = 0.0;
+        // A neutral plan (no injector can fire) keeps the legacy paths:
+        // retry/backoff policy knobs only matter once an injector fires,
+        // so routing on the injectors alone preserves bit-compatibility.
+        let faults = ctx
+            .faults
+            .filter(|f| f.active() && f.plan().any_injector());
+        if let Some(fr) = faults {
+            self.run_round_faults(t, &ctx, participants, synced, round_rng, fr, out);
+        } else if self.avail.is_event_free() {
             self.run_round_direct(t, &ctx, participants, synced, round_rng, out);
         } else {
             self.run_round_event(t, &ctx, participants, synced, round_rng, out);
@@ -866,6 +1037,483 @@ impl FleetEngine {
         out.last_drop = last_drop;
     }
 
+    /// Faults event path for fresh-job rounds: every transfer is a
+    /// cancellable event-queue leg, injector cuts (`ClientCrash`)
+    /// cancel whatever leg is in flight, and the server's graceful-
+    /// degradation policies apply (bounded retry with capped
+    /// exponential backoff for transfers, free resume for training).
+    ///
+    /// * **Contention rescheduling** — under a contended fabric the
+    ///   distribution queue is simulated as `S` server streams serving
+    ///   one copy in `service` seconds ([`FabricRuntime::contention_slots`],
+    ///   which reproduces `dist_wait` when nothing is cancelled). A
+    ///   client cut mid-push frees its stream at the cut, so survivors'
+    ///   queue waits shrink; one cut before its turn never occupies a
+    ///   stream. Retried legs bypass the queue (the server re-sends
+    ///   point-to-point after backoff).
+    /// * **Retransmit accounting** — on each *completed* transfer leg
+    ///   the fabric's priced loss-retransmits are booked as re-sent
+    ///   bytes (`RoundSim::retx_bytes_*`), plus one payload per server
+    ///   retry copy. Cancelled partial transmissions are not booked.
+    /// * **Determinism** — every injector query is pure in `(t, k)`
+    ///   and the parallel setup pass never touches shared state, so
+    ///   results are bit-identical at any thread width.
+    #[allow(clippy::too_many_arguments)]
+    fn run_round_faults(
+        &mut self,
+        t: usize,
+        ctx: &RoundCtx<'_>,
+        participants: &[usize],
+        synced: &[bool],
+        round_rng: &Pcg64,
+        fr: &FaultRuntime,
+        out: &mut RoundSim,
+    ) {
+        let t_lim = ctx.cfg.train.t_lim;
+        let epochs = ctx.cfg.train.epochs;
+        self.begin_round(t, t_lim, round_rng, participants);
+        let p = participants.len();
+        let m = self.m;
+        let is_bernoulli = self.avail.is_bernoulli();
+        let fabric = ctx.fabric;
+        let retry_max = fr.plan().retry_max;
+        let payload = fabric.map(|f| f.payload_bytes());
+        let scratch = &mut self.scratch;
+
+        // Parallel per-participant precompute (see run_round_event):
+        // every field is a pure function of the participant's own
+        // window draw and the pure injector queries.
+        scratch.setup_faults.clear();
+        scratch.setup_faults.resize(p, EMPTY_FAULT_SETUP);
+        parallel::for_each_chunk2(
+            &mut scratch.setup_faults,
+            &mut scratch.draws,
+            DRAW_GRAIN,
+            |base, setups, draws| {
+                for (i, (su, draw)) in setups.iter_mut().zip(draws.iter_mut()).enumerate() {
+                    let pos = base + i;
+                    let k = participants[pos];
+                    let (w, mut crng) = draw.take().expect("window drawn for participant");
+                    let online_secs = w.online_seconds(t_lim);
+                    let t_train = ctx.clients[k].t_train(epochs);
+                    let deg = fr.degrade(t, k);
+                    let (mut td, mut tu) = match fabric {
+                        Some(f) => (f.t_down(t, k), f.t_up(t, k)),
+                        None => (ctx.net.t_down(), ctx.net.t_up()),
+                    };
+                    if deg > 1.0 {
+                        td *= deg;
+                        tu *= deg;
+                    }
+                    if !w.online_at_start && w.comes_online_at.is_none() {
+                        // Offline for the whole round (legacy failure;
+                        // no injector can hit a client that never runs).
+                        let partial = if is_bernoulli { crng.next_f64() } else { 0.0 };
+                        *su = FaultSetup {
+                            online_secs,
+                            td,
+                            tu,
+                            t_train,
+                            failure: Some((FailReason::Crash, partial)),
+                            ..EMPTY_FAULT_SETUP
+                        };
+                    } else {
+                        let (start, late) = match w.comes_online_at {
+                            Some(on) if !w.online_at_start => (on, true),
+                            _ => (0.0, false),
+                        };
+                        let (fault_at, fault_resume) = match fr.interrupt(t, k, t_lim) {
+                            // A cut while the client is still offline
+                            // is unobservable: only cuts at/after its
+                            // start interrupt anything.
+                            Some(i) if i.at >= start => {
+                                (i.at, i.resume.unwrap_or(f64::NAN))
+                            }
+                            _ => (f64::INFINITY, f64::NAN),
+                        };
+                        *su = FaultSetup {
+                            online_secs,
+                            start,
+                            offline_at: w.goes_offline_at.unwrap_or(f64::INFINITY),
+                            fault_at,
+                            fault_resume,
+                            td,
+                            tu,
+                            t_train,
+                            degraded: deg > 1.0,
+                            late,
+                            failure: None,
+                        };
+                    }
+                }
+            },
+        );
+
+        // Serial contention pass: synced copies queue on the fabric's
+        // server streams in participant order; a copy whose owner is
+        // cut mid-push frees its stream early (survivors re-price), a
+        // copy cut before its turn is never pushed. Whole-round-offline
+        // clients still receive a full push (the server cannot know).
+        let (streams, service) = fabric.map_or((0, 0.0), |f| f.contention_slots());
+        scratch.dist_wait.clear();
+        scratch.dist_wait.resize(p, 0.0);
+        if streams > 0 {
+            let _span = telemetry::span(telemetry::Phase::TransferWait);
+            scratch.stream_free.clear();
+            scratch.stream_free.resize(streams, 0.0);
+            for pos in 0..p {
+                if !synced[pos] {
+                    continue;
+                }
+                let su = &scratch.setup_faults[pos];
+                // Earliest-free stream, lowest index on ties.
+                let mut j = 0;
+                for jj in 1..streams {
+                    if scratch.stream_free[jj] < scratch.stream_free[j] {
+                        j = jj;
+                    }
+                }
+                let w = scratch.stream_free[j];
+                scratch.dist_wait[pos] = w;
+                hist::record_secs_as_ms(HistMetric::TransferWaitMs, w);
+                let cut = su.offline_at.min(su.fault_at);
+                if su.failure.is_some() || cut >= w + service {
+                    scratch.stream_free[j] = w + service;
+                } else if cut > w {
+                    // Aborted mid-push: the stream frees at the cut.
+                    scratch.stream_free[j] = cut;
+                }
+                // cut <= w: the copy is never pushed; stream untouched.
+            }
+        }
+
+        scratch.pos_of.clear();
+        scratch.pos_of.resize(m, None);
+        scratch.fslots.clear();
+        scratch.fslots.reserve(p);
+        scratch.failures.clear();
+        scratch.failures.resize(p, None);
+        scratch.arrivals.clear();
+        scratch.arrivals.reserve(p);
+        scratch.queue.clear();
+        scratch.queue.reserve(4 * p + 2);
+        let q = &mut scratch.queue;
+        let mut online_time = 0.0;
+        let mut last_drop = 0.0f64;
+        let mut retx_down = 0.0f64;
+        let mut retx_up = 0.0f64;
+
+        // Serial scheduling in participant order (pop order stays
+        // authoritative; see run_round_event).
+        let lc = lifecycle::active();
+        for (pos, &k) in participants.iter().enumerate() {
+            assert!(scratch.pos_of[k].is_none(), "duplicate participant {k}");
+            scratch.pos_of[k] = Some(pos);
+            let su = scratch.setup_faults[pos];
+            online_time += su.online_secs;
+            hist::record_secs_as_ms(HistMetric::ClientDwellMs, su.online_secs);
+            let dl_head = if synced[pos] {
+                scratch.dist_wait[pos] + su.td
+            } else {
+                0.0
+            };
+            let mut slot = FaultSlot {
+                start: su.start,
+                duration: dl_head + su.t_train + su.tu,
+                phase: if su.failure.is_some() {
+                    Phase::Failed
+                } else if su.late {
+                    Phase::Idle
+                } else {
+                    Phase::Active
+                },
+                synced: synced[pos],
+                leg: if synced[pos] {
+                    FaultLeg::Download
+                } else {
+                    FaultLeg::Train
+                },
+                expect: f64::NAN,
+                train_left: su.t_train,
+                cut_hit: false,
+                cut_failed: false,
+            };
+            scratch.failures[pos] = su.failure;
+            if su.failure.is_none() {
+                // Hard churn drop first, then the injector cut, so an
+                // exact drop/cut/completion tie resolves hard-first.
+                if su.offline_at.is_finite() {
+                    q.schedule(Event {
+                        time: su.offline_at,
+                        client: Some(k),
+                        kind: EventKind::GoOffline,
+                    });
+                }
+                if su.fault_at.is_finite() {
+                    telemetry::count(telemetry::Counter::FaultsInjected, 1);
+                    q.schedule(Event {
+                        time: su.fault_at,
+                        client: Some(k),
+                        kind: EventKind::ClientCrash,
+                    });
+                }
+                if su.degraded {
+                    // Visibility marker: the degradation is already
+                    // priced into td/tu; the event records the window
+                    // opening on the queue's clock.
+                    q.schedule(Event {
+                        time: su.start,
+                        client: Some(k),
+                        kind: EventKind::NetworkCondition,
+                    });
+                }
+                if su.late {
+                    q.schedule(Event {
+                        time: su.start,
+                        client: Some(k),
+                        kind: EventKind::ComeOnline,
+                    });
+                } else {
+                    let (head, kind) = if slot.synced {
+                        (dl_head, EventKind::DownloadDone)
+                    } else {
+                        if lc {
+                            lifecycle::emit(ClientEvent::new(t, k, LcEvent::TrainStart, 0.0));
+                        }
+                        (su.t_train, EventKind::TrainDone)
+                    };
+                    slot.expect = head;
+                    q.schedule(Event {
+                        time: head,
+                        client: Some(k),
+                        kind,
+                    });
+                }
+            }
+            scratch.fslots.push(slot);
+        }
+        q.schedule_deadline(Event {
+            time: t_lim,
+            client: None,
+            kind: EventKind::RoundDeadline,
+        });
+
+        let pop_span = crate::telemetry::span(crate::telemetry::Phase::EventPop);
+        while let Some(ev) = q.pop() {
+            if ev.kind == EventKind::RoundDeadline {
+                break;
+            }
+            let k = ev.client.expect("client event without a client");
+            let pos = scratch.pos_of[k].expect("event for a non-participant");
+            let su = scratch.setup_faults[pos];
+            let dw_pos = scratch.dist_wait[pos];
+            let slot = &mut scratch.fslots[pos];
+            match ev.kind {
+                EventKind::NetworkCondition => {}
+                EventKind::ComeOnline => {
+                    if slot.phase == Phase::Idle {
+                        slot.phase = Phase::Active;
+                        if !slot.cut_hit {
+                            // Churn late start: the chain begins now.
+                            if slot.synced {
+                                slot.leg = FaultLeg::Download;
+                                slot.expect = ev.time + (dw_pos + su.td);
+                                q.schedule(Event {
+                                    time: slot.expect,
+                                    client: Some(k),
+                                    kind: EventKind::DownloadDone,
+                                });
+                            } else {
+                                if lc {
+                                    lifecycle::emit(ClientEvent::new(
+                                        t,
+                                        k,
+                                        LcEvent::TrainStart,
+                                        ev.time,
+                                    ));
+                                }
+                                slot.leg = FaultLeg::Train;
+                                slot.expect = ev.time + su.t_train;
+                                q.schedule(Event {
+                                    time: slot.expect,
+                                    client: Some(k),
+                                    kind: EventKind::TrainDone,
+                                });
+                            }
+                        } else {
+                            // Fault recovery: resume training for free,
+                            // or retry the cancelled transfer leg after
+                            // backoff (retry_max was checked at the cut).
+                            match slot.leg {
+                                FaultLeg::Train => {
+                                    slot.expect = ev.time + slot.train_left;
+                                    q.schedule(Event {
+                                        time: slot.expect,
+                                        client: Some(k),
+                                        kind: EventKind::TrainDone,
+                                    });
+                                }
+                                FaultLeg::Download | FaultLeg::Upload => {
+                                    telemetry::count(telemetry::Counter::Retries, 1);
+                                    if lc {
+                                        lifecycle::emit(
+                                            ClientEvent::new(t, k, LcEvent::Retry, ev.time)
+                                                .phase(slot.leg.name()),
+                                        );
+                                    }
+                                    let (leg_s, kind) = match slot.leg {
+                                        FaultLeg::Download => {
+                                            (su.td, EventKind::DownloadDone)
+                                        }
+                                        _ => (su.tu, EventKind::UploadDone),
+                                    };
+                                    if let Some(b) = payload {
+                                        match slot.leg {
+                                            FaultLeg::Download => retx_down += b,
+                                            _ => retx_up += b,
+                                        }
+                                    }
+                                    slot.expect = ev.time + fr.backoff(1) + leg_s;
+                                    q.schedule(Event {
+                                        time: slot.expect,
+                                        client: Some(k),
+                                        kind,
+                                    });
+                                }
+                            }
+                        }
+                    }
+                }
+                EventKind::ClientCrash => {
+                    if slot.phase == Phase::Active && !slot.cut_hit {
+                        slot.cut_hit = true;
+                        if slot.leg == FaultLeg::Train {
+                            // Training pauses where it stopped.
+                            slot.train_left = slot.expect - ev.time;
+                        }
+                        let resumable = su.fault_resume.is_finite()
+                            && (slot.leg == FaultLeg::Train || retry_max >= 1);
+                        if resumable {
+                            slot.phase = Phase::Idle;
+                            q.schedule(Event {
+                                time: su.fault_resume,
+                                client: Some(k),
+                                kind: EventKind::ComeOnline,
+                            });
+                        } else {
+                            slot.phase = Phase::Failed;
+                            slot.cut_failed = true;
+                            let done =
+                                ((ev.time - slot.start) / slot.duration).clamp(0.0, 1.0);
+                            scratch.failures[pos] = Some((FailReason::Crash, done));
+                            last_drop = last_drop.max(ev.time);
+                        }
+                    }
+                }
+                EventKind::DownloadDone => {
+                    if slot.phase == Phase::Active && ev.time == slot.expect {
+                        if let (Some(b), Some(f)) = (payload, fabric) {
+                            retx_down += b * f.extra_down_attempts(t, k) as f64;
+                        }
+                        if lc {
+                            lifecycle::emit(ClientEvent::new(t, k, LcEvent::TrainStart, ev.time));
+                        }
+                        slot.leg = FaultLeg::Train;
+                        slot.train_left = su.t_train;
+                        slot.expect = ev.time + su.t_train;
+                        q.schedule(Event {
+                            time: slot.expect,
+                            client: Some(k),
+                            kind: EventKind::TrainDone,
+                        });
+                    }
+                }
+                EventKind::TrainDone => {
+                    if slot.phase == Phase::Active && ev.time == slot.expect {
+                        if lc {
+                            lifecycle::emit(ClientEvent::new(t, k, LcEvent::TrainEnd, ev.time));
+                        }
+                        slot.leg = FaultLeg::Upload;
+                        slot.expect = ev.time + su.tu;
+                        q.schedule(Event {
+                            time: slot.expect,
+                            client: Some(k),
+                            kind: EventKind::UploadDone,
+                        });
+                    }
+                }
+                EventKind::UploadDone => {
+                    if slot.phase == Phase::Active && ev.time == slot.expect {
+                        slot.phase = Phase::Done;
+                        if let (Some(b), Some(f)) = (payload, fabric) {
+                            retx_up += b * f.extra_up_attempts(t, k) as f64;
+                        }
+                        if lc {
+                            lifecycle::emit(ClientEvent::new(t, k, LcEvent::Upload, ev.time));
+                        }
+                        scratch.arrivals.push((
+                            pos,
+                            Arrival {
+                                client: k,
+                                time: ev.time,
+                            },
+                        ));
+                    }
+                }
+                EventKind::GoOffline => {
+                    // A churn drop is always hard — it also kills a
+                    // client waiting out a fault recovery.
+                    if slot.phase == Phase::Active
+                        || (slot.phase == Phase::Idle && slot.cut_hit)
+                    {
+                        slot.phase = Phase::Failed;
+                        let done = ((ev.time - slot.start) / slot.duration).clamp(0.0, 1.0);
+                        scratch.failures[pos] = Some((FailReason::Crash, done));
+                        last_drop = last_drop.max(ev.time);
+                    }
+                }
+                EventKind::RoundDeadline => unreachable!(),
+            }
+        }
+        drop(pop_span);
+
+        // Deadline sweep: anyone still working (or waiting out a
+        // recovery that retries past T_lim) goes overtime.
+        parallel::for_each_chunk2(
+            &mut scratch.fslots,
+            &mut scratch.failures,
+            SWEEP_GRAIN,
+            |_, slots, failures| {
+                for (slot, failure) in slots.iter().zip(failures.iter_mut()) {
+                    if matches!(slot.phase, Phase::Active | Phase::Idle) {
+                        let partial = ((t_lim - slot.start) / slot.duration).clamp(0.0, 1.0);
+                        *failure = Some((FailReason::Overtime, partial));
+                    }
+                }
+            },
+        );
+
+        sort_arrivals_into(&mut scratch.arrivals, &mut out.arrivals);
+        for (pos, &k) in participants.iter().enumerate() {
+            if let Some((reason, partial)) = scratch.failures[pos] {
+                if lc {
+                    let mut ev = ClientEvent::new(t, k, LcEvent::Crashed, t_lim)
+                        .reason(fail_reason_name(reason));
+                    if scratch.fslots[pos].cut_failed {
+                        ev = ev.phase(scratch.fslots[pos].leg.name());
+                    }
+                    lifecycle::emit(ev);
+                }
+                out.failures.push((k, reason, partial));
+            }
+        }
+        out.online_time = online_time;
+        out.offline_time = p as f64 * t_lim - online_time;
+        out.last_drop = last_drop;
+        out.retx_bytes_down = retx_down;
+        out.retx_bytes_up = retx_up;
+    }
+
     /// Simulate one round over in-flight jobs (SAFA / FedAsync
     /// continuation semantics): `jobs[i]` is the remaining work for
     /// `participants[i]`. Drop-in replacement for the seed's
@@ -905,6 +1553,9 @@ impl FleetEngine {
         out.crashed.reserve(p);
         out.stragglers.clear();
         out.stragglers.reserve(p);
+        out.crash_info.clear();
+        out.upload_crashed = 0;
+        out.retx_bytes_up = 0.0;
         if self.avail.is_event_free() {
             self.run_continuation_direct(t, cfg, participants, jobs, round_rng, out);
         } else {
@@ -1165,6 +1816,319 @@ impl FleetEngine {
         }
         out.online_time = online_time;
         out.offline_time = p as f64 * t_lim - online_time;
+    }
+
+    /// Faults event path for continuation rounds: in-flight jobs become
+    /// cancellable, an injector cut mid-job pauses it with **partial-
+    /// progress credit** (`ContinuationSim::crash_info` reports the
+    /// seconds completed, so a job crashed at epoch *k* resumes from
+    /// *k*), and a cut inside the job's trailing upload leg is retried
+    /// after backoff when the interruption recovers in-round.
+    ///
+    /// `tails[i]` is the upload-leg length at the end of
+    /// `participants[i]`'s job (0.0 when unknown): it classifies a cut
+    /// as mid-upload vs mid-train — mid-upload crashes are SAFA's
+    /// "picked client crashed before its update landed" count
+    /// (`ContinuationSim::upload_crashed`) — and prices the retried
+    /// upload. A retried upload restarts the whole leg
+    /// (`resume + backoff + tail`); a mid-train cut resumes with the
+    /// remaining work shifted by the downtime, for free.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_continuation_faults_into(
+        &mut self,
+        t: usize,
+        cfg: &ExperimentConfig,
+        participants: &[usize],
+        jobs: &[f64],
+        tails: &[f64],
+        fabric: Option<&FabricRuntime>,
+        fr: &FaultRuntime,
+        round_rng: &Pcg64,
+        out: &mut ContinuationSim,
+    ) {
+        assert_eq!(participants.len(), jobs.len());
+        assert_eq!(participants.len(), tails.len());
+        self.refresh_bernoulli(cfg);
+        let fleet = participants.iter().copied().max().map_or(0, |k| k + 1);
+        self.ensure_fleet(fleet);
+        let p = participants.len();
+        out.arrivals.clear();
+        out.arrivals.reserve(p);
+        out.crashed.clear();
+        out.crashed.reserve(p);
+        out.stragglers.clear();
+        out.stragglers.reserve(p);
+        out.crash_info.clear();
+        out.upload_crashed = 0;
+        out.retx_bytes_up = 0.0;
+        if !(fr.active() && fr.plan().any_injector()) {
+            // Neutral plan: identical to the legacy continuation paths.
+            if self.avail.is_event_free() {
+                self.run_continuation_direct(t, cfg, participants, jobs, round_rng, out);
+            } else {
+                self.run_continuation_event(t, cfg, participants, jobs, round_rng, out);
+            }
+            return;
+        }
+
+        let t_lim = cfg.train.t_lim;
+        self.begin_round(t, t_lim, round_rng, participants);
+        let m = self.m;
+        let retry_max = fr.plan().retry_max;
+        let payload = fabric.map(|f| f.payload_bytes());
+        let scratch = &mut self.scratch;
+
+        scratch.setup_cfaults.clear();
+        scratch.setup_cfaults.resize(p, EMPTY_CONT_FAULT_SETUP);
+        parallel::for_each_chunk2(
+            &mut scratch.setup_cfaults,
+            &mut scratch.draws,
+            DRAW_GRAIN,
+            |base, setups, draws| {
+                for (i, (su, draw)) in setups.iter_mut().zip(draws.iter_mut()).enumerate() {
+                    let pos = base + i;
+                    let k = participants[pos];
+                    let remaining = jobs[pos];
+                    let (w, _) = draw.take().expect("window drawn for participant");
+                    let online_secs = w.online_seconds(t_lim);
+                    if !w.online_at_start && w.comes_online_at.is_none() {
+                        *su = ContFaultSetup {
+                            online_secs,
+                            offline_all: true,
+                            ..EMPTY_CONT_FAULT_SETUP
+                        };
+                    } else {
+                        let (start, late) = match w.comes_online_at {
+                            Some(on) if !w.online_at_start => (on, true),
+                            _ => (0.0, false),
+                        };
+                        let upload_at = if remaining.is_finite() {
+                            if late {
+                                start + remaining
+                            } else {
+                                remaining
+                            }
+                        } else {
+                            f64::INFINITY
+                        };
+                        let (fault_at, fault_resume) = match fr.interrupt(t, k, t_lim) {
+                            Some(iv) if iv.at >= start => {
+                                (iv.at, iv.resume.unwrap_or(f64::NAN))
+                            }
+                            _ => (f64::INFINITY, f64::NAN),
+                        };
+                        *su = ContFaultSetup {
+                            online_secs,
+                            start,
+                            upload_at,
+                            offline_at: w.goes_offline_at.unwrap_or(f64::INFINITY),
+                            fault_at,
+                            fault_resume,
+                            tail: tails[pos],
+                            late,
+                            offline_all: false,
+                        };
+                    }
+                }
+            },
+        );
+
+        scratch.pos_of.clear();
+        scratch.pos_of.resize(m, None);
+        scratch.outcome.clear();
+        scratch.outcome.resize(p, ContState::Pending);
+        scratch.late_start.clear();
+        scratch.late_start.resize(p, false);
+        scratch.cfslots.clear();
+        scratch.cfslots.resize(p, EMPTY_CONT_FAULT_SLOT);
+        scratch.arrivals.clear();
+        scratch.arrivals.reserve(p);
+        scratch.queue.clear();
+        scratch.queue.reserve(3 * p + 2);
+        let q = &mut scratch.queue;
+        let mut online_time = 0.0;
+        let mut retx_up = 0.0f64;
+
+        let lc = lifecycle::active();
+        for (pos, &k) in participants.iter().enumerate() {
+            assert!(scratch.pos_of[k].is_none(), "duplicate participant {k}");
+            scratch.pos_of[k] = Some(pos);
+            let su = scratch.setup_cfaults[pos];
+            online_time += su.online_secs;
+            hist::record_secs_as_ms(HistMetric::ClientDwellMs, su.online_secs);
+            scratch.late_start[pos] = su.late;
+            if su.offline_all {
+                scratch.outcome[pos] = ContState::Crashed;
+                continue;
+            }
+            // Hard drop first, then the cut, then the completion, so
+            // exact ties resolve hard-first (legacy tie rule).
+            if su.offline_at.is_finite() {
+                q.schedule(Event {
+                    time: su.offline_at,
+                    client: Some(k),
+                    kind: EventKind::GoOffline,
+                });
+            }
+            if su.fault_at.is_finite() {
+                telemetry::count(telemetry::Counter::FaultsInjected, 1);
+                q.schedule(Event {
+                    time: su.fault_at,
+                    client: Some(k),
+                    kind: EventKind::ClientCrash,
+                });
+            }
+            if su.upload_at.is_finite() {
+                scratch.cfslots[pos].expect = su.upload_at;
+                q.schedule(Event {
+                    time: su.upload_at,
+                    client: Some(k),
+                    kind: EventKind::UploadDone,
+                });
+            }
+        }
+        q.schedule_deadline(Event {
+            time: t_lim,
+            client: None,
+            kind: EventKind::RoundDeadline,
+        });
+
+        let pop_span = crate::telemetry::span(crate::telemetry::Phase::EventPop);
+        while let Some(ev) = q.pop() {
+            if ev.kind == EventKind::RoundDeadline {
+                break;
+            }
+            let k = ev.client.expect("client event without a client");
+            let pos = scratch.pos_of[k].expect("event for a non-participant");
+            if scratch.outcome[pos] != ContState::Pending {
+                continue;
+            }
+            let su = scratch.setup_cfaults[pos];
+            let slot = &mut scratch.cfslots[pos];
+            match ev.kind {
+                EventKind::ClientCrash => {
+                    if !slot.was_cut {
+                        slot.was_cut = true;
+                        slot.cut_at = ev.time;
+                        slot.done_at_cut = ev.time - su.start;
+                        slot.upload_leg = su.upload_at.is_finite()
+                            && (su.upload_at - ev.time) <= su.tail;
+                        let resumable = su.fault_resume.is_finite()
+                            && (!slot.upload_leg || retry_max >= 1);
+                        if resumable {
+                            slot.waiting = true;
+                            q.schedule(Event {
+                                time: su.fault_resume,
+                                client: Some(k),
+                                kind: EventKind::ComeOnline,
+                            });
+                        } else {
+                            scratch.outcome[pos] = ContState::Crashed;
+                        }
+                    }
+                }
+                EventKind::ComeOnline => {
+                    if slot.waiting {
+                        slot.waiting = false;
+                        if slot.upload_leg {
+                            // Bounded retry: the upload restarts whole
+                            // after backoff.
+                            telemetry::count(telemetry::Counter::Retries, 1);
+                            if lc {
+                                lifecycle::emit(
+                                    ClientEvent::new(t, k, LcEvent::Retry, ev.time)
+                                        .phase(FaultLeg::Upload.name()),
+                                );
+                            }
+                            if let Some(b) = payload {
+                                retx_up += b;
+                            }
+                            slot.expect = ev.time + fr.backoff(1) + su.tail;
+                        } else {
+                            // Training resumes: remaining work shifted
+                            // by the downtime, no penalty.
+                            slot.expect = ev.time + (su.upload_at - slot.cut_at);
+                        }
+                        q.schedule(Event {
+                            time: slot.expect,
+                            client: Some(k),
+                            kind: EventKind::UploadDone,
+                        });
+                    }
+                }
+                EventKind::UploadDone => {
+                    if !slot.waiting && ev.time == slot.expect {
+                        scratch.outcome[pos] = ContState::Arrived;
+                        if lc {
+                            lifecycle::emit(ClientEvent::new(t, k, LcEvent::Upload, ev.time));
+                        }
+                        scratch.arrivals.push((
+                            pos,
+                            Arrival {
+                                client: k,
+                                time: ev.time,
+                            },
+                        ));
+                    }
+                }
+                EventKind::GoOffline => {
+                    // Churn pause stays hard (legacy semantics); any
+                    // fault-cut credit already banked still applies.
+                    scratch.outcome[pos] = ContState::Crashed;
+                }
+                _ => {}
+            }
+        }
+        drop(pop_span);
+
+        sort_arrivals_into(&mut scratch.arrivals, &mut out.arrivals);
+        for (pos, &k) in participants.iter().enumerate() {
+            let slot = scratch.cfslots[pos];
+            let outcome = match scratch.outcome[pos] {
+                // Still pending at the deadline: a job that spans
+                // rounds is a straggler — unless it started late or was
+                // cut (its retry/resume missed T_lim), which count as
+                // paused-for-the-round.
+                ContState::Pending => {
+                    if scratch.late_start[pos] || slot.was_cut {
+                        ContState::Crashed
+                    } else {
+                        ContState::Straggler
+                    }
+                }
+                o => o,
+            };
+            match outcome {
+                ContState::Crashed => {
+                    if lc {
+                        let mut ev = ClientEvent::new(t, k, LcEvent::Crashed, t_lim)
+                            .reason("crash");
+                        if slot.was_cut {
+                            ev = ev.phase(if slot.upload_leg {
+                                FaultLeg::Upload.name()
+                            } else {
+                                FaultLeg::Train.name()
+                            });
+                        }
+                        lifecycle::emit(ev);
+                    }
+                    out.crashed.push(k);
+                    if slot.was_cut {
+                        // Partial-progress credit: the work done before
+                        // the cut persists on the device.
+                        out.crash_info.push((k, slot.done_at_cut));
+                        if slot.upload_leg {
+                            out.upload_crashed += 1;
+                        }
+                    }
+                }
+                ContState::Straggler => out.stragglers.push(k),
+                _ => {}
+            }
+        }
+        out.online_time = online_time;
+        out.offline_time = p as f64 * t_lim - online_time;
+        out.retx_bytes_up = retx_up;
     }
 }
 

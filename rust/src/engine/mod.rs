@@ -193,6 +193,7 @@ mod tests {
                         net: &env.net,
                         clients: &env.clients,
                         fabric: None,
+                        faults: None,
                     };
                     engine
                         .run_round(t, ctx, &parts, &synced, &rng)
@@ -227,6 +228,7 @@ mod tests {
                 net: &env.net,
                 clients: &env.clients,
                 fabric: None,
+                faults: None,
             };
             let sim = engine.run_round(t, ctx, &parts, &synced, &rng);
             for &(_, reason, partial) in &sim.failures {
@@ -258,6 +260,7 @@ mod tests {
                 net: &env.net,
                 clients: &env.clients,
                 fabric: None,
+                faults: None,
             };
             let sim = engine.run_round(t, ctx, &parts, &synced, &rng);
             let mid_round_crash = sim
@@ -295,6 +298,7 @@ mod tests {
                 net: &env.net,
                 clients: &env.clients,
                 fabric: None,
+                faults: None,
             };
             let sim = engine.run_round(t, ctx, &parts, &synced, &rng);
             offline_per_round.push(

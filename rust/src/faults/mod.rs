@@ -1,0 +1,541 @@
+//! Deterministic fault injection for the fleet engine.
+//!
+//! [`FaultPlan`] is the load-time configuration (TOML `faults.*` keys,
+//! `--faults*` CLI flags, the `chaos` preset); [`FaultRuntime`] turns it
+//! into pure per-`(round, client)` queries the engine consults while
+//! scheduling transfers and training through the event queue:
+//!
+//! * **Crash hazard** — a per-round Bernoulli over each participant; a
+//!   hit interrupts the client at a uniform point inside `[0, T_lim]`,
+//!   cancelling whatever leg (download / train / upload) is in flight.
+//! * **Flapping** — with probability `flap_prob` an interruption is a
+//!   flap rather than a hard crash: the client comes back after
+//!   `flap_downtime_s` and the server retries the cancelled leg under
+//!   the bounded-backoff policy ([`FaultPlan::retry_max`],
+//!   [`FaultRuntime::backoff`]).
+//! * **Correlated regional outages** — clients are sharded into
+//!   `regions` contiguous id bands; with probability `outage_prob` per
+//!   round a whole region goes dark for an `outage_len_s` time band.
+//! * **Link degradation** — with probability `degrade_prob` a client's
+//!   transfer legs are scaled by `degrade_factor` for the round
+//!   (EcNode-style `NetworkCondition` window covering the round).
+//!
+//! **RNG salting contract.** All draws come from one dedicated stream,
+//! `Pcg64::with_stream(seed, FAULTS_STREAM)`, re-split per round
+//! (`.split(t)`) and then per consumer (`.split(SALT_* + k)` for client
+//! `k`, `.split(SALT_OUTAGE + region)` for a region). Every query is a
+//! pure function of `(t, k)` — no shared mutable cursor — so results are
+//! identical at any thread width and independent of evaluation order.
+//! The stream id and salts are disjoint from every other subsystem
+//! (round sim `0xc4a5`, selection `0xfeda`, fleet `0xf1ee`, fabric
+//! `0xfab_11c`/`0xfab_71c`, ...).
+//!
+//! Everything is default-off: a [`FaultPlan::default`] (or `mode =
+//! "off"`) never constructs a runtime, and the engine's legacy paths are
+//! bit-for-bit untouched.
+
+use crate::config::ExperimentConfig;
+use crate::error::{Result, SafaError};
+use crate::util::rng::Pcg64;
+
+/// Dedicated RNG stream id for all fault-injection draws.
+pub const FAULTS_STREAM: u64 = 0xfa17;
+/// Per-client salt for the crash-hazard / flap draws.
+const SALT_CRASH: u64 = 0x4000_0000;
+/// Per-client salt for the link-degradation draw.
+const SALT_DEGRADE: u64 = 0x5000_0000;
+/// Per-region salt for the correlated-outage draws.
+const SALT_OUTAGE: u64 = 0x6000_0000;
+
+/// Load-time fault-injection plan (strict-validated, default off).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Master switch; `false` means the engine never consults faults.
+    pub enabled: bool,
+    /// Per-(round, client) probability of a mid-round interruption.
+    pub crash_hazard: f64,
+    /// Probability an interruption is a flap (recovers) vs a hard crash.
+    pub flap_prob: f64,
+    /// Downtime before a flapped client comes back online.
+    pub flap_downtime_s: f64,
+    /// Number of contiguous client-id shards for correlated outages
+    /// (0 disables regional outages).
+    pub regions: usize,
+    /// Per-(round, region) probability the region goes dark for a band.
+    pub outage_prob: f64,
+    /// Length of a regional dark band (clipped to the round horizon).
+    pub outage_len_s: f64,
+    /// Per-(round, client) probability of link degradation this round.
+    pub degrade_prob: f64,
+    /// Multiplier (>= 1) on transfer seconds while degraded.
+    pub degrade_factor: f64,
+    /// Bounded retry budget for a cancelled transfer leg (0 = never
+    /// retry; flaps then behave like hard crashes for transfers).
+    pub retry_max: u32,
+    /// Base backoff before retry attempt 1; doubles per attempt.
+    pub retry_backoff_s: f64,
+    /// Cap on the exponential backoff.
+    pub retry_backoff_cap_s: f64,
+    /// Credit interrupted continuation jobs with the work they finished
+    /// (crashed-at-epoch-k resumes from k, not zero).
+    pub partial_credit: bool,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            enabled: false,
+            crash_hazard: 0.0,
+            flap_prob: 0.0,
+            flap_downtime_s: 0.0,
+            regions: 0,
+            outage_prob: 0.0,
+            outage_len_s: 0.0,
+            degrade_prob: 0.0,
+            degrade_factor: 1.0,
+            retry_max: 1,
+            retry_backoff_s: 5.0,
+            retry_backoff_cap_s: 60.0,
+            partial_credit: true,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Build a plan from raw TOML/CLI parts with the same strictness as
+    /// `ChurnModel::from_parts` / `FabricConfig::from_parts`: `mode`
+    /// must be `off` or `on`, and supplying any other `faults.*`
+    /// parameter while `mode = "off"` is a hard error rather than a
+    /// silent no-op.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        mode: &str,
+        crash_hazard: Option<f64>,
+        flap_prob: Option<f64>,
+        flap_downtime_s: Option<f64>,
+        regions: Option<i64>,
+        outage_prob: Option<f64>,
+        outage_len_s: Option<f64>,
+        degrade_prob: Option<f64>,
+        degrade_factor: Option<f64>,
+        retry_max: Option<i64>,
+        retry_backoff_s: Option<f64>,
+        retry_backoff_cap_s: Option<f64>,
+        partial_credit: Option<bool>,
+    ) -> Result<FaultPlan> {
+        let err = |msg: String| Err(SafaError::Config(msg));
+        match mode.to_ascii_lowercase().as_str() {
+            "off" => {
+                let any = crash_hazard.is_some()
+                    || flap_prob.is_some()
+                    || flap_downtime_s.is_some()
+                    || regions.is_some()
+                    || outage_prob.is_some()
+                    || outage_len_s.is_some()
+                    || degrade_prob.is_some()
+                    || degrade_factor.is_some()
+                    || retry_max.is_some()
+                    || retry_backoff_s.is_some()
+                    || retry_backoff_cap_s.is_some()
+                    || partial_credit.is_some();
+                if any {
+                    return err(
+                        "faults parameters require faults.mode != \"off\"".into(),
+                    );
+                }
+                Ok(FaultPlan::default())
+            }
+            "on" => {
+                let d = FaultPlan::default();
+                let regions = match regions {
+                    None => 0,
+                    Some(r) if r >= 0 => r as usize,
+                    Some(r) => {
+                        return err(format!("faults.regions must be >= 0, got {r}"))
+                    }
+                };
+                let retry_max = match retry_max {
+                    None => d.retry_max,
+                    Some(r) if (0..=64).contains(&r) => r as u32,
+                    Some(r) => {
+                        return err(format!(
+                            "faults.retry_max must be in 0..=64, got {r}"
+                        ))
+                    }
+                };
+                let plan = FaultPlan {
+                    enabled: true,
+                    crash_hazard: crash_hazard.unwrap_or(0.0),
+                    flap_prob: flap_prob.unwrap_or(0.0),
+                    flap_downtime_s: flap_downtime_s.unwrap_or(d.flap_downtime_s),
+                    regions,
+                    outage_prob: outage_prob.unwrap_or(0.0),
+                    outage_len_s: outage_len_s.unwrap_or(d.outage_len_s),
+                    degrade_prob: degrade_prob.unwrap_or(0.0),
+                    degrade_factor: degrade_factor.unwrap_or(d.degrade_factor),
+                    retry_max,
+                    retry_backoff_s: retry_backoff_s.unwrap_or(d.retry_backoff_s),
+                    retry_backoff_cap_s: retry_backoff_cap_s
+                        .unwrap_or(d.retry_backoff_cap_s),
+                    partial_credit: partial_credit.unwrap_or(d.partial_credit),
+                };
+                plan.validate()?;
+                Ok(plan)
+            }
+            other => err(format!(
+                "unknown faults.mode {other:?} (expected \"off\" or \"on\")"
+            )),
+        }
+    }
+
+    /// Reject NaN/inf/out-of-range knobs (used at TOML + CLI load time
+    /// and from `ExperimentConfig::validate`).
+    pub fn validate(&self) -> Result<()> {
+        let e = |msg: String| Err(SafaError::Config(msg));
+        for (name, v) in [
+            ("faults.crash_hazard", self.crash_hazard),
+            ("faults.flap_prob", self.flap_prob),
+            ("faults.outage_prob", self.outage_prob),
+            ("faults.degrade_prob", self.degrade_prob),
+        ] {
+            if !v.is_finite() || !(0.0..=1.0).contains(&v) {
+                return e(format!("{name} must be a probability in [0, 1], got {v}"));
+            }
+        }
+        for (name, v) in [
+            ("faults.flap_downtime_s", self.flap_downtime_s),
+            ("faults.outage_len_s", self.outage_len_s),
+            ("faults.retry_backoff_s", self.retry_backoff_s),
+            ("faults.retry_backoff_cap_s", self.retry_backoff_cap_s),
+        ] {
+            if !v.is_finite() || v < 0.0 {
+                return e(format!("{name} must be finite and >= 0, got {v}"));
+            }
+        }
+        if !self.degrade_factor.is_finite() || self.degrade_factor < 1.0 {
+            return e(format!(
+                "faults.degrade_factor must be finite and >= 1, got {}",
+                self.degrade_factor
+            ));
+        }
+        Ok(())
+    }
+
+    /// Whether any injector can actually fire (used by the engine to
+    /// skip the faults path for an enabled-but-neutral plan would be
+    /// wrong: policy knobs like retries only matter when an injector
+    /// fires, so activity is keyed on the injectors alone).
+    pub fn any_injector(&self) -> bool {
+        self.crash_hazard > 0.0
+            || (self.regions > 0 && self.outage_prob > 0.0)
+            || self.degrade_prob > 0.0
+    }
+}
+
+/// A scheduled interruption for one client in one round.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Interrupt {
+    /// Sim-time the client is cut off (within `[0, horizon)`).
+    pub at: f64,
+    /// Sim-time it comes back online (flap / outage end), `None` for a
+    /// hard crash or a recovery that lands past the horizon.
+    pub resume: Option<f64>,
+}
+
+/// Runtime fault injector: pure per-`(round, client)` queries over the
+/// dedicated `FAULTS_STREAM` RNG. Cheap to query from parallel setup
+/// passes (no shared state, no allocation).
+#[derive(Debug, Clone)]
+pub struct FaultRuntime {
+    plan: FaultPlan,
+    m: usize,
+    stream: Pcg64,
+}
+
+impl FaultRuntime {
+    pub fn new(cfg: &ExperimentConfig) -> Self {
+        FaultRuntime {
+            plan: cfg.env.faults.clone(),
+            m: cfg.env.m,
+            stream: Pcg64::with_stream(cfg.seed, FAULTS_STREAM),
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Whether the engine should route this run through the faults
+    /// event path at all.
+    pub fn active(&self) -> bool {
+        self.plan.enabled
+    }
+
+    fn round(&self, t: usize) -> Pcg64 {
+        self.stream.split(t as u64)
+    }
+
+    /// Contiguous-id-shard region of client `k`.
+    pub fn region_of(&self, k: usize) -> usize {
+        if self.plan.regions == 0 {
+            0
+        } else {
+            (k * self.plan.regions) / self.m.max(1)
+        }
+    }
+
+    /// Correlated outage band `[start, end)` for `region` in round `t`,
+    /// if one fires. Pure in `(t, region)`.
+    pub fn outage(&self, t: usize, region: usize, horizon: f64) -> Option<(f64, f64)> {
+        if self.plan.regions == 0 || self.plan.outage_prob <= 0.0 {
+            return None;
+        }
+        let mut rng = self.round(t).split(SALT_OUTAGE + region as u64);
+        if rng.next_f64() >= self.plan.outage_prob {
+            return None;
+        }
+        let start = rng.next_f64() * horizon;
+        Some((start, start + self.plan.outage_len_s))
+    }
+
+    /// Individual crash/flap interruption for client `k` in round `t`,
+    /// if one fires. Pure in `(t, k)`.
+    pub fn crash(&self, t: usize, k: usize, horizon: f64) -> Option<Interrupt> {
+        if self.plan.crash_hazard <= 0.0 {
+            return None;
+        }
+        let mut rng = self.round(t).split(SALT_CRASH + k as u64);
+        if rng.next_f64() >= self.plan.crash_hazard {
+            return None;
+        }
+        let at = rng.next_f64() * horizon;
+        let flap = self.plan.flap_prob > 0.0 && rng.next_f64() < self.plan.flap_prob;
+        let resume = if flap {
+            let r = at + self.plan.flap_downtime_s;
+            (r < horizon).then_some(r)
+        } else {
+            None
+        };
+        Some(Interrupt { at, resume })
+    }
+
+    /// The earliest interruption hitting client `k` in round `t`:
+    /// individual crash/flap composed with the client's regional
+    /// outage. One interruption is modelled per (round, client); a
+    /// same-time tie favours the individual crash (hard failures win).
+    pub fn interrupt(&self, t: usize, k: usize, horizon: f64) -> Option<Interrupt> {
+        let crash = self.crash(t, k, horizon);
+        let outage = self.outage(t, self.region_of(k), horizon).map(|(s, e)| Interrupt {
+            at: s,
+            resume: (e < horizon).then_some(e),
+        });
+        match (crash, outage) {
+            (None, o) => o,
+            (c, None) => c,
+            (Some(c), Some(o)) => Some(if o.at < c.at { o } else { c }),
+        }
+    }
+
+    /// Transfer-seconds multiplier for client `k` in round `t` (1.0 or
+    /// `degrade_factor`). Pure in `(t, k)`.
+    pub fn degrade(&self, t: usize, k: usize) -> f64 {
+        if self.plan.degrade_prob <= 0.0 {
+            return 1.0;
+        }
+        let mut rng = self.round(t).split(SALT_DEGRADE + k as u64);
+        if rng.next_f64() < self.plan.degrade_prob {
+            self.plan.degrade_factor
+        } else {
+            1.0
+        }
+    }
+
+    /// Capped exponential backoff before retry `attempt` (1-based):
+    /// `min(retry_backoff_s * 2^(attempt-1), retry_backoff_cap_s)`.
+    pub fn backoff(&self, attempt: u32) -> f64 {
+        let exp = 2f64.powi(attempt.saturating_sub(1).min(60) as i32);
+        (self.plan.retry_backoff_s * exp).min(self.plan.retry_backoff_cap_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_off_and_valid() {
+        let p = FaultPlan::default();
+        assert!(!p.enabled);
+        assert!(!p.any_injector());
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn from_parts_mirrors_churn_strictness() {
+        // Orphan parameter with mode off is a hard error.
+        let e = FaultPlan::from_parts(
+            "off",
+            Some(0.1),
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+        );
+        assert!(e.is_err(), "orphan faults param must be rejected");
+        // Unknown mode is rejected.
+        assert!(FaultPlan::from_parts(
+            "maybe", None, None, None, None, None, None, None, None, None, None, None,
+            None
+        )
+        .is_err());
+        // A clean "on" build round-trips the knobs.
+        let p = FaultPlan::from_parts(
+            "on",
+            Some(0.2),
+            Some(0.5),
+            Some(30.0),
+            Some(4),
+            Some(0.1),
+            Some(90.0),
+            Some(0.25),
+            Some(2.5),
+            Some(3),
+            Some(2.0),
+            Some(16.0),
+            Some(false),
+        )
+        .unwrap();
+        assert!(p.enabled && p.any_injector());
+        assert_eq!(p.regions, 4);
+        assert_eq!(p.retry_max, 3);
+        assert!(!p.partial_credit);
+    }
+
+    #[test]
+    fn validate_rejects_bad_fields() {
+        let base = || FaultPlan {
+            enabled: true,
+            ..FaultPlan::default()
+        };
+        let mut p = base();
+        p.crash_hazard = f64::NAN;
+        assert!(p.validate().is_err(), "NaN hazard");
+        let mut p = base();
+        p.outage_prob = 1.5;
+        assert!(p.validate().is_err(), "prob > 1");
+        let mut p = base();
+        p.flap_downtime_s = -1.0;
+        assert!(p.validate().is_err(), "negative downtime");
+        let mut p = base();
+        p.degrade_factor = 0.5;
+        assert!(p.validate().is_err(), "speed-up factor");
+        let mut p = base();
+        p.retry_backoff_cap_s = f64::INFINITY;
+        assert!(p.validate().is_err(), "infinite cap");
+    }
+
+    fn runtime(plan: FaultPlan, m: usize) -> FaultRuntime {
+        FaultRuntime {
+            plan,
+            m,
+            stream: Pcg64::with_stream(42, FAULTS_STREAM),
+        }
+    }
+
+    #[test]
+    fn queries_are_pure_and_order_free() {
+        let rt = runtime(
+            FaultPlan {
+                enabled: true,
+                crash_hazard: 0.5,
+                flap_prob: 0.5,
+                flap_downtime_s: 20.0,
+                regions: 4,
+                outage_prob: 0.3,
+                outage_len_s: 100.0,
+                degrade_prob: 0.4,
+                ..FaultPlan::default()
+            },
+            64,
+        );
+        // Same (t, k) twice — including after interleaved other queries
+        // — must return bit-identical results.
+        let a = rt.interrupt(3, 17, 600.0);
+        let _ = rt.interrupt(3, 16, 600.0);
+        let _ = rt.degrade(4, 17);
+        let b = rt.interrupt(3, 17, 600.0);
+        assert_eq!(a, b);
+        assert_eq!(rt.degrade(3, 17).to_bits(), rt.degrade(3, 17).to_bits());
+        assert_eq!(rt.outage(5, 2, 600.0), rt.outage(5, 2, 600.0));
+    }
+
+    #[test]
+    fn regions_shard_contiguously() {
+        let rt = runtime(
+            FaultPlan {
+                enabled: true,
+                regions: 4,
+                ..FaultPlan::default()
+            },
+            100,
+        );
+        assert_eq!(rt.region_of(0), 0);
+        assert_eq!(rt.region_of(24), 0);
+        assert_eq!(rt.region_of(25), 1);
+        assert_eq!(rt.region_of(99), 3);
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let rt = runtime(
+            FaultPlan {
+                enabled: true,
+                retry_backoff_s: 2.0,
+                retry_backoff_cap_s: 10.0,
+                ..FaultPlan::default()
+            },
+            8,
+        );
+        assert_eq!(rt.backoff(1), 2.0);
+        assert_eq!(rt.backoff(2), 4.0);
+        assert_eq!(rt.backoff(3), 8.0);
+        assert_eq!(rt.backoff(4), 10.0, "cap honoured");
+        assert_eq!(rt.backoff(40), 10.0, "huge attempts stay capped");
+    }
+
+    #[test]
+    fn hard_crash_has_no_resume_and_flap_resumes_in_round() {
+        let rt = runtime(
+            FaultPlan {
+                enabled: true,
+                crash_hazard: 1.0,
+                flap_prob: 0.0,
+                ..FaultPlan::default()
+            },
+            8,
+        );
+        let i = rt.crash(1, 0, 600.0).expect("hazard 1.0 must fire");
+        assert!(i.resume.is_none());
+        assert!((0.0..600.0).contains(&i.at));
+        let rt = runtime(
+            FaultPlan {
+                enabled: true,
+                crash_hazard: 1.0,
+                flap_prob: 1.0,
+                flap_downtime_s: 1e-6,
+                ..FaultPlan::default()
+            },
+            8,
+        );
+        let i = rt.crash(1, 0, 600.0).expect("hazard 1.0 must fire");
+        let r = i.resume.expect("flap with tiny downtime resumes in round");
+        assert!(r > i.at && r < 600.0);
+    }
+}

@@ -29,6 +29,7 @@ pub mod data;
 pub mod engine;
 pub mod error;
 pub mod experiments;
+pub mod faults;
 pub mod metrics;
 pub mod model;
 pub mod net;

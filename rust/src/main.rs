@@ -14,6 +14,13 @@
 //!              [--fabric-retries 3]
 //!              [--fabric-compression none|topk|quantize]
 //!              [--fabric-topk 0.1] [--fabric-bits 8]
+//!              [--faults off|on] [--faults-crash-hazard 0.15]
+//!              [--faults-flap 0.5] [--faults-flap-downtime 60]
+//!              [--faults-regions 2] [--faults-outage 0.1]
+//!              [--faults-outage-len 120] [--faults-degrade 0.2]
+//!              [--faults-degrade-factor 2.0] [--faults-retries 2]
+//!              [--faults-backoff 5] [--faults-backoff-cap 60]
+//!              [--faults-partial-credit true|false]
 //!              [--backend native|xla|null] [--config file.toml]
 //!              [--out results/run.json]
 //! safa sweep   [--preset task1] [--protocols safa,fedavg]
@@ -99,7 +106,16 @@ fn print_help() {
          \x20          --fabric-latency/--fabric-jitter (seconds), --fabric-loss\n\
          \x20          (probability), --fabric-retries, and update compression via\n\
          \x20          --fabric-compression topk|quantize with --fabric-topk\n\
-         \x20          (fraction) or --fabric-bits (1..=32)\n"
+         \x20          (fraction) or --fabric-bits (1..=32)\n\
+         Faults:    --faults off|on arms the deterministic fault injectors;\n\
+         \x20          refine with --faults-crash-hazard/--faults-flap\n\
+         \x20          (probabilities), --faults-flap-downtime (seconds),\n\
+         \x20          --faults-regions + --faults-outage/--faults-outage-len\n\
+         \x20          (correlated outages), --faults-degrade/\n\
+         \x20          --faults-degrade-factor (link slowdown), and policy via\n\
+         \x20          --faults-retries (0..=64), --faults-backoff/\n\
+         \x20          --faults-backoff-cap (seconds), --faults-partial-credit;\n\
+         \x20          the `chaos` preset arms everything at once\n"
     );
 }
 
@@ -208,6 +224,46 @@ fn build_config(args: &Args) -> CliResult<ExperimentConfig> {
     {
         return Err(CliError(
             "--fabric-* flags require --fabric none|fifo|fair".into(),
+        )
+        .into());
+    }
+    // Fault-injection plan (same shape again: --faults selects the mode,
+    // satellite flags refine it and are rejected without it).
+    if let Some(mode) = args.get_choice("faults", &["off", "on"])? {
+        cfg.env.faults = safa::faults::FaultPlan::from_parts(
+            &mode,
+            args.get_parsed::<f64>("faults-crash-hazard")?,
+            args.get_parsed::<f64>("faults-flap")?,
+            args.get_parsed::<f64>("faults-flap-downtime")?,
+            args.get_parsed::<i64>("faults-regions")?,
+            args.get_parsed::<f64>("faults-outage")?,
+            args.get_parsed::<f64>("faults-outage-len")?,
+            args.get_parsed::<f64>("faults-degrade")?,
+            args.get_parsed::<f64>("faults-degrade-factor")?,
+            args.get_parsed::<i64>("faults-retries")?,
+            args.get_parsed::<f64>("faults-backoff")?,
+            args.get_parsed::<f64>("faults-backoff-cap")?,
+            args.get_parsed::<bool>("faults-partial-credit")?,
+        )?;
+    } else if [
+        "faults-crash-hazard",
+        "faults-flap",
+        "faults-flap-downtime",
+        "faults-regions",
+        "faults-outage",
+        "faults-outage-len",
+        "faults-degrade",
+        "faults-degrade-factor",
+        "faults-retries",
+        "faults-backoff",
+        "faults-backoff-cap",
+        "faults-partial-credit",
+    ]
+    .iter()
+    .any(|f| args.get(f).is_some())
+    {
+        return Err(CliError(
+            "--faults-* flags require --faults off|on".into(),
         )
         .into());
     }

@@ -488,6 +488,64 @@ impl FabricRuntime {
         total
     }
 
+    /// Retransmitted (lost-then-retried) attempts inside the download
+    /// leg priced by [`FabricRuntime::t_down`]. Pure in (t, k): replays
+    /// the same per-transfer stream without touching any counter, so
+    /// the faults event path can book retransmitted bytes exactly where
+    /// the pricing put them.
+    pub fn extra_down_attempts(&self, t: usize, k: usize) -> u64 {
+        self.extra_attempts(t, k, SALT_DOWN)
+    }
+
+    /// Retransmitted attempts inside the upload leg priced by
+    /// [`FabricRuntime::t_up`]. Pure in (t, k).
+    pub fn extra_up_attempts(&self, t: usize, k: usize) -> u64 {
+        self.extra_attempts(t, k, SALT_UP)
+    }
+
+    fn extra_attempts(&self, t: usize, k: usize, salt: u64) -> u64 {
+        if !self.perturb || self.cfg.loss_prob <= 0.0 {
+            return 0;
+        }
+        let mut rng = self.stream.split(t as u64).split(salt + k as u64);
+        let mut attempts = 0u64;
+        loop {
+            if self.cfg.jitter_s > 0.0 {
+                rng.next_f64();
+            }
+            let lost = attempts < self.cfg.max_retries as u64
+                && rng.next_f64() < self.cfg.loss_prob;
+            if !lost {
+                break;
+            }
+            attempts += 1;
+        }
+        attempts
+    }
+
+    /// Bytes one model copy puts on the wire (after compression).
+    pub fn payload_bytes(&self) -> f64 {
+        self.payload_bytes
+    }
+
+    /// Contention geometry for event-driven distribution scheduling:
+    /// `(concurrent server streams, seconds one copy occupies its
+    /// stream)`. Streams = 0 when the policy is uncontended. The slot
+    /// model reproduces [`FabricRuntime::dist_wait`] exactly when no
+    /// copy is cancelled: FIFO is one stream serving copies back to
+    /// back; fair-share is `streams` lanes each serving a copy in
+    /// `streams * per_copy` seconds (a wave).
+    pub fn contention_slots(&self) -> (usize, f64) {
+        match self.cfg.contention {
+            Contention::None => (0, 0.0),
+            Contention::Fifo => (1, self.per_copy),
+            Contention::FairShare { streams } => {
+                let s = streams.max(1);
+                (s, s as f64 * self.per_copy)
+            }
+        }
+    }
+
     /// Does the configured contention policy produce nonzero queueing
     /// delays? (Engine/protocols skip the serial wait pass when not.)
     pub fn has_dist_wait(&self) -> bool {
@@ -672,6 +730,65 @@ mod tests {
             assert!(t_dl <= 3.0 * base + 1e-9, "t_dl={t_dl} base={base}");
             assert!(t_dl.is_finite());
         }
+    }
+
+    #[test]
+    fn extra_attempts_re_derive_the_priced_retransmits() {
+        // With zero jitter the priced time is exactly
+        // (1 + extra) * (latency + base), so the pure re-derivation can
+        // be checked against the pricing bit-for-bit.
+        let mut cfg = enabled_neutral();
+        cfg.latency_s = 0.05;
+        cfg.loss_prob = 0.6;
+        cfg.max_retries = 4;
+        let env = env_with(cfg);
+        let fab = FabricRuntime::new(&env, 3);
+        let mut saw_nonzero = false;
+        for t in 1..30 {
+            for k in 0..4 {
+                let base = fab.link_s[k];
+                let down = fab.extra_down_attempts(t, k);
+                let up = fab.extra_up_attempts(t, k);
+                saw_nonzero |= down > 0 || up > 0;
+                // Accumulation order differs (repeated add vs multiply),
+                // so compare with a tight relative tolerance.
+                let dl = (down + 1) as f64 * (0.05 + base);
+                let ul = (up + 1) as f64 * (0.05 + base);
+                assert!((fab.t_down(t, k) - dl).abs() < 1e-12 * dl.max(1.0));
+                assert!((fab.t_up(t, k) - ul).abs() < 1e-12 * ul.max(1.0));
+            }
+        }
+        assert!(saw_nonzero, "no retransmit at loss 0.6 over 116 legs");
+        // Loss off: no extra attempts, no RNG consumed.
+        let fab = FabricRuntime::new(&env_with(enabled_neutral()), 3);
+        assert_eq!(fab.extra_down_attempts(1, 0), 0);
+    }
+
+    #[test]
+    fn contention_slots_reproduce_dist_wait() {
+        for (contention, m_sync) in [
+            (Contention::Fifo, 5),
+            (Contention::FairShare { streams: 2 }, 5),
+            (Contention::FairShare { streams: 3 }, 7),
+        ] {
+            let mut cfg = enabled_neutral();
+            cfg.contention = contention;
+            let fab = FabricRuntime::new(&env_with(cfg), 1);
+            let (streams, service) = fab.contention_slots();
+            assert!(streams > 0);
+            // Simulate the slot model with no cancellations: copy i
+            // starts when the earliest-free stream frees up.
+            let mut free = vec![0.0f64; streams];
+            for i in 0..m_sync {
+                let j = (0..streams)
+                    .min_by(|&a, &b| free[a].total_cmp(&free[b]))
+                    .unwrap();
+                assert_eq!(free[j], fab.dist_wait(i, m_sync), "copy {i}");
+                free[j] += service;
+            }
+        }
+        let fab = FabricRuntime::new(&env_with(enabled_neutral()), 1);
+        assert_eq!(fab.contention_slots(), (0, 0.0));
     }
 
     #[test]

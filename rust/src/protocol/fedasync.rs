@@ -103,6 +103,9 @@ impl Protocol for FedAsync {
                 };
                 let total = td + c.t_train(epochs) + tu;
                 c.start_job(total, t_i - 1);
+                if let Some(j) = c.job.as_mut() {
+                    j.tail_up = tu;
+                }
                 self.fresh.push(c.id);
             }
         }
@@ -203,8 +206,9 @@ impl Protocol for FedAsync {
             t_dist,
             m_sync,
             n_picked: n_applied,
-            // No selection at all: every applied update counts.
-            n_picked_crashed: 0,
+            // No selection at all: every applied update counts; the only
+            // "picked crash" is a fault injector cutting an upload leg.
+            n_picked_crashed: self.sim.upload_crashed,
             n_crashed: self.sim.crashed.len() + self.sim.stragglers.len(),
             n_committed: n_applied,
             n_undrafted: 0,
@@ -215,7 +219,7 @@ impl Protocol for FedAsync {
             offline_time: self.sim.offline_time,
             staleness,
             bytes_down: env.bytes_down(m_sync),
-            bytes_up: env.bytes_up(n_applied),
+            bytes_up: env.bytes_up(n_applied) + self.sim.retx_bytes_up,
             bytes_saved: env.bytes_saved(m_sync, n_applied),
             train_loss: if n_applied == 0 {
                 0.0

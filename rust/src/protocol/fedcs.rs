@@ -203,8 +203,8 @@ impl Protocol for FedCs {
             online_time: self.sim.online_time,
             offline_time: self.sim.offline_time,
             staleness: vec![0; n_committed],
-            bytes_down: env.bytes_down(m_sync),
-            bytes_up: env.bytes_up(n_committed),
+            bytes_down: env.bytes_down(m_sync) + self.sim.retx_bytes_down,
+            bytes_up: env.bytes_up(n_committed) + self.sim.retx_bytes_up,
             bytes_saved: env.bytes_saved(m_sync, n_committed),
             train_loss: if n_committed == 0 {
                 0.0

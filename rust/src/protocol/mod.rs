@@ -26,6 +26,7 @@ use crate::config::{ExperimentConfig, ProtocolKind};
 use crate::data::{partition_gaussian, synth, FedData};
 use crate::engine::{FleetEngine, RoundCtx};
 use crate::error::Result;
+use crate::faults::FaultRuntime;
 use crate::metrics::RoundRecord;
 use crate::sim::{Arrival, ContinuationSim, FailReason, RoundSim};
 use crate::model::{make_trainer, ParamVec, Trainer};
@@ -71,6 +72,11 @@ pub struct FedEnv {
     /// the closed-form `net` arithmetic bit-for-bit (the `t_dist` /
     /// `bytes_*` / `t_down_k` helpers below dispatch on this).
     pub fabric: Option<FabricRuntime>,
+    /// Fault-injection runtime, when `cfg.env.faults.enabled`: crash
+    /// hazards, flapping, regional outages, link degradation and the
+    /// server's retry policy. `None` (or an enabled plan with no
+    /// injector) keeps the legacy engine paths bit-for-bit.
+    pub faults: Option<FaultRuntime>,
     /// Discrete-event round executor (availability model from
     /// `cfg.env.churn`; Markov churn state persists across rounds here).
     pub engine: FleetEngine,
@@ -80,6 +86,9 @@ pub struct FedEnv {
     /// Reused slot buffer for the parallel update fan-out
     /// ([`collect_updates`]).
     upd_slots: Vec<Option<(usize, ParamVec, f64)>>,
+    /// Reused per-participant upload-tail buffer for the faults
+    /// continuation path ([`FedEnv::simulate_continuation_into`]).
+    cont_tails: Vec<f64>,
 }
 
 impl FedEnv {
@@ -126,6 +135,7 @@ impl FedEnv {
             .fabric
             .enabled
             .then(|| FabricRuntime::new(&cfg.env, cfg.seed));
+        let faults = cfg.env.faults.enabled.then(|| FaultRuntime::new(cfg));
         let engine = FleetEngine::from_config(cfg)?;
         Ok(FedEnv {
             cfg: cfg.clone(),
@@ -134,10 +144,12 @@ impl FedEnv {
             trainer,
             net,
             fabric,
+            faults,
             engine,
             weights,
             root_rng,
             upd_slots: Vec::new(),
+            cont_tails: Vec::new(),
         })
     }
 
@@ -163,6 +175,7 @@ impl FedEnv {
             net: &self.net,
             clients: &self.clients,
             fabric: self.fabric.as_ref(),
+            faults: self.faults.as_ref(),
         };
         self.engine.run_round(t, ctx, participants, synced, round_rng)
     }
@@ -182,6 +195,7 @@ impl FedEnv {
             net: &self.net,
             clients: &self.clients,
             fabric: self.fabric.as_ref(),
+            faults: self.faults.as_ref(),
         };
         self.engine
             .run_round_into(t, ctx, participants, synced, round_rng, out)
@@ -196,12 +210,16 @@ impl FedEnv {
         jobs: &[f64],
         round_rng: &Pcg64,
     ) -> ContinuationSim {
-        self.engine
-            .run_continuation(t, &self.cfg, participants, jobs, round_rng)
+        let mut out = ContinuationSim::default();
+        self.simulate_continuation_into(t, participants, jobs, round_rng, &mut out);
+        out
     }
 
     /// [`FedEnv::simulate_continuation`] into a caller-owned,
-    /// buffer-reusing record.
+    /// buffer-reusing record. With a fault runtime live, dispatches to
+    /// the engine's faults continuation path, handing it each in-flight
+    /// job's trailing-upload seconds (`Job::tail_up`) so mid-transfer
+    /// cuts are classified as upload-leg crashes.
     pub fn simulate_continuation_into(
         &mut self,
         t: usize,
@@ -210,8 +228,29 @@ impl FedEnv {
         round_rng: &Pcg64,
         out: &mut ContinuationSim,
     ) {
-        self.engine
-            .run_continuation_into(t, &self.cfg, participants, jobs, round_rng, out)
+        if let Some(f) = self.faults.as_ref() {
+            let clients = &self.clients;
+            self.cont_tails.clear();
+            self.cont_tails.extend(
+                participants
+                    .iter()
+                    .map(|&k| clients[k].job.map_or(0.0, |j| j.tail_up)),
+            );
+            self.engine.run_continuation_faults_into(
+                t,
+                &self.cfg,
+                participants,
+                jobs,
+                &self.cont_tails,
+                self.fabric.as_ref(),
+                f,
+                round_rng,
+                out,
+            );
+        } else {
+            self.engine
+                .run_continuation_into(t, &self.cfg, participants, jobs, round_rng, out)
+        }
     }
 
     /// Download seconds for client `k` in round `t` (fabric-aware; falls
@@ -455,6 +494,21 @@ pub(crate) fn close_continuation_round(
             job.remaining -= duration;
         }
     }
+    // Graceful degradation: clients the fault injectors cut mid-job keep
+    // the work they finished before the cut (their job resumes from
+    // there next round) when the plan grants partial credit. Off the
+    // faults path `crash_info` is empty, so legacy rounds are untouched.
+    if env
+        .faults
+        .as_ref()
+        .is_some_and(|f| f.plan().partial_credit)
+    {
+        for &(k, done) in &sim.crash_info {
+            if let Some(job) = env.clients[k].job.as_mut() {
+                job.remaining = (job.remaining - done).max(0.0);
+            }
+        }
+    }
     for &k in sim.crashed.iter().chain(&sim.stragglers) {
         env.clients[k].committed_last = false;
     }
@@ -603,10 +657,7 @@ mod tests {
                 client: 0,
                 time: 300.0,
             }],
-            failures: vec![],
-            online_time: 0.0,
-            offline_time: 0.0,
-            last_drop: 0.0,
+            ..RoundSim::default()
         };
         assert_eq!(sync_close_term(&base, 830.0), 300.0);
         // A mid-round disconnect after the last arrival holds the round

@@ -200,6 +200,9 @@ impl Protocol for Safa {
                             };
                             let total = td + c.t_train(epochs) + tu;
                             c.start_job(total, t_i - 1);
+                            if let Some(j) = c.job.as_mut() {
+                                j.tail_up = tu;
+                            }
                         } else if c.job.is_none() {
                             // Tolerable without a job (committed long ago
                             // but never re-synced — possible only via
@@ -212,6 +215,9 @@ impl Protocol for Safa {
                             let total = c.t_train(epochs) + tu;
                             let base = c.version;
                             c.start_job(total, base);
+                            if let Some(j) = c.job.as_mut() {
+                                j.tail_up = tu;
+                            }
                         }
                         *out = SyncOut {
                             synced,
@@ -480,8 +486,10 @@ impl Protocol for Safa {
             t_dist,
             m_sync,
             n_picked: scratch.picked.len(),
-            // SAFA selects post-training, so no picked client can crash.
-            n_picked_crashed: 0,
+            // SAFA selects post-training, so a picked client can only
+            // "crash" by having a fault injector cut its trailing upload
+            // leg before the update landed (0 off the faults path).
+            n_picked_crashed: scratch.sim.upload_crashed,
             n_crashed: n_failed,
             n_committed,
             n_undrafted: scratch.undrafted.len(),
@@ -492,7 +500,7 @@ impl Protocol for Safa {
             offline_time: scratch.sim.offline_time,
             staleness,
             bytes_down: env.bytes_down(m_sync),
-            bytes_up: env.bytes_up(n_committed),
+            bytes_up: env.bytes_up(n_committed) + scratch.sim.retx_bytes_up,
             bytes_saved: env.bytes_saved(m_sync, n_committed),
             train_loss: if scratch.updates.is_empty() {
                 0.0

@@ -44,6 +44,9 @@ pub struct ClientLine {
     pub version: Option<usize>,
     pub staleness: Option<u32>,
     pub reason: Option<String>,
+    /// Round phase a fault hit (`download` / `train` / `upload`) — only
+    /// present on `crashed` / `retry` lines from fault-injection runs.
+    pub phase: Option<String>,
 }
 
 /// A fully parsed trace file.
@@ -133,6 +136,7 @@ pub fn parse_trace(text: &str) -> Result<Trace> {
                     version: j.get("version").and_then(Json::as_usize),
                     staleness: j.get("staleness").and_then(Json::as_f64).map(|s| s as u32),
                     reason: j.get("reason").and_then(Json::as_str).map(str::to_string),
+                    phase: j.get("phase").and_then(Json::as_str).map(str::to_string),
                 });
             }
             _ => trace.skipped += 1,
@@ -404,6 +408,110 @@ pub fn render_timeline(trace: &Trace, client: usize) -> String {
     out
 }
 
+/// Per-round fault-injection tallies derived from phased lifecycle
+/// lines (a `crashed` or `retry` line carries `phase` only when the
+/// fault engine cut or replayed a transfer/train leg).
+#[derive(Debug, Clone, Default)]
+pub struct FaultSummary {
+    /// Mid-download / mid-train / mid-upload crash counts.
+    pub crashed_download: usize,
+    pub crashed_train: usize,
+    pub crashed_upload: usize,
+    /// Bounded-retry attempts, total and by leg.
+    pub retries: usize,
+    pub retries_download: usize,
+    pub retries_upload: usize,
+    /// Per-round activity: (round, phased crashes, retries) for every
+    /// round that saw at least one fault event, in round order — the
+    /// outage timeline (a correlated regional outage shows up as a
+    /// same-round cluster of phased crashes).
+    pub timeline: Vec<(usize, usize, usize)>,
+}
+
+impl FaultSummary {
+    pub fn total_crashes(&self) -> usize {
+        self.crashed_download + self.crashed_train + self.crashed_upload
+    }
+
+    pub fn any(&self) -> bool {
+        self.total_crashes() > 0 || self.retries > 0
+    }
+}
+
+/// Tally the trace's fault-injection events.
+pub fn summarize_faults(trace: &Trace) -> FaultSummary {
+    let mut s = FaultSummary::default();
+    let mut per_round: BTreeMap<usize, (usize, usize)> = BTreeMap::new();
+    for c in &trace.clients {
+        let Some(phase) = c.phase.as_deref() else {
+            continue;
+        };
+        match c.event.as_str() {
+            "crashed" => {
+                match phase {
+                    "download" => s.crashed_download += 1,
+                    "upload" => s.crashed_upload += 1,
+                    _ => s.crashed_train += 1,
+                }
+                per_round.entry(c.round).or_insert((0, 0)).0 += 1;
+            }
+            "retry" => {
+                s.retries += 1;
+                match phase {
+                    "download" => s.retries_download += 1,
+                    "upload" => s.retries_upload += 1,
+                    _ => {}
+                }
+                per_round.entry(c.round).or_insert((0, 0)).1 += 1;
+            }
+            _ => {}
+        }
+    }
+    s.timeline = per_round
+        .into_iter()
+        .map(|(round, (crashes, retries))| (round, crashes, retries))
+        .collect();
+    s
+}
+
+/// Fault-injection tables: crash-phase breakdown, retry counts and the
+/// per-round outage timeline.
+pub fn render_faults(trace: &Trace) -> String {
+    let s = summarize_faults(trace);
+    let mut out = String::new();
+    let _ = writeln!(out, "== fault injection ==");
+    if !s.any() {
+        let _ = writeln!(out, "(no fault-injection events in trace)");
+        return out;
+    }
+    let _ = writeln!(
+        out,
+        "{:<16} {:>10} {:>10} {:>10} {:>10}",
+        "kind", "download", "train", "upload", "total"
+    );
+    let _ = writeln!(
+        out,
+        "{:<16} {:>10} {:>10} {:>10} {:>10}",
+        "crashed",
+        s.crashed_download,
+        s.crashed_train,
+        s.crashed_upload,
+        s.total_crashes(),
+    );
+    let _ = writeln!(
+        out,
+        "{:<16} {:>10} {:>10} {:>10} {:>10}",
+        "retry", s.retries_download, "-", s.retries_upload, s.retries,
+    );
+    let _ = writeln!(out);
+    let _ = writeln!(out, "-- fault timeline (rounds with activity) --");
+    let _ = writeln!(out, "{:<7} {:>9} {:>9}", "round", "crashes", "retries");
+    for &(round, crashes, retries) in &s.timeline {
+        let _ = writeln!(out, "{round:<7} {crashes:>9} {retries:>9}");
+    }
+    out
+}
+
 /// Lifecycle event counts across all sampled clients.
 pub fn render_event_counts(trace: &Trace) -> String {
     let mut counts: BTreeMap<&str, usize> = BTreeMap::new();
@@ -482,6 +590,34 @@ pub fn report_json(trace: &Trace) -> Json {
         ev.set(&event, Json::Num(count as f64));
     }
     o.set("events", ev);
+    let fs = summarize_faults(trace);
+    let mut faults = Json::obj();
+    let mut crashed = Json::obj();
+    crashed.set("download", Json::Num(fs.crashed_download as f64));
+    crashed.set("train", Json::Num(fs.crashed_train as f64));
+    crashed.set("upload", Json::Num(fs.crashed_upload as f64));
+    faults.set("crashed_by_phase", crashed);
+    let mut retries = Json::obj();
+    retries.set("download", Json::Num(fs.retries_download as f64));
+    retries.set("upload", Json::Num(fs.retries_upload as f64));
+    retries.set("total", Json::Num(fs.retries as f64));
+    faults.set("retries", retries);
+    faults.set(
+        "timeline",
+        Json::Arr(
+            fs.timeline
+                .iter()
+                .map(|&(round, crashes, retries)| {
+                    let mut row = Json::obj();
+                    row.set("round", Json::Num(round as f64));
+                    row.set("crashes", Json::Num(crashes as f64));
+                    row.set("retries", Json::Num(retries as f64));
+                    row
+                })
+                .collect(),
+        ),
+    );
+    o.set("faults", faults);
     o
 }
 
@@ -511,6 +647,11 @@ pub fn render_report(trace: &Trace) -> String {
     out.push_str(&render_staleness_cdf(&summaries));
     let _ = writeln!(out);
     out.push_str(&render_event_counts(trace));
+    let faults = summarize_faults(trace);
+    if faults.any() {
+        let _ = writeln!(out);
+        out.push_str(&render_faults(trace));
+    }
     out
 }
 
@@ -532,6 +673,10 @@ mod tests {
         "\"version\":0,\"staleness\":0}\n",
         "{\"type\":\"client\",\"v\":2,\"round\":2,\"client\":1,\"event\":\"crashed\",\"t\":null,",
         "\"reason\":\"crash\"}\n",
+        "{\"type\":\"client\",\"v\":2,\"round\":2,\"client\":2,\"event\":\"crashed\",\"t\":8.0,",
+        "\"reason\":\"crash\",\"phase\":\"download\"}\n",
+        "{\"type\":\"client\",\"v\":2,\"round\":2,\"client\":3,\"event\":\"retry\",\"t\":12.0,",
+        "\"phase\":\"upload\"}\n",
     );
 
     #[test]
@@ -540,10 +685,15 @@ mod tests {
         assert_eq!(trace.m, Some(4));
         assert_eq!(trace.protocol.as_deref(), Some("SAFA"));
         assert_eq!(trace.rounds.len(), 2);
-        assert_eq!(trace.clients.len(), 3);
+        assert_eq!(trace.clients.len(), 5);
         assert_eq!(trace.skipped, 0);
         assert_eq!(trace.clients[2].t, None);
         assert_eq!(trace.clients[2].reason.as_deref(), Some("crash"));
+        // Legacy crash lines parse with no phase; fault lines carry one.
+        assert_eq!(trace.clients[2].phase, None);
+        assert_eq!(trace.clients[3].phase.as_deref(), Some("download"));
+        assert_eq!(trace.clients[4].event, "retry");
+        assert_eq!(trace.clients[4].phase.as_deref(), Some("upload"));
     }
 
     #[test]
@@ -600,6 +750,34 @@ mod tests {
     }
 
     #[test]
+    fn faults_section_counts_phases_and_rounds() {
+        let trace = parse_trace(FIXTURE).unwrap();
+        let s = summarize_faults(&trace);
+        assert_eq!(s.crashed_download, 1);
+        assert_eq!(s.crashed_train, 0);
+        assert_eq!(s.crashed_upload, 0);
+        assert_eq!(s.retries, 1);
+        assert_eq!(s.retries_upload, 1);
+        // The phase-less legacy crash (client 1) is not a fault event.
+        assert_eq!(s.total_crashes(), 1);
+        assert_eq!(s.timeline, vec![(2, 1, 1)]);
+        let text = render_faults(&trace);
+        assert!(text.contains("fault injection"), "{text}");
+        assert!(text.contains("crashed"), "{text}");
+        assert!(text.contains("retry"), "{text}");
+        // A faultless trace renders the placeholder and the full report
+        // omits the section entirely.
+        let clean = parse_trace(
+            "{\"type\":\"client\",\"v\":2,\"round\":1,\"client\":0,\
+             \"event\":\"crashed\",\"t\":null,\"reason\":\"crash\"}\n",
+        )
+        .unwrap();
+        assert!(render_faults(&clean).contains("no fault-injection events"));
+        assert!(!render_report(&clean).contains("== fault injection =="));
+        assert!(render_report(&trace).contains("== fault injection =="));
+    }
+
+    #[test]
     fn json_report_has_all_sections() {
         let trace = parse_trace(FIXTURE).unwrap();
         let j = report_json(&trace);
@@ -616,6 +794,25 @@ mod tests {
                 .and_then(|e| e.get("picked"))
                 .and_then(Json::as_f64),
             Some(1.0)
+        );
+        let faults = j.get("faults").unwrap();
+        assert_eq!(
+            faults
+                .get("crashed_by_phase")
+                .and_then(|c| c.get("download"))
+                .and_then(Json::as_f64),
+            Some(1.0)
+        );
+        assert_eq!(
+            faults
+                .get("retries")
+                .and_then(|r| r.get("total"))
+                .and_then(Json::as_f64),
+            Some(1.0)
+        );
+        assert_eq!(
+            faults.get("timeline").and_then(Json::as_arr).map(Vec::len),
+            Some(1)
         );
         // Round-trips through the serializer.
         assert!(Json::parse(&j.to_string_compact()).is_ok());

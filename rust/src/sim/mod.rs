@@ -61,6 +61,13 @@ pub struct RoundSim {
     /// disconnect. 0.0 when every crash is an opt-out at round start
     /// (the Bernoulli model), so Bernoulli behavior is unchanged.
     pub last_drop: f64,
+    /// Downlink bytes re-sent this round (fabric loss retransmits on
+    /// completed legs plus server retry copies) — accounted only on the
+    /// faults event path, exactly 0.0 otherwise, so adding it to the
+    /// flat books is bit-neutral with faults off.
+    pub retx_bytes_down: f64,
+    /// Uplink bytes re-sent this round (see `retx_bytes_down`).
+    pub retx_bytes_up: f64,
 }
 
 impl RoundSim {
@@ -111,6 +118,7 @@ pub fn simulate_round(
             net,
             clients,
             fabric: None,
+            faults: None,
         },
         participants,
         synced,
@@ -134,6 +142,18 @@ pub struct ContinuationSim {
     pub online_time: f64,
     /// Client-seconds offline within the deadline window.
     pub offline_time: f64,
+    /// `(client, seconds-of-work-completed)` for jobs interrupted by a
+    /// fault injector this round — the graceful-degradation policy
+    /// credits them so a crashed-at-epoch-k job resumes from k, not
+    /// zero. Empty off the faults path.
+    pub crash_info: Vec<(usize, f64)>,
+    /// How many of those fault-cut jobs were cancelled inside their
+    /// trailing *upload* leg — SAFA's "picked client crashed before its
+    /// update landed" count. 0 off the faults path.
+    pub upload_crashed: usize,
+    /// Uplink bytes re-sent for retried continuation uploads (faults
+    /// path only; 0.0 otherwise).
+    pub retx_bytes_up: f64,
 }
 
 impl ContinuationSim {
@@ -204,9 +224,7 @@ pub(crate) fn reference_round(
     RoundSim {
         arrivals,
         failures,
-        online_time: 0.0,
-        offline_time: 0.0,
-        last_drop: 0.0,
+        ..RoundSim::default()
     }
 }
 
@@ -243,8 +261,7 @@ pub(crate) fn reference_continuation(
         arrivals,
         crashed,
         stragglers,
-        online_time: 0.0,
-        offline_time: 0.0,
+        ..ContinuationSim::default()
     }
 }
 

@@ -43,6 +43,8 @@ pub enum Event {
     Crashed,
     /// Arrived but not drafted this round (SAFA CFCFM overflow).
     Undrafted,
+    /// Server retried a cancelled transfer leg after backoff (faults).
+    Retry,
 }
 
 impl Event {
@@ -58,6 +60,7 @@ impl Event {
             Event::Bypassed => "bypassed",
             Event::Crashed => "crashed",
             Event::Undrafted => "undrafted",
+            Event::Retry => "retry",
         }
     }
 }
@@ -74,6 +77,9 @@ pub struct ClientEvent {
     pub version: Option<usize>,
     pub staleness: Option<u32>,
     pub reason: Option<&'static str>,
+    /// Round phase the event hit (`download` / `train` / `upload`) —
+    /// set on fault-path `crashed` / `retry` lines.
+    pub phase: Option<&'static str>,
 }
 
 impl ClientEvent {
@@ -86,6 +92,7 @@ impl ClientEvent {
             version: None,
             staleness: None,
             reason: None,
+            phase: None,
         }
     }
 
@@ -101,6 +108,11 @@ impl ClientEvent {
 
     pub fn reason(mut self, r: &'static str) -> ClientEvent {
         self.reason = Some(r);
+        self
+    }
+
+    pub fn phase(mut self, p: &'static str) -> ClientEvent {
+        self.phase = Some(p);
         self
     }
 }
@@ -196,6 +208,9 @@ pub(crate) fn write_event<W: Write>(out: &mut W, ev: &ClientEvent) -> std::io::R
     if let Some(r) = ev.reason {
         write!(out, ",\"reason\":\"{r}\"")?;
     }
+    if let Some(p) = ev.phase {
+        write!(out, ",\"phase\":\"{p}\"")?;
+    }
     writeln!(out, "}}")
 }
 
@@ -224,6 +239,7 @@ mod tests {
         assert!(j.get("version").is_none());
         assert!(j.get("staleness").is_none());
         assert!(j.get("reason").is_none());
+        assert!(j.get("phase").is_none());
     }
 
     #[test]
@@ -238,6 +254,19 @@ mod tests {
         assert_eq!(j.get("staleness").and_then(Json::as_f64), Some(2.0));
         assert_eq!(j.get("reason").and_then(Json::as_str), Some("crash"));
         assert_eq!(j.get("event").and_then(Json::as_str), Some("merged"));
+    }
+
+    #[test]
+    fn phase_round_trips_on_crash_and_retry() {
+        let j = render(
+            ClientEvent::new(2, 8, Event::Crashed, 10.5)
+                .reason("crash")
+                .phase("download"),
+        );
+        assert_eq!(j.get("phase").and_then(Json::as_str), Some("download"));
+        let j = render(ClientEvent::new(2, 8, Event::Retry, 30.0).phase("upload"));
+        assert_eq!(j.get("event").and_then(Json::as_str), Some("retry"));
+        assert_eq!(j.get("phase").and_then(Json::as_str), Some("upload"));
     }
 
     #[test]
@@ -268,6 +297,7 @@ mod tests {
             (Event::Bypassed, "bypassed"),
             (Event::Crashed, "crashed"),
             (Event::Undrafted, "undrafted"),
+            (Event::Retry, "retry"),
         ];
         for (e, name) in all {
             assert_eq!(e.name(), name);

@@ -118,10 +118,14 @@ pub enum Counter {
     Transfers,
     /// Fabric retransmissions (lost attempts that were retried).
     Retransmits,
+    /// Fault interruptions injected (crash / flap / regional outage).
+    FaultsInjected,
+    /// Server retry attempts after a cancelled transfer leg.
+    Retries,
 }
 
 /// Number of [`Counter`] variants.
-pub const NUM_COUNTERS: usize = 6;
+pub const NUM_COUNTERS: usize = 8;
 
 impl Counter {
     /// Every counter, in shard-slot order.
@@ -132,6 +136,8 @@ impl Counter {
         Counter::Chunks,
         Counter::Transfers,
         Counter::Retransmits,
+        Counter::FaultsInjected,
+        Counter::Retries,
     ];
 
     /// Shard slot of this counter.
@@ -148,6 +154,8 @@ impl Counter {
             Counter::Chunks => "chunks",
             Counter::Transfers => "transfers",
             Counter::Retransmits => "retransmits",
+            Counter::FaultsInjected => "faults_injected",
+            Counter::Retries => "retries",
         }
     }
 }

@@ -10,7 +10,10 @@
 //! adds and clock reads, never heap traffic), and with the network
 //! fabric off AND fully on (contended + heterogeneous + perturbed
 //! transfers draw from stack-constructed per-transfer streams; the
-//! download-wait table is pooled in `RoundScratch`).
+//! download-wait table is pooled in `RoundScratch`), and with the
+//! fault-injection engine armed (chaos-profile injectors: cancellable
+//! transfer legs, bounded retries and crash-info reporting all live in
+//! pooled scratch).
 //!
 //! The serial case is strict by construction. The pooled case is the
 //! persistent worker pool's contract: warm-up rounds spawn + park the
@@ -32,6 +35,7 @@
 use safa::client::ClientState;
 use safa::config::presets;
 use safa::engine::{AvailabilityModel, FleetEngine, RoundCtx};
+use safa::faults::{FaultPlan, FaultRuntime};
 use safa::model::ParamVec;
 use safa::net::fabric::{FabricConfig, FabricRuntime};
 use safa::net::NetworkModel;
@@ -71,10 +75,28 @@ fn allocs_in_steady_state(
     warmup: usize,
     rounds: usize,
     fabric_on: bool,
+    faults_on: bool,
 ) -> u64 {
     let mut cfg = presets::preset("tiny").unwrap();
     cfg.env.m = m;
     cfg.env.crash_prob = 0.2;
+    if faults_on {
+        // Every injector armed (the chaos profile): crash/flap cuts,
+        // correlated outages, link degradation, bounded retries — the
+        // faults event path must be heap-free at steady state too.
+        cfg.env.faults = FaultPlan {
+            enabled: true,
+            crash_hazard: 0.15,
+            flap_prob: 0.5,
+            flap_downtime_s: 30.0,
+            regions: 2,
+            outage_prob: 0.1,
+            outage_len_s: 60.0,
+            degrade_prob: 0.2,
+            degrade_factor: 2.0,
+            ..FaultPlan::default()
+        };
+    }
     if fabric_on {
         // Contended + heterogeneous + perturbed: every fabric code path
         // that can run inside the engine is on the measured hot path.
@@ -96,11 +118,15 @@ fn allocs_in_steady_state(
     // Built outside the measured window (the link table is one Vec);
     // per-transfer draws construct no heap state.
     let fabric = cfg.env.fabric.enabled.then(|| FabricRuntime::new(&cfg.env, 7));
+    let faults = cfg.env.faults.enabled.then(|| FaultRuntime::new(&cfg));
     let net = NetworkModel::new(&cfg.env);
     let clients = fleet(m);
     let participants: Vec<usize> = (0..m).collect();
     let synced: Vec<bool> = (0..m).map(|k| k % 2 == 0).collect();
     let jobs: Vec<f64> = (0..m).map(|k| 40.0 + 11.0 * k as f64).collect();
+    // Trailing upload legs for the faults continuation path (built
+    // outside the measured window, like every other input buffer).
+    let tails: Vec<f64> = jobs.iter().map(|j| 0.3 * j).collect();
     let mut engine = FleetEngine::new(avail, m);
     let mut round_out = RoundSim::default();
     let mut cont_out = ContinuationSim::default();
@@ -115,10 +141,25 @@ fn allocs_in_steady_state(
             net: &net,
             clients: &clients,
             fabric: fabric.as_ref(),
+            faults: faults.as_ref(),
         };
         engine.run_round_into(t, ctx, &participants, &synced, &rng, ro);
         let rng2 = Pcg64::new(6).split(t as u64);
-        engine.run_continuation_into(t, &cfg, &participants, &jobs, &rng2, co);
+        if let Some(fr) = faults.as_ref() {
+            engine.run_continuation_faults_into(
+                t,
+                &cfg,
+                &participants,
+                &jobs,
+                &tails,
+                fabric.as_ref(),
+                fr,
+                &rng2,
+                co,
+            );
+        } else {
+            engine.run_continuation_into(t, &cfg, &participants, &jobs, &rng2, co);
+        }
     };
 
     for t in 1..=warmup {
@@ -166,6 +207,7 @@ fn steady_state_rounds_do_not_allocate() {
                 3,
                 8,
                 false,
+                false,
             );
             assert_eq!(bern, 0, "Bernoulli direct path allocated ({mode})");
             let markov = allocs_in_steady_state(
@@ -177,6 +219,7 @@ fn steady_state_rounds_do_not_allocate() {
                 3,
                 8,
                 false,
+                false,
             );
             assert_eq!(markov, 0, "Markov event path allocated ({mode})");
             let fab_bern = allocs_in_steady_state(
@@ -185,6 +228,7 @@ fn steady_state_rounds_do_not_allocate() {
                 3,
                 8,
                 true,
+                false,
             );
             assert_eq!(fab_bern, 0, "fabric Bernoulli path allocated ({mode})");
             let fab_markov = allocs_in_steady_state(
@@ -196,8 +240,36 @@ fn steady_state_rounds_do_not_allocate() {
                 3,
                 8,
                 true,
+                false,
             );
             assert_eq!(fab_markov, 0, "fabric Markov event path allocated ({mode})");
+            // Faults event path, with and without the contended fabric:
+            // injector queries, cancellable legs, retries and the
+            // crash-info report all ride pooled buffers.
+            let faults_bern = allocs_in_steady_state(
+                AvailabilityModel::BernoulliPerRound { crash_prob: 0.2 },
+                m,
+                3,
+                8,
+                false,
+                true,
+            );
+            assert_eq!(faults_bern, 0, "faults Bernoulli path allocated ({mode})");
+            let faults_fab = allocs_in_steady_state(
+                AvailabilityModel::Markov {
+                    mean_uptime_s: 400.0,
+                    mean_downtime_s: 150.0,
+                },
+                m,
+                3,
+                8,
+                true,
+                true,
+            );
+            assert_eq!(
+                faults_fab, 0,
+                "faults + fabric Markov event path allocated ({mode})"
+            );
         });
         // Pooled dispatch at width 4 (m=500 over the 64-client draw
         // grain genuinely forks): after warm-up spawns and parks the
@@ -211,6 +283,7 @@ fn steady_state_rounds_do_not_allocate() {
                     3,
                     8,
                     false,
+                    false,
                 );
                 assert_eq!(bern, 0, "pooled Bernoulli direct path allocated ({mode})");
                 let markov = allocs_in_steady_state(
@@ -221,6 +294,7 @@ fn steady_state_rounds_do_not_allocate() {
                     m,
                     3,
                     8,
+                    false,
                     false,
                 );
                 assert_eq!(markov, 0, "pooled Markov event path allocated ({mode})");
@@ -233,10 +307,26 @@ fn steady_state_rounds_do_not_allocate() {
                     3,
                     8,
                     true,
+                    false,
                 );
                 assert_eq!(
                     fab_markov, 0,
                     "pooled fabric Markov event path allocated ({mode})"
+                );
+                let faults_fab = allocs_in_steady_state(
+                    AvailabilityModel::Markov {
+                        mean_uptime_s: 400.0,
+                        mean_downtime_s: 150.0,
+                    },
+                    m,
+                    3,
+                    8,
+                    true,
+                    true,
+                );
+                assert_eq!(
+                    faults_fab, 0,
+                    "pooled faults + fabric event path allocated ({mode})"
                 );
             });
         });

@@ -107,6 +107,77 @@ fn books_match_traffic_without_codec() {
     }
 }
 
+/// Fault-injection satellite: with injectors live on a lossy fabric the
+/// flat `m_sync × payload` / `n_committed × payload` identities become
+/// *floors* — retried server copies and loss retransmits re-send whole
+/// payloads, so the books may only exceed the floor by a non-negative
+/// integer multiple of the payload. (With faults off the exact
+/// identities above keep holding bit-for-bit; that path is pinned by
+/// `books_match_traffic_without_codec` and tests/faults.rs.)
+#[test]
+fn retransmits_book_whole_payloads_under_faults() {
+    use safa::faults::FaultPlan;
+
+    let fabric = FabricConfig::from_parts(
+        "fifo",
+        None,
+        None,
+        None,
+        Some(0.05),
+        Some(0.02),
+        Some(0.15), // lossy: plenty of per-leg retransmits
+        None,
+        None,
+        None,
+        None,
+    )
+    .unwrap();
+    let mut saw_excess = false;
+    for kind in PROTOS {
+        let mut cfg = cfg_for(kind, ChurnModel::Bernoulli);
+        cfg.env.fabric = fabric.clone();
+        cfg.env.faults = FaultPlan {
+            enabled: true,
+            crash_hazard: 0.4,
+            flap_prob: 0.7,
+            flap_downtime_s: 5.0,
+            ..FaultPlan::default()
+        };
+        let mut env = FedEnv::new(&cfg).unwrap();
+        let payload = env.net.model_bytes; // no codec
+        let mut proto = make_protocol(&env);
+        for t in 1..=10 {
+            let rec = proto.run_round(t, &mut env);
+            let label = format!("{} t={t}", kind.name());
+            for (name, bytes, floor) in [
+                ("down", rec.bytes_down, rec.m_sync as f64 * payload),
+                ("up", rec.bytes_up, rec.n_committed as f64 * payload),
+            ] {
+                let excess = bytes - floor;
+                assert!(
+                    excess > -1e-6,
+                    "{label}: bytes_{name} {bytes} fell below the \
+                     one-copy-per-transfer floor {floor}"
+                );
+                let copies = excess / payload;
+                assert!(
+                    (copies - copies.round()).abs() < 1e-6,
+                    "{label}: bytes_{name} excess {excess} is not a whole \
+                     number of {payload}-byte payloads"
+                );
+                if copies.round() > 0.0 {
+                    saw_excess = true;
+                }
+            }
+        }
+    }
+    assert!(
+        saw_excess,
+        "no protocol ever re-sent a payload over 10 lossy chaos rounds — \
+         the retransmit books went unexercised"
+    );
+}
+
 #[test]
 fn books_match_traffic_with_quantizing_codec() {
     // 8-bit stochastic quantization of f32 payloads: ratio 8/32.

@@ -113,6 +113,7 @@ fn engine_rounds(
             net: &net,
             clients,
             fabric: None,
+            faults: None,
         };
         round_outs.push(engine.run_round(t, ctx, &participants, &synced, &rng));
         let rng2 = Pcg64::new(43).split(t as u64);

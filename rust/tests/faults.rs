@@ -1,0 +1,415 @@
+//! Fault-injection engine integration tests (robustness tentpole).
+//!
+//! What is pinned:
+//! * **Off == today**: an enabled-but-neutral `FaultPlan` (no injector
+//!   can fire) is bit-identical to the default-off configuration, for
+//!   every protocol × churn model × fabric setting — the engine routes
+//!   on `any_injector()`, so arming the policy knobs alone must not
+//!   perturb a single bit.
+//! * **Width invariance**: the `chaos` preset (every injector live on
+//!   the contended fabric) is bit-identical across thread widths
+//!   {1, 3, 8} — injector queries are pure in (round, client).
+//! * **Mid-download crash reschedules contention**: a client cut while
+//!   its sync copy is on the FIFO server stream frees the stream at the
+//!   cut, so survivors' queue waits shrink — never grow.
+//! * **Bounded retry**: a flap that cuts a trailing upload leg is
+//!   salvaged by the server's retry-with-backoff when the budget allows
+//!   it, and counts as an upload crash when `retry_max = 0`; backoff
+//!   doubles per attempt and saturates at the cap.
+//! * **Partial-progress credit**: a crashed continuation job resumes
+//!   from the work it finished, not from zero, iff `partial_credit`.
+
+use safa::client::ClientState;
+use safa::config::{presets, ChurnModel, ExperimentConfig, ProtocolKind};
+use safa::engine::{AvailabilityModel, FleetEngine, RoundCtx};
+use safa::faults::{FaultPlan, FaultRuntime};
+use safa::model::ParamVec;
+use safa::net::fabric::{FabricConfig, FabricRuntime};
+use safa::net::NetworkModel;
+use safa::protocol::{make_protocol, FedEnv};
+use safa::sim::ContinuationSim;
+use safa::util::parallel::with_thread_count;
+use safa::util::rng::Pcg64;
+
+const WIDTHS: [usize; 3] = [1, 3, 8];
+const PROTOS: [ProtocolKind; 4] = [
+    ProtocolKind::Safa,
+    ProtocolKind::FedAvg,
+    ProtocolKind::FedCs,
+    ProtocolKind::FedAsync,
+];
+
+fn churns() -> [ChurnModel; 2] {
+    [
+        ChurnModel::Bernoulli,
+        ChurnModel::Markov {
+            mean_uptime_s: 300.0,
+            mean_downtime_s: 200.0,
+        },
+    ]
+}
+
+fn contended_fabric() -> FabricConfig {
+    FabricConfig::from_parts(
+        "fifo",
+        None,
+        Some("lognormal"),
+        Some(0.5),
+        Some(0.05),
+        Some(0.02),
+        Some(0.02),
+        None,
+        None,
+        None,
+        None,
+    )
+    .unwrap()
+}
+
+/// Per-round fingerprint: every field that could diverge, on raw bits.
+type Fingerprint = (u64, usize, usize, usize, u64, u64, Vec<u32>, u32);
+
+fn run_fingerprints(cfg: &ExperimentConfig, rounds: usize) -> Vec<Fingerprint> {
+    let mut env = FedEnv::new(cfg).unwrap();
+    let mut proto = make_protocol(&env);
+    (1..=rounds)
+        .map(|t| {
+            let rec = proto.run_round(t, &mut env);
+            (
+                rec.round_len.to_bits(),
+                rec.n_picked,
+                rec.n_picked_crashed,
+                rec.n_committed,
+                rec.bytes_down.to_bits(),
+                rec.bytes_up.to_bits(),
+                rec.staleness.clone(),
+                proto.global().as_slice()[0].to_bits(),
+            )
+        })
+        .collect()
+}
+
+/// Off == today: an enabled plan with no live injector takes the
+/// legacy paths bit-for-bit, for every protocol × churn × fabric cell.
+#[test]
+fn neutral_plan_is_bit_identical_to_faults_off() {
+    for kind in PROTOS {
+        for churn in churns() {
+            for fabric_on in [false, true] {
+                let mut cfg = presets::preset("tiny").unwrap();
+                cfg.protocol.kind = kind;
+                cfg.env.crash_prob = 0.3;
+                cfg.env.churn = churn.clone();
+                cfg.seed = 11;
+                if fabric_on {
+                    cfg.env.fabric = contended_fabric();
+                }
+                let off = run_fingerprints(&cfg, 5);
+                // Arm the master switch and every *policy* knob, but no
+                // injector: the run must not change in a single bit.
+                cfg.env.faults = FaultPlan {
+                    enabled: true,
+                    retry_max: 7,
+                    retry_backoff_s: 3.0,
+                    retry_backoff_cap_s: 11.0,
+                    partial_credit: false,
+                    ..FaultPlan::default()
+                };
+                assert!(!cfg.env.faults.any_injector());
+                let neutral = run_fingerprints(&cfg, 5);
+                assert_eq!(
+                    off, neutral,
+                    "{}/{churn:?}/fabric={fabric_on}: neutral plan diverged",
+                    kind.name()
+                );
+            }
+        }
+    }
+}
+
+/// The chaos preset — every injector live on the contended fabric — is
+/// bit-identical at widths {1, 3, 8} for fresh-round and continuation
+/// protocols alike.
+#[test]
+fn chaos_runs_are_width_invariant() {
+    for kind in [
+        ProtocolKind::Safa,
+        ProtocolKind::FedAvg,
+        ProtocolKind::FedAsync,
+    ] {
+        let mut cfg = presets::preset("chaos").unwrap();
+        cfg.protocol.kind = kind;
+        cfg.env.m = 120; // enough participants that widths genuinely fork
+        cfg.task.n = 1200;
+        cfg.task.n_test = 60;
+        cfg.train.rounds = 4;
+        assert!(cfg.env.faults.enabled && cfg.env.faults.any_injector());
+        let reference = with_thread_count(1, || run_fingerprints(&cfg, cfg.train.rounds));
+        for &width in &WIDTHS[1..] {
+            let got = with_thread_count(width, || run_fingerprints(&cfg, cfg.train.rounds));
+            assert_eq!(
+                got,
+                reference,
+                "{} chaos run diverged at width {width}",
+                kind.name()
+            );
+        }
+    }
+}
+
+/// A deterministic synthetic fleet with fast training, so round timing
+/// is dominated by the transfer legs under test.
+fn fast_fleet(m: usize) -> Vec<ClientState> {
+    (0..m)
+        .map(|id| ClientState {
+            id,
+            perf: 50.0,
+            batches_per_epoch: 1,
+            n_k: 10,
+            local_model: ParamVec::zeros(1),
+            version: 0,
+            base_version: 0,
+            committed_last: true,
+            picked_last: false,
+            pending_partial: 0.0,
+            job: None,
+        })
+        .collect()
+}
+
+/// Mid-download crash semantics on the contended fabric: a client cut
+/// while (or before) its copy is on the single FIFO server stream frees
+/// the stream early, so every surviving arrival lands no later than in
+/// the injector-free run — and strictly earlier whenever a queued copy
+/// ahead of it was cancelled mid-push.
+#[test]
+fn mid_download_crash_shrinks_survivor_waits() {
+    let m = 24;
+    let mut cfg = presets::preset("tiny").unwrap();
+    cfg.env.m = m;
+    cfg.env.crash_prob = 0.0; // injector cuts are the only failures
+    cfg.env.fabric = FabricConfig::from_parts(
+        "fifo", None, None, None, None, None, None, None, None, None, None,
+    )
+    .unwrap();
+    cfg.env.faults = FaultPlan {
+        enabled: true,
+        crash_hazard: 0.9,
+        ..FaultPlan::default()
+    };
+    let fabric = FabricRuntime::new(&cfg.env, cfg.seed);
+    let (streams, service) = fabric.contention_slots();
+    assert_eq!(streams, 1, "FIFO fabric must serialize the server link");
+    // Deadline sized to the round's actual activity span (queue drain +
+    // one download + one upload + slack), so injector cuts — uniform
+    // over the horizon — usually land while transfers are in flight.
+    let td = fabric.t_down(1, 0);
+    cfg.train.t_lim = (m as f64 * service + 2.0 * td) * 1.2;
+    let fr = FaultRuntime::new(&cfg);
+    let net = NetworkModel::new(&cfg.env);
+    let clients = fast_fleet(m);
+    let participants: Vec<usize> = (0..m).collect();
+    let synced = vec![true; m];
+
+    let avail = AvailabilityModel::BernoulliPerRound { crash_prob: 0.0 };
+    let mut legacy = FleetEngine::new(avail.clone(), m);
+    let mut faulty = FleetEngine::new(avail, m);
+    let mut arrivals_l = vec![f64::NAN; m];
+    let mut strictly_earlier = 0usize;
+    let mut cuts = 0usize;
+    for t in 1..=40 {
+        let rng = Pcg64::new(0xd1).split(t as u64);
+        let base = legacy.run_round(
+            t,
+            RoundCtx {
+                cfg: &cfg,
+                net: &net,
+                clients: &clients,
+                fabric: Some(&fabric),
+                faults: None,
+            },
+            &participants,
+            &synced,
+            &rng,
+        );
+        assert_eq!(base.arrivals.len(), m, "t={t}: injector-free baseline drops");
+        arrivals_l.fill(f64::NAN);
+        for a in &base.arrivals {
+            arrivals_l[a.client] = a.time;
+        }
+        let sim = faulty.run_round(
+            t,
+            RoundCtx {
+                cfg: &cfg,
+                net: &net,
+                clients: &clients,
+                fabric: Some(&fabric),
+                faults: Some(&fr),
+            },
+            &participants,
+            &synced,
+            &rng,
+        );
+        cuts += sim.failures.len();
+        for a in &sim.arrivals {
+            let before = arrivals_l[a.client];
+            assert!(
+                a.time <= before + 1e-9,
+                "t={t}: survivor {} arrived LATER under faults ({} > {before})",
+                a.client,
+                a.time
+            );
+            if a.time < before - 1e-9 {
+                strictly_earlier += 1;
+            }
+        }
+    }
+    assert!(cuts > 0, "crash injector never fired over 40 rounds");
+    assert!(
+        strictly_earlier > 0,
+        "no survivor's queue wait ever shrank — mid-download cancellation \
+         did not free the contended stream ({cuts} cuts observed)"
+    );
+}
+
+/// Bounded retry on a flap-cut upload leg: with budget the server
+/// replays the tail after a capped backoff and the update still lands;
+/// with `retry_max = 0` the same cut counts as an upload crash.
+#[test]
+fn retry_budget_salvages_flapped_uploads() {
+    let m = 60;
+    let job = 200.0;
+    let mk = |retry_max: u32| -> (ExperimentConfig, FaultRuntime) {
+        let mut cfg = presets::preset("tiny").unwrap();
+        cfg.env.m = m;
+        cfg.env.crash_prob = 0.0;
+        cfg.train.t_lim = 1000.0;
+        cfg.env.faults = FaultPlan {
+            enabled: true,
+            crash_hazard: 1.0, // every client draws a cut somewhere
+            flap_prob: 1.0,    // ... and every cut recovers
+            flap_downtime_s: 1.0,
+            retry_max,
+            retry_backoff_s: 5.0,
+            retry_backoff_cap_s: 60.0,
+            ..FaultPlan::default()
+        };
+        let fr = FaultRuntime::new(&cfg);
+        (cfg, fr)
+    };
+    let participants: Vec<usize> = (0..m).collect();
+    let jobs = vec![job; m];
+    // The whole job is its upload tail: any cut that lands before the
+    // job completes is a mid-upload cancellation.
+    let tails = vec![job; m];
+    let run = |retry_max: u32| -> ContinuationSim {
+        let (cfg, fr) = mk(retry_max);
+        let mut engine = FleetEngine::new(
+            AvailabilityModel::BernoulliPerRound { crash_prob: 0.0 },
+            m,
+        );
+        let mut out = ContinuationSim::default();
+        let rng = Pcg64::new(0xab).split(1);
+        engine.run_continuation_faults_into(
+            1,
+            &cfg,
+            &participants,
+            &jobs,
+            &tails,
+            None,
+            &fr,
+            &rng,
+            &mut out,
+        );
+        out
+    };
+    let no_retry = run(0);
+    let with_retry = run(2);
+    assert!(
+        no_retry.upload_crashed > 0,
+        "no upload-leg cut fired — the scenario lost its teeth"
+    );
+    assert_eq!(
+        with_retry.upload_crashed, 0,
+        "budgeted retries should salvage every flapped upload"
+    );
+    assert!(
+        with_retry.arrivals.len() > no_retry.arrivals.len(),
+        "retries must convert upload crashes back into arrivals \
+         ({} vs {})",
+        with_retry.arrivals.len(),
+        no_retry.arrivals.len()
+    );
+    // A retried tail lands at cut + backoff + tail: visibly after the
+    // un-cut completion time, never past the deadline.
+    assert!(
+        with_retry.arrivals.iter().any(|a| a.time > job + 4.9),
+        "no arrival shows the retry backoff + replayed tail"
+    );
+    assert!(with_retry.arrivals.iter().all(|a| a.time <= 1000.0));
+
+    // Backoff doubles per attempt and saturates at the cap.
+    let (_, fr) = mk(2);
+    assert_eq!(fr.backoff(1), 5.0);
+    assert_eq!(fr.backoff(2), 10.0);
+    assert_eq!(fr.backoff(3), 20.0);
+    assert_eq!(fr.backoff(5), 60.0, "backoff must cap, not overflow");
+    assert_eq!(fr.backoff(63), 60.0);
+}
+
+/// Partial-progress credit: after a crash round, a cut client's paused
+/// job carries `remaining - done` iff the policy is on — identical cuts
+/// (same seed) with the policy off resume from the full remaining work.
+#[test]
+fn partial_credit_resumes_interrupted_jobs_from_the_cut() {
+    let remaining = |credit: bool| -> Vec<Option<f64>> {
+        let mut cfg = presets::preset("tiny").unwrap();
+        cfg.protocol.kind = ProtocolKind::FedAsync;
+        cfg.env.m = 40;
+        cfg.task.n = 400;
+        cfg.task.n_test = 40;
+        cfg.env.crash_prob = 0.0;
+        cfg.seed = 5;
+        // Tight deadline + certain cut draw: most jobs (~120 s of
+        // transfer + training) are still in flight when their uniform
+        // [0, T_lim) cut lands, so plenty of jobs pause mid-flight.
+        cfg.train.t_lim = 200.0;
+        cfg.env.faults = FaultPlan {
+            enabled: true,
+            crash_hazard: 1.0, // hard crashes: no flap, no retry
+            partial_credit: credit,
+            ..FaultPlan::default()
+        };
+        let mut env = FedEnv::new(&cfg).unwrap();
+        let mut proto = make_protocol(&env);
+        let _ = proto.run_round(1, &mut env);
+        env.clients.iter().map(|c| c.job.map(|j| j.remaining)).collect()
+    };
+    let credited = remaining(true);
+    let flat = remaining(false);
+    assert_eq!(credited.len(), flat.len());
+    let mut strictly_less = 0usize;
+    let mut paused = 0usize;
+    for (k, (a, b)) in credited.iter().zip(&flat).enumerate() {
+        match (a, b) {
+            (Some(a), Some(b)) => {
+                paused += 1;
+                assert!(
+                    a <= &(b + 1e-9),
+                    "client {k}: credit increased remaining work ({a} > {b})"
+                );
+                if *a < b - 1e-9 {
+                    strictly_less += 1;
+                }
+            }
+            // Same seed, same cuts: the paused set must be identical.
+            (a, b) => assert_eq!(a, b, "client {k}: paused sets diverged"),
+        }
+    }
+    assert!(paused > 0, "no job was ever interrupted — hazard dead?");
+    assert!(
+        strictly_less > 0,
+        "partial credit never reduced a paused job's remaining work \
+         ({paused} paused jobs)"
+    );
+}
