@@ -1,12 +1,18 @@
-//! Bench regression differ: compare a fresh `BENCH_profile.json` (or any
-//! BENCH-schema file) against a committed baseline and print a
-//! regression table.
+//! Bench regression differ: compare fresh BENCH-schema files against
+//! their committed baselines and print a regression table.
 //!
 //! ```text
 //! cargo bench --bench bench_diff -- \
-//!     --baseline ../BENCH_profile.json --fresh BENCH_profile.json \
+//!     [--baseline ../BENCH_profile.json --fresh BENCH_profile.json] \
 //!     [--tolerance 0.25] [--json BENCH_profile_diff.json]
 //! ```
+//!
+//! With no `--baseline`/`--fresh` flags the differ walks the default
+//! registry — `BENCH_profile.json`, `BENCH_chaos.json` and
+//! `BENCH_scenario.json`, each diffed against the committed repo-root
+//! baseline of the same name — and skips (with a note) any pair whose
+//! files are missing, so a partial bench run still diffs what it
+//! produced. Explicit flags diff exactly one pair, as before.
 //!
 //! A cell regresses when its `mean_ns` grows (or `rounds_per_sec`
 //! shrinks) by more than the relative tolerance. Cells present on only
@@ -38,32 +44,74 @@ fn load(path: &str) -> Json {
     Json::parse(&text).unwrap_or_else(|e| panic!("bench_diff: {path} is not valid JSON: {e}"))
 }
 
-fn main() {
-    safa::util::logging::init();
-    let baseline_path =
-        arg_value("--baseline").unwrap_or_else(|| "../BENCH_profile.json".to_string());
-    let fresh_path = arg_value("--fresh").unwrap_or_else(|| "BENCH_profile.json".to_string());
-    let tolerance: f64 = arg_value("--tolerance")
-        .map(|t| t.parse().expect("--tolerance expects a number"))
-        .unwrap_or(0.25);
+/// Baseline/fresh pairs walked when no explicit flags are given: every
+/// BENCH artifact the CI bench job produces, against its committed
+/// repo-root baseline.
+const REGISTRY: &[(&str, &str)] = &[
+    ("../BENCH_profile.json", "BENCH_profile.json"),
+    ("../BENCH_chaos.json", "BENCH_chaos.json"),
+    ("../BENCH_scenario.json", "BENCH_scenario.json"),
+];
 
-    let baseline = load(&baseline_path);
-    let fresh = load(&fresh_path);
+/// Diff one baseline/fresh pair; returns its regression count.
+fn diff_pair(
+    baseline_path: &str,
+    fresh_path: &str,
+    tolerance: f64,
+    json_out: Option<&str>,
+) -> usize {
+    let baseline = load(baseline_path);
+    let fresh = load(fresh_path);
     let diffs = diff_bench_cells(&baseline, &fresh, tolerance);
     println!("baseline: {baseline_path}");
     println!("fresh:    {fresh_path}");
     print!("{}", render_diff(&diffs, tolerance));
 
-    if let Some(out) = arg_value("--json") {
-        write_results_file(&out, &diff_to_json(&diffs, tolerance).to_string_pretty())
+    if let Some(out) = json_out {
+        write_results_file(out, &diff_to_json(&diffs, tolerance).to_string_pretty())
             .expect("write diff json");
         println!("wrote {out}");
     }
 
-    let regressions = diffs
+    diffs
         .iter()
         .filter(|d| d.status == safa::bench_harness::DiffStatus::Regressed)
-        .count();
+        .count()
+}
+
+fn main() {
+    safa::util::logging::init();
+    let tolerance: f64 = arg_value("--tolerance")
+        .map(|t| t.parse().expect("--tolerance expects a number"))
+        .unwrap_or(0.25);
+    let json_out = arg_value("--json");
+
+    let explicit_baseline = arg_value("--baseline");
+    let explicit_fresh = arg_value("--fresh");
+    let regressions = if explicit_baseline.is_some() || explicit_fresh.is_some() {
+        // Explicit mode: one pair, missing files are hard errors.
+        let baseline_path =
+            explicit_baseline.unwrap_or_else(|| "../BENCH_profile.json".to_string());
+        let fresh_path = explicit_fresh.unwrap_or_else(|| "BENCH_profile.json".to_string());
+        diff_pair(&baseline_path, &fresh_path, tolerance, json_out.as_deref())
+    } else {
+        // Registry mode: diff every artifact pair that exists. The
+        // `--json` report (if any) covers the last diffed pair only;
+        // per-pair reports need explicit-mode invocations.
+        let mut total = 0;
+        for (baseline_path, fresh_path) in REGISTRY {
+            let missing = [baseline_path, fresh_path]
+                .into_iter()
+                .find(|p| !std::path::Path::new(*p).exists());
+            if let Some(p) = missing {
+                println!("skipping {fresh_path}: {p} not found");
+                continue;
+            }
+            total += diff_pair(baseline_path, fresh_path, tolerance, json_out.as_deref());
+        }
+        total
+    };
+
     if regressions > 0 {
         eprintln!(
             "bench_diff: {regressions} cell(s) regressed beyond {:.0}% tolerance",

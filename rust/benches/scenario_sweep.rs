@@ -1,0 +1,75 @@
+//! Scenario sweep bench: what the continuous wall-clock scenario engine
+//! costs and what diurnal churn / flash crowds do to round outcomes,
+//! A/B'd against the same environment with the scenario off.
+//!
+//! Regimes per protocol (all five):
+//!
+//! * `baseline`   — scenario disabled: the legacy per-round availability
+//!   paths on the diurnal preset's environment;
+//! * `diurnal`    — the `diurnal` preset: exponential on/off dwells on
+//!   the continuous clock under a strong day/night sine modulation;
+//! * `flashcrowd` — the `flashcrowd` preset: contended fabric plus a
+//!   scripted mass join, departures and a regional outage (dynamic
+//!   fleet membership end to end).
+//!
+//! Each cell prints the survival outcome (crashed vs committed client
+//! counts over the measured rounds) next to the timing line, so the
+//! timeline walker's scheduling tax and its behavioral footprint land
+//! in the same artifact. Emits `BENCH_scenario.json` (override with
+//! `-- --json <path>`; BENCH schema documented in EXPERIMENTS.md).
+//! `SAFA_BENCH_FAST=1` trims the grid for CI smoke runs.
+
+use safa::bench_harness::{json_path_from_args, Bencher};
+use safa::config::{presets, ProtocolKind};
+use safa::coordinator::Coordinator;
+use safa::scenario::ScenarioSpec;
+
+fn main() {
+    safa::util::logging::init();
+    let fast = std::env::var("SAFA_BENCH_FAST").as_deref() == Ok("1");
+    let mut b = Bencher::new();
+    let protocols: &[ProtocolKind] = if fast {
+        &[ProtocolKind::Safa, ProtocolKind::FedAvg]
+    } else {
+        &ProtocolKind::ALL
+    };
+
+    for &proto in protocols {
+        for regime in ["baseline", "diurnal", "flashcrowd"] {
+            // `baseline` is the diurnal environment with the scenario
+            // switched off, so the A/B isolates the timeline walker.
+            let mut cfg = match regime {
+                "flashcrowd" => presets::preset("flashcrowd").expect("flashcrowd preset"),
+                _ => presets::preset("diurnal").expect("diurnal preset"),
+            };
+            if regime == "baseline" {
+                cfg.env.scenario = ScenarioSpec::default();
+            }
+            cfg.protocol.kind = proto;
+            // Fresh coordinator per cell: rounds must be driven in order,
+            // and the scratch pools warm up during calibration so the
+            // measured rounds are steady-state.
+            let mut coord = Coordinator::new(&cfg).expect("coordinator");
+            let mut t = 1usize;
+            let mut crashed = 0usize;
+            let mut committed = 0usize;
+            let name = format!("{}_round_{regime}", proto.name().to_ascii_lowercase());
+            b.bench(&name, || {
+                let rec = coord.protocol.run_round(t, &mut coord.env);
+                t += 1;
+                crashed += rec.n_crashed;
+                committed += rec.n_committed;
+                rec.round_len
+            });
+            println!(
+                "    outcome: {crashed} crashed / {committed} committed \
+                 client-rounds over {} rounds",
+                t - 1
+            );
+        }
+    }
+
+    b.write_json("results/scenario_sweep.json").expect("write results");
+    b.write_json(&json_path_from_args("BENCH_scenario.json"))
+        .expect("write BENCH json");
+}

@@ -76,6 +76,13 @@ pub struct ClientState {
     pub pending_partial: f64,
     /// In-flight training job (SAFA continuation semantics).
     pub job: Option<Job>,
+    /// Round the client joined the fleet (scenario flash crowds);
+    /// `None` = founding member. Lifecycle bookkeeping only — windows
+    /// and membership masks come from the scenario timeline.
+    pub joined_round: Option<usize>,
+    /// Round the client departed the fleet (scenario flash leaves);
+    /// `None` = still a member.
+    pub departed_round: Option<usize>,
 }
 
 impl ClientState {
@@ -137,6 +144,8 @@ pub fn build_clients(
                 picked_last: false,
                 pending_partial: 0.0,
                 job: None,
+                joined_round: None,
+                departed_round: None,
             }
         })
         .collect()

@@ -9,6 +9,7 @@ pub use presets::{preset, preset_names, scaled_preset};
 use crate::error::{Result, SafaError};
 use crate::faults::FaultPlan;
 use crate::net::fabric::FabricConfig;
+use crate::scenario::ScenarioSpec;
 use crate::util::toml::TomlDoc;
 
 /// Which ML task (paper §IV-A, Table II).
@@ -276,6 +277,11 @@ pub struct EnvConfig {
     /// link degradation, retry/partial-credit policies). Default:
     /// disabled — the engine's legacy paths, bit-for-bit.
     pub faults: FaultPlan,
+    /// Continuous wall-clock availability scenario (diurnal churn, flash
+    /// crowds, regional outages) or a per-round reduction. Default:
+    /// disabled — `env.churn` drives availability, bit-for-bit as before.
+    /// When enabled it replaces `env.churn` entirely.
+    pub scenario: ScenarioSpec,
 }
 
 /// Federated-optimization parameters.
@@ -435,6 +441,7 @@ impl ExperimentConfig {
         }
         self.env.fabric.validate()?;
         self.env.faults.validate()?;
+        self.env.scenario.validate()?;
         Ok(())
     }
 
@@ -545,6 +552,41 @@ impl ExperimentConfig {
         {
             return Err(SafaError::Config(
                 "env.faults_* keys require env.faults = \"off\" or \"on\"".into(),
+            ));
+        }
+        if let Some(v) = doc.get_str("env.scenario") {
+            cfg.env.scenario = ScenarioSpec::from_parts(
+                v,
+                doc.get_f64("env.scenario_crash_prob"),
+                doc.get_f64("env.scenario_uptime_s"),
+                doc.get_f64("env.scenario_downtime_s"),
+                doc.get_f64("env.scenario_diurnal_amp"),
+                doc.get_f64("env.scenario_diurnal_period_s"),
+                doc.get_i64("env.scenario_regions"),
+                doc.get_f64("env.scenario_flash_at_s"),
+                doc.get_i64("env.scenario_flash_joins"),
+                doc.get_i64("env.scenario_flash_leaves"),
+                doc.get_f64("env.scenario_outage_at_s"),
+                doc.get_i64("env.scenario_outage_region"),
+                doc.get_f64("env.scenario_outage_len_s"),
+            )?;
+        } else if doc.get_f64("env.scenario_crash_prob").is_some()
+            || doc.get_f64("env.scenario_uptime_s").is_some()
+            || doc.get_f64("env.scenario_downtime_s").is_some()
+            || doc.get_f64("env.scenario_diurnal_amp").is_some()
+            || doc.get_f64("env.scenario_diurnal_period_s").is_some()
+            || doc.get_i64("env.scenario_regions").is_some()
+            || doc.get_f64("env.scenario_flash_at_s").is_some()
+            || doc.get_i64("env.scenario_flash_joins").is_some()
+            || doc.get_i64("env.scenario_flash_leaves").is_some()
+            || doc.get_f64("env.scenario_outage_at_s").is_some()
+            || doc.get_i64("env.scenario_outage_region").is_some()
+            || doc.get_f64("env.scenario_outage_len_s").is_some()
+        {
+            return Err(SafaError::Config(
+                "env.scenario_* keys require env.scenario = \"off\", \"continuous\", \
+                 \"bernoulli\" or \"markov\""
+                    .into(),
             ));
         }
         if let Some(v) = doc.get_str("env.churn") {
@@ -826,6 +868,77 @@ mod tests {
             [env]
             faults = "off"
             faults_retry_max = 4
+            "#,
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn from_toml_configures_scenario() {
+        use crate::scenario::{ScenarioEventKind, ScenarioProcess};
+        let doc = crate::util::toml::parse(
+            r#"
+            preset = "tiny"
+            [env]
+            scenario = "continuous"
+            scenario_uptime_s = 900.0
+            scenario_downtime_s = 300.0
+            scenario_diurnal_amp = 0.4
+            scenario_diurnal_period_s = 4000.0
+            scenario_regions = 3
+            scenario_flash_at_s = 1500.0
+            scenario_flash_joins = 2
+            scenario_outage_at_s = 2500.0
+            scenario_outage_region = 1
+            scenario_outage_len_s = 400.0
+            "#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        let s = &cfg.env.scenario;
+        assert!(s.enabled);
+        assert_eq!(s.process, ScenarioProcess::Continuous);
+        assert_eq!(s.base_uptime_s, 900.0);
+        assert_eq!(s.diurnal_amp, 0.4);
+        assert_eq!(s.regions, 3);
+        assert_eq!(s.events.len(), 2);
+        assert_eq!(
+            s.events[0].kind,
+            ScenarioEventKind::FlashCrowd { joins: 2, leaves: 0 }
+        );
+        // Reductions pass through their parameters.
+        let doc = crate::util::toml::parse(
+            r#"
+            preset = "tiny"
+            [env]
+            scenario = "bernoulli"
+            scenario_crash_prob = 0.25
+            "#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(
+            cfg.env.scenario.process,
+            ScenarioProcess::Bernoulli { crash_prob: 0.25 }
+        );
+        // Orphan scenario parameters without env.scenario are rejected.
+        let doc = crate::util::toml::parse(
+            r#"
+            preset = "tiny"
+            [env]
+            scenario_diurnal_amp = 0.4
+            "#,
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err());
+        // As are parameters under an explicit "off".
+        let doc = crate::util::toml::parse(
+            r#"
+            preset = "tiny"
+            [env]
+            scenario = "off"
+            scenario_uptime_s = 900.0
             "#,
         )
         .unwrap();

@@ -16,6 +16,7 @@ use super::{
 use crate::error::{Result, SafaError};
 use crate::faults::FaultPlan;
 use crate::net::fabric::{Compression, Contention, FabricConfig, LinkDist};
+use crate::scenario::{Scenario, ScenarioSpec};
 
 const MB_BITS: f64 = 8e6;
 
@@ -37,6 +38,8 @@ fn base_env(m: usize) -> EnvConfig {
         fabric: FabricConfig::default(),
         // Disabled faults = the engine's legacy paths, bit-for-bit.
         faults: FaultPlan::default(),
+        // Disabled scenario = `churn` drives availability, bit-for-bit.
+        scenario: ScenarioSpec::default(),
     }
 }
 
@@ -278,6 +281,46 @@ pub fn chaos() -> ExperimentConfig {
     cfg
 }
 
+/// Diurnal-scenario preset: Task-1 environment, 50 clients on the
+/// continuous wall-clock timeline with dwell means sized to T_lim and a
+/// strong day/night sine modulation over four rounds — availability
+/// swings from near-full to sparse and back, the Papaya-style regime
+/// the round-indexed models cannot express.
+pub fn diurnal() -> ExperimentConfig {
+    let mut cfg = task1();
+    cfg.name = "diurnal".into();
+    cfg.env.m = 50;
+    cfg.env.scenario = Scenario::new()
+        .uptime(cfg.train.t_lim * 0.6, cfg.train.t_lim * 0.25)
+        .diurnal(0.7, cfg.train.t_lim * 4.0)
+        .build()
+        .expect("diurnal preset spec");
+    cfg
+}
+
+/// Flash-crowd preset: the contended fabric (FIFO server link) plus a
+/// scripted mass join — 10 latecomers enter as round 3 opens and queue
+/// on the serialized downlink — followed by 5 departures and a regional
+/// outage. The CI scenario smoke and `scenario_sweep` bench drive this
+/// profile.
+pub fn flashcrowd() -> ExperimentConfig {
+    let mut cfg = contended();
+    cfg.name = "flashcrowd".into();
+    cfg.env.m = 50;
+    cfg.env.scenario = Scenario::new()
+        .uptime(cfg.train.t_lim * 0.8, cfg.train.t_lim * 0.2)
+        .regions(4)
+        .at_round(3)
+        .flash_crowd(10, 0)
+        .at_round(5)
+        .flash_crowd(0, 5)
+        .at_round(6)
+        .regional_outage(1, cfg.train.t_lim * 0.5)
+        .build()
+        .expect("flashcrowd preset spec");
+    cfg
+}
+
 /// Task-1 profile under Markov churn (the `churn_sweep` bench's base).
 pub fn task1_churn() -> ExperimentConfig {
     with_markov_churn(task1(), "churn")
@@ -304,6 +347,8 @@ pub fn preset(name: &str) -> Result<ExperimentConfig> {
         "tiny-churn" | "tiny_churn" => Ok(tiny_churn()),
         "contended" => Ok(contended()),
         "chaos" => Ok(chaos()),
+        "diurnal" => Ok(diurnal()),
+        "flashcrowd" | "flash-crowd" | "flash_crowd" => Ok(flashcrowd()),
         other => Err(SafaError::Config(format!("unknown preset '{other}'"))),
     }
 }
@@ -323,6 +368,8 @@ pub fn preset_names() -> &'static [&'static str] {
         "tiny-churn",
         "contended",
         "chaos",
+        "diurnal",
+        "flashcrowd",
     ]
 }
 
@@ -427,10 +474,11 @@ mod tests {
         assert_eq!(cfg.env.client_bw_bps, task1().env.client_bw_bps);
         assert_eq!(cfg.train.t_lim, task1().train.t_lim);
         // The non-fabric presets all stay off (fabric-off is the default
-        // the bit-for-bit regression suite pins). `chaos` rides on the
-        // contended fabric, so it is the other exception.
+        // the bit-for-bit regression suite pins). `chaos` and
+        // `flashcrowd` ride on the contended fabric, so they are the
+        // other exceptions.
         for name in preset_names() {
-            if *name != "contended" && *name != "chaos" {
+            if !matches!(*name, "contended" | "chaos" | "flashcrowd") {
                 assert!(!preset(name).unwrap().env.fabric.enabled, "{name}");
             }
         }
@@ -452,6 +500,35 @@ mod tests {
         for name in preset_names() {
             if *name != "chaos" {
                 assert!(!preset(name).unwrap().env.faults.enabled, "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn scenario_presets_compile_the_continuous_process() {
+        use crate::scenario::{ScenarioEventKind, ScenarioProcess};
+        let d = preset("diurnal").unwrap();
+        assert!(d.env.scenario.enabled);
+        assert_eq!(d.env.scenario.process, ScenarioProcess::Continuous);
+        assert!(d.env.scenario.diurnal_amp > 0.0);
+        assert!(!d.env.fabric.enabled && !d.env.faults.enabled);
+
+        let f = preset("flashcrowd").unwrap();
+        assert!(f.env.scenario.enabled);
+        assert!(f.env.fabric.enabled, "join bursts must hit the contended link");
+        assert_eq!(f.env.scenario.total_joins(), 10);
+        assert!(f
+            .env
+            .scenario
+            .events
+            .iter()
+            .any(|e| matches!(e.kind, ScenarioEventKind::RegionalOutage { .. })));
+
+        // Every other preset keeps the scenario off — the scenario-off
+        // bit-for-bit guarantee rests on this default.
+        for name in preset_names() {
+            if !matches!(*name, "diurnal" | "flashcrowd") {
+                assert!(!preset(name).unwrap().env.scenario.enabled, "{name}");
             }
         }
     }

@@ -42,6 +42,43 @@ impl Coordinator {
         Ok(Coordinator { env, protocol })
     }
 
+    /// Scenario flash crowds: diff fleet membership against the previous
+    /// round, stamp join/departure rounds on the client states and emit
+    /// `join` / `leave` lifecycle trace events. No-op (and branch-free
+    /// beyond one check) without a scenario timeline, so legacy runs are
+    /// untouched. Serial, before the protocol's round — line order in
+    /// the trace is deterministic.
+    fn refresh_membership(&mut self, t: usize) {
+        if !self.env.dynamic_membership() {
+            return;
+        }
+        use crate::telemetry::lifecycle::{self, ClientEvent, Event as LcEvent};
+        let lc = lifecycle::active();
+        for k in 0..self.env.m() {
+            let now = self.env.is_member(t, k);
+            let before = t > 1 && self.env.is_member(t - 1, k);
+            if now == before {
+                continue;
+            }
+            let c = &mut self.env.clients[k];
+            if now {
+                // Round-1 members are founding members, not joiners.
+                if t > 1 {
+                    c.joined_round = Some(t);
+                    c.departed_round = None;
+                    if lc {
+                        lifecycle::emit(ClientEvent::new(t, k, LcEvent::Join, 0.0));
+                    }
+                }
+            } else {
+                c.departed_round = Some(t);
+                if lc {
+                    lifecycle::emit(ClientEvent::new(t, k, LcEvent::Leave, 0.0));
+                }
+            }
+        }
+    }
+
     /// Run all configured rounds and return the metric record.
     pub fn run(&mut self) -> RunResult {
         let cfg = self.env.cfg.clone();
@@ -71,6 +108,7 @@ impl Coordinator {
             crate::telemetry::trace_line(&meta);
         }
         for t in 1..=cfg.train.rounds {
+            self.refresh_membership(t);
             let telemetry_before = if tracing {
                 Some(crate::telemetry::snapshot())
             } else {

@@ -28,13 +28,20 @@
 
 use crate::config::{ChurnModel, EnvConfig};
 use crate::error::{Result, SafaError};
+use crate::scenario::{ScenarioEventKind, ScenarioSpec};
+use crate::util::parallel;
 use crate::util::rng::{Bernoulli, Distribution, Exponential, Pcg64};
 
 /// A client's availability over one round window `[0, horizon]`.
 ///
-/// At most one transition per window: either the client starts online and
-/// possibly drops at `goes_offline_at`, or it starts offline and possibly
-/// recovers at `comes_online_at`.
+/// The legacy models produce at most one transition per window: either
+/// the client starts online and possibly drops at `goes_offline_at`, or
+/// it starts offline and possibly recovers at `comes_online_at`. The
+/// continuous [`ScenarioTimeline`] additionally produces the two-
+/// transition offline-start shape (recover at `comes_online_at`, drop
+/// again at `goes_offline_at` with `comes < goes`); further in-window
+/// flips are folded into these two for job scheduling (the timeline's
+/// cross-round cursor still walks every flip exactly).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ClientWindow {
     pub online_at_start: bool,
@@ -52,14 +59,22 @@ impl ClientWindow {
         comes_online_at: None,
     };
 
+    pub const ALWAYS_OFF: ClientWindow = ClientWindow {
+        online_at_start: false,
+        goes_offline_at: None,
+        comes_online_at: None,
+    };
+
     /// Seconds spent online within `[0, horizon]`.
     pub fn online_seconds(&self, horizon: f64) -> f64 {
         if self.online_at_start {
             self.goes_offline_at.unwrap_or(horizon).min(horizon)
         } else {
-            match self.comes_online_at {
-                Some(t) => (horizon - t).max(0.0),
-                None => 0.0,
+            match (self.comes_online_at, self.goes_offline_at) {
+                // Recover-then-drop (scenario timeline only).
+                (Some(on), Some(off)) => (off.min(horizon) - on).max(0.0),
+                (Some(on), None) => (horizon - on).max(0.0),
+                (None, _) => 0.0,
             }
         }
     }
@@ -199,6 +214,428 @@ impl AvailabilityModel {
     }
 }
 
+/// Dedicated RNG stream id for the scenario timeline's dwell draws
+/// (disjoint from faults `0xfa17`, round sim `0xc4a5`, selection
+/// `0xfeda`, fleet `0xf1ee`, fabric `0xfab_11c`/`0xfab_71c`, ...).
+pub const SCENARIO_STREAM: u64 = 0x5ce0;
+
+/// Floor on a sampled dwell (seconds): bounds the flip rate so a round
+/// window can never hold an unbounded number of transitions.
+const MIN_DWELL_S: f64 = 1.0;
+/// Floor on the diurnal modulation factor: dwell means never collapse
+/// below 5% of their base.
+const DIURNAL_FLOOR: f64 = 0.05;
+/// Natural flips recorded per round window for window extraction. The
+/// cursor walks *every* flip exactly (cross-round state is never
+/// approximated); only the in-window effective-signal sweep caps its
+/// edge list, which is ample for any validated dwell configuration.
+const MAX_FLIPS: usize = 64;
+/// Flip edges + join/leave + outage edges.
+const MAX_EDGES: usize = MAX_FLIPS + 8;
+/// Per-client chunk grain for the parallel cursor walk (matches the
+/// fleet engine's draw grain).
+const SCEN_GRAIN: usize = 64;
+
+/// Per-client cursor on the continuous timeline.
+#[derive(Debug, Clone, Copy)]
+struct ScenCursor {
+    /// Natural on/off state (ignoring membership and outages).
+    online: bool,
+    /// Absolute sim-time of the next natural flip.
+    next_flip_s: f64,
+    /// Transition index: draw `i` comes from `stream.split(k).split(i)`,
+    /// so the walk is a pure function of `(client, index)` — path-
+    /// independent, width-invariant and resumable.
+    idx: u64,
+}
+
+/// Immutable walk parameters, split out of [`ScenarioTimeline`] so the
+/// parallel cursor pass can borrow them while the cursors and windows
+/// are chunked mutably.
+struct ScenParams<'a> {
+    stream: &'a Pcg64,
+    base_up_s: f64,
+    base_down_s: f64,
+    amp: f64,
+    period_s: f64,
+    regions: usize,
+    join_at: &'a [f64],
+    leave_at: &'a [f64],
+    outages: &'a [(usize, f64, f64)],
+}
+
+impl ScenParams<'_> {
+    /// Sample the next dwell for a client that just flipped to `online`
+    /// at absolute time `tau`. Diurnal modulation stretches online
+    /// dwells at the sine peak and offline dwells in the trough
+    /// (anti-phase), so fleet availability swings over the period.
+    fn dwell(&self, rng: &mut Pcg64, online: bool, tau: f64) -> f64 {
+        let base = if online { self.base_up_s } else { self.base_down_s };
+        let mean = if self.amp > 0.0 {
+            let s = (core::f64::consts::TAU * tau / self.period_s).sin();
+            let f = if online {
+                1.0 + self.amp * s
+            } else {
+                1.0 - self.amp * s
+            };
+            base * f.max(DIURNAL_FLOOR)
+        } else {
+            base
+        };
+        Exponential::new(1.0 / mean).sample(rng).max(MIN_DWELL_S)
+    }
+
+    fn region_of(&self, k: usize) -> usize {
+        if self.regions == 0 {
+            0
+        } else {
+            k % self.regions
+        }
+    }
+}
+
+/// Walk client `k`'s cursor through the round window `[s, e)`,
+/// optionally extracting its effective [`ClientWindow`] (natural signal
+/// masked by fleet membership and regional outages). Pure per client —
+/// safe to fan out across the thread pool.
+fn walk_client(
+    p: &ScenParams<'_>,
+    k: usize,
+    cur: &mut ScenCursor,
+    s: f64,
+    e: f64,
+    out: Option<&mut ClientWindow>,
+) {
+    let nat_start = cur.online;
+    let mut flips = [0.0f64; MAX_FLIPS];
+    let mut nf = 0usize;
+    while cur.next_flip_s < e {
+        let tau = cur.next_flip_s;
+        cur.online = !cur.online;
+        cur.idx += 1;
+        if nf < MAX_FLIPS {
+            flips[nf] = tau;
+            nf += 1;
+        }
+        let mut r = p.stream.split(k as u64).split(cur.idx);
+        cur.next_flip_s = tau + p.dwell(&mut r, cur.online, tau);
+    }
+    let Some(w) = out else { return };
+
+    // Candidate times where the effective signal can change: natural
+    // flips, the client's join/leave instants, and its region's outage
+    // edges — all strictly inside (s, e).
+    let join = p.join_at[k];
+    let leave = p.leave_at[k];
+    let region = p.region_of(k);
+    let mut edges = [0.0f64; MAX_EDGES];
+    let mut ne = 0usize;
+    for &f in &flips[..nf] {
+        if f > s && f < e && ne < MAX_EDGES {
+            edges[ne] = f;
+            ne += 1;
+        }
+    }
+    for b in [join, leave] {
+        if b > s && b < e && ne < MAX_EDGES {
+            edges[ne] = b;
+            ne += 1;
+        }
+    }
+    for &(r, os, oe) in p.outages {
+        if r == region {
+            for b in [os, oe] {
+                if b > s && b < e && ne < MAX_EDGES {
+                    edges[ne] = b;
+                    ne += 1;
+                }
+            }
+        }
+    }
+    edges[..ne].sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+
+    let nat_at = |tau: f64| -> bool {
+        let mut on = nat_start;
+        for &f in &flips[..nf] {
+            if f <= tau {
+                on = !on;
+            } else {
+                break;
+            }
+        }
+        on
+    };
+    let eff_at = |tau: f64| -> bool {
+        if !(join <= tau && tau < leave) {
+            return false;
+        }
+        for &(r, os, oe) in p.outages {
+            if r == region && os <= tau && tau < oe {
+                return false;
+            }
+        }
+        nat_at(tau)
+    };
+
+    // Sweep the edges for the first two state changes of the effective
+    // signal; later changes are folded (conservative: the window shape
+    // the engine schedules is start-state plus up to two transitions).
+    let start_on = eff_at(s);
+    let mut state = start_on;
+    let (mut t1, mut t2) = (None, None);
+    for &tau in &edges[..ne] {
+        let v = eff_at(tau);
+        if v != state {
+            state = v;
+            if t1.is_none() {
+                t1 = Some(tau - s);
+            } else {
+                t2 = Some(tau - s);
+                break;
+            }
+        }
+    }
+    *w = if start_on {
+        // Online-start: the first drop ends the client's round (a
+        // later recovery cannot restart a fresh job mid-round).
+        ClientWindow {
+            online_at_start: true,
+            goes_offline_at: t1,
+            comes_online_at: None,
+        }
+    } else {
+        // Offline-start: recover at t1, possibly drop again at t2.
+        ClientWindow {
+            online_at_start: false,
+            goes_offline_at: t2,
+            comes_online_at: t1,
+        }
+    };
+}
+
+/// Continuous wall-clock availability: per-client piecewise on/off
+/// transitions on absolute sim-time, spanning round boundaries.
+///
+/// **RNG contract.** Unlike the legacy models' per-(round, client)
+/// streams, every dwell draw comes from the per-(client,
+/// transition-index) stream `Pcg64::with_stream(seed, SCENARIO_STREAM)
+/// .split(k).split(i)`. The walk is therefore a pure function of the
+/// cursor state — independent of thread width, of which rounds were
+/// observed in between, and of the protocol driving the run — which is
+/// what keeps scenario runs bit-for-bit width-invariant and resumable.
+///
+/// The timeline overlays three signals per client: the natural dwell
+/// process (optionally diurnally modulated), fleet membership (flash-
+/// crowd joins/leaves compiled from the scenario events), and
+/// correlated regional outages. All buffers are allocated up front;
+/// [`ScenarioTimeline::prepare_round`] is allocation-free.
+pub struct ScenarioTimeline {
+    stream: Pcg64,
+    m: usize,
+    t_lim: f64,
+    base_up_s: f64,
+    base_down_s: f64,
+    amp: f64,
+    period_s: f64,
+    regions: usize,
+    /// Absolute join time per client (0.0 = founding member,
+    /// `INFINITY` = reserved latecomer slot that never fires).
+    join_at: Vec<f64>,
+    /// Absolute departure time per client (`INFINITY` = never).
+    leave_at: Vec<f64>,
+    /// Compiled `(region, start_s, end_s)` outage bands.
+    outages: Vec<(usize, f64, f64)>,
+    cursors: Vec<ScenCursor>,
+    windows: Vec<ClientWindow>,
+    /// Last round whose windows are materialised (0 = none yet).
+    prepared: usize,
+}
+
+impl ScenarioTimeline {
+    /// Compile a validated continuous-process spec for a fleet of `m`
+    /// clients. Flash-crowd joins take the *top* ids of the fleet
+    /// (reserved latecomers, first event gets the lowest reserved ids);
+    /// leaves depart the lowest-id members still active at the event.
+    pub fn new(spec: &ScenarioSpec, m: usize, t_lim: f64, seed: u64) -> ScenarioTimeline {
+        let stream = Pcg64::with_stream(seed, SCENARIO_STREAM);
+
+        // Resolve event times and apply them in time order.
+        let mut order: Vec<(f64, usize)> = spec
+            .events
+            .iter()
+            .enumerate()
+            .map(|(i, ev)| (ev.at.seconds(t_lim), i))
+            .collect();
+        order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+
+        let pool = spec.total_joins().min(m.saturating_sub(1));
+        let mut join_at = vec![0.0f64; m];
+        let mut leave_at = vec![f64::INFINITY; m];
+        for j in &mut join_at[m - pool..] {
+            *j = f64::INFINITY;
+        }
+        let mut next_join = m - pool;
+        let mut outages = Vec::new();
+        for &(at, i) in &order {
+            match spec.events[i].kind {
+                ScenarioEventKind::FlashCrowd { joins, leaves } => {
+                    for _ in 0..joins {
+                        if next_join < m {
+                            join_at[next_join] = at;
+                            next_join += 1;
+                        }
+                    }
+                    let mut left = leaves;
+                    for k in 0..m {
+                        if left == 0 {
+                            break;
+                        }
+                        if join_at[k] <= at && leave_at[k].is_infinite() {
+                            leave_at[k] = at;
+                            left -= 1;
+                        }
+                    }
+                }
+                ScenarioEventKind::RegionalOutage { region, len_s } => {
+                    outages.push((region, at, at + len_s));
+                }
+            }
+        }
+
+        // Transition index 0 seeds each client's state and first dwell.
+        let p = ScenParams {
+            stream: &stream,
+            base_up_s: spec.base_uptime_s,
+            base_down_s: spec.base_downtime_s,
+            amp: spec.diurnal_amp,
+            period_s: spec.diurnal_period_s,
+            regions: spec.regions,
+            join_at: &join_at,
+            leave_at: &leave_at,
+            outages: &outages,
+        };
+        let stationary_up =
+            spec.base_uptime_s / (spec.base_uptime_s + spec.base_downtime_s);
+        let mut cursors = Vec::with_capacity(m);
+        for k in 0..m {
+            let mut r = stream.split(k as u64).split(0);
+            let online = r.next_f64() < stationary_up;
+            let first = p.dwell(&mut r, online, 0.0);
+            cursors.push(ScenCursor {
+                online,
+                next_flip_s: first,
+                idx: 0,
+            });
+        }
+
+        ScenarioTimeline {
+            stream,
+            m,
+            t_lim,
+            base_up_s: spec.base_uptime_s,
+            base_down_s: spec.base_downtime_s,
+            amp: spec.diurnal_amp,
+            period_s: spec.diurnal_period_s,
+            regions: spec.regions,
+            join_at,
+            leave_at,
+            outages,
+            cursors,
+            windows: vec![ClientWindow::ALWAYS_OFF; m],
+            prepared: 0,
+        }
+    }
+
+    pub fn fleet_size(&self) -> usize {
+        self.m
+    }
+
+    /// Materialise round `t`'s windows (idempotent for the current
+    /// round; walks any skipped rounds forward first). Rounds must be
+    /// driven in nondecreasing order — the cursors cannot rewind.
+    pub fn prepare_round(&mut self, t: usize) {
+        assert!(t >= 1, "rounds are 1-based");
+        if self.prepared >= t {
+            assert_eq!(
+                self.prepared, t,
+                "scenario timeline cannot rewind (prepared round {}, asked {t})",
+                self.prepared
+            );
+            return;
+        }
+        let ScenarioTimeline {
+            ref stream,
+            t_lim,
+            base_up_s,
+            base_down_s,
+            amp,
+            period_s,
+            regions,
+            ref join_at,
+            ref leave_at,
+            ref outages,
+            ref mut cursors,
+            ref mut windows,
+            ..
+        } = *self;
+        let p = ScenParams {
+            stream,
+            base_up_s,
+            base_down_s,
+            amp,
+            period_s,
+            regions,
+            join_at,
+            leave_at,
+            outages,
+        };
+        while self.prepared < t {
+            self.prepared += 1;
+            let record = self.prepared == t;
+            let s = (self.prepared - 1) as f64 * t_lim;
+            let e = s + t_lim;
+            parallel::for_each_chunk2(
+                &mut cursors[..],
+                &mut windows[..],
+                SCEN_GRAIN,
+                |base, curs, wins| {
+                    for (i, (c, w)) in curs.iter_mut().zip(wins.iter_mut()).enumerate() {
+                        walk_client(
+                            &p,
+                            base + i,
+                            c,
+                            s,
+                            e,
+                            if record { Some(w) } else { None },
+                        );
+                    }
+                },
+            );
+        }
+    }
+
+    /// Client `k`'s effective window for the prepared round (relative
+    /// to the round's start). Out-of-range clients (a test growing the
+    /// fleet past the compiled timeline) are treated as never-members.
+    pub fn window(&self, k: usize) -> ClientWindow {
+        debug_assert!(self.prepared >= 1, "prepare_round before window()");
+        self.windows.get(k).copied().unwrap_or(ClientWindow::ALWAYS_OFF)
+    }
+
+    /// Whether client `k` is a fleet member at any point during round
+    /// `t` (pure — usable before `prepare_round`). A client joining
+    /// mid-round counts for that round; one leaving at the round's
+    /// opening instant does not.
+    pub fn member_in_round(&self, k: usize, t: usize) -> bool {
+        if k >= self.m {
+            return false;
+        }
+        let s = (t.max(1) - 1) as f64 * self.t_lim;
+        let e = s + self.t_lim;
+        self.join_at[k] < e && self.leave_at[k] > s
+    }
+}
+
 /// Parse a trace: one line per round, one `0`/`1` character per client
 /// (whitespace and blank lines ignored).
 pub fn parse_trace(text: &str) -> Result<Vec<Vec<bool>>> {
@@ -324,6 +761,102 @@ mod tests {
         ]);
     }
 
+    fn continuous_spec() -> ScenarioSpec {
+        crate::scenario::Scenario::new()
+            .uptime(300.0, 100.0)
+            .diurnal(0.5, 2000.0)
+            .regions(2)
+            .at_time(450.0)
+            .flash_crowd(3, 2)
+            .at_time(900.0)
+            .regional_outage(1, 400.0)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn timeline_windows_are_path_independent() {
+        // Preparing rounds one by one (reading each) must leave the
+        // same round-8 windows as jumping straight to round 8 — the
+        // per-(client, transition-index) streams make the walk a pure
+        // function of the cursor, not of the observation pattern.
+        let spec = continuous_spec();
+        let mut a = ScenarioTimeline::new(&spec, 24, 830.0, 7);
+        let mut b = ScenarioTimeline::new(&spec, 24, 830.0, 7);
+        for t in 1..=8 {
+            a.prepare_round(t);
+            for k in 0..24 {
+                let _ = a.window(k); // interleaved reads
+            }
+        }
+        b.prepare_round(8);
+        for k in 0..24 {
+            let wa = a.window(k);
+            let wb = b.window(k);
+            assert_eq!(wa, wb, "client {k} round-8 window diverged");
+            assert_eq!(
+                wa.online_seconds(830.0).to_bits(),
+                wb.online_seconds(830.0).to_bits()
+            );
+        }
+        // Idempotent for the prepared round.
+        a.prepare_round(8);
+        assert_eq!(a.window(3), b.window(3));
+    }
+
+    #[test]
+    fn timeline_membership_and_outage_mask_windows() {
+        let spec = continuous_spec();
+        let m = 24;
+        let mut tl = ScenarioTimeline::new(&spec, m, 830.0, 11);
+        // 3 scheduled joins reserve the top 3 ids; they are not members
+        // in round 1 and their windows are whole-round offline.
+        for k in m - 3..m {
+            assert!(!tl.member_in_round(k, 1), "latecomer {k} in round 1");
+            assert!(tl.member_in_round(k, 2), "latecomer {k} joined at 450s");
+        }
+        tl.prepare_round(1);
+        for k in m - 3..m {
+            assert_eq!(tl.window(k), ClientWindow::ALWAYS_OFF);
+        }
+        // 2 leaves at 450s depart the lowest founding ids: members in
+        // round 1 (the departure is mid-round), gone from round 2 on.
+        assert!(tl.member_in_round(0, 1));
+        assert!(!tl.member_in_round(0, 5));
+        assert!(!tl.member_in_round(1, 5));
+        assert!(tl.member_in_round(2, 5));
+        // Out-of-range clients are never members.
+        assert!(!tl.member_in_round(m + 3, 1));
+        assert_eq!(tl.window(m + 3), ClientWindow::ALWAYS_OFF);
+    }
+
+    #[test]
+    fn timeline_windows_respect_transition_ordering() {
+        // Any two-transition window must be recover-then-drop with
+        // strictly increasing in-window times — the shape the engine's
+        // event paths schedule.
+        let spec = continuous_spec();
+        let mut tl = ScenarioTimeline::new(&spec, 40, 830.0, 3);
+        for t in 1..=12 {
+            tl.prepare_round(t);
+            for k in 0..40 {
+                let w = tl.window(k);
+                if let Some(g) = w.goes_offline_at {
+                    assert!(g > 0.0 && g < 830.0, "drop {g} outside window");
+                }
+                if let Some(c) = w.comes_online_at {
+                    assert!(c > 0.0 && c < 830.0, "recovery {c} outside window");
+                    assert!(!w.online_at_start, "recovery implies offline start");
+                }
+                if let (Some(c), Some(g)) = (w.comes_online_at, w.goes_offline_at) {
+                    if !w.online_at_start {
+                        assert!(c < g, "recover {c} must precede drop {g}");
+                    }
+                }
+            }
+        }
+    }
+
     #[test]
     fn online_seconds_accounting() {
         let w = ClientWindow::ALWAYS_ON;
@@ -346,5 +879,12 @@ mod tests {
             comes_online_at: None,
         };
         assert_eq!(w.online_seconds(100.0), 0.0);
+        // Scenario recover-then-drop shape.
+        let w = ClientWindow {
+            online_at_start: false,
+            goes_offline_at: Some(80.0),
+            comes_online_at: Some(20.0),
+        };
+        assert_eq!(w.online_seconds(100.0), 60.0);
     }
 }

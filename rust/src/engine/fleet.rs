@@ -61,8 +61,9 @@
 //! * Ties between a drop and an upload at the same instant resolve in
 //!   favour of the drop (the crash event is scheduled first).
 
-use super::availability::{AvailabilityModel, ClientWindow};
+use super::availability::{AvailabilityModel, ClientWindow, ScenarioTimeline};
 use super::event::{Event, EventKind, EventQueue};
+use crate::scenario::ScenarioProcess;
 use crate::client::ClientState;
 use crate::config::ExperimentConfig;
 use crate::error::Result;
@@ -444,6 +445,14 @@ pub struct FleetEngine {
     m: usize,
     /// Persisted per-client on/off state (Markov churn).
     churn_state: Vec<Option<bool>>,
+    /// Continuous wall-clock scenario timeline; when installed it
+    /// supersedes `avail` as the window source (rounds route through
+    /// the event paths) and the legacy Bernoulli crash-partial draw is
+    /// suppressed.
+    scenario: Option<ScenarioTimeline>,
+    /// A scenario reduction pinned `avail` at compile time; skip the
+    /// legacy late-binding of `crash_prob` from the config.
+    scenario_pinned: bool,
     /// Pooled per-round buffers (see [`RoundScratch`]).
     scratch: RoundScratch,
 }
@@ -454,21 +463,64 @@ impl FleetEngine {
             avail,
             m,
             churn_state: vec![None; m],
+            scenario: None,
+            scenario_pinned: false,
             scratch: RoundScratch::default(),
         }
     }
 
-    /// Build from the experiment config (`env.churn`); loads the trace
-    /// file for trace replay.
+    /// Build from the experiment config (`env.churn` + `env.scenario`);
+    /// loads the trace file for trace replay. An enabled scenario
+    /// overrides the churn model: the Bernoulli/Markov reductions
+    /// compile straight to the legacy availability models (bit-for-bit
+    /// identical to configuring `env.churn` / `env.crash_prob`), while
+    /// the continuous process installs a [`ScenarioTimeline`].
     pub fn from_config(cfg: &ExperimentConfig) -> Result<FleetEngine> {
-        Ok(FleetEngine::new(
-            AvailabilityModel::from_env(&cfg.env)?,
-            cfg.env.m,
-        ))
+        let mut engine =
+            FleetEngine::new(AvailabilityModel::from_env(&cfg.env)?, cfg.env.m);
+        if cfg.env.scenario.enabled {
+            match cfg.env.scenario.process {
+                ScenarioProcess::Bernoulli { crash_prob } => {
+                    engine.avail = AvailabilityModel::BernoulliPerRound { crash_prob };
+                    engine.scenario_pinned = true;
+                }
+                ScenarioProcess::Markov {
+                    mean_uptime_s,
+                    mean_downtime_s,
+                } => {
+                    engine.avail = AvailabilityModel::Markov {
+                        mean_uptime_s,
+                        mean_downtime_s,
+                    };
+                    engine.scenario_pinned = true;
+                }
+                ScenarioProcess::Continuous => {
+                    engine.set_scenario(ScenarioTimeline::new(
+                        &cfg.env.scenario,
+                        cfg.env.m,
+                        cfg.train.t_lim,
+                        cfg.seed,
+                    ));
+                }
+            }
+        }
+        Ok(engine)
     }
 
     pub fn availability(&self) -> &AvailabilityModel {
         &self.avail
+    }
+
+    /// Install a continuous scenario timeline (tests construct engines
+    /// directly; `from_config` uses this too).
+    pub fn set_scenario(&mut self, timeline: ScenarioTimeline) {
+        self.scenario = Some(timeline);
+    }
+
+    /// The installed scenario timeline, if any (protocols consult it
+    /// for dynamic fleet membership).
+    pub fn scenario(&self) -> Option<&ScenarioTimeline> {
+        self.scenario.as_ref()
     }
 
     fn ensure_fleet(&mut self, m: usize) {
@@ -498,6 +550,24 @@ impl FleetEngine {
         let scratch = &mut self.scratch;
         scratch.draws.clear();
         scratch.draws.resize(participants.len(), None);
+        if let Some(tl) = self.scenario.as_mut() {
+            // Continuous scenario: windows come off the wall-clock
+            // timeline (round t covers absolute [(t-1)·T_lim, t·T_lim]),
+            // not a per-round draw. The per-client stream is still
+            // provided for layout compatibility, but it is *unadvanced*:
+            // the timeline's dwell draws live on the per-(client,
+            // transition-index) streams, and the legacy Bernoulli
+            // crash-partial draw never fires in scenario rounds.
+            tl.prepare_round(t);
+            let tl = &*tl;
+            parallel::for_each_chunk(&mut scratch.draws, DRAW_GRAIN, |base, chunk| {
+                for (i, d) in chunk.iter_mut().enumerate() {
+                    let k = participants[base + i];
+                    *d = Some((tl.window(k), round_rng.split(k as u64)));
+                }
+            });
+            return;
+        }
         if matches!(avail, AvailabilityModel::Markov { .. }) {
             if scratch.windows.len() < m {
                 scratch.windows.resize(m, None);
@@ -535,6 +605,11 @@ impl FleetEngine {
     /// contract so tests and sweeps may adjust `cfg.env.crash_prob`
     /// between rounds.
     fn refresh_bernoulli(&mut self, cfg: &ExperimentConfig) {
+        if self.scenario_pinned {
+            // A scenario reduction fixed crash_prob at compile time;
+            // `cfg.env.crash_prob` belongs to the superseded churn model.
+            return;
+        }
         if let AvailabilityModel::BernoulliPerRound { crash_prob } = &mut self.avail {
             *crash_prob = cfg.env.crash_prob;
         }
@@ -588,7 +663,7 @@ impl FleetEngine {
             .filter(|f| f.active() && f.plan().any_injector());
         if let Some(fr) = faults {
             self.run_round_faults(t, &ctx, participants, synced, round_rng, fr, out);
-        } else if self.avail.is_event_free() {
+        } else if self.scenario.is_none() && self.avail.is_event_free() {
             self.run_round_direct(t, &ctx, participants, synced, round_rng, out);
         } else {
             self.run_round_event(t, &ctx, participants, synced, round_rng, out);
@@ -751,7 +826,7 @@ impl FleetEngine {
         self.begin_round(t, t_lim, round_rng, participants);
         let p = participants.len();
         let m = self.m;
-        let is_bernoulli = self.avail.is_bernoulli();
+        let is_bernoulli = self.scenario.is_none() && self.avail.is_bernoulli();
         let fabric = ctx.fabric;
         let scratch = &mut self.scratch;
         let contended = fill_dist_waits(&mut scratch.dist_wait, fabric, synced);
@@ -819,7 +894,11 @@ impl FleetEngine {
                                 phase: Phase::Idle,
                                 synced: was_synced,
                             },
-                            offline_at: None,
+                            // Legacy windows never pair a recovery with a
+                            // drop (this stays None, bit-for-bit); the
+                            // scenario timeline's recover-then-drop shape
+                            // schedules the second transition here.
+                            offline_at: w.goes_offline_at,
                             head: Some((on, EventKind::ComeOnline)),
                             failure: None,
                         }
@@ -987,9 +1066,12 @@ impl FleetEngine {
                     }
                 }
                 EventKind::GoOffline => {
-                    // Only Active slots can drop: a window carries at
-                    // most one transition, so an Idle (offline-at-start)
-                    // client never schedules a GoOffline.
+                    // Only Active slots can drop. Legacy windows carry at
+                    // most one transition; a scenario recover-then-drop
+                    // window schedules its drop strictly after the
+                    // `ComeOnline` that activates the slot, so the guard
+                    // holds for both shapes (a slot already Done is
+                    // untouched).
                     if slot.phase == Phase::Active {
                         slot.phase = Phase::Failed;
                         let done = ((ev.time - slot.start) / slot.duration).clamp(0.0, 1.0);
@@ -1074,7 +1156,7 @@ impl FleetEngine {
         self.begin_round(t, t_lim, round_rng, participants);
         let p = participants.len();
         let m = self.m;
-        let is_bernoulli = self.avail.is_bernoulli();
+        let is_bernoulli = self.scenario.is_none() && self.avail.is_bernoulli();
         let fabric = ctx.fabric;
         let retry_max = fr.plan().retry_max;
         let payload = fabric.map(|f| f.payload_bytes());
@@ -1556,7 +1638,7 @@ impl FleetEngine {
         out.crash_info.clear();
         out.upload_crashed = 0;
         out.retx_bytes_up = 0.0;
-        if self.avail.is_event_free() {
+        if self.scenario.is_none() && self.avail.is_event_free() {
             self.run_continuation_direct(t, cfg, participants, jobs, round_rng, out);
         } else {
             self.run_continuation_event(t, cfg, participants, jobs, round_rng, out);
@@ -1678,7 +1760,10 @@ impl FleetEngine {
                     } else if let Some(on) = w.comes_online_at {
                         ContSetup {
                             online_secs,
-                            offline_at: None,
+                            // None under the legacy models (bit-for-bit);
+                            // a scenario recover-then-drop window pauses
+                            // the job again at its second transition.
+                            offline_at: w.goes_offline_at,
                             upload_at: remaining.is_finite().then_some(on + remaining),
                             late_start: true,
                             crashed: false,
@@ -1863,7 +1948,7 @@ impl FleetEngine {
         out.retx_bytes_up = 0.0;
         if !(fr.active() && fr.plan().any_injector()) {
             // Neutral plan: identical to the legacy continuation paths.
-            if self.avail.is_event_free() {
+            if self.scenario.is_none() && self.avail.is_event_free() {
                 self.run_continuation_direct(t, cfg, participants, jobs, round_rng, out);
             } else {
                 self.run_continuation_event(t, cfg, participants, jobs, round_rng, out);

@@ -31,7 +31,9 @@ mod availability;
 mod event;
 mod fleet;
 
-pub use availability::{parse_trace, AvailabilityModel, ClientWindow};
+pub use availability::{
+    parse_trace, AvailabilityModel, ClientWindow, ScenarioTimeline, SCENARIO_STREAM,
+};
 pub use event::{Event, EventKind, EventQueue};
 pub use fleet::{FleetEngine, RoundCtx};
 

@@ -12,7 +12,10 @@
 //!   flap rather than a hard crash: the client comes back after
 //!   `flap_downtime_s` and the server retries the cancelled leg under
 //!   the bounded-backoff policy ([`FaultPlan::retry_max`],
-//!   [`FaultRuntime::backoff`]).
+//!   [`FaultRuntime::backoff`]). Flap downtime lives on the continuous
+//!   wall clock: a flap cut near the end of a round spills its leftover
+//!   downtime into the next round ([`FaultRuntime::flap_carry`]) instead
+//!   of silently truncating at `T_lim`.
 //! * **Correlated regional outages** — clients are sharded into
 //!   `regions` contiguous id bands; with probability `outage_prob` per
 //!   round a whole region goes dark for an `outage_len_s` time band.
@@ -298,9 +301,12 @@ impl FaultRuntime {
         Some((start, start + self.plan.outage_len_s))
     }
 
-    /// Individual crash/flap interruption for client `k` in round `t`,
-    /// if one fires. Pure in `(t, k)`.
-    pub fn crash(&self, t: usize, k: usize, horizon: f64) -> Option<Interrupt> {
+    /// Raw crash/flap draw for `(t, k)`: the cut time and whether it is
+    /// a flap, when the hazard fires. Consumes exactly the same RNG
+    /// values as the public [`FaultRuntime::crash`] query, so later
+    /// rounds can replay earlier rounds' draws when computing
+    /// cross-round flap carry-over without any stored state.
+    fn crash_raw(&self, t: usize, k: usize, horizon: f64) -> Option<(f64, bool)> {
         if self.plan.crash_hazard <= 0.0 {
             return None;
         }
@@ -310,20 +316,69 @@ impl FaultRuntime {
         }
         let at = rng.next_f64() * horizon;
         let flap = self.plan.flap_prob > 0.0 && rng.next_f64() < self.plan.flap_prob;
-        let resume = if flap {
-            let r = at + self.plan.flap_downtime_s;
-            (r < horizon).then_some(r)
-        } else {
-            None
-        };
-        Some(Interrupt { at, resume })
+        Some((at, flap))
     }
 
-    /// The earliest interruption hitting client `k` in round `t`:
-    /// individual crash/flap composed with the client's regional
-    /// outage. One interruption is modelled per (round, client); a
-    /// same-time tie favours the individual crash (hard failures win).
+    /// Individual crash/flap interruption for client `k` in round `t`,
+    /// if one fires. Pure in `(t, k)`.
+    pub fn crash(&self, t: usize, k: usize, horizon: f64) -> Option<Interrupt> {
+        self.crash_raw(t, k, horizon).map(|(at, flap)| {
+            let resume = if flap {
+                let r = at + self.plan.flap_downtime_s;
+                (r < horizon).then_some(r)
+            } else {
+                None
+            };
+            Interrupt { at, resume }
+        })
+    }
+
+    /// A flap whose downtime began in an earlier round and is still
+    /// running when round `t` opens. Flap downtime lives on the
+    /// continuous wall clock — round boundaries are bookkeeping, not
+    /// recovery points — so the leftover downtime spills into round `t`
+    /// as an interruption at `0.0` (resuming in-round when the leftover
+    /// is shorter than the horizon). Pure in `(t, k)`: earlier rounds'
+    /// draws are replayed via [`FaultRuntime::crash_raw`], never stored,
+    /// which keeps the query width-invariant and order-free.
+    pub fn flap_carry(&self, t: usize, k: usize, horizon: f64) -> Option<Interrupt> {
+        if self.plan.flap_prob <= 0.0
+            || self.plan.flap_downtime_s <= 0.0
+            || horizon <= 0.0
+            || t <= 1
+        {
+            return None;
+        }
+        // A flap cut j rounds back reaches round t only when its
+        // downtime exceeds (j - 1) full horizons, so the replay window
+        // is bounded by the downtime itself.
+        let reach = (self.plan.flap_downtime_s / horizon).ceil() as usize + 1;
+        let mut latest: Option<f64> = None;
+        for j in 1..=reach.min(t - 1) {
+            if let Some((at, true)) = self.crash_raw(t - j, k, horizon) {
+                // Leftover downtime expressed on round t's clock.
+                let left = at + self.plan.flap_downtime_s - j as f64 * horizon;
+                if left > 0.0 {
+                    latest = Some(latest.map_or(left, |b| b.max(left)));
+                }
+            }
+        }
+        latest.map(|left| Interrupt {
+            at: 0.0,
+            resume: (left < horizon).then_some(left),
+        })
+    }
+
+    /// The earliest interruption hitting client `k` in round `t`: a
+    /// cross-round flap still in its downtime (which cuts at `0.0` and
+    /// therefore always wins), else the individual crash/flap composed
+    /// with the client's regional outage. One interruption is modelled
+    /// per (round, client); a same-time tie favours the individual
+    /// crash (hard failures win).
     pub fn interrupt(&self, t: usize, k: usize, horizon: f64) -> Option<Interrupt> {
+        if let Some(carry) = self.flap_carry(t, k, horizon) {
+            return Some(carry);
+        }
         let crash = self.crash(t, k, horizon);
         let outage = self.outage(t, self.region_of(k), horizon).map(|(s, e)| Interrupt {
             at: s,
@@ -537,5 +592,81 @@ mod tests {
         let i = rt.crash(1, 0, 600.0).expect("hazard 1.0 must fire");
         let r = i.resume.expect("flap with tiny downtime resumes in round");
         assert!(r > i.at && r < 600.0);
+    }
+
+    #[test]
+    fn flap_downtime_spans_round_boundaries() {
+        // Every client flaps every round; downtime is 1.5 horizons, so
+        // whatever the cut time, the downtime always crosses into the
+        // next round.
+        let horizon = 100.0;
+        let rt = runtime(
+            FaultPlan {
+                enabled: true,
+                crash_hazard: 1.0,
+                flap_prob: 1.0,
+                flap_downtime_s: 150.0,
+                ..FaultPlan::default()
+            },
+            8,
+        );
+        for k in 0..8 {
+            let (at, flap) = rt.crash_raw(1, k, horizon).expect("hazard 1.0");
+            assert!(flap);
+            let carry = rt
+                .flap_carry(2, k, horizon)
+                .expect("downtime 1.5x horizon must reach round 2");
+            assert_eq!(carry.at, 0.0, "carried flap cuts at round start");
+            let left = at + 150.0 - horizon;
+            if left < horizon {
+                assert_eq!(carry.resume, Some(left), "exact leftover downtime");
+            } else {
+                assert_eq!(carry.resume, None, "still down at next round end");
+            }
+            // The carry is the earliest cut, so interrupt() reports it.
+            assert_eq!(rt.interrupt(2, k, horizon), Some(carry));
+        }
+        // Round 1 has no history to carry from.
+        assert_eq!(rt.flap_carry(1, 0, horizon), None);
+    }
+
+    #[test]
+    fn flap_carry_is_pure_and_bounded() {
+        let rt = runtime(
+            FaultPlan {
+                enabled: true,
+                crash_hazard: 0.4,
+                flap_prob: 0.7,
+                flap_downtime_s: 40.0,
+                ..FaultPlan::default()
+            },
+            32,
+        );
+        for t in 2..10 {
+            for k in 0..32 {
+                let a = rt.flap_carry(t, k, 600.0);
+                let _ = rt.interrupt(t, k - (k % 3), 600.0); // interleave
+                assert_eq!(a, rt.flap_carry(t, k, 600.0), "pure in (t, k)");
+                // Downtime (40s) < horizon (600s): a carried flap must
+                // resume within the first 40 seconds of the round.
+                if let Some(c) = a {
+                    assert_eq!(c.at, 0.0);
+                    let r = c.resume.expect("short downtime always resumes");
+                    assert!(r > 0.0 && r < 40.0, "leftover {r} out of range");
+                }
+            }
+        }
+        // No flapping configured: never a carry.
+        let hard = runtime(
+            FaultPlan {
+                enabled: true,
+                crash_hazard: 1.0,
+                flap_prob: 0.0,
+                flap_downtime_s: 1e9,
+                ..FaultPlan::default()
+            },
+            8,
+        );
+        assert_eq!(hard.flap_carry(5, 0, 100.0), None);
     }
 }

@@ -36,6 +36,7 @@ pub mod net;
 pub mod protocol;
 pub mod report;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod telemetry;
 pub mod util;

@@ -21,6 +21,14 @@
 //!              [--faults-degrade-factor 2.0] [--faults-retries 2]
 //!              [--faults-backoff 5] [--faults-backoff-cap 60]
 //!              [--faults-partial-credit true|false]
+//!              [--scenario off|continuous|bernoulli|markov]
+//!              [--scenario-crash-prob 0.1] [--scenario-uptime 2000]
+//!              [--scenario-downtime 500] [--scenario-diurnal-amp 0.6]
+//!              [--scenario-diurnal-period 3320]
+//!              [--scenario-regions 4] [--scenario-flash-at 5000]
+//!              [--scenario-flash-joins 10] [--scenario-flash-leaves 0]
+//!              [--scenario-outage-at 8000] [--scenario-outage-region 2]
+//!              [--scenario-outage-len 600]
 //!              [--backend native|xla|null] [--config file.toml]
 //!              [--out results/run.json]
 //! safa sweep   [--preset task1] [--protocols safa,fedavg]
@@ -115,7 +123,18 @@ fn print_help() {
          \x20          --faults-degrade-factor (link slowdown), and policy via\n\
          \x20          --faults-retries (0..=64), --faults-backoff/\n\
          \x20          --faults-backoff-cap (seconds), --faults-partial-credit;\n\
-         \x20          the `chaos` preset arms everything at once\n"
+         \x20          the `chaos` preset arms everything at once\n\
+         Scenario:  --scenario off|continuous|bernoulli|markov scripts client\n\
+         \x20          availability on the continuous wall clock; refine with\n\
+         \x20          --scenario-uptime/--scenario-downtime (mean dwell seconds),\n\
+         \x20          --scenario-diurnal-amp [0,1) + --scenario-diurnal-period\n\
+         \x20          (sine-modulated churn), --scenario-regions, flash crowds via\n\
+         \x20          --scenario-flash-at + --scenario-flash-joins/-leaves, and\n\
+         \x20          correlated outages via --scenario-outage-at +\n\
+         \x20          --scenario-outage-region/--scenario-outage-len; the\n\
+         \x20          reductions take --scenario-crash-prob (bernoulli) or the\n\
+         \x20          dwell flags (markov); the `diurnal` and `flashcrowd`\n\
+         \x20          presets are ready-made scenarios\n"
     );
 }
 
@@ -264,6 +283,48 @@ fn build_config(args: &Args) -> CliResult<ExperimentConfig> {
     {
         return Err(CliError(
             "--faults-* flags require --faults off|on".into(),
+        )
+        .into());
+    }
+    // Continuous wall-clock scenario (same shape: --scenario selects the
+    // process, satellite flags refine it and are rejected without it).
+    if let Some(mode) =
+        args.get_choice("scenario", &["off", "continuous", "bernoulli", "markov"])?
+    {
+        cfg.env.scenario = safa::scenario::ScenarioSpec::from_parts(
+            &mode,
+            args.get_parsed::<f64>("scenario-crash-prob")?,
+            args.get_parsed::<f64>("scenario-uptime")?,
+            args.get_parsed::<f64>("scenario-downtime")?,
+            args.get_parsed::<f64>("scenario-diurnal-amp")?,
+            args.get_parsed::<f64>("scenario-diurnal-period")?,
+            args.get_parsed::<i64>("scenario-regions")?,
+            args.get_parsed::<f64>("scenario-flash-at")?,
+            args.get_parsed::<i64>("scenario-flash-joins")?,
+            args.get_parsed::<i64>("scenario-flash-leaves")?,
+            args.get_parsed::<f64>("scenario-outage-at")?,
+            args.get_parsed::<i64>("scenario-outage-region")?,
+            args.get_parsed::<f64>("scenario-outage-len")?,
+        )?;
+    } else if [
+        "scenario-crash-prob",
+        "scenario-uptime",
+        "scenario-downtime",
+        "scenario-diurnal-amp",
+        "scenario-diurnal-period",
+        "scenario-regions",
+        "scenario-flash-at",
+        "scenario-flash-joins",
+        "scenario-flash-leaves",
+        "scenario-outage-at",
+        "scenario-outage-region",
+        "scenario-outage-len",
+    ]
+    .iter()
+    .any(|f| args.get(f).is_some())
+    {
+        return Err(CliError(
+            "--scenario-* flags require --scenario off|continuous|bernoulli|markov".into(),
         )
         .into());
     }

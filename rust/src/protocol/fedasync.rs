@@ -44,6 +44,9 @@ pub struct FedAsync {
     /// Clients that pulled a fresh global this round, in client order
     /// (the download queue order under a contended fabric).
     fresh: Vec<usize>,
+    /// Fleet membership for the running round (scenario flash crowds);
+    /// only filled when membership is dynamic.
+    member_mask: Vec<bool>,
 }
 
 impl FedAsync {
@@ -56,6 +59,7 @@ impl FedAsync {
             sim: ContinuationSim::default(),
             updates: Vec::new(),
             fresh: Vec::new(),
+            member_mask: Vec::new(),
         }
     }
 }
@@ -83,8 +87,24 @@ impl Protocol for FedAsync {
         let fabric = env.fabric.as_ref();
         let dist_span = crate::telemetry::span(crate::telemetry::Phase::Distribute);
         let lc = lifecycle::active();
+        // Scenario flash crowds: non-members take no part — a latecomer
+        // never pulls before joining, and a departed device's in-flight
+        // job is abandoned (the device is gone; that destroyed progress
+        // is the protocol's only futility source).
+        let dynamic = env.dynamic_membership();
+        if dynamic {
+            self.member_mask.clear();
+            self.member_mask.extend((0..m).map(|k| env.is_member(t, k)));
+        }
+        let mut futility_wasted = 0.0;
         self.fresh.clear();
         for c in env.clients.iter_mut() {
+            if dynamic && !self.member_mask[c.id] {
+                if let Some(job) = c.job.take() {
+                    futility_wasted += job.progress();
+                }
+                continue;
+            }
             if c.job.is_none() {
                 if lc {
                     // No selection stage: an idle client's pull IS its
@@ -200,6 +220,14 @@ impl Protocol for FedAsync {
         };
 
         let n_applied = self.sim.arrivals.len();
+        // Non-members ride the engine pass with always-off windows and
+        // land in the crashed set; charge crashes and futility to actual
+        // members only.
+        let n_absent = if dynamic {
+            self.member_mask.iter().filter(|&&b| !b).count()
+        } else {
+            0
+        };
         let rec = RoundRecord {
             round: t,
             round_len,
@@ -209,12 +237,13 @@ impl Protocol for FedAsync {
             // No selection at all: every applied update counts; the only
             // "picked crash" is a fault injector cutting an upload leg.
             n_picked_crashed: self.sim.upload_crashed,
-            n_crashed: self.sim.crashed.len() + self.sim.stragglers.len(),
+            n_crashed: (self.sim.crashed.len() + self.sim.stragglers.len())
+                .saturating_sub(n_absent),
             n_committed: n_applied,
             n_undrafted: 0,
             version_variance: env.version_variance(),
-            futility_wasted: 0.0,
-            futility_total: m as f64,
+            futility_wasted,
+            futility_total: (m - n_absent) as f64,
             online_time: self.sim.online_time,
             offline_time: self.sim.offline_time,
             staleness,

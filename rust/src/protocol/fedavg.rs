@@ -31,6 +31,9 @@ pub struct FedAvg {
     sim: RoundSim,
     updates: Vec<(usize, ParamVec, f64)>,
     picked_mask: Vec<bool>,
+    /// Current fleet members (scenario flash crowds); selection samples
+    /// from this pool when membership is dynamic. Unused otherwise.
+    members: Vec<usize>,
 }
 
 impl FedAvg {
@@ -45,6 +48,7 @@ impl FedAvg {
             sim: RoundSim::default(),
             updates: Vec::new(),
             picked_mask: Vec::new(),
+            members: Vec::new(),
         }
     }
 }
@@ -69,7 +73,20 @@ impl Protocol for FedAvg {
         // `sample_indices` — identical draws).
         let select_span = crate::telemetry::span(crate::telemetry::Phase::Select);
         let mut sel_rng = env.round_rng(t, 0xfeda);
-        sel_rng.sample_indices_into(m, quota, &mut self.sel_pool, &mut self.selected);
+        if env.dynamic_membership() {
+            // Scenario flash crowds: sample from the current members only
+            // (quota capped by the live population), then map the sampled
+            // pool indices back to client ids.
+            self.members.clear();
+            self.members.extend((0..m).filter(|&k| env.is_member(t, k)));
+            let n = self.members.len();
+            sel_rng.sample_indices_into(n, quota.min(n), &mut self.sel_pool, &mut self.selected);
+            for s in self.selected.iter_mut() {
+                *s = self.members[*s];
+            }
+        } else {
+            sel_rng.sample_indices_into(m, quota, &mut self.sel_pool, &mut self.selected);
+        }
         drop(select_span);
         let m_sync = self.selected.len();
         let t_dist = env.t_dist(m_sync);

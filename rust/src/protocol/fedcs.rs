@@ -36,6 +36,9 @@ pub struct FedCs {
     /// each candidate is probed exactly once per round — under the
     /// fabric an estimate is a per-(round, client) transfer probe).
     estimates: Vec<f64>,
+    /// Current fleet members (scenario flash crowds); the resource-
+    /// request pool draws from this when membership is dynamic.
+    members: Vec<usize>,
 }
 
 impl FedCs {
@@ -52,6 +55,7 @@ impl FedCs {
             updates: Vec::new(),
             picked_mask: Vec::new(),
             estimates: Vec::new(),
+            members: Vec::new(),
         }
     }
 }
@@ -76,8 +80,21 @@ impl Protocol for FedCs {
         // clients that fit the deadline.
         let select_span = crate::telemetry::span(crate::telemetry::Phase::Select);
         let mut sel_rng = env.round_rng(t, 0xfeda);
-        let pool_size = (quota * POOL_FACTOR).min(m);
-        sel_rng.sample_indices_into(m, pool_size, &mut self.sel_pool, &mut self.pool);
+        if env.dynamic_membership() {
+            // Scenario flash crowds: resource requests go to current
+            // members only; sampled pool indices map back to client ids.
+            self.members.clear();
+            self.members.extend((0..m).filter(|&k| env.is_member(t, k)));
+            let n = self.members.len();
+            let pool_size = (quota * POOL_FACTOR).min(n);
+            sel_rng.sample_indices_into(n, pool_size, &mut self.sel_pool, &mut self.pool);
+            for s in self.pool.iter_mut() {
+                *s = self.members[*s];
+            }
+        } else {
+            let pool_size = (quota * POOL_FACTOR).min(m);
+            sel_rng.sample_indices_into(m, pool_size, &mut self.sel_pool, &mut self.pool);
+        }
         // Estimated round time per candidate (perfect information
         // model). Under the fabric the estimate is the client's actual
         // per-(round, client) transfer times plus training; with the

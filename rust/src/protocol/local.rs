@@ -39,8 +39,13 @@ impl Protocol for FullyLocal {
         let m = env.m();
         // Every client trains from its own model; no distribution, no
         // uploads (m_sync = 0, T_dist = 0, commits are local-only).
-        let participants: Vec<usize> = (0..m).collect();
-        let synced = vec![false; m];
+        // Scenario flash crowds: only current members train.
+        let participants: Vec<usize> = if env.dynamic_membership() {
+            (0..m).filter(|&k| env.is_member(t, k)).collect()
+        } else {
+            (0..m).collect()
+        };
+        let synced = vec![false; participants.len()];
         let round_rng = env.round_rng(t, 0xc4a5);
         let sim = env.simulate_round(t, &participants, &synced, &round_rng);
 
@@ -95,7 +100,7 @@ impl Protocol for FullyLocal {
             n_undrafted: 0,
             version_variance: env.version_variance(),
             futility_wasted: 0.0,
-            futility_total: m as f64,
+            futility_total: participants.len() as f64,
             online_time: sim.online_time,
             offline_time: sim.offline_time,
             staleness: Vec::new(),
@@ -119,12 +124,31 @@ impl Protocol for FullyLocal {
             return;
         }
         self.finalized = true;
-        // Single end-of-run aggregation over a random C-fraction.
+        // Single end-of-run aggregation over a random C-fraction. With
+        // dynamic membership (scenario flash crowds) the sample is drawn
+        // from the final round's members; otherwise from the whole fleet,
+        // bit-for-bit as before (the identity index map below is free).
         let _span = crate::telemetry::span(crate::telemetry::Phase::Aggregate);
-        let quota = env.cfg.quota();
+        let final_round = env.cfg.train.rounds;
+        let pool: Vec<usize> = if env.dynamic_membership() {
+            (0..env.m())
+                .filter(|&k| env.is_member(final_round.max(1), k))
+                .collect()
+        } else {
+            (0..env.m()).collect()
+        };
+        let quota = env.cfg.quota().min(pool.len());
         let mut rng = env.round_rng(env.cfg.train.rounds + 1, 0xf17a);
-        let subset = rng.sample_indices(env.m(), quota);
+        let subset: Vec<usize> = rng
+            .sample_indices(pool.len(), quota)
+            .into_iter()
+            .map(|i| pool[i])
+            .collect();
         let total: f64 = subset.iter().map(|&k| env.clients[k].n_k as f64).sum();
+        if subset.is_empty() {
+            // Degenerate scenario: nobody left to aggregate — keep w(0).
+            return;
+        }
         let mut agg = ParamVec::zeros(self.global.dim());
         for &k in &subset {
             let w = (env.clients[k].n_k as f64 / total) as f32;

@@ -348,6 +348,24 @@ impl FedEnv {
     pub fn m(&self) -> usize {
         self.cfg.env.m
     }
+
+    /// Does fleet membership change over the run (scenario flash crowds)?
+    /// False for every legacy configuration — the protocols gate all
+    /// membership filtering on this so scenario-off runs keep their RNG
+    /// consumption and selection order bit-for-bit.
+    pub fn dynamic_membership(&self) -> bool {
+        self.engine.scenario().is_some()
+    }
+
+    /// Is client `k` a fleet member during round `t`? Always true without
+    /// a scenario timeline; with one, flash-crowd latecomers are
+    /// non-members before their join and leavers after their departure.
+    pub fn is_member(&self, t: usize, k: usize) -> bool {
+        match self.engine.scenario() {
+            Some(tl) => tl.member_in_round(k, t),
+            None => true,
+        }
+    }
 }
 
 /// Run the local updates for every arrival, in arrival order, into a

@@ -77,6 +77,20 @@ struct SafaScratch {
     undrafted: Vec<usize>,
     picked_mask: Vec<bool>,
     undrafted_mask: Vec<bool>,
+    /// Fleet membership for the running round (scenario flash crowds).
+    /// All-true without a scenario timeline, in which case none of the
+    /// membership branches below fire and rounds are bit-identical to
+    /// the legacy path.
+    member_mask: Vec<bool>,
+    /// Clients whose membership begins this round: they force-sync
+    /// (a device entering the federation downloads w(t-1)), so a join
+    /// burst hits the distribution link — and queues under a contended
+    /// fabric.
+    joined_now: Vec<bool>,
+    /// Eq. 7 weights renormalized over the current members (non-members'
+    /// cache entries carry weight 0 so departed devices stop pulling on
+    /// the global model). Only used with dynamic membership.
+    member_weights: Vec<f32>,
 }
 
 pub struct Safa {
@@ -129,6 +143,9 @@ impl Safa {
                 undrafted: Vec::new(),
                 picked_mask: vec![false; m],
                 undrafted_mask: vec![false; m],
+                member_mask: vec![true; m],
+                joined_now: vec![false; m],
+                member_weights: Vec::with_capacity(m),
             },
         }
     }
@@ -159,6 +176,19 @@ impl Protocol for Safa {
         let grain = fleet_grain(dim);
         let scratch = &mut self.scratch;
 
+        // Fleet membership (scenario flash crowds). `dynamic` is false
+        // for every legacy configuration, so the masks stay all-true /
+        // all-false and no membership branch below changes behaviour.
+        let dynamic = env.dynamic_membership();
+        if dynamic {
+            for k in 0..m {
+                let is_member = env.is_member(t, k);
+                scratch.member_mask[k] = is_member;
+                // Round-1 members are founding members, not joiners.
+                scratch.joined_now[k] = is_member && t > 1 && !env.is_member(t - 1, k);
+            }
+        }
+
         // --- Step 1: lag-tolerant distribution (Eq. 3). ---
         // Classify, apply the downloads and (re)start training jobs, one
         // independent client at a time — fanned out across the pool.
@@ -177,15 +207,34 @@ impl Protocol for Safa {
         let dist_span = crate::telemetry::span(crate::telemetry::Phase::Distribute);
         {
             let global = &self.global;
+            let member_mask = &scratch.member_mask;
+            let joined_now = &scratch.joined_now;
             parallel::for_each_chunk2(
                 &mut env.clients,
                 &mut scratch.sync_out,
                 grain,
-                |_, clients, outs| {
-                    for (c, out) in clients.iter_mut().zip(outs.iter_mut()) {
+                |off, clients, outs| {
+                    for (i, (c, out)) in clients.iter_mut().zip(outs.iter_mut()).enumerate() {
+                        // Non-members (departed or not yet joined) take no
+                        // part in distribution: no download, no job. A
+                        // departure abandons any in-flight job — that
+                        // destroyed progress is futility, charged once.
+                        if dynamic && !member_mask[off + i] {
+                            let wasted = c.job.take().map_or(0.0, |j| j.progress());
+                            *out = SyncOut {
+                                synced: false,
+                                deprecated: false,
+                                remaining: f64::INFINITY,
+                                wasted,
+                            };
+                            continue;
+                        }
                         let is_deprecated = c.version < t_i - tau;
                         let is_up_to_date = c.committed_last;
-                        let synced = is_deprecated || is_up_to_date;
+                        // A client joining this round always syncs: a
+                        // device entering the federation downloads the
+                        // current global model before training.
+                        let synced = is_deprecated || is_up_to_date || joined_now[off + i];
                         let mut wasted = 0.0;
                         if synced {
                             if let Some(job) = c.job.take() {
@@ -280,7 +329,15 @@ impl Protocol for Safa {
             &round_rng,
             &mut scratch.sim,
         );
-        let futility_total = m as f64;
+        // Non-members ride the engine pass with always-off windows (the
+        // timeline masks them), landing in the crashed set; the books
+        // below charge futility and crashes to actual members only.
+        let n_absent = if dynamic {
+            scratch.member_mask.iter().filter(|&&b| !b).count()
+        } else {
+            0
+        };
+        let futility_total = (m - n_absent) as f64;
 
         // Run actual local updates only for committed clients (failed
         // clients' numerics never reach the server this round); parallel
@@ -393,6 +450,7 @@ impl Protocol for Safa {
             let _span = crate::telemetry::span(crate::telemetry::Phase::CacheRefresh);
             let sync_out = &scratch.sync_out;
             let picked_mask = &scratch.picked_mask;
+            let joined_now = &scratch.joined_now;
             let update_of = &scratch.update_of;
             let updates = &scratch.updates;
             let global = &self.global;
@@ -402,9 +460,12 @@ impl Protocol for Safa {
                     if picked_mask[k] {
                         let idx = update_of[k].expect("picked client without update");
                         entry.copy_from(&updates[idx].1);
-                    } else if sync_out[k].deprecated {
+                    } else if sync_out[k].deprecated || joined_now[k] {
                         // Deprecated entries are replaced by w(t-1) to
-                        // purge heavy staleness (Eq. 6 middle case).
+                        // purge heavy staleness (Eq. 6 middle case). A
+                        // joiner's entry — still w(0) from construction —
+                        // resets the same way before it first gains
+                        // aggregation weight.
                         entry.copy_from(global);
                     }
                 }
@@ -412,9 +473,37 @@ impl Protocol for Safa {
         }
         // (7) SAFA aggregation over ALL m cache entries (chunked over the
         // model dimension, fixed entry order — bit-identical to the
-        // serial axpy loop at any width).
+        // serial axpy loop at any width). With dynamic membership the
+        // n_k/n weights are renormalized over the current members so a
+        // departed device's frozen cache entry stops pulling on w(t) and
+        // a joiner's entry starts counting the round it arrives.
         let agg_span = crate::telemetry::span(crate::telemetry::Phase::Aggregate);
-        weighted_sum_slices_into(&mut self.agg_scratch, &env.weights, &self.cache);
+        let agg_weights: &[f32] = if dynamic {
+            let member_total: f64 = env
+                .weights
+                .iter()
+                .zip(&scratch.member_mask)
+                .filter(|&(_, &is_m)| is_m)
+                .map(|(&w, _)| w as f64)
+                .sum();
+            if member_total > 0.0 {
+                scratch.member_weights.clear();
+                scratch.member_weights.extend(
+                    env.weights
+                        .iter()
+                        .zip(&scratch.member_mask)
+                        .map(|(&w, &is_m)| if is_m { (w as f64 / member_total) as f32 } else { 0.0 }),
+                );
+                &scratch.member_weights
+            } else {
+                // Degenerate: nobody is a member this round — keep the
+                // static weights (the cache is untouched anyway).
+                &env.weights
+            }
+        } else {
+            &env.weights
+        };
+        weighted_sum_slices_into(&mut self.agg_scratch, agg_weights, &self.cache);
         self.global.copy_from(&self.agg_scratch);
         self.global_version = t_i;
         // (8) Post-aggregation cache update: bypass carries undrafted
@@ -442,7 +531,8 @@ impl Protocol for Safa {
         // flags were already cleared by close_continuation_round; the
         // committed set (update_of Some) is disjoint from it. ---
         let n_committed = scratch.sim.arrivals.len();
-        let n_failed = scratch.sim.crashed.len() + scratch.sim.stragglers.len();
+        let n_failed =
+            (scratch.sim.crashed.len() + scratch.sim.stragglers.len()).saturating_sub(n_absent);
         let train_loss_sum: f64 = scratch.updates.iter().map(|(_, _, loss)| loss).sum();
         {
             let bypass = self.opts.bypass;

@@ -512,6 +512,80 @@ pub fn render_faults(trace: &Trace) -> String {
     out
 }
 
+/// Fleet-population summary derived from `join` / `leave` lifecycle
+/// lines (scenario flash crowds). Counts are over *sampled* clients —
+/// with `SAFA_TRACE_SAMPLE=k` above 1 they undercount by roughly k×.
+#[derive(Debug, Clone, Default)]
+pub struct PopulationSummary {
+    pub joins: usize,
+    pub leaves: usize,
+    /// (round, joins, leaves, population-after) for every round with
+    /// churn activity, in round order. The running population starts
+    /// from the founding cohort (fleet size minus every latecomer join
+    /// seen in the trace) so it ends at the final live population.
+    pub timeline: Vec<(usize, usize, usize, i64)>,
+}
+
+impl PopulationSummary {
+    pub fn any(&self) -> bool {
+        self.joins > 0 || self.leaves > 0
+    }
+}
+
+/// Tally the trace's join/leave events into a population timeline.
+pub fn summarize_population(trace: &Trace, m: usize) -> PopulationSummary {
+    let mut s = PopulationSummary::default();
+    let mut per_round: BTreeMap<usize, (usize, usize)> = BTreeMap::new();
+    for c in &trace.clients {
+        match c.event.as_str() {
+            "join" => {
+                s.joins += 1;
+                per_round.entry(c.round).or_insert((0, 0)).0 += 1;
+            }
+            "leave" => {
+                s.leaves += 1;
+                per_round.entry(c.round).or_insert((0, 0)).1 += 1;
+            }
+            _ => {}
+        }
+    }
+    let mut pop = m as i64 - s.joins as i64;
+    for (round, (joins, leaves)) in per_round {
+        pop += joins as i64 - leaves as i64;
+        s.timeline.push((round, joins, leaves, pop));
+    }
+    s
+}
+
+/// Population-over-time table: per-round joins/leaves and the running
+/// fleet population (scenario flash crowds).
+pub fn render_population(trace: &Trace) -> String {
+    let m = fleet_size(trace);
+    let s = summarize_population(trace, m);
+    let mut out = String::new();
+    let _ = writeln!(out, "== fleet population ==");
+    if !s.any() {
+        let _ = writeln!(out, "(no join/leave events in trace)");
+        return out;
+    }
+    let _ = writeln!(
+        out,
+        "{} join(s), {} leave(s) over the trace (founding population {})",
+        s.joins,
+        s.leaves,
+        m as i64 - s.joins as i64,
+    );
+    let _ = writeln!(
+        out,
+        "{:<7} {:>7} {:>7} {:>11}",
+        "round", "joins", "leaves", "population"
+    );
+    for &(round, joins, leaves, pop) in &s.timeline {
+        let _ = writeln!(out, "{round:<7} {joins:>7} {leaves:>7} {pop:>11}");
+    }
+    out
+}
+
 /// Lifecycle event counts across all sampled clients.
 pub fn render_event_counts(trace: &Trace) -> String {
     let mut counts: BTreeMap<&str, usize> = BTreeMap::new();
@@ -618,6 +692,27 @@ pub fn report_json(trace: &Trace) -> Json {
         ),
     );
     o.set("faults", faults);
+    let ps = summarize_population(trace, m);
+    let mut population = Json::obj();
+    population.set("joins", Json::Num(ps.joins as f64));
+    population.set("leaves", Json::Num(ps.leaves as f64));
+    population.set(
+        "timeline",
+        Json::Arr(
+            ps.timeline
+                .iter()
+                .map(|&(round, joins, leaves, pop)| {
+                    let mut row = Json::obj();
+                    row.set("round", Json::Num(round as f64));
+                    row.set("joins", Json::Num(joins as f64));
+                    row.set("leaves", Json::Num(leaves as f64));
+                    row.set("population", Json::Num(pop as f64));
+                    row
+                })
+                .collect(),
+        ),
+    );
+    o.set("population", population);
     o
 }
 
@@ -651,6 +746,10 @@ pub fn render_report(trace: &Trace) -> String {
     if faults.any() {
         let _ = writeln!(out);
         out.push_str(&render_faults(trace));
+    }
+    if summarize_population(trace, m).any() {
+        let _ = writeln!(out);
+        out.push_str(&render_population(trace));
     }
     out
 }
@@ -775,6 +874,43 @@ mod tests {
         assert!(render_faults(&clean).contains("no fault-injection events"));
         assert!(!render_report(&clean).contains("== fault injection =="));
         assert!(render_report(&trace).contains("== fault injection =="));
+    }
+
+    #[test]
+    fn population_section_tracks_joins_and_leaves() {
+        // m=10 with 3 joins seen -> founding population 7; flash crowd
+        // at round 3 (+3), flash leave at round 5 (-2).
+        let trace = parse_trace(concat!(
+            "{\"type\":\"meta\",\"v\":2,\"schema\":\"safa-trace\",\"protocol\":\"SAFA\",",
+            "\"task\":\"regression\",\"m\":10,\"rounds\":6,\"seed\":1,\"sample\":1}\n",
+            "{\"type\":\"client\",\"v\":2,\"round\":3,\"client\":7,\"event\":\"join\",\"t\":0}\n",
+            "{\"type\":\"client\",\"v\":2,\"round\":3,\"client\":8,\"event\":\"join\",\"t\":0}\n",
+            "{\"type\":\"client\",\"v\":2,\"round\":3,\"client\":9,\"event\":\"join\",\"t\":0}\n",
+            "{\"type\":\"client\",\"v\":2,\"round\":5,\"client\":0,\"event\":\"leave\",\"t\":0}\n",
+            "{\"type\":\"client\",\"v\":2,\"round\":5,\"client\":1,\"event\":\"leave\",\"t\":0}\n",
+        ))
+        .unwrap();
+        let s = summarize_population(&trace, fleet_size(&trace));
+        assert_eq!(s.joins, 3);
+        assert_eq!(s.leaves, 2);
+        assert_eq!(s.timeline, vec![(3, 3, 0, 10), (5, 0, 2, 8)]);
+        let text = render_population(&trace);
+        assert!(text.contains("fleet population"), "{text}");
+        assert!(text.contains("founding population 7"), "{text}");
+        let report = render_report(&trace);
+        assert!(report.contains("== fleet population =="), "{report}");
+        // JSON mirror carries the same timeline.
+        let j = report_json(&trace);
+        let pop = j.get("population").unwrap();
+        assert_eq!(pop.get("joins").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(
+            pop.get("timeline").and_then(Json::as_arr).map(Vec::len),
+            Some(2)
+        );
+        // A churn-free trace omits the section.
+        let clean = parse_trace(FIXTURE).unwrap();
+        assert!(render_population(&clean).contains("no join/leave events"));
+        assert!(!render_report(&clean).contains("== fleet population =="));
     }
 
     #[test]

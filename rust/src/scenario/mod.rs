@@ -1,0 +1,660 @@
+//! Scenario DSL: continuous wall-clock availability scripts.
+//!
+//! A [`ScenarioSpec`] describes client availability on one absolute
+//! sim-time axis spanning the whole run, instead of the legacy
+//! round-indexed `[0, T_lim]` windows. It is the load-time half of the
+//! scenario engine: the TOML `env.scenario*` keys, the `--scenario*`
+//! CLI flags and the fluent [`Scenario`] builder all compile to a spec,
+//! and the fleet engine turns an enabled spec into a
+//! `ScenarioTimeline` (see `engine::availability`) that walks per-client
+//! piecewise on/off transitions across round boundaries.
+//!
+//! Three processes:
+//!
+//! * [`ScenarioProcess::Continuous`] — the tentpole: exponential on/off
+//!   dwells on the continuous clock, optionally modulated by a diurnal
+//!   sine wave, plus scripted events (flash crowds that mass-join/leave
+//!   the fleet, correlated regional outages). Multiple transitions per
+//!   round are allowed, and a dwell spans round boundaries.
+//! * [`ScenarioProcess::Bernoulli`] / [`ScenarioProcess::Markov`] —
+//!   per-round single-window reductions: the spec compiles back to the
+//!   legacy availability models, bit-for-bit identical to configuring
+//!   `env.churn` directly. They pin the RNG-stream contract: reductions
+//!   stay on the per-(round, client) streams while only the continuous
+//!   process uses the per-(client, transition-index) streams.
+//!
+//! Everything is default-off: a [`ScenarioSpec::default`] never touches
+//! the engine, so scenario-off runs are bit-identical to builds that
+//! predate this module.
+
+use crate::error::{Result, SafaError};
+
+/// When a scripted event fires: an absolute sim-time, or the instant a
+/// 1-based round opens (resolved as `(round - 1) * T_lim` once the
+/// timeline knows the round horizon).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScenarioAt {
+    Time(f64),
+    Round(usize),
+}
+
+impl ScenarioAt {
+    /// Resolve to absolute seconds given the round horizon.
+    pub fn seconds(&self, t_lim: f64) -> f64 {
+        match *self {
+            ScenarioAt::Time(s) => s,
+            ScenarioAt::Round(r) => (r.max(1) - 1) as f64 * t_lim,
+        }
+    }
+}
+
+/// A scripted scenario event on the continuous timeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScenarioEventKind {
+    /// Mass membership change: `joins` clients enter the fleet and
+    /// `leaves` current members depart at the event time.
+    FlashCrowd { joins: usize, leaves: usize },
+    /// One region (clients sharded by `id % regions`) goes dark for
+    /// `len_s` seconds starting at the event time.
+    RegionalOutage { region: usize, len_s: f64 },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScenarioEvent {
+    pub at: ScenarioAt,
+    pub kind: ScenarioEventKind,
+}
+
+/// Which availability process the scenario runs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScenarioProcess {
+    /// Continuous-clock dwell process (the scenario engine proper).
+    Continuous,
+    /// Reduction: the legacy per-round i.i.d. crash model.
+    Bernoulli { crash_prob: f64 },
+    /// Reduction: the legacy round-indexed two-state churn model.
+    Markov {
+        mean_uptime_s: f64,
+        mean_downtime_s: f64,
+    },
+}
+
+/// Load-time scenario description (strict-validated, default off).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    /// Master switch; `false` leaves every engine path untouched.
+    pub enabled: bool,
+    pub process: ScenarioProcess,
+    /// Mean online dwell (seconds) of the continuous process.
+    pub base_uptime_s: f64,
+    /// Mean offline dwell (seconds) of the continuous process.
+    pub base_downtime_s: f64,
+    /// Diurnal modulation amplitude in `[0, 1)`: online dwells stretch
+    /// by `1 + amp * sin(2*pi*t/period)` and offline dwells by the
+    /// anti-phase factor, so availability swings over the day.
+    pub diurnal_amp: f64,
+    /// Diurnal period in seconds.
+    pub diurnal_period_s: f64,
+    /// Region count for `RegionalOutage` events (client `k` belongs to
+    /// region `k % regions`).
+    pub regions: usize,
+    /// Scripted events, applied in time order.
+    pub events: Vec<ScenarioEvent>,
+}
+
+impl Default for ScenarioSpec {
+    fn default() -> Self {
+        ScenarioSpec {
+            enabled: false,
+            process: ScenarioProcess::Continuous,
+            base_uptime_s: 2000.0,
+            base_downtime_s: 500.0,
+            diurnal_amp: 0.0,
+            diurnal_period_s: 86_400.0,
+            regions: 4,
+            events: Vec::new(),
+        }
+    }
+}
+
+impl ScenarioSpec {
+    /// Build a spec from raw TOML/CLI parts with the same strictness as
+    /// `ChurnModel::from_parts` / `FaultPlan::from_parts`: `mode` names
+    /// the process (`off`, `continuous`, `bernoulli`, `markov`), and
+    /// supplying a parameter the mode cannot use is a hard error
+    /// rather than a silent no-op.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        mode: &str,
+        crash_prob: Option<f64>,
+        uptime_s: Option<f64>,
+        downtime_s: Option<f64>,
+        diurnal_amp: Option<f64>,
+        diurnal_period_s: Option<f64>,
+        regions: Option<i64>,
+        flash_at_s: Option<f64>,
+        flash_joins: Option<i64>,
+        flash_leaves: Option<i64>,
+        outage_at_s: Option<f64>,
+        outage_region: Option<i64>,
+        outage_len_s: Option<f64>,
+    ) -> Result<ScenarioSpec> {
+        let err = |msg: String| Err(SafaError::Config(msg));
+        let continuous_only = diurnal_amp.is_some()
+            || diurnal_period_s.is_some()
+            || regions.is_some()
+            || flash_at_s.is_some()
+            || flash_joins.is_some()
+            || flash_leaves.is_some()
+            || outage_at_s.is_some()
+            || outage_region.is_some()
+            || outage_len_s.is_some();
+        match mode.to_ascii_lowercase().as_str() {
+            "off" => {
+                if crash_prob.is_some()
+                    || uptime_s.is_some()
+                    || downtime_s.is_some()
+                    || continuous_only
+                {
+                    return err(
+                        "scenario parameters require scenario.mode != \"off\"".into(),
+                    );
+                }
+                Ok(ScenarioSpec::default())
+            }
+            "bernoulli" => {
+                if continuous_only || uptime_s.is_some() || downtime_s.is_some() {
+                    return err(
+                        "scenario.mode = \"bernoulli\" accepts only scenario_crash_prob"
+                            .into(),
+                    );
+                }
+                let spec = ScenarioSpec {
+                    enabled: true,
+                    process: ScenarioProcess::Bernoulli {
+                        crash_prob: crash_prob.unwrap_or(0.1),
+                    },
+                    ..ScenarioSpec::default()
+                };
+                spec.validate()?;
+                Ok(spec)
+            }
+            "markov" => {
+                if continuous_only || crash_prob.is_some() {
+                    return err(
+                        "scenario.mode = \"markov\" accepts only scenario_uptime_s / \
+                         scenario_downtime_s"
+                            .into(),
+                    );
+                }
+                let d = ScenarioSpec::default();
+                let spec = ScenarioSpec {
+                    enabled: true,
+                    process: ScenarioProcess::Markov {
+                        mean_uptime_s: uptime_s.unwrap_or(d.base_uptime_s),
+                        mean_downtime_s: downtime_s.unwrap_or(d.base_downtime_s),
+                    },
+                    ..d
+                };
+                spec.validate()?;
+                Ok(spec)
+            }
+            "continuous" => {
+                if crash_prob.is_some() {
+                    return err(
+                        "scenario_crash_prob requires scenario.mode = \"bernoulli\""
+                            .into(),
+                    );
+                }
+                let flash_args = flash_joins.is_some() || flash_leaves.is_some();
+                if flash_args && flash_at_s.is_none() {
+                    return err(
+                        "scenario_flash_joins/leaves require scenario_flash_at_s".into(),
+                    );
+                }
+                let outage_args = outage_region.is_some() || outage_len_s.is_some();
+                if outage_args && outage_at_s.is_none() {
+                    return err(
+                        "scenario_outage_region/len_s require scenario_outage_at_s"
+                            .into(),
+                    );
+                }
+                let d = ScenarioSpec::default();
+                let to_count = |name: &str, v: Option<i64>, dflt: usize| match v {
+                    None => Ok(dflt),
+                    Some(x) if x >= 0 => Ok(x as usize),
+                    Some(x) => Err(SafaError::Config(format!(
+                        "{name} must be >= 0, got {x}"
+                    ))),
+                };
+                let mut events = Vec::new();
+                if let Some(at) = flash_at_s {
+                    events.push(ScenarioEvent {
+                        at: ScenarioAt::Time(at),
+                        kind: ScenarioEventKind::FlashCrowd {
+                            joins: to_count("scenario_flash_joins", flash_joins, 0)?,
+                            leaves: to_count("scenario_flash_leaves", flash_leaves, 0)?,
+                        },
+                    });
+                }
+                if let Some(at) = outage_at_s {
+                    events.push(ScenarioEvent {
+                        at: ScenarioAt::Time(at),
+                        kind: ScenarioEventKind::RegionalOutage {
+                            region: to_count("scenario_outage_region", outage_region, 0)?,
+                            len_s: outage_len_s.unwrap_or(600.0),
+                        },
+                    });
+                }
+                let spec = ScenarioSpec {
+                    enabled: true,
+                    process: ScenarioProcess::Continuous,
+                    base_uptime_s: uptime_s.unwrap_or(d.base_uptime_s),
+                    base_downtime_s: downtime_s.unwrap_or(d.base_downtime_s),
+                    diurnal_amp: diurnal_amp.unwrap_or(0.0),
+                    diurnal_period_s: diurnal_period_s.unwrap_or(d.diurnal_period_s),
+                    regions: to_count("scenario_regions", regions, d.regions)?,
+                    events,
+                };
+                spec.validate()?;
+                Ok(spec)
+            }
+            other => err(format!(
+                "unknown scenario.mode {other:?} (expected \"off\", \"continuous\", \
+                 \"bernoulli\" or \"markov\")"
+            )),
+        }
+    }
+
+    /// Reject NaN/inf/out-of-range knobs (used at TOML + CLI load time
+    /// and from `ExperimentConfig::validate`).
+    pub fn validate(&self) -> Result<()> {
+        let e = |msg: String| Err(SafaError::Config(msg));
+        if !self.enabled {
+            return Ok(());
+        }
+        match self.process {
+            ScenarioProcess::Bernoulli { crash_prob } => {
+                if !crash_prob.is_finite() || !(0.0..=1.0).contains(&crash_prob) {
+                    return e(format!(
+                        "scenario crash_prob must be a probability in [0, 1], got \
+                         {crash_prob}"
+                    ));
+                }
+                return Ok(());
+            }
+            ScenarioProcess::Markov {
+                mean_uptime_s,
+                mean_downtime_s,
+            } => {
+                for (name, v) in [
+                    ("scenario uptime_s", mean_uptime_s),
+                    ("scenario downtime_s", mean_downtime_s),
+                ] {
+                    if !v.is_finite() || v <= 0.0 {
+                        return e(format!("{name} must be finite and > 0, got {v}"));
+                    }
+                }
+                return Ok(());
+            }
+            ScenarioProcess::Continuous => {}
+        }
+        for (name, v) in [
+            ("scenario base_uptime_s", self.base_uptime_s),
+            ("scenario base_downtime_s", self.base_downtime_s),
+            ("scenario diurnal_period_s", self.diurnal_period_s),
+        ] {
+            if !v.is_finite() || v <= 0.0 {
+                return e(format!("{name} must be finite and > 0, got {v}"));
+            }
+        }
+        if !self.diurnal_amp.is_finite() || !(0.0..1.0).contains(&self.diurnal_amp) {
+            return e(format!(
+                "scenario diurnal_amp must be in [0, 1), got {}",
+                self.diurnal_amp
+            ));
+        }
+        if self.regions == 0 {
+            return e("scenario regions must be >= 1".into());
+        }
+        for ev in &self.events {
+            if let ScenarioAt::Time(s) = ev.at {
+                if !s.is_finite() || s < 0.0 {
+                    return e(format!(
+                        "scenario event time must be finite and >= 0, got {s}"
+                    ));
+                }
+            }
+            match ev.kind {
+                ScenarioEventKind::FlashCrowd { joins, leaves } => {
+                    if joins == 0 && leaves == 0 {
+                        return e("scenario flash crowd must join or leave someone".into());
+                    }
+                }
+                ScenarioEventKind::RegionalOutage { region, len_s } => {
+                    if region >= self.regions {
+                        return e(format!(
+                            "scenario outage region {region} out of range (regions = {})",
+                            self.regions
+                        ));
+                    }
+                    if !len_s.is_finite() || len_s <= 0.0 {
+                        return e(format!(
+                            "scenario outage length must be finite and > 0, got {len_s}"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Total clients scheduled to join via flash crowds (the timeline
+    /// reserves the top ids of the fleet as latecomers).
+    pub fn total_joins(&self) -> usize {
+        self.events
+            .iter()
+            .map(|e| match e.kind {
+                ScenarioEventKind::FlashCrowd { joins, .. } => joins,
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+/// Fluent scenario builder: positions a time cursor with
+/// [`Scenario::at_time`] / [`Scenario::at_round`] and drops events at
+/// it, compiling to a validated [`ScenarioSpec`].
+///
+/// ```ignore
+/// let spec = Scenario::new()
+///     .uptime(1200.0, 300.0)
+///     .diurnal(0.6, 4.0 * 830.0)
+///     .at_time(5000.0)
+///     .flash_crowd(10, 0)
+///     .at_round(150)
+///     .regional_outage(2, 600.0)
+///     .build()?;
+/// ```
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    spec: ScenarioSpec,
+    cursor: ScenarioAt,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Scenario::new()
+    }
+}
+
+impl Scenario {
+    /// Start a continuous-process scenario with the default dwells.
+    pub fn new() -> Scenario {
+        Scenario {
+            spec: ScenarioSpec {
+                enabled: true,
+                process: ScenarioProcess::Continuous,
+                ..ScenarioSpec::default()
+            },
+            cursor: ScenarioAt::Time(0.0),
+        }
+    }
+
+    /// Start a per-round Bernoulli reduction (compiles to the legacy
+    /// i.i.d. crash model, bit-for-bit).
+    pub fn bernoulli(crash_prob: f64) -> Scenario {
+        Scenario {
+            spec: ScenarioSpec {
+                enabled: true,
+                process: ScenarioProcess::Bernoulli { crash_prob },
+                ..ScenarioSpec::default()
+            },
+            cursor: ScenarioAt::Time(0.0),
+        }
+    }
+
+    /// Start a per-round Markov reduction (compiles to the legacy
+    /// round-indexed churn model, bit-for-bit).
+    pub fn markov(mean_uptime_s: f64, mean_downtime_s: f64) -> Scenario {
+        Scenario {
+            spec: ScenarioSpec {
+                enabled: true,
+                process: ScenarioProcess::Markov {
+                    mean_uptime_s,
+                    mean_downtime_s,
+                },
+                ..ScenarioSpec::default()
+            },
+            cursor: ScenarioAt::Time(0.0),
+        }
+    }
+
+    /// Mean online/offline dwell seconds of the continuous process.
+    pub fn uptime(mut self, mean_uptime_s: f64, mean_downtime_s: f64) -> Scenario {
+        self.spec.base_uptime_s = mean_uptime_s;
+        self.spec.base_downtime_s = mean_downtime_s;
+        self
+    }
+
+    /// Diurnal sine-wave modulation of the dwell means.
+    pub fn diurnal(mut self, amp: f64, period_s: f64) -> Scenario {
+        self.spec.diurnal_amp = amp;
+        self.spec.diurnal_period_s = period_s;
+        self
+    }
+
+    /// Region count for outage sharding (`client % regions`).
+    pub fn regions(mut self, regions: usize) -> Scenario {
+        self.spec.regions = regions;
+        self
+    }
+
+    /// Move the event cursor to an absolute sim-time.
+    pub fn at_time(mut self, seconds: f64) -> Scenario {
+        self.cursor = ScenarioAt::Time(seconds);
+        self
+    }
+
+    /// Move the event cursor to the instant a 1-based round opens.
+    pub fn at_round(mut self, round: usize) -> Scenario {
+        self.cursor = ScenarioAt::Round(round);
+        self
+    }
+
+    /// Mass join/leave at the cursor.
+    pub fn flash_crowd(mut self, joins: usize, leaves: usize) -> Scenario {
+        self.spec.events.push(ScenarioEvent {
+            at: self.cursor,
+            kind: ScenarioEventKind::FlashCrowd { joins, leaves },
+        });
+        self
+    }
+
+    /// Regional dark band of `len_s` seconds starting at the cursor.
+    pub fn regional_outage(mut self, region: usize, len_s: f64) -> Scenario {
+        self.spec.events.push(ScenarioEvent {
+            at: self.cursor,
+            kind: ScenarioEventKind::RegionalOutage { region, len_s },
+        });
+        self
+    }
+
+    /// Validate and return the spec.
+    pub fn build(self) -> Result<ScenarioSpec> {
+        self.spec.validate()?;
+        Ok(self.spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_is_off_and_valid() {
+        let s = ScenarioSpec::default();
+        assert!(!s.enabled);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn builder_compiles_events_at_the_cursor() {
+        let spec = Scenario::new()
+            .uptime(1200.0, 300.0)
+            .diurnal(0.6, 3320.0)
+            .regions(4)
+            .at_time(5000.0)
+            .flash_crowd(10, 0)
+            .at_round(150)
+            .regional_outage(2, 600.0)
+            .build()
+            .unwrap();
+        assert!(spec.enabled);
+        assert_eq!(spec.process, ScenarioProcess::Continuous);
+        assert_eq!(spec.events.len(), 2);
+        assert_eq!(spec.events[0].at, ScenarioAt::Time(5000.0));
+        assert_eq!(
+            spec.events[0].kind,
+            ScenarioEventKind::FlashCrowd { joins: 10, leaves: 0 }
+        );
+        assert_eq!(spec.events[1].at, ScenarioAt::Round(150));
+        assert_eq!(spec.events[1].at.seconds(830.0), 149.0 * 830.0);
+        assert_eq!(spec.total_joins(), 10);
+    }
+
+    #[test]
+    fn builder_reductions_carry_their_parameters() {
+        let b = Scenario::bernoulli(0.3).build().unwrap();
+        assert_eq!(b.process, ScenarioProcess::Bernoulli { crash_prob: 0.3 });
+        let m = Scenario::markov(600.0, 200.0).build().unwrap();
+        assert_eq!(
+            m.process,
+            ScenarioProcess::Markov {
+                mean_uptime_s: 600.0,
+                mean_downtime_s: 200.0
+            }
+        );
+    }
+
+    #[test]
+    fn from_parts_mirrors_churn_strictness() {
+        // Orphan parameter with mode off is a hard error.
+        assert!(ScenarioSpec::from_parts(
+            "off",
+            None,
+            Some(100.0),
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+        )
+        .is_err());
+        // Unknown mode is rejected.
+        assert!(ScenarioSpec::from_parts(
+            "sometimes", None, None, None, None, None, None, None, None, None, None,
+            None, None,
+        )
+        .is_err());
+        // Reductions reject continuous-only knobs.
+        assert!(ScenarioSpec::from_parts(
+            "bernoulli",
+            Some(0.2),
+            None,
+            None,
+            Some(0.5),
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+        )
+        .is_err());
+        assert!(ScenarioSpec::from_parts(
+            "markov",
+            Some(0.2),
+            Some(100.0),
+            Some(50.0),
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+        )
+        .is_err());
+        // Flash satellites without the anchor time are orphans.
+        assert!(ScenarioSpec::from_parts(
+            "continuous",
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            Some(5),
+            None,
+            None,
+            None,
+            None,
+        )
+        .is_err());
+        // A clean continuous build round-trips the knobs.
+        let s = ScenarioSpec::from_parts(
+            "continuous",
+            None,
+            Some(900.0),
+            Some(300.0),
+            Some(0.4),
+            Some(4000.0),
+            Some(3),
+            Some(1500.0),
+            Some(8),
+            Some(2),
+            Some(2500.0),
+            Some(1),
+            Some(400.0),
+        )
+        .unwrap();
+        assert!(s.enabled);
+        assert_eq!(s.regions, 3);
+        assert_eq!(s.events.len(), 2);
+        assert_eq!(s.total_joins(), 8);
+    }
+
+    #[test]
+    fn validate_rejects_bad_fields() {
+        let base = || Scenario::new();
+        assert!(base().diurnal(1.0, 100.0).build().is_err(), "amp must be < 1");
+        assert!(base().diurnal(0.5, 0.0).build().is_err(), "zero period");
+        assert!(base().uptime(0.0, 100.0).build().is_err(), "zero dwell");
+        assert!(base().regions(0).build().is_err(), "zero regions");
+        assert!(
+            base().regions(2).at_time(10.0).regional_outage(2, 60.0).build().is_err(),
+            "region out of range"
+        );
+        assert!(
+            base().at_time(10.0).flash_crowd(0, 0).build().is_err(),
+            "empty flash crowd"
+        );
+        assert!(
+            base().at_time(-5.0).flash_crowd(1, 0).build().is_err(),
+            "negative event time"
+        );
+        assert!(Scenario::bernoulli(1.5).build().is_err(), "prob > 1");
+        assert!(Scenario::markov(-1.0, 10.0).build().is_err(), "negative dwell");
+    }
+}

@@ -45,6 +45,10 @@ pub enum Event {
     Undrafted,
     /// Server retried a cancelled transfer leg after backoff (faults).
     Retry,
+    /// Joined the fleet this round (scenario flash crowds).
+    Join,
+    /// Departed the fleet this round (scenario flash leaves).
+    Leave,
 }
 
 impl Event {
@@ -61,6 +65,8 @@ impl Event {
             Event::Crashed => "crashed",
             Event::Undrafted => "undrafted",
             Event::Retry => "retry",
+            Event::Join => "join",
+            Event::Leave => "leave",
         }
     }
 }
@@ -298,6 +304,8 @@ mod tests {
             (Event::Crashed, "crashed"),
             (Event::Undrafted, "undrafted"),
             (Event::Retry, "retry"),
+            (Event::Join, "join"),
+            (Event::Leave, "leave"),
         ];
         for (e, name) in all {
             assert_eq!(e.name(), name);

@@ -31,10 +31,17 @@
 //! via `core::fmt` (stack buffers only) and flushes (a syscall, not an
 //! allocation). Zero steady-state allocations must hold with the trace
 //! on — that is the observability tentpole's perf contract.
+//!
+//! The continuous scenario timeline (diurnal dwells, flash crowds,
+//! regional outages) is held to the same bar: its cursors and window
+//! table are allocated at compile time and `prepare_round` walks them
+//! in place, so scenario rounds — membership transitions included —
+//! must be heap-free at steady state too.
 
 use safa::client::ClientState;
 use safa::config::presets;
-use safa::engine::{AvailabilityModel, FleetEngine, RoundCtx};
+use safa::engine::{AvailabilityModel, FleetEngine, RoundCtx, ScenarioTimeline};
+use safa::scenario::Scenario;
 use safa::faults::{FaultPlan, FaultRuntime};
 use safa::model::ParamVec;
 use safa::net::fabric::{FabricConfig, FabricRuntime};
@@ -62,6 +69,8 @@ fn fleet(m: usize) -> Vec<ClientState> {
             picked_last: false,
             pending_partial: 0.0,
             job: None,
+            joined_round: None,
+            departed_round: None,
         })
         .collect()
 }
@@ -76,6 +85,7 @@ fn allocs_in_steady_state(
     rounds: usize,
     fabric_on: bool,
     faults_on: bool,
+    scenario_on: bool,
 ) -> u64 {
     let mut cfg = presets::preset("tiny").unwrap();
     cfg.env.m = m;
@@ -128,6 +138,23 @@ fn allocs_in_steady_state(
     // outside the measured window, like every other input buffer).
     let tails: Vec<f64> = jobs.iter().map(|j| 0.3 * j).collect();
     let mut engine = FleetEngine::new(avail, m);
+    if scenario_on {
+        // The full continuous battery: diurnal dwells plus a mid-window
+        // flash crowd and a regional outage, both of which land inside
+        // the *measured* rounds — membership transitions must be
+        // heap-free, not just quiet dwelling.
+        let spec = Scenario::new()
+            .uptime(cfg.train.t_lim * 0.6, cfg.train.t_lim * 0.25)
+            .diurnal(0.6, cfg.train.t_lim * 4.0)
+            .regions(2)
+            .at_round(warmup + 2)
+            .flash_crowd(10, 5)
+            .at_round(warmup + 4)
+            .regional_outage(1, cfg.train.t_lim * 0.5)
+            .build()
+            .expect("scenario spec");
+        engine.set_scenario(ScenarioTimeline::new(&spec, m, cfg.train.t_lim, 11));
+    }
     let mut round_out = RoundSim::default();
     let mut cont_out = ContinuationSim::default();
 
@@ -208,6 +235,7 @@ fn steady_state_rounds_do_not_allocate() {
                 8,
                 false,
                 false,
+                false,
             );
             assert_eq!(bern, 0, "Bernoulli direct path allocated ({mode})");
             let markov = allocs_in_steady_state(
@@ -220,6 +248,7 @@ fn steady_state_rounds_do_not_allocate() {
                 8,
                 false,
                 false,
+                false,
             );
             assert_eq!(markov, 0, "Markov event path allocated ({mode})");
             let fab_bern = allocs_in_steady_state(
@@ -228,6 +257,7 @@ fn steady_state_rounds_do_not_allocate() {
                 3,
                 8,
                 true,
+                false,
                 false,
             );
             assert_eq!(fab_bern, 0, "fabric Bernoulli path allocated ({mode})");
@@ -241,6 +271,7 @@ fn steady_state_rounds_do_not_allocate() {
                 8,
                 true,
                 false,
+                false,
             );
             assert_eq!(fab_markov, 0, "fabric Markov event path allocated ({mode})");
             // Faults event path, with and without the contended fabric:
@@ -253,6 +284,7 @@ fn steady_state_rounds_do_not_allocate() {
                 8,
                 false,
                 true,
+                false,
             );
             assert_eq!(faults_bern, 0, "faults Bernoulli path allocated ({mode})");
             let faults_fab = allocs_in_steady_state(
@@ -265,11 +297,25 @@ fn steady_state_rounds_do_not_allocate() {
                 8,
                 true,
                 true,
+                false,
             );
             assert_eq!(
                 faults_fab, 0,
                 "faults + fabric Markov event path allocated ({mode})"
             );
+            // Continuous scenario timeline on the contended fabric, with
+            // a flash crowd and a regional outage inside the measured
+            // window.
+            let scen = allocs_in_steady_state(
+                AvailabilityModel::BernoulliPerRound { crash_prob: 0.2 },
+                m,
+                3,
+                8,
+                true,
+                false,
+                true,
+            );
+            assert_eq!(scen, 0, "scenario timeline path allocated ({mode})");
         });
         // Pooled dispatch at width 4 (m=500 over the 64-client draw
         // grain genuinely forks): after warm-up spawns and parks the
@@ -284,6 +330,7 @@ fn steady_state_rounds_do_not_allocate() {
                     8,
                     false,
                     false,
+                    false,
                 );
                 assert_eq!(bern, 0, "pooled Bernoulli direct path allocated ({mode})");
                 let markov = allocs_in_steady_state(
@@ -294,6 +341,7 @@ fn steady_state_rounds_do_not_allocate() {
                     m,
                     3,
                     8,
+                    false,
                     false,
                     false,
                 );
@@ -307,6 +355,7 @@ fn steady_state_rounds_do_not_allocate() {
                     3,
                     8,
                     true,
+                    false,
                     false,
                 );
                 assert_eq!(
@@ -323,10 +372,26 @@ fn steady_state_rounds_do_not_allocate() {
                     8,
                     true,
                     true,
+                    false,
                 );
                 assert_eq!(
                     faults_fab, 0,
                     "pooled faults + fabric event path allocated ({mode})"
+                );
+                // Scenario timeline under pooled parallel dispatch: the
+                // chunked cursor walk fans out across the workers.
+                let scen = allocs_in_steady_state(
+                    AvailabilityModel::BernoulliPerRound { crash_prob: 0.2 },
+                    m,
+                    3,
+                    8,
+                    true,
+                    false,
+                    true,
+                );
+                assert_eq!(
+                    scen, 0,
+                    "pooled scenario timeline path allocated ({mode})"
                 );
             });
         });

@@ -44,6 +44,8 @@ fn fleet(m: usize) -> Vec<ClientState> {
             picked_last: false,
             pending_partial: 0.0,
             job: None,
+            joined_round: None,
+            departed_round: None,
         })
         .collect()
 }

@@ -1,0 +1,204 @@
+//! Scenario-engine integration contracts:
+//!
+//! * **Reductions** — a scenario compiled from per-round transitions
+//!   (`Scenario::bernoulli` / `Scenario::markov`) reproduces the legacy
+//!   `env.crash_prob` / `env.churn` runs bit-for-bit, for every
+//!   protocol. This pins the RNG-stream contract: the reductions stay
+//!   on the per-(round, client) streams.
+//! * **Width invariance** — with the full battery on (diurnal dwells on
+//!   the continuous clock, a flash-crowd join burst + departures, a
+//!   regional outage, the contended fabric and the fault injectors)
+//!   whole SAFA runs stay bit-identical across fork widths {1, 3, 8}.
+//! * **Dynamic membership** — the flashcrowd preset actually moves the
+//!   fleet: latecomers carry `joined_round`, departures carry
+//!   `departed_round`, and the join burst pays distribution time on the
+//!   contended server link.
+
+use safa::config::{presets, ChurnModel, ProtocolKind};
+use safa::coordinator::{run_experiment, Coordinator};
+use safa::metrics::RunResult;
+use safa::scenario::Scenario;
+use safa::util::parallel::with_thread_count;
+
+const WIDTHS: [usize; 3] = [1, 3, 8];
+
+/// Everything a round reports, as raw bits where floats are involved.
+fn fingerprint(r: &RunResult) -> Vec<(u64, u64, usize, usize, usize, usize, u64)> {
+    r.rounds
+        .iter()
+        .map(|rec| {
+            (
+                rec.round_len.to_bits(),
+                rec.t_dist.to_bits(),
+                rec.m_sync,
+                rec.n_picked,
+                rec.n_committed,
+                rec.n_crashed,
+                rec.train_loss.to_bits(),
+            )
+        })
+        .collect()
+}
+
+fn final_bits(r: &RunResult) -> (u64, u64) {
+    let e = r.final_eval.expect("final eval");
+    (e.loss.to_bits(), e.accuracy.to_bits())
+}
+
+#[test]
+fn bernoulli_reduction_reproduces_legacy_runs_bit_for_bit() {
+    for kind in ProtocolKind::ALL {
+        let mut legacy = presets::preset("tiny").unwrap();
+        legacy.protocol.kind = kind;
+        legacy.env.crash_prob = 0.3;
+        legacy.train.rounds = 5;
+
+        let mut scenario = legacy.clone();
+        // The superseded legacy knob must not leak into the pinned
+        // reduction, so give it a junk value on purpose.
+        scenario.env.crash_prob = 0.9;
+        scenario.env.scenario = Scenario::bernoulli(0.3).build().unwrap();
+
+        let a = run_experiment(&legacy).unwrap();
+        let b = run_experiment(&scenario).unwrap();
+        assert_eq!(
+            fingerprint(&a),
+            fingerprint(&b),
+            "{kind:?}: bernoulli reduction diverged from legacy crash_prob"
+        );
+        assert_eq!(final_bits(&a), final_bits(&b), "{kind:?}: final eval");
+    }
+}
+
+#[test]
+fn markov_reduction_reproduces_legacy_churn_bit_for_bit() {
+    for kind in ProtocolKind::ALL {
+        let mut legacy = presets::preset("tiny").unwrap();
+        legacy.protocol.kind = kind;
+        legacy.env.churn = ChurnModel::Markov {
+            mean_uptime_s: 500.0,
+            mean_downtime_s: 200.0,
+        };
+        legacy.train.rounds = 5;
+
+        let mut scenario = legacy.clone();
+        // The scenario overrides whatever `env.churn` says.
+        scenario.env.churn = ChurnModel::Bernoulli;
+        scenario.env.scenario = Scenario::markov(500.0, 200.0).build().unwrap();
+
+        let a = run_experiment(&legacy).unwrap();
+        let b = run_experiment(&scenario).unwrap();
+        assert_eq!(
+            fingerprint(&a),
+            fingerprint(&b),
+            "{kind:?}: markov reduction diverged from legacy churn"
+        );
+        assert_eq!(final_bits(&a), final_bits(&b), "{kind:?}: final eval");
+    }
+}
+
+/// Scenario-off runs must be bit-for-bit untouched by this machinery:
+/// the default (disabled) spec and no spec at all are the same run.
+#[test]
+fn disabled_scenario_is_bit_for_bit_inert() {
+    for kind in [ProtocolKind::Safa, ProtocolKind::FedAvg] {
+        let mut cfg = presets::preset("tiny").unwrap();
+        cfg.protocol.kind = kind;
+        cfg.train.rounds = 5;
+        let a = run_experiment(&cfg).unwrap();
+        cfg.env.scenario = safa::scenario::ScenarioSpec::default();
+        let b = run_experiment(&cfg).unwrap();
+        assert_eq!(fingerprint(&a), fingerprint(&b), "{kind:?}: inertness");
+        assert_eq!(final_bits(&a), final_bits(&b), "{kind:?}: final eval");
+    }
+}
+
+/// The heaviest configuration in the repo: continuous diurnal dwells,
+/// a mid-run join burst and departures, a regional outage, the
+/// contended fabric (FIFO server link, lognormal client links, loss +
+/// retransmits) and the chaos injectors, all at once — bit-identical
+/// at every fork width.
+#[test]
+fn scenario_runs_are_width_invariant_end_to_end() {
+    let chaos = presets::preset("chaos").unwrap();
+    let mut cfg = presets::preset("flashcrowd").unwrap();
+    cfg.env.m = 60;
+    cfg.train.rounds = 6;
+    cfg.env.faults = chaos.env.faults.clone();
+    cfg.env.scenario = Scenario::new()
+        .uptime(cfg.train.t_lim * 0.6, cfg.train.t_lim * 0.25)
+        .diurnal(0.6, cfg.train.t_lim * 4.0)
+        .regions(4)
+        .at_round(3)
+        .flash_crowd(10, 0)
+        .at_round(5)
+        .flash_crowd(0, 5)
+        .at_round(4)
+        .regional_outage(1, cfg.train.t_lim * 0.5)
+        .build()
+        .unwrap();
+
+    let run = |width: usize| -> (Vec<(u64, u64, usize, usize, usize, usize, u64)>, (u64, u64)) {
+        with_thread_count(width, || {
+            let r = run_experiment(&cfg).unwrap();
+            (fingerprint(&r), final_bits(&r))
+        })
+    };
+    let reference = run(1);
+    for &width in &WIDTHS[1..] {
+        let got = run(width);
+        assert_eq!(got, reference, "scenario width {width}: run diverged");
+    }
+}
+
+/// Flash crowds move the fleet for real: the flashcrowd preset's join
+/// burst stamps `joined_round`, the departures stamp `departed_round`,
+/// rounds before the burst run without the latecomers, and the join
+/// round pays distribution time on the contended server link.
+#[test]
+fn flashcrowd_preset_changes_membership_and_pays_distribution() {
+    let mut cfg = presets::preset("flashcrowd").unwrap();
+    cfg.train.rounds = 6;
+    let mut coord = Coordinator::new(&cfg).unwrap();
+    let result = coord.run();
+
+    let joined: Vec<usize> = coord
+        .env
+        .clients
+        .iter()
+        .filter(|c| c.joined_round == Some(3))
+        .map(|c| c.id)
+        .collect();
+    assert_eq!(joined.len(), 10, "round-3 join burst: {joined:?}");
+    let departed = coord
+        .env
+        .clients
+        .iter()
+        .filter(|c| c.departed_round.is_some())
+        .count();
+    assert!(departed >= 5, "round-5 departures, got {departed}");
+
+    // Latecomers sit out the early rounds entirely.
+    for t in [1usize, 2] {
+        for &k in &joined {
+            assert!(
+                !coord.env.is_member(t, k),
+                "latecomer {k} must not be a member in round {t}"
+            );
+        }
+    }
+    // The join burst forces a sync for the whole new cohort, so round 3
+    // distributes to at least the 10 latecomers and pays serialized
+    // time for it on the contended server link.
+    let r3 = &result.rounds[2];
+    assert!(
+        r3.m_sync >= 10,
+        "join burst must force-sync the cohort: m_sync {}",
+        r3.m_sync
+    );
+    assert!(
+        r3.t_dist > 0.0,
+        "join burst should queue on the server link: t_dist {}",
+        r3.t_dist
+    );
+}
